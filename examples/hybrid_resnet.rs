@@ -1,0 +1,52 @@
+//! Hybrid training on ResNet-20 with the paper's PPV (5,12,17) — the
+//! §6.4 scenario: deep pipelining hurts accuracy; a non-pipelined tail
+//! recovers it (Table 4 / Figure 7 shape).
+//!
+//! Run: cargo run --release --example hybrid_resnet [--iters N]
+
+use pipestale::config::{Mode, RunConfig};
+use pipestale::util::bench::Table;
+use pipestale::util::cli::Command;
+
+fn main() -> anyhow::Result<()> {
+    pipestale::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let m = Command::new("hybrid_resnet", "paper §6.4 hybrid-training demo (ResNet-20, 8 stages)")
+        .opt("iters", "240", "total training iterations")
+        .opt("noise", "2.2", "synthetic dataset noise")
+        .parse(&argv)
+        .map_err(|u| anyhow::anyhow!("{u}"))?;
+    let iters: u64 = m.get_u64("iters").map_err(anyhow::Error::msg)?;
+    let noise = m.get_f64("noise").map_err(anyhow::Error::msg)?;
+
+    let mut base = RunConfig::new("resnet20_hybrid"); // PPV (5,12,17)
+    base.iters = iters;
+    base.eval_every = (iters / 6).max(1);
+    base.train_size = 1024;
+    base.test_size = 256;
+    base.noise = noise;
+    base.stale_lr_scale = 1.0;
+
+    // Paper Table 4 grid: baseline 30k / pipelined 30k / hybrid 20k+10k /
+    // hybrid 20k+20k, scaled to `iters`.
+    let runs: Vec<(String, Mode, u64, u64)> = vec![
+        ("baseline".into(), Mode::Sequential, iters, 0),
+        ("pipelined".into(), Mode::Pipelined, iters, 0),
+        (format!("{}+{} hybrid", 2 * iters / 3, iters / 3), Mode::Hybrid, iters, 2 * iters / 3),
+        (format!("{}+{} hybrid", 2 * iters / 3, 2 * iters / 3),
+         Mode::Hybrid, 2 * iters / 3 + 2 * iters / 3, 2 * iters / 3),
+    ];
+
+    let mut table = Table::new(&["schedule", "iters", "final test acc"]);
+    for (label, mode, total, np) in runs {
+        let mut rc = base.clone();
+        rc.mode = mode;
+        rc.iters = total;
+        rc.pipelined_iters = np;
+        let res = pipestale::train::run(&rc)?;
+        println!("{label}: acc {:.2}% (wall {:.0}s)", 100.0 * res.final_accuracy, res.wall_seconds);
+        table.row(&[label, total.to_string(), format!("{:.2}%", 100.0 * res.final_accuracy)]);
+    }
+    println!("\n{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! Threaded pipeline demo: the paper's §5 "actual" deployment shape —
+//! one OS thread per accelerator, channels as pipeline registers, each
+//! worker owning its partition's weights and PJRT client.
+//!
+//! On this 1-core container the threads time-slice, so wall-clock
+//! speedup is not observable here (DESIGN.md §4); the example verifies
+//! the distributed architecture end-to-end (training converges, weights
+//! collected from workers, eval on the reassembled model) and prints the
+//! DES-projected speedup for the same measured stage costs.
+//!
+//! Run: cargo run --release --example pipeline_server [--iters N]
+
+use pipestale::config::RunConfig;
+use pipestale::data::{load_or_synthesize, Batcher, SyntheticSpec};
+use pipestale::meta::ConfigMeta;
+use pipestale::model::ModelParams;
+use pipestale::optim::Sgd;
+use pipestale::pipeline::threaded::ThreadedPipeline;
+use pipestale::pipeline::{Pipeline, XlaExecutor};
+use pipestale::runtime::Runtime;
+use pipestale::util::cli::Command;
+
+fn main() -> anyhow::Result<()> {
+    pipestale::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let m = Command::new("pipeline_server", "thread-per-accelerator pipelined training")
+        .opt("config", "resnet20_4s", "artifact config")
+        .opt("iters", "120", "training iterations")
+        .opt("noise", "2.0", "synthetic dataset noise")
+        .parse(&argv)
+        .map_err(|u| anyhow::anyhow!("{u}"))?;
+    let iters = m.get_u64("iters").map_err(anyhow::Error::msg)?;
+    let noise = m.get_f64("noise").map_err(anyhow::Error::msg)? as f32;
+
+    let root = pipestale::artifacts_root();
+    let meta = ConfigMeta::load_named(&root, m.get("config"))?;
+    let spec = SyntheticSpec { train: 1024, test: 256, noise, seed: 7 };
+    let (train_ds, test_ds) = load_or_synthesize(&meta.dataset, None, &spec)?;
+
+    let params = ModelParams::init(&meta.partitions, 42)?;
+    let optims: Vec<Sgd> = pipestale::train::build_optims(&meta, iters, 1.0);
+
+    println!(
+        "launching {} accelerator threads (P={} partitions, PPV {:?})...",
+        meta.partitions.len(),
+        meta.partitions.len(),
+        meta.ppv
+    );
+    let mut pipe = ThreadedPipeline::launch(&meta, params, optims)?;
+    let mut batcher = Batcher::new(train_ds.len(), meta.batch, 99);
+    let (events, wall) = pipe.train(iters, 42, |_b| {
+        let idxs = batcher.next_indices().to_vec();
+        train_ds.gather(&idxs)
+    })?;
+    let trained = pipe.shutdown()?;
+    println!(
+        "threaded training: {} batches retired in {:.1}s ({:.1} batches/s), final loss {:.4}",
+        events.len(),
+        wall,
+        events.len() as f64 / wall,
+        events.last().map(|e| e.loss).unwrap_or(f32::NAN)
+    );
+
+    // Reassemble the model on a single runtime and evaluate.
+    let runtime = Runtime::cpu()?;
+    let optims = pipestale::train::build_optims(&meta, iters, 1.0);
+    let exec = XlaExecutor::new(&runtime, meta.clone(), trained, optims)?;
+    let mut single = Pipeline::new(exec, meta.batch);
+    let acc = pipestale::train::evaluate(&mut single, &test_ds, meta.batch)?;
+    println!("eval on reassembled weights: {:.2}% top-1", 100.0 * acc);
+
+    // Sanity: sequential training of the same budget for comparison.
+    let mut rc = RunConfig::new(m.get("config"));
+    rc.iters = iters;
+    rc.noise = noise as f64;
+    rc.train_size = 1024;
+    rc.test_size = 256;
+    rc.mode = pipestale::config::Mode::Sequential;
+    let seq = pipestale::train::run(&rc)?;
+    println!(
+        "sequential reference: {:.2}% top-1 in {:.1}s (1 worker)",
+        100.0 * seq.final_accuracy,
+        seq.wall_seconds
+    );
+    println!("(see bench_table5_speedup for the calibrated multi-accelerator projection)");
+    Ok(())
+}

@@ -1,0 +1,88 @@
+"""Manifest of every AOT config the Rust benches/examples consume.
+
+A config = (model, width_mult, PPV, batch). Names are stable identifiers:
+the Rust side loads `artifacts/<name>/meta.json`. PPVs follow the paper's
+Table 1 / §6.3; width_mult and batch implement the scaled experiment
+protocol of DESIGN.md §4 (1-core CPU testbed).
+
+Non-pipelined baselines need no dedicated config: the coordinator runs any
+config's stage programs sequentially with immediate updates (K=0
+semantics), bit-identical to an unpartitioned run (tested).
+"""
+
+# Table 1 — Pipeline Placement Vectors (paper).
+TABLE1_PPV = {
+    "lenet5": {4: (1,), 6: (1, 2), 8: (1, 2, 3), 10: (1, 2, 3, 4)},
+    "alexnet": {4: (1,), 6: (1, 2), 8: (1, 2, 3)},
+    "vgg16": {4: (2,), 6: (2, 4), 8: (2, 4, 7), 10: (2, 4, 7, 10)},
+    "resnet20": {4: (7,), 6: (7, 13), 8: (7, 13, 19)},
+}
+
+# Table 7 — BKS_2 learning rates for the actual 4-stage pipelined runs.
+TABLE7_BKS2_LR = {
+    "resnet20": 0.1, "resnet56": 0.01, "resnet110": 0.001,
+    "resnet224": 0.001, "resnet362": 0.001,
+}
+
+
+def _cfg(name, model, ppv, *, width=1.0, batch=64, meta_only=False):
+    return {
+        "name": name, "model": model, "ppv": tuple(ppv),
+        "width_mult": width, "batch": batch, "meta_only": meta_only,
+    }
+
+
+def manifest():
+    cfgs = []
+
+    # --- Figure 5 / Table 2: 4/6/8/10-stage pipelining, four CNNs -------
+    for model, stages in TABLE1_PPV.items():
+        width = {"lenet5": 1.0, "alexnet": 0.25, "vgg16": 0.25,
+                 "resnet20": 0.5}[model]
+        batch = 64 if model == "lenet5" else 32
+        for ns, ppv in stages.items():
+            cfgs.append(_cfg(f"{model}_{ns}s", model, ppv,
+                             width=width, batch=batch))
+
+    # --- Table 3 / Fig 6 "Increasing Stages": fine-grained ResNet-20 ----
+    # 8-stage = PPV (3,5,7); then a register after every 2 layers past 7.
+    fine = [3, 5, 7]
+    cfgs.append(_cfg("resnet20_fine8", "resnet20", tuple(fine),
+                     width=0.5, batch=32))
+    for extra in range(9, 20, 2):
+        fine = fine + [extra]
+        ns = 2 * len(fine) + 2
+        cfgs.append(_cfg(f"resnet20_fine{ns}", "resnet20", tuple(fine),
+                         width=0.5, batch=32))
+
+    # --- Fig 6 "Sliding Stage": one register pair sliding through -------
+    for p in (3, 5, 7, 9, 11, 13, 15, 17, 19):
+        cfgs.append(_cfg(f"resnet20_slide{p}", "resnet20", (p,),
+                         width=0.5, batch=32))
+
+    # --- Table 4 / Fig 7: hybrid training, PPV (5,12,17) ----------------
+    cfgs.append(_cfg("resnet20_hybrid", "resnet20", (5, 12, 17),
+                     width=0.5, batch=32))
+
+    # --- Table 5: 4-stage actual pipelining, ResNet-20/56/110 -----------
+    # (paper also runs 224/362; those are meta-only here — the DES uses
+    # their analytic cost model; see DESIGN.md §4.)
+    cfgs.append(_cfg("resnet56_4s", "resnet56", (19,), width=0.5, batch=32))
+    cfgs.append(_cfg("resnet110_4s", "resnet110", (37,), width=0.25, batch=32))
+    cfgs.append(_cfg("resnet224_4s", "resnet224", (75,), width=0.25,
+                     batch=32, meta_only=True))
+    cfgs.append(_cfg("resnet362_4s", "resnet362", (121,), width=0.25,
+                     batch=32, meta_only=True))
+
+    # --- Table 6 memory model wants full-width shapes: meta-only --------
+    for depth, p in ((20, 7), (56, 19), (110, 37), (224, 75), (362, 121)):
+        cfgs.append(_cfg(f"resnet{depth}_mem", f"resnet{depth}", (p,),
+                         width=1.0, batch=1, meta_only=True))
+
+    # --- quickstart example: tiny & fast --------------------------------
+    cfgs.append(_cfg("quickstart_lenet", "lenet5", (2,), width=1.0, batch=32))
+
+    return {c["name"]: c for c in cfgs}
+
+
+MANIFEST = manifest()

@@ -1,0 +1,11 @@
+"""L1: Pallas kernels for the compute hot-spots (build-time only)."""
+
+from .conv2d import conv2d, conv2d_pallas, mxu_utilization_estimate, vmem_footprint_bytes
+from .matmul import dense, dense_pallas
+from .ref import conv2d_ref, explicit_padding, matmul_ref
+
+__all__ = [
+    "conv2d", "conv2d_pallas", "conv2d_ref",
+    "dense", "dense_pallas", "matmul_ref",
+    "explicit_padding", "vmem_footprint_bytes", "mxu_utilization_estimate",
+]

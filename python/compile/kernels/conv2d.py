@@ -1,0 +1,178 @@
+"""Pallas convolution kernel — the L1 compute hot-spot.
+
+Hardware adaptation (paper -> TPU, see DESIGN.md §3): the paper's hot-spot
+is cuDNN convolution on GTX1060 GPUs. On a TPU the same insight (keep the
+MXU busy with large contractions, stage tiles through fast scratchpad
+memory) is expressed as an *im2col-free blocked matmul*: for each (kh, kw)
+tap of the filter, a strided slice of the input tile is contracted against
+the (Cin, Cout) slice of the filter on the MXU, accumulating in VMEM. The
+BlockSpec grid tiles over (batch, out-channel) so each kernel instance
+holds one input tile and one filter tile in VMEM — the role threadblock
+tiling plays in the CUDA formulation.
+
+interpret=True is mandatory here: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers the kernel to plain HLO so
+the whole model remains executable from the Rust runtime. The blocking
+structure is still the real-TPU structure; DESIGN.md §Perf estimates VMEM
+footprint and MXU utilization from the BlockSpecs.
+
+Gradients: `conv2d` carries a jax.custom_vjp whose backward rule is the
+vjp of the pure-jnp reference (`ref.conv2d_ref`) — correct by construction
+and fusable by XLA.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import conv2d_ref, explicit_padding
+
+# Block sizes. On a real TPU these target an 8x128-lane VPU layout and a
+# 128x128 MXU; Cout is tiled to at most MXU width, batch to keep the input
+# tile within a VMEM budget (see vmem_footprint_bytes below).
+_BLOCK_OC = 128
+_BLOCK_N = 32
+
+
+def _pick_block(total, target):
+    """Largest divisor of `total` that is <= target (>=1)."""
+    best = 1
+    for d in range(1, total + 1):
+        if total % d == 0 and d <= target:
+            best = d
+    return best
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, *, kh, kw, oh, ow, stride):
+    """One (batch-tile, out-channel-tile) grid cell.
+
+    x_ref: (BN, PH, PW, Cin) pre-padded input tile in VMEM
+    w_ref: (KH, KW, Cin, BOC) filter tile in VMEM
+    o_ref: (BN, OH, OW, BOC) output tile in VMEM
+    """
+    x = x_ref[...]
+    bn = x.shape[0]
+    cin = x.shape[3]
+    acc = jnp.zeros((bn * oh * ow, o_ref.shape[3]), dtype=jnp.float32)
+    # Accumulate one MXU contraction per filter tap: (BN*OH*OW, Cin) @
+    # (Cin, BOC). Taps are unrolled at trace time (kh, kw are Python ints).
+    for i in range(kh):
+        for j in range(kw):
+            xs = x[:, i : i + (oh - 1) * stride + 1 : stride,
+                     j : j + (ow - 1) * stride + 1 : stride, :]
+            xs = xs.reshape(bn * oh * ow, cin)
+            wt = w_ref[i, j, :, :]
+            acc = acc + jnp.dot(xs, wt, preferred_element_type=jnp.float32)
+    o_ref[...] = acc.reshape(bn, oh, ow, o_ref.shape[3])
+
+
+# Per-core VMEM budget for one kernel instance (TPU ~16 MiB; leave head
+# room for double-buffering). The §Perf pass found full-width VGG conv1 at
+# batch 128 exceeding 16 MiB with a fixed 32-sample batch tile; the batch
+# tile now shrinks adaptively until the instance fits.
+_VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+
+def _instance_bytes(bn, ph, pw, cin, kh, kw, oh, ow, boc, dtype_bytes=4):
+    x_tile = bn * ph * pw * cin
+    w_tile = kh * kw * cin * boc
+    o_tile = bn * oh * ow * boc
+    acc = bn * oh * ow * boc  # f32 accumulator
+    return (x_tile + w_tile + o_tile + acc) * dtype_bytes
+
+
+def conv2d_pallas(x, w, *, stride=1, padding="SAME",
+                  vmem_budget=_VMEM_BUDGET_BYTES):
+    """Forward convolution through the Pallas kernel (no bias).
+
+    x: f32[N, H, W, Cin], w: f32[KH, KW, Cin, Cout] -> f32[N, OH, OW, Cout]
+    """
+    n, h, wdim, cin = x.shape
+    kh, kw, wcin, cout = w.shape
+    assert cin == wcin, f"Cin mismatch: {cin} vs {wcin}"
+    (plo, phi), (qlo, qhi) = explicit_padding(
+        padding, kh, kw, stride, stride, h=h, w=wdim)
+    xp = jnp.pad(x, ((0, 0), (plo, phi), (qlo, qhi), (0, 0)))
+    ph, pw = xp.shape[1], xp.shape[2]
+    oh = (ph - kh) // stride + 1
+    ow = (pw - kw) // stride + 1
+
+    boc = _pick_block(cout, _BLOCK_OC)
+    # Adaptive batch tile (§Perf): largest divisor of n, at most _BLOCK_N,
+    # whose instance footprint fits the VMEM budget.
+    bn = _pick_block(n, _BLOCK_N)
+    while bn > 1 and _instance_bytes(bn, ph, pw, cin, kh, kw, oh, ow, boc) > vmem_budget:
+        bn = _pick_block(n, bn - 1)
+    grid = (n // bn, cout // boc)
+
+    kernel = functools.partial(
+        _conv_kernel, kh=kh, kw=kw, oh=oh, ow=ow, stride=stride)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, ph, pw, cin), lambda b, c: (b, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, cin, boc), lambda b, c: (0, 0, 0, c)),
+        ],
+        out_specs=pl.BlockSpec((bn, oh, ow, boc), lambda b, c: (b, 0, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow, cout), jnp.float32),
+        interpret=True,
+    )(xp, w)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def conv2d(x, w, stride=1, padding="SAME"):
+    """Differentiable convolution: Pallas forward, reference-vjp backward."""
+    return conv2d_pallas(x, w, stride=stride, padding=padding)
+
+
+def _conv2d_fwd(x, w, stride, padding):
+    return conv2d_pallas(x, w, stride=stride, padding=padding), (x, w)
+
+
+def _conv2d_bwd(stride, padding, res, g):
+    x, w = res
+    _, vjp = jax.vjp(
+        lambda x_, w_: conv2d_ref(x_, w_, stride=stride, padding=padding),
+        x, w)
+    return vjp(g)
+
+
+conv2d.defvjp(_conv2d_fwd, _conv2d_bwd)
+
+
+def vmem_footprint_bytes(n, h, w, cin, kh, kw, cout, *, stride=1,
+                         padding="SAME", dtype_bytes=4,
+                         vmem_budget=_VMEM_BUDGET_BYTES):
+    """Estimated VMEM bytes held by one kernel instance (in + filter + out
+    + accumulator), with the adaptive batch tile applied.
+
+    Used by the §Perf analysis (DESIGN.md / EXPERIMENTS.md): on a real TPU
+    the sum must stay under ~16 MiB/core for the schedule to be valid.
+    """
+    (plo, phi), (qlo, qhi) = explicit_padding(
+        padding, kh, kw, stride, stride, h=h, w=w)
+    ph, pw = h + plo + phi, w + qlo + qhi
+    oh = (ph - kh) // stride + 1
+    ow = (pw - kw) // stride + 1
+    boc = _pick_block(cout, _BLOCK_OC)
+    bn = _pick_block(n, _BLOCK_N)
+    while bn > 1 and _instance_bytes(bn, ph, pw, cin, kh, kw, oh, ow, boc,
+                                     dtype_bytes) > vmem_budget:
+        bn = _pick_block(n, bn - 1)
+    return _instance_bytes(bn, ph, pw, cin, kh, kw, oh, ow, boc, dtype_bytes)
+
+
+def mxu_utilization_estimate(cin, cout):
+    """Fraction of the 128x128 MXU a single tap-contraction can fill.
+
+    The contraction is (BN*OH*OW, Cin) @ (Cin, BOC): the K dimension is
+    Cin and the N dimension is min(Cout, 128). Early CNN layers with tiny
+    Cin underfill the MXU K dimension — the classic conv-on-MXU effect the
+    im2col-per-tap schedule mitigates by keeping M large.
+    """
+    k_fill = min(cin, 128) / 128.0
+    n_fill = min(cout, 128) / 128.0
+    return k_fill * n_fill

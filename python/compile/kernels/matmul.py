@@ -1,0 +1,86 @@
+"""Pallas fused dense kernel: act(x @ w + b).
+
+The dense layers of LeNet/AlexNet/VGG heads are matmuls small enough that
+the win on a real TPU is *fusion* (bias add + activation applied while the
+accumulator tile is still in VMEM) rather than tiling depth. The grid
+tiles (M, N); K is kept whole — for every dense layer in the model zoo
+K <= 4096, well within a VMEM tile.
+
+Same AOT caveats as conv2d.py: interpret=True so the lowered HLO runs on
+the CPU PJRT client; custom_vjp backward comes from the jnp reference.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import matmul_ref
+
+_BLOCK_M = 128
+_BLOCK_N = 128
+
+
+def _pick_block(total, target):
+    best = 1
+    for d in range(1, total + 1):
+        if total % d == 0 and d <= target:
+            best = d
+    return best
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, activation):
+    x = x_ref[...]
+    w = w_ref[...]
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    elif activation == "tanh":
+        acc = jnp.tanh(acc)
+    o_ref[...] = acc
+
+
+def dense_pallas(x, w, b, *, activation="none"):
+    """x: f32[M, K], w: f32[K, N], b: f32[N] -> f32[M, N]."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"K mismatch: {k} vs {k2}"
+    bm = _pick_block(m, _BLOCK_M)
+    bn = _pick_block(n, _BLOCK_N)
+    grid = (m // bm, n // bn)
+    kernel = functools.partial(_dense_kernel, activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x, w, b, activation="none"):
+    """Differentiable fused dense: Pallas forward, reference-vjp backward."""
+    return dense_pallas(x, w, b, activation=activation)
+
+
+def _dense_fwd(x, w, b, activation):
+    return dense_pallas(x, w, b, activation=activation), (x, w, b)
+
+
+def _dense_bwd(activation, res, g):
+    x, w, b = res
+    _, vjp = jax.vjp(
+        lambda x_, w_, b_: matmul_ref(x_, w_, b_, activation=activation),
+        x, w, b)
+    return vjp(g)
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)

@@ -1,0 +1,73 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth for correctness: pytest compares every Pallas
+kernel against these implementations (see python/tests/test_kernels.py),
+and the custom_vjp backward rules of the kernels are *derived* from these
+references via jax.vjp, so gradients are correct by construction.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv2d_ref(x, w, b=None, *, stride=1, padding="SAME"):
+    """NHWC x HWIO -> NHWC convolution.
+
+    Args:
+      x: f32[N, H, W, Cin]
+      w: f32[KH, KW, Cin, Cout]
+      b: optional f32[Cout]
+      stride: int spatial stride (same in H and W)
+      padding: "SAME" | "VALID" | explicit ((lo,hi),(lo,hi))
+    """
+    dn = lax.conv_dimension_numbers(x.shape, w.shape, ("NHWC", "HWIO", "NHWC"))
+    y = lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=dn,
+    )
+    if b is not None:
+        y = y + b
+    return y
+
+
+def matmul_ref(x, w, b=None, *, activation="none"):
+    """Fused dense layer reference: act(x @ w + b).
+
+    Args:
+      x: f32[M, K]
+      w: f32[K, N]
+      b: optional f32[N]
+      activation: "none" | "relu" | "tanh"
+    """
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if b is not None:
+        y = y + b
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "tanh":
+        y = jnp.tanh(y)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return y
+
+
+def explicit_padding(padding, kh, kw, sh=1, sw=1, h=None, w=None):
+    """Resolve "SAME"/"VALID"/explicit padding into ((lo,hi),(lo,hi)).
+
+    For "SAME" the input spatial dims (h, w) and strides are required to
+    match XLA's semantics: total pad = max((ceil(d/s)-1)*s + k - d, 0).
+    """
+    if padding == "VALID":
+        return ((0, 0), (0, 0))
+    if padding == "SAME":
+        assert h is not None and w is not None
+
+        def same(d, k, s):
+            out = -(-d // s)  # ceil div
+            total = max((out - 1) * s + k - d, 0)
+            return (total // 2, total - total // 2)
+
+        return (same(h, kh, sh), same(w, kw, sw))
+    return tuple((int(lo), int(hi)) for lo, hi in padding)

@@ -1,0 +1,394 @@
+"""L2 layer zoo: pure-functional units grouped into paper-numbered layers.
+
+The paper inserts pipeline registers "after layer p" (PPV, §3), so the
+model is a flat list of `Layer`s, each a short sequence of atomic `Op`s.
+Stage boundaries are only allowed at layer boundaries; the tensor tuple
+that crosses a boundary is the *carry*.
+
+Carry convention: a tuple of arrays. Every op transforms carry[0] and
+passes the rest through, except the residual markers:
+  * ResStart duplicates carry[0] onto the carry as the skip value;
+  * ResEnd pops the skip, applies the shortcut, and adds it.
+This lets a pipeline register fall *inside* a residual block (the paper's
+fine-grained ResNet-20 experiments, Table 3, need cuts at every layer):
+the skip tensor simply becomes part of the carry crossing the register.
+
+State (BN running stats) is functional: apply() returns the updated state
+dict; the Rust coordinator owns the authoritative copy.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import conv2d, dense
+
+
+# ---------------------------------------------------------------------------
+# Atomic ops
+# ---------------------------------------------------------------------------
+
+class Op:
+    """An atomic operation inside a Layer."""
+
+    name = "op"
+
+    def param_specs(self):
+        """[(name, shape, init, fan_in)] — init in {he, glorot, zeros, ones}."""
+        return []
+
+    def state_specs(self):
+        """[(name, shape, init)] — init in {zeros, ones}."""
+        return []
+
+    def apply(self, params, state, carry, *, train, seed):
+        """-> (carry', state_updates: dict)."""
+        raise NotImplementedError
+
+    def out_shapes(self, shapes):
+        """Carry shapes out given carry shapes in (shapes exclude batch? no:
+        full shapes including batch)."""
+        raise NotImplementedError
+
+    def flops_per_sample(self, shapes):
+        """Approximate forward FLOPs for one sample (used by perfsim)."""
+        return 0
+
+
+def _p(op, pname):
+    return f"{op.name}/{pname}"
+
+
+class Conv(Op):
+    """2D convolution (Pallas kernel) + optional bias."""
+
+    def __init__(self, name, cin, cout, ksize, stride=1, padding="SAME",
+                 bias=True):
+        self.name = name
+        self.cin, self.cout, self.k = cin, cout, ksize
+        self.stride, self.padding, self.bias = stride, padding, bias
+
+    def param_specs(self):
+        specs = [(_p(self, "w"), (self.k, self.k, self.cin, self.cout),
+                  "he", self.k * self.k * self.cin)]
+        if self.bias:
+            specs.append((_p(self, "b"), (self.cout,), "zeros", 0))
+        return specs
+
+    def apply(self, params, state, carry, *, train, seed):
+        x = carry[0]
+        y = conv2d(x, params[_p(self, "w")], self.stride, self.padding)
+        if self.bias:
+            y = y + params[_p(self, "b")]
+        return (y,) + carry[1:], {}
+
+    def out_shapes(self, shapes):
+        n, h, w, _ = shapes[0]
+        if self.padding == "SAME":
+            oh = -(-h // self.stride)
+            ow = -(-w // self.stride)
+        else:  # VALID
+            oh = (h - self.k) // self.stride + 1
+            ow = (w - self.k) // self.stride + 1
+        return ((n, oh, ow, self.cout),) + shapes[1:]
+
+    def flops_per_sample(self, shapes):
+        (_, oh, ow, _), = self.out_shapes(shapes)[:1]
+        return 2 * oh * ow * self.k * self.k * self.cin * self.cout
+
+
+class BatchNorm(Op):
+    """Batch normalization with running statistics (momentum 0.9)."""
+
+    def __init__(self, name, c, momentum=0.9, eps=1e-5):
+        self.name, self.c = name, c
+        self.momentum, self.eps = momentum, eps
+
+    def param_specs(self):
+        return [(_p(self, "gamma"), (self.c,), "ones", 0),
+                (_p(self, "beta"), (self.c,), "zeros", 0)]
+
+    def state_specs(self):
+        return [(_p(self, "mean"), (self.c,), "zeros"),
+                (_p(self, "var"), (self.c,), "ones")]
+
+    def apply(self, params, state, carry, *, train, seed):
+        x = carry[0]
+        gamma, beta = params[_p(self, "gamma")], params[_p(self, "beta")]
+        if train:
+            axes = tuple(range(x.ndim - 1))
+            mean = jnp.mean(x, axis=axes)
+            var = jnp.var(x, axis=axes)
+            m = self.momentum
+            updates = {
+                _p(self, "mean"): m * state[_p(self, "mean")] + (1 - m) * mean,
+                _p(self, "var"): m * state[_p(self, "var")] + (1 - m) * var,
+            }
+        else:
+            mean, var = state[_p(self, "mean")], state[_p(self, "var")]
+            updates = {}
+        y = (x - mean) * lax.rsqrt(var + self.eps) * gamma + beta
+        return (y,) + carry[1:], updates
+
+    def out_shapes(self, shapes):
+        return shapes
+
+    def flops_per_sample(self, shapes):
+        n = 1
+        for d in shapes[0][1:]:
+            n *= d
+        return 4 * n
+
+
+class Act(Op):
+    """Elementwise activation."""
+
+    def __init__(self, name, kind="relu"):
+        assert kind in ("relu", "tanh")
+        self.name, self.kind = name, kind
+
+    def apply(self, params, state, carry, *, train, seed):
+        x = carry[0]
+        y = jnp.maximum(x, 0.0) if self.kind == "relu" else jnp.tanh(x)
+        return (y,) + carry[1:], {}
+
+    def out_shapes(self, shapes):
+        return shapes
+
+    def flops_per_sample(self, shapes):
+        n = 1
+        for d in shapes[0][1:]:
+            n *= d
+        return n
+
+
+class MaxPool(Op):
+    def __init__(self, name, k=2, stride=None):
+        self.name, self.k = name, k
+        self.stride = stride or k
+
+    def apply(self, params, state, carry, *, train, seed):
+        x = carry[0]
+        y = lax.reduce_window(
+            x, -jnp.inf, lax.max,
+            (1, self.k, self.k, 1), (1, self.stride, self.stride, 1), "VALID")
+        return (y,) + carry[1:], {}
+
+    def out_shapes(self, shapes):
+        n, h, w, c = shapes[0]
+        oh = (h - self.k) // self.stride + 1
+        ow = (w - self.k) // self.stride + 1
+        return ((n, oh, ow, c),) + shapes[1:]
+
+    def flops_per_sample(self, shapes):
+        (_, oh, ow, c), = self.out_shapes(shapes)[:1]
+        return oh * ow * c * self.k * self.k
+
+
+class GlobalAvgPool(Op):
+    def __init__(self, name):
+        self.name = name
+
+    def apply(self, params, state, carry, *, train, seed):
+        x = carry[0]
+        return (jnp.mean(x, axis=(1, 2)),) + carry[1:], {}
+
+    def out_shapes(self, shapes):
+        n, h, w, c = shapes[0]
+        return ((n, c),) + shapes[1:]
+
+    def flops_per_sample(self, shapes):
+        n, h, w, c = shapes[0]
+        return h * w * c
+
+
+class Flatten(Op):
+    def __init__(self, name):
+        self.name = name
+
+    def apply(self, params, state, carry, *, train, seed):
+        x = carry[0]
+        return (x.reshape(x.shape[0], -1),) + carry[1:], {}
+
+    def out_shapes(self, shapes):
+        n = shapes[0][0]
+        f = 1
+        for d in shapes[0][1:]:
+            f *= d
+        return ((n, f),) + shapes[1:]
+
+
+class Dense(Op):
+    """Fully connected layer (Pallas fused kernel)."""
+
+    def __init__(self, name, din, dout, act="none"):
+        self.name, self.din, self.dout, self.act = name, din, dout, act
+
+    def param_specs(self):
+        return [(_p(self, "w"), (self.din, self.dout), "glorot", self.din),
+                (_p(self, "b"), (self.dout,), "zeros", 0)]
+
+    def apply(self, params, state, carry, *, train, seed):
+        x = carry[0]
+        y = dense(x, params[_p(self, "w")], params[_p(self, "b")], self.act)
+        return (y,) + carry[1:], {}
+
+    def out_shapes(self, shapes):
+        return ((shapes[0][0], self.dout),) + shapes[1:]
+
+    def flops_per_sample(self, shapes):
+        return 2 * self.din * self.dout
+
+
+class Dropout(Op):
+    """Inverted dropout; the mask is derived from the per-batch seed, so
+    the vjp recomputation in the backward stage reproduces it exactly."""
+
+    def __init__(self, name, rate, salt=0):
+        self.name, self.rate = name, rate
+        self.salt = salt
+
+    def apply(self, params, state, carry, *, train, seed):
+        x = carry[0]
+        if not train or self.rate <= 0.0:
+            return carry, {}
+        key = jax.random.fold_in(
+            jax.random.PRNGKey(0), seed.astype(jnp.uint32) + jnp.uint32(self.salt))
+        keep = 1.0 - self.rate
+        mask = jax.random.bernoulli(key, keep, x.shape)
+        return (jnp.where(mask, x / keep, 0.0),) + carry[1:], {}
+
+    def out_shapes(self, shapes):
+        return shapes
+
+
+class ResStart(Op):
+    """Push carry[0] as the residual skip value."""
+
+    def __init__(self, name):
+        self.name = name
+
+    def apply(self, params, state, carry, *, train, seed):
+        return (carry[0], carry[0]) + carry[1:], {}
+
+    def out_shapes(self, shapes):
+        return (shapes[0], shapes[0]) + shapes[1:]
+
+
+class ResEnd(Op):
+    """Pop the skip, apply the shortcut (identity or 1x1 projection+BN),
+    and add. The activation after the add is a separate Act op."""
+
+    def __init__(self, name, cin, cout, stride=1, momentum=0.9, eps=1e-5):
+        self.name = name
+        self.cin, self.cout, self.stride = cin, cout, stride
+        self.project = (cin != cout) or (stride != 1)
+        self.momentum, self.eps = momentum, eps
+
+    def param_specs(self):
+        if not self.project:
+            return []
+        return [(_p(self, "w"), (1, 1, self.cin, self.cout), "he", self.cin),
+                (_p(self, "gamma"), (self.cout,), "ones", 0),
+                (_p(self, "beta"), (self.cout,), "zeros", 0)]
+
+    def state_specs(self):
+        if not self.project:
+            return []
+        return [(_p(self, "mean"), (self.cout,), "zeros"),
+                (_p(self, "var"), (self.cout,), "ones")]
+
+    def apply(self, params, state, carry, *, train, seed):
+        y, skip = carry[0], carry[1]
+        updates = {}
+        if self.project:
+            s = conv2d(skip, params[_p(self, "w")], self.stride, "SAME")
+            if train:
+                axes = tuple(range(s.ndim - 1))
+                mean, var = jnp.mean(s, axis=axes), jnp.var(s, axis=axes)
+                m = self.momentum
+                updates = {
+                    _p(self, "mean"): m * state[_p(self, "mean")] + (1 - m) * mean,
+                    _p(self, "var"): m * state[_p(self, "var")] + (1 - m) * var,
+                }
+            else:
+                mean, var = state[_p(self, "mean")], state[_p(self, "var")]
+            s = ((s - mean) * lax.rsqrt(var + self.eps)
+                 * params[_p(self, "gamma")] + params[_p(self, "beta")])
+        else:
+            s = skip
+        return (y + s,) + carry[2:], updates
+
+    def out_shapes(self, shapes):
+        return (shapes[0],) + shapes[2:]
+
+    def flops_per_sample(self, shapes):
+        n, h, w, c = shapes[0]
+        f = h * w * c
+        if self.project:
+            f += 2 * h * w * self.cin * self.cout
+        return f
+
+
+# ---------------------------------------------------------------------------
+# Layer: a paper-numbered group of ops
+# ---------------------------------------------------------------------------
+
+class Layer:
+    """One paper-numbered layer: a pipeline register may follow it."""
+
+    def __init__(self, name, ops):
+        self.name = name
+        self.ops = list(ops)
+
+    def param_specs(self):
+        return [s for op in self.ops for s in op.param_specs()]
+
+    def state_specs(self):
+        return [s for op in self.ops for s in op.state_specs()]
+
+    def param_count(self):
+        total = 0
+        for nm, shape, _init, _fi in self.param_specs():
+            n = 1
+            for d in shape:
+                n *= d
+            total += n
+        return total
+
+    def apply(self, params, state, carry, *, train, seed):
+        updates = {}
+        for op in self.ops:
+            carry, up = op.apply(params, state, carry, train=train, seed=seed)
+            updates.update(up)
+        return carry, updates
+
+    def out_shapes(self, shapes):
+        for op in self.ops:
+            shapes = op.out_shapes(shapes)
+        return shapes
+
+    def flops_per_sample(self, shapes):
+        total = 0
+        for op in self.ops:
+            total += op.flops_per_sample(shapes)
+            shapes = op.out_shapes(shapes)
+        return total
+
+
+def init_value(shape, init, fan_in, rng):
+    """Numpy initializer mirrored by the Rust side (model/init.rs)."""
+    import numpy as np
+
+    if init == "zeros":
+        return np.zeros(shape, dtype=np.float32)
+    if init == "ones":
+        return np.ones(shape, dtype=np.float32)
+    if init == "he":
+        std = float(np.sqrt(2.0 / max(fan_in, 1)))
+        return rng.normal(0.0, std, size=shape).astype(np.float32)
+    if init == "glorot":
+        fan_out = shape[-1]
+        limit = float(np.sqrt(6.0 / (fan_in + fan_out)))
+        return rng.uniform(-limit, limit, size=shape).astype(np.float32)
+    raise ValueError(f"unknown init {init!r}")

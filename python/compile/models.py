@@ -1,0 +1,185 @@
+"""Model zoo: the paper's four CNN families, as flat lists of Layers.
+
+Layer numbering matches the paper's PPV convention (Table 1): a pipeline
+register pair may be placed after any layer 1..L-1. `width_mult` scales
+channel widths so that the experiment profile can trade fidelity for
+wall-clock on the 1-core CPU testbed (DESIGN.md §4); `width_mult=1.0` is
+the paper-faithful architecture.
+"""
+
+from .layers import (Act, BatchNorm, Conv, Dense, Dropout, Flatten,
+                     GlobalAvgPool, Layer, MaxPool, ResEnd, ResStart)
+
+
+class Model:
+    def __init__(self, name, layers, input_shape, num_classes, dataset):
+        self.name = name
+        self.layers = layers          # list[Layer], 1-indexed as paper: layers[i-1]
+        self.input_shape = input_shape  # (H, W, C)
+        self.num_classes = num_classes
+        self.dataset = dataset        # "mnist" | "cifar10"
+
+    @property
+    def num_layers(self):
+        return len(self.layers)
+
+    def layer_param_counts(self):
+        return [l.param_count() for l in self.layers]
+
+    def carry_shapes_after(self, batch):
+        """Carry shapes after each layer (index i -> after layer i+1)."""
+        shapes = ((batch,) + tuple(self.input_shape),)
+        out = []
+        for layer in self.layers:
+            shapes = layer.out_shapes(shapes)
+            out.append(shapes)
+        return out
+
+    def flops_per_sample(self):
+        """Forward FLOPs per layer for one sample (perfsim cost model)."""
+        shapes = ((1,) + tuple(self.input_shape),)
+        out = []
+        for layer in self.layers:
+            out.append(layer.flops_per_sample(shapes))
+            shapes = layer.out_shapes(shapes)
+        return out
+
+
+def _w(c, mult):
+    """Scale a channel width, keeping it a positive multiple of 4."""
+    if mult >= 1.0:
+        return int(round(c * mult))
+    return max(4, int(round(c * mult / 4)) * 4)
+
+
+def lenet5(width_mult=1.0, num_classes=10):
+    """LeNet-5 on MNIST (5 layers), tanh activations as in LeCun'98."""
+    m = width_mult
+    c1, c2 = _w(6, m), _w(16, m)
+    f1, f2 = _w(120, m), _w(84, m)
+    # 28x28 -> SAME conv -> pool 14x14 -> VALID 5x5 conv -> 10x10 -> pool 5x5
+    flat = 5 * 5 * c2
+    layers = [
+        Layer("l1", [Conv("conv1", 1, c1, 5, 1, "SAME"), Act("act1", "tanh"),
+                     MaxPool("pool1", 2)]),
+        Layer("l2", [Conv("conv2", c1, c2, 5, 1, "VALID"), Act("act2", "tanh"),
+                     MaxPool("pool2", 2)]),
+        Layer("l3", [Flatten("flat"), Dense("fc1", flat, f1, "tanh")]),
+        Layer("l4", [Dense("fc2", f1, f2, "tanh")]),
+        Layer("l5", [Dense("fc3", f2, num_classes)]),
+    ]
+    return Model("lenet5", layers, (28, 28, 1), num_classes, "mnist")
+
+
+def alexnet(width_mult=1.0, num_classes=10):
+    """AlexNet adapted to CIFAR-10 (8 layers: 5 conv + 3 fc)."""
+    m = width_mult
+    c = [_w(64, m), _w(192, m), _w(384, m), _w(256, m), _w(256, m)]
+    f = [_w(1024, m), _w(512, m)]
+    flat = 4 * 4 * c[4]  # 32 -> pool -> 16 -> pool -> 8 -> pool -> 4
+    layers = [
+        Layer("l1", [Conv("conv1", 3, c[0], 5), Act("a1"), MaxPool("p1", 2)]),
+        Layer("l2", [Conv("conv2", c[0], c[1], 5), Act("a2"), MaxPool("p2", 2)]),
+        Layer("l3", [Conv("conv3", c[1], c[2], 3), Act("a3")]),
+        Layer("l4", [Conv("conv4", c[2], c[3], 3), Act("a4")]),
+        Layer("l5", [Conv("conv5", c[3], c[4], 3), Act("a5"), MaxPool("p5", 2)]),
+        Layer("l6", [Flatten("flat"), Dropout("do6", 0.5, salt=6),
+                     Dense("fc6", flat, f[0], "relu")]),
+        Layer("l7", [Dropout("do7", 0.5, salt=7), Dense("fc7", f[0], f[1], "relu")]),
+        Layer("l8", [Dense("fc8", f[1], num_classes)]),
+    ]
+    return Model("alexnet", layers, (32, 32, 3), num_classes, "cifar10")
+
+
+_VGG_PLANS = {
+    # (conv widths per layer, pool after these layer indices (1-based))
+    "vgg11": ([64, 128, 256, 256, 512, 512, 512, 512],
+              {1, 2, 4, 6, 8}),
+    "vgg16": ([64, 64, 128, 128, 256, 256, 256, 512, 512, 512, 512, 512, 512],
+              {2, 4, 7, 10, 13}),
+}
+
+
+def vgg(kind="vgg16", width_mult=1.0, num_classes=10):
+    """VGG on CIFAR-10 with BN + dropout (paper Appendix A). vgg16 has 16
+    paper-layers: 13 conv + 2 fc(+dropout) + classifier."""
+    widths, pools = _VGG_PLANS[kind]
+    m = width_mult
+    layers = []
+    cin = 3
+    for i, wdt in enumerate(widths, start=1):
+        c = _w(wdt, m)
+        ops = [Conv(f"conv{i}", cin, c, 3),
+               BatchNorm(f"bn{i}", c), Act(f"a{i}")]
+        if i in pools:
+            ops.append(MaxPool(f"p{i}", 2))
+        layers.append(Layer(f"l{i}", ops))
+        cin = c
+    # After 5 pools: 32 / 32 = 1 -> flat = cin
+    nconv = len(widths)
+    fc = _w(512, m)
+    layers.append(Layer(f"l{nconv+1}",
+                        [Flatten("flat"), Dropout("do1", 0.5, salt=1),
+                         Dense("fc1", cin, fc, "relu")]))
+    layers.append(Layer(f"l{nconv+2}",
+                        [Dropout("do2", 0.5, salt=2),
+                         Dense("fc2", fc, fc, "relu")]))
+    layers.append(Layer(f"l{nconv+3}", [Dense("fc3", fc, num_classes)]))
+    return Model(kind, layers, (32, 32, 3), num_classes, "cifar10")
+
+
+def resnet(depth=20, width_mult=1.0, num_classes=10):
+    """CIFAR ResNet (He et al. 2016): depth = 6m+2, paper layer numbering:
+    layer 1 = stem conv, layers 2..6m+1 = block convs, layer 6m+2 = head.
+
+    A pipeline register may fall *inside* a residual block (between its two
+    conv layers): the skip tensor then travels through the register as part
+    of the carry (see layers.ResStart/ResEnd). Shortcuts that change shape
+    use a 1x1 projection + BN (option B); the paper's akamaster baseline
+    uses option A — a documented substitution (DESIGN.md §4).
+    """
+    assert (depth - 2) % 6 == 0, "CIFAR ResNet depth must be 6m+2"
+    mblocks = (depth - 2) // 6
+    m = width_mult
+    widths = [_w(16, m), _w(32, m), _w(64, m)]
+    layers = [
+        Layer("l1", [Conv("conv0", 3, widths[0], 3, bias=False),
+                     BatchNorm("bn0", widths[0]), Act("a0")]),
+    ]
+    cin = widths[0]
+    lnum = 2
+    for g, c in enumerate(widths):
+        for j in range(mblocks):
+            stride = 2 if (g > 0 and j == 0) else 1
+            tag = f"g{g}b{j}"
+            layers.append(Layer(
+                f"l{lnum}",
+                [ResStart(f"{tag}/start"),
+                 Conv(f"{tag}/conv1", cin, c, 3, stride, bias=False),
+                 BatchNorm(f"{tag}/bn1", c), Act(f"{tag}/a1")]))
+            lnum += 1
+            layers.append(Layer(
+                f"l{lnum}",
+                [Conv(f"{tag}/conv2", c, c, 3, 1, bias=False),
+                 BatchNorm(f"{tag}/bn2", c),
+                 ResEnd(f"{tag}/end", cin, c, stride),
+                 Act(f"{tag}/a2")]))
+            lnum += 1
+            cin = c
+    layers.append(Layer(f"l{lnum}",
+                        [GlobalAvgPool("gap"), Flatten("flat"),
+                         Dense("fc", cin, num_classes)]))
+    return Model(f"resnet{depth}", layers, (32, 32, 3), num_classes, "cifar10")
+
+
+def build_model(name, width_mult=1.0, num_classes=10):
+    """Registry entry point used by aot.py and tests."""
+    if name == "lenet5":
+        return lenet5(width_mult, num_classes)
+    if name == "alexnet":
+        return alexnet(width_mult, num_classes)
+    if name in _VGG_PLANS:
+        return vgg(name, width_mult, num_classes)
+    if name.startswith("resnet"):
+        return resnet(int(name[len("resnet"):]), width_mult, num_classes)
+    raise ValueError(f"unknown model {name!r}")

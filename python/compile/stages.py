@@ -1,0 +1,177 @@
+"""PPV -> per-stage programs (the L2 <-> L3 contract).
+
+A config is (model, PPV, batch). The PPV = (p_1..p_K) follows the paper's
+§3: a register pair after layer p_i creates K+1 forward stages, where
+stage i holds layers p_{i-1}+1 .. p_i. For each partition we build four
+pure jax functions with *flat* argument lists (the Rust runtime feeds
+PJRT buffers positionally; meta.json records the ordering):
+
+  fwd       (params.., state.., seed:i32, carry_in..)           -> (carry_out.., new_state..)
+  bwd       (params.., state.., seed, carry_in.., gcarry_out..) -> (gcarry_in.., dparams..)
+  fwd_eval  (params.., state.., carry_in..)                     -> (carry_out..)
+  last      (params.., state.., seed, carry_in.., labels:i32[N])
+              -> (loss, correct, gcarry_in.., dparams.., new_state..)
+  last_eval (params.., state.., carry_in..)                     -> (logits,)
+
+`bwd` recomputes the partition forward internally (jax.vjp) from the saved
+carry_in — the paper's "intermediate activations" are exactly carry_in, so
+the coordinator stores one tensor tuple per in-flight mini-batch and no
+weight copies (the paper's memory claim, Table 6).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+class Partition:
+    """One pipeline stage: a contiguous slice of model layers."""
+
+    def __init__(self, model, index, lo, hi):
+        """Layers lo..hi inclusive, 1-indexed (paper numbering)."""
+        self.model = model
+        self.index = index          # 1-based stage index
+        self.lo, self.hi = lo, hi
+        self.layers = model.layers[lo - 1: hi]
+        self.param_specs = [s for l in self.layers for s in l.param_specs()]
+        self.state_specs = [s for l in self.layers for s in l.state_specs()]
+        self.param_names = [s[0] for s in self.param_specs]
+        self.state_names = [s[0] for s in self.state_specs]
+
+    def param_count(self):
+        total = 0
+        for _n, shape, _i, _f in self.param_specs:
+            c = 1
+            for d in shape:
+                c *= d
+            total += c
+        return total
+
+    def _apply(self, params, state, carry, *, train, seed):
+        updates = dict(state)
+        for layer in self.layers:
+            carry, up = layer.apply(params, updates, carry,
+                                    train=train, seed=seed)
+            updates.update(up)
+        return carry, updates
+
+
+def split(model, ppv):
+    """PPV -> list[Partition] (K+1 partitions)."""
+    ppv = list(ppv)
+    assert all(1 <= p < model.num_layers for p in ppv), \
+        f"PPV {ppv} out of range for {model.name} ({model.num_layers} layers)"
+    assert ppv == sorted(ppv) and len(set(ppv)) == len(ppv), \
+        f"PPV must be strictly increasing: {ppv}"
+    bounds = [0] + ppv + [model.num_layers]
+    return [Partition(model, i + 1, bounds[i] + 1, bounds[i + 1])
+            for i in range(len(bounds) - 1)]
+
+
+def carry_shapes(model, ppv, batch):
+    """Carry shapes entering each partition (index 0 = model input)."""
+    after = model.carry_shapes_after(batch)
+    shapes = [((batch,) + tuple(model.input_shape),)]
+    for p in ppv:
+        shapes.append(after[p - 1])
+    return shapes
+
+
+def _unflatten(part, args):
+    np_, ns = len(part.param_names), len(part.state_names)
+    params = dict(zip(part.param_names, args[:np_]))
+    state = dict(zip(part.state_names, args[np_:np_ + ns]))
+    return params, state, args[np_ + ns:]
+
+
+def make_fwd(part, train=True):
+    def fwd(*args):
+        params, state, rest = _unflatten(part, args)
+        seed, carry = rest[0], tuple(rest[1:])
+        out, updates = part._apply(params, state, carry, train=train, seed=seed)
+        new_state = tuple(updates[n] for n in part.state_names)
+        return tuple(out) + new_state
+    return fwd
+
+
+def make_fwd_eval(part):
+    def fwd_eval(*args):
+        params, state, carry = _unflatten(part, args)
+        out, _ = part._apply(params, state, tuple(carry), train=False,
+                             seed=jnp.int32(0))
+        return tuple(out)
+    return fwd_eval
+
+
+def make_bwd(part, n_carry_out):
+    def bwd(*args):
+        params, state, rest = _unflatten(part, args)
+        seed = rest[0]
+        carry_in = tuple(rest[1: len(rest) - n_carry_out])
+        gout = tuple(rest[len(rest) - n_carry_out:])
+
+        plist = tuple(params[n] for n in part.param_names)
+
+        def core(plist_, carry_):
+            p = dict(zip(part.param_names, plist_))
+            out, _ = part._apply(p, state, carry_, train=True, seed=seed)
+            return tuple(out)
+
+        _, vjp = jax.vjp(core, plist, carry_in)
+        gp, gc = vjp(gout)
+        return tuple(gc) + tuple(gp)
+    return bwd
+
+
+def _loss_and_metrics(logits, labels):
+    logz = jax.nn.log_softmax(logits)
+    n = logits.shape[0]
+    nll = -logz[jnp.arange(n), labels]
+    loss = jnp.mean(nll)
+    correct = jnp.sum(
+        (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+    return loss, correct
+
+
+def make_last(part):
+    """Fused FS_{K+1}+BKS_1 program: fwd + loss + bwd in one executable
+    (the paper co-locates them on one accelerator; staleness 0)."""
+
+    def last(*args):
+        params, state, rest = _unflatten(part, args)
+        seed = rest[0]
+        carry_in = tuple(rest[1:-1])
+        labels = rest[-1]
+        plist = tuple(params[n] for n in part.param_names)
+
+        def core(plist_, carry_):
+            p = dict(zip(part.param_names, plist_))
+            out, updates = part._apply(p, state, carry_, train=True, seed=seed)
+            loss, correct = _loss_and_metrics(out[0], labels)
+            new_state = tuple(updates[n] for n in part.state_names)
+            return loss, (correct, new_state)
+
+        loss, vjp, (correct, new_state) = jax.vjp(
+            core, plist, carry_in, has_aux=True)
+        gp, gc = vjp(jnp.float32(1.0))
+        return (loss, correct) + tuple(gc) + tuple(gp) + tuple(new_state)
+    return last
+
+
+def make_last_eval(part):
+    def last_eval(*args):
+        params, state, carry = _unflatten(part, args)
+        out, _ = part._apply(params, state, tuple(carry), train=False,
+                             seed=jnp.int32(0))
+        return (out[0],)
+    return last_eval
+
+
+def full_forward(model, params, state, x, *, train=False, seed=0):
+    """Reference whole-model forward (tests: composed stages == this)."""
+    carry = (x,)
+    updates = dict(state)
+    for layer in model.layers:
+        carry, up = layer.apply(params, updates, carry, train=train,
+                                seed=jnp.int32(seed))
+        updates.update(up)
+    return carry[0], updates

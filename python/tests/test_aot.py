@@ -1,0 +1,95 @@
+"""AOT driver tests: meta.json schema, program I/O arity, HLO text shape,
+and incremental-build behaviour."""
+
+import json
+import os
+import tempfile
+
+import pytest
+
+from compile import aot, experiments, models, stages
+
+
+def test_manifest_has_every_experiment_family():
+    names = set(experiments.MANIFEST)
+    for needed in ("lenet5_4s", "lenet5_10s", "alexnet_8s", "vgg16_10s",
+                   "resnet20_4s", "resnet20_fine8", "resnet20_fine20",
+                   "resnet20_slide19", "resnet20_hybrid", "resnet56_4s",
+                   "resnet110_4s", "resnet224_4s", "resnet362_4s",
+                   "resnet20_mem", "resnet362_mem", "quickstart_lenet"):
+        assert needed in names, needed
+
+
+def test_meta_schema_quickstart():
+    cfg = experiments.MANIFEST["quickstart_lenet"]
+    meta, model, parts, carries = aot.config_meta(cfg)
+    assert meta["num_layers"] == 5
+    assert len(meta["partitions"]) == len(cfg["ppv"]) + 1
+    assert meta["partitions"][0]["carry_in"] == [[32, 28, 28, 1]]
+    last = meta["partitions"][-1]
+    assert "last" in last["programs"] and "last_eval" in last["programs"]
+    assert sum(p["param_count"] for p in meta["partitions"]) == \
+        sum(l["param_count"] for l in meta["layers"])
+    # layer metadata drives the Table-6 memory model
+    for l in meta["layers"]:
+        assert l["carry_elems_per_sample"] > 0
+        assert l["flops_per_sample"] >= 0
+
+
+def test_meta_carry_chain_is_consistent():
+    cfg = experiments.MANIFEST["resnet20_fine8"]
+    meta, _, _, _ = aot.config_meta(cfg)
+    parts = meta["partitions"]
+    for a, b in zip(parts, parts[1:]):
+        assert a["carry_out"] == b["carry_in"], (a["index"], b["index"])
+
+
+def test_hlo_text_emission_and_incremental(tmp_path):
+    cfg = dict(experiments.MANIFEST["quickstart_lenet"])
+    digest = aot._source_digest()
+    assert aot.lower_config(cfg, str(tmp_path), digest) == "built"
+    cdir = tmp_path / cfg["name"]
+    meta = json.loads((cdir / "meta.json").read_text())
+    for part in meta["partitions"]:
+        for prog in part["programs"].values():
+            text = (cdir / prog).read_text()
+            assert text.startswith("HloModule"), prog
+            assert "ENTRY" in text
+    # second run is a no-op
+    assert aot.lower_config(cfg, str(tmp_path), digest) == "up-to-date"
+    # source change forces rebuild
+    assert aot.lower_config(cfg, str(tmp_path), "otherdigest") == "built"
+
+
+def test_meta_only_config_writes_no_hlo(tmp_path):
+    cfg = dict(experiments.MANIFEST["resnet20_mem"])
+    aot.lower_config(cfg, str(tmp_path), "d")
+    cdir = tmp_path / cfg["name"]
+    assert (cdir / "meta.json").exists()
+    assert not list(cdir.glob("*.hlo.txt"))
+
+
+def test_program_arity_matches_meta():
+    """The positional contract Rust relies on: count inputs/outputs."""
+    cfg = experiments.MANIFEST["quickstart_lenet"]
+    meta, model, parts, carries = aot.config_meta(cfg)
+    import jax.numpy as jnp
+    import numpy as np
+    from compile.layers import init_value
+    rng = np.random.default_rng(0)
+    p0 = parts[0]
+    params = [jnp.asarray(init_value(tuple(s["shape"]), s["init"],
+                                     s["fan_in"], rng))
+              for s in meta["partitions"][0]["params"]]
+    state = [jnp.asarray(init_value(tuple(s["shape"]), s["init"], 0, rng))
+             for s in meta["partitions"][0]["state"]]
+    x = jnp.asarray(rng.normal(
+        size=tuple(meta["partitions"][0]["carry_in"][0])).astype(np.float32))
+    out = stages.make_fwd(p0)(*params, *state, jnp.int32(0), x)
+    n_carry_out = len(meta["partitions"][0]["carry_out"])
+    assert len(out) == n_carry_out + len(state)
+    gouts = [jnp.ones(tuple(s), jnp.float32)
+             for s in meta["partitions"][0]["carry_out"]]
+    bout = stages.make_bwd(p0, n_carry_out)(
+        *params, *state, jnp.int32(0), x, *gouts)
+    assert len(bout) == 1 + len(params)  # gcarry_in + dparams

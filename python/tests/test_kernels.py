@@ -1,0 +1,153 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/strides/paddings/activations; assert_allclose
+against ref.py. This is the core correctness signal for the kernels that
+end up inside every lowered stage program.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (conv2d, conv2d_pallas, conv2d_ref, dense,
+                             dense_pallas, explicit_padding, matmul_ref,
+                             mxu_utilization_estimate, vmem_footprint_bytes)
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+# ---------------------------------------------------------------------------
+
+@given(
+    n=st.sampled_from([1, 2, 3, 4]),
+    hw=st.sampled_from([4, 7, 8, 12]),
+    cin=st.sampled_from([1, 3, 4, 8]),
+    cout=st.sampled_from([1, 4, 8, 16]),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    padding=st.sampled_from(["SAME", "VALID"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_matches_ref(n, hw, cin, cout, k, stride, padding, seed):
+    if padding == "VALID" and hw < k:
+        return
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, n, hw, hw, cin)
+    w = _rand(rng, k, k, cin, cout)
+    got = conv2d_pallas(x, w, stride=stride, padding=padding)
+    want = conv2d_ref(x, w, stride=stride, padding=padding)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(seed=st.integers(0, 2**31 - 1), stride=st.sampled_from([1, 2]))
+def test_conv2d_grads_match_ref(seed, stride):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, 2, 8, 8, 3)
+    w = _rand(rng, 3, 3, 3, 8)
+
+    def f_pallas(x, w):
+        return jnp.sum(conv2d(x, w, stride, "SAME") ** 2)
+
+    def f_ref(x, w):
+        return jnp.sum(conv2d_ref(x, w, stride=stride, padding="SAME") ** 2)
+
+    gx, gw = jax.grad(f_pallas, argnums=(0, 1))(x, w)
+    rx, rw = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx, rx, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(gw, rw, rtol=1e-3, atol=1e-3)
+
+
+def test_conv2d_numeric_gradcheck():
+    """Finite-difference check on a tiny case (independent of jax.vjp)."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(1, 5, 5, 2)).astype(np.float32)
+    w = rng.normal(size=(3, 3, 2, 2)).astype(np.float32)
+
+    def f(wflat):
+        wr = jnp.asarray(wflat.reshape(w.shape))
+        return float(jnp.sum(conv2d(jnp.asarray(x), wr)))
+
+    g = jax.grad(lambda w_: jnp.sum(conv2d(jnp.asarray(x), w_)))(jnp.asarray(w))
+    g = np.asarray(g).ravel()
+    eps = 1e-3
+    idxs = rng.choice(w.size, size=6, replace=False)
+    for i in idxs:
+        wp = w.ravel().copy(); wp[i] += eps
+        wm = w.ravel().copy(); wm[i] -= eps
+        fd = (f(wp) - f(wm)) / (2 * eps)
+        assert abs(fd - g[i]) < 5e-2, (i, fd, g[i])
+
+
+def test_conv2d_bias_via_ref():
+    rng = np.random.default_rng(1)
+    x = _rand(rng, 2, 6, 6, 3)
+    w = _rand(rng, 3, 3, 3, 4)
+    b = _rand(rng, 4)
+    np.testing.assert_allclose(
+        conv2d_pallas(x, w) + b, conv2d_ref(x, w, b), rtol=1e-4, atol=1e-4)
+
+
+def test_explicit_padding_same_odd_even():
+    assert explicit_padding("SAME", 3, 3, 1, 1, h=8, w=8) == ((1, 1), (1, 1))
+    assert explicit_padding("SAME", 3, 3, 2, 2, h=8, w=8) == ((0, 1), (0, 1))
+    assert explicit_padding("VALID", 5, 5) == ((0, 0), (0, 0))
+    assert explicit_padding(((2, 2), (0, 1)), 5, 5) == ((2, 2), (0, 1))
+
+
+# ---------------------------------------------------------------------------
+# dense
+# ---------------------------------------------------------------------------
+
+@given(
+    m=st.sampled_from([1, 2, 8, 33]),
+    k=st.sampled_from([1, 7, 64]),
+    n=st.sampled_from([1, 10, 128]),
+    act=st.sampled_from(["none", "relu", "tanh"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_matches_ref(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _rand(rng, m, k), _rand(rng, k, n), _rand(rng, n)
+    got = dense_pallas(x, w, b, activation=act)
+    want = matmul_ref(x, w, b, activation=act)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(act=st.sampled_from(["none", "relu", "tanh"]),
+       seed=st.integers(0, 2**31 - 1))
+def test_dense_grads_match_ref(act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _rand(rng, 4, 9), _rand(rng, 9, 7), _rand(rng, 7)
+
+    g = jax.grad(lambda x_, w_, b_: jnp.sum(dense(x_, w_, b_, act) ** 2),
+                 argnums=(0, 1, 2))(x, w, b)
+    r = jax.grad(
+        lambda x_, w_, b_: jnp.sum(matmul_ref(x_, w_, b_, activation=act) ** 2),
+        argnums=(0, 1, 2))(x, w, b)
+    for a, b_ in zip(g, r):
+        np.testing.assert_allclose(a, b_, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# perf-model helpers
+# ---------------------------------------------------------------------------
+
+def test_vmem_footprint_positive_and_monotone():
+    small = vmem_footprint_bytes(32, 8, 8, 16, 3, 3, 16)
+    big = vmem_footprint_bytes(32, 32, 32, 16, 3, 3, 16)
+    assert 0 < small < big
+
+
+def test_mxu_utilization_bounds():
+    assert mxu_utilization_estimate(3, 16) < 0.05
+    assert mxu_utilization_estimate(128, 128) == 1.0
+    assert mxu_utilization_estimate(256, 256) == 1.0

@@ -1,0 +1,144 @@
+"""L2 layer-zoo unit tests: shape propagation, BN/dropout semantics,
+residual carry discipline."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.layers import (Act, BatchNorm, Conv, Dense, Dropout, Flatten,
+                            GlobalAvgPool, Layer, MaxPool, ResEnd, ResStart,
+                            init_value)
+
+
+def _params_state(layer, rng):
+    params = {n: jnp.asarray(init_value(s, i, f, rng))
+              for n, s, i, f in layer.param_specs()}
+    state = {n: jnp.asarray(init_value(s, i, 0, rng))
+             for n, s, i in layer.state_specs()}
+    return params, state
+
+
+def _run(layer, x, train=True, seed=0, rng=None):
+    rng = rng or np.random.default_rng(0)
+    params, state = _params_state(layer, rng)
+    out, up = layer.apply(params, state, (x,), train=train,
+                          seed=jnp.int32(seed))
+    return out, up, params, state
+
+
+def test_conv_shape_propagation_matches_apply():
+    rng = np.random.default_rng(0)
+    for stride, padding in [(1, "SAME"), (2, "SAME"), (1, "VALID")]:
+        op = Conv("c", 3, 8, 3, stride, padding)
+        layer = Layer("l", [op])
+        x = jnp.asarray(rng.normal(size=(2, 9, 9, 3)).astype(np.float32))
+        out, _, _, _ = _run(layer, x)
+        assert out[0].shape == layer.out_shapes((x.shape,))[0]
+
+
+def test_maxpool_shape_and_value():
+    x = jnp.arange(16.0).reshape(1, 4, 4, 1)
+    layer = Layer("l", [MaxPool("p", 2)])
+    out, _, _, _ = _run(layer, x)
+    assert out[0].shape == (1, 2, 2, 1)
+    np.testing.assert_allclose(np.asarray(out[0]).ravel(), [5, 7, 13, 15])
+
+
+def test_batchnorm_train_normalizes_and_updates_state():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(3.0, 2.0, size=(64, 4, 4, 8)).astype(np.float32))
+    layer = Layer("l", [BatchNorm("bn", 8)])
+    out, up, params, state = _run(layer, x, train=True)
+    y = np.asarray(out[0])
+    assert abs(y.mean()) < 1e-3 and abs(y.std() - 1.0) < 1e-2
+    # running stats moved toward batch stats
+    assert np.all(np.asarray(up["bn/mean"]) != np.asarray(state["bn/mean"]))
+
+
+def test_batchnorm_eval_uses_running_stats():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(8, 2, 2, 4)).astype(np.float32))
+    layer = Layer("l", [BatchNorm("bn", 4)])
+    params, state = _params_state(layer, rng)
+    out, up = layer.apply(params, state, (x,), train=False, seed=jnp.int32(0))
+    # with mean=0 var=1 state, eval BN is (x)*gamma+beta = x
+    np.testing.assert_allclose(out[0], x, rtol=1e-4, atol=1e-4)
+    assert up == {}
+
+
+def test_dropout_train_scales_and_is_seed_deterministic():
+    rng = np.random.default_rng(3)
+    x = jnp.ones((4, 100), jnp.float32)
+    layer = Layer("l", [Dropout("do", 0.5, salt=1)])
+    out1, _, _, _ = _run(layer, x, train=True, seed=42, rng=rng)
+    out2, _, _, _ = _run(layer, x, train=True, seed=42, rng=rng)
+    out3, _, _, _ = _run(layer, x, train=True, seed=43, rng=rng)
+    np.testing.assert_array_equal(out1[0], out2[0])  # same seed -> same mask
+    assert not np.array_equal(np.asarray(out1[0]), np.asarray(out3[0]))
+    vals = np.unique(np.asarray(out1[0]))
+    assert set(vals.tolist()) <= {0.0, 2.0}  # inverted dropout at p=0.5
+
+
+def test_dropout_eval_is_identity():
+    x = jnp.ones((4, 10), jnp.float32)
+    out, _, _, _ = _run(Layer("l", [Dropout("do", 0.9)]), x, train=False)
+    np.testing.assert_array_equal(out[0], x)
+
+
+def test_residual_identity_block_adds_skip():
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(2, 4, 4, 8)).astype(np.float32))
+    layer = Layer("l", [ResStart("s"), ResEnd("e", 8, 8, 1)])
+    out, _, _, _ = _run(layer, x)
+    np.testing.assert_allclose(out[0], 2 * x, rtol=1e-5)
+
+
+def test_residual_projection_changes_shape():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(2, 8, 8, 8)).astype(np.float32))
+    start = Layer("a", [ResStart("s"), Conv("c", 8, 16, 3, 2, bias=False)])
+    end = Layer("b", [ResEnd("e", 8, 16, 2)])
+    out, _, p1, s1 = _run(start, x)
+    rng2 = np.random.default_rng(6)
+    p2 = {n: jnp.asarray(init_value(s, i, f, rng2))
+          for n, s, i, f in end.param_specs()}
+    s2 = {n: jnp.asarray(init_value(s, i, 0, rng2))
+          for n, s, i in end.state_specs()}
+    out2, _ = end.apply(p2, s2, out, train=True, seed=jnp.int32(0))
+    assert out2[0].shape == (2, 4, 4, 16)
+    assert len(out2) == 1  # skip consumed
+
+
+def test_ops_pass_through_extra_carry():
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(2, 4, 4, 3)).astype(np.float32))
+    extra = jnp.ones((2, 5), jnp.float32)
+    layer = Layer("l", [Conv("c", 3, 4, 3), Act("a"), BatchNorm("bn", 4)])
+    params, state = _params_state(layer, rng)
+    out, _ = layer.apply(params, state, (x, extra), train=True,
+                         seed=jnp.int32(0))
+    assert len(out) == 2
+    np.testing.assert_array_equal(out[1], extra)
+
+
+def test_global_avg_pool_and_flatten():
+    x = jnp.arange(2 * 2 * 2 * 3, dtype=jnp.float32).reshape(2, 2, 2, 3)
+    layer = Layer("l", [GlobalAvgPool("g"), Flatten("f")])
+    out, _, _, _ = _run(layer, x)
+    assert out[0].shape == (2, 3)
+    np.testing.assert_allclose(out[0][0], np.asarray(x[0]).mean(axis=(0, 1)))
+
+
+def test_init_value_statistics():
+    rng = np.random.default_rng(8)
+    he = init_value((1000,), "he", 50, rng)
+    assert abs(he.std() - np.sqrt(2 / 50)) < 0.02
+    assert np.all(init_value((3, 3), "zeros", 0, rng) == 0)
+    assert np.all(init_value((3, 3), "ones", 0, rng) == 1)
+    gl = init_value((100, 100), "glorot", 100, rng)
+    assert np.abs(gl).max() <= np.sqrt(6 / 200) + 1e-6
+
+
+def test_dense_layer_flops():
+    layer = Layer("l", [Dense("d", 10, 20)])
+    assert layer.flops_per_sample(((1, 10),)) == 2 * 10 * 20

@@ -1,0 +1,159 @@
+"""Stage-splitter correctness: the heart of the L2<->L3 contract.
+
+Composed per-stage programs must equal the monolithic model — forward
+(eval and train) and gradients — for every PPV shape we exercise,
+including cuts inside residual blocks (multi-tensor carries).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import models, stages
+from compile.layers import init_value
+
+settings.register_profile("ci", max_examples=10, deadline=None)
+settings.load_profile("ci")
+
+
+def _init_model(name, width, seed=0):
+    m = models.build_model(name, width)
+    rng = np.random.default_rng(seed)
+    params, state = {}, {}
+    for l in m.layers:
+        for n, s, i, f in l.param_specs():
+            params[n] = jnp.asarray(init_value(s, i, f, rng))
+        for n, s, i in l.state_specs():
+            state[n] = jnp.asarray(init_value(s, i, 0, rng))
+    return m, params, state
+
+
+def _staged_eval(m, params, state, ppv, x):
+    parts = stages.split(m, ppv)
+    carry = (x,)
+    for i, p in enumerate(parts):
+        args = ([params[n] for n in p.param_names]
+                + [state[n] for n in p.state_names])
+        if i == len(parts) - 1:
+            return stages.make_last_eval(p)(*args, *carry)[0]
+        carry = tuple(stages.make_fwd_eval(p)(*args, *carry))
+
+
+def _staged_train_grads(m, params, state, ppv, x, labels, seed=7):
+    parts = stages.split(m, ppv)
+    carries = stages.carry_shapes(m, ppv, x.shape[0])
+    sd = jnp.int32(seed)
+    carry, saved = (x,), []
+    for i, p in enumerate(parts[:-1]):
+        args = ([params[n] for n in p.param_names]
+                + [state[n] for n in p.state_names])
+        saved.append(carry)
+        out = stages.make_fwd(p, train=True)(*args, sd, *carry)
+        carry = tuple(out[:len(carries[i + 1])])
+    p = parts[-1]
+    args = ([params[n] for n in p.param_names]
+            + [state[n] for n in p.state_names])
+    out = stages.make_last(p)(*args, sd, *carry, labels)
+    loss = out[0]
+    gc = out[2:2 + len(carries[-1])]
+    grads = dict(zip(p.param_names,
+                     out[2 + len(carries[-1]):
+                         2 + len(carries[-1]) + len(p.param_names)]))
+    for i in range(len(parts) - 2, -1, -1):
+        p = parts[i]
+        args = ([params[n] for n in p.param_names]
+                + [state[n] for n in p.state_names])
+        out = stages.make_bwd(p, len(carries[i + 1]))(*args, sd, *saved[i], *gc)
+        gc = out[:len(carries[i])]
+        grads.update(zip(p.param_names, out[len(carries[i]):]))
+    return float(loss), grads
+
+
+def _monolithic_grads(m, params, state, x, labels, seed=7):
+    def lossfn(ps):
+        logits, _ = stages.full_forward(m, ps, state, x, train=True, seed=seed)
+        logz = jax.nn.log_softmax(logits)
+        return -jnp.mean(logz[jnp.arange(x.shape[0]), labels])
+    return jax.grad(lossfn)(params)
+
+
+@pytest.mark.parametrize("name,width,ppv", [
+    ("lenet5", 1.0, [1]),
+    ("lenet5", 1.0, [1, 2, 3, 4]),
+    ("alexnet", 0.25, [1, 2]),
+    ("resnet20", 0.5, [7]),
+    ("resnet20", 0.5, [3, 5, 7]),
+    ("resnet20", 0.5, [2]),          # cut inside a residual block
+    ("resnet20", 0.5, [2, 4, 6, 8]),  # several in-block cuts
+])
+def test_staged_equals_monolithic(name, width, ppv):
+    m, params, state = _init_model(name, width)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(4,) + m.input_shape).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, 10, size=(4,)).astype(np.int32))
+
+    ref, _ = stages.full_forward(m, params, state, x, train=False)
+    got = _staged_eval(m, params, state, ppv, x)
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+
+    _, grads = _staged_train_grads(m, params, state, ppv, x, labels)
+    mono = _monolithic_grads(m, params, state, x, labels)
+    for n in grads:
+        np.testing.assert_allclose(grads[n], mono[n], rtol=1e-3, atol=1e-4,
+                                   err_msg=n)
+
+
+@given(p=st.integers(1, 19))
+def test_resnet20_any_single_cut_composes(p):
+    """Property: a single register after ANY layer 1..19 composes exactly
+    (the Fig-6 sliding-stage experiment relies on this)."""
+    m, params, state = _init_model("resnet20", 0.25, seed=2)
+    rng = np.random.default_rng(p)
+    x = jnp.asarray(rng.normal(size=(2,) + m.input_shape).astype(np.float32))
+    ref, _ = stages.full_forward(m, params, state, x, train=False)
+    got = _staged_eval(m, params, state, [p], x)
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_split_validates_ppv():
+    m, _, _ = _init_model("lenet5", 1.0)
+    with pytest.raises(AssertionError):
+        stages.split(m, [5])      # register after last layer is illegal
+    with pytest.raises(AssertionError):
+        stages.split(m, [3, 2])   # not increasing
+    with pytest.raises(AssertionError):
+        stages.split(m, [2, 2])   # duplicate
+
+
+def test_partition_param_counts_sum_to_model():
+    m, _, _ = _init_model("resnet20", 0.5)
+    parts = stages.split(m, [7, 13])
+    assert sum(p.param_count() for p in parts) == sum(m.layer_param_counts())
+
+
+def test_percentage_stale_weights_definition():
+    """Paper §3: %stale = sum_{i<=K} N_i / sum N_i. Check it is monotone in
+    the register position for the slide experiment."""
+    m, _, _ = _init_model("resnet20", 0.5)
+    total = sum(m.layer_param_counts())
+    pct = []
+    for p in (3, 9, 15, 19):
+        parts = stages.split(m, [p])
+        pct.append(parts[0].param_count() / total)
+    assert pct == sorted(pct) and pct[-1] > 0.5
+
+
+def test_bwd_loss_grad_seed_consistency():
+    """Dropout mask in bwd must equal the fwd mask (same seed)."""
+    m, params, state = _init_model("alexnet", 0.25)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(4,) + m.input_shape).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, 10, size=(4,)).astype(np.int32))
+    # staged grads with dropout active == monolithic grads at same seed
+    _, grads = _staged_train_grads(m, params, state, [2, 5], x, labels, seed=11)
+    mono = _monolithic_grads(m, params, state, x, labels, seed=11)
+    for n in grads:
+        np.testing.assert_allclose(grads[n], mono[n], rtol=1e-3, atol=1e-4,
+                                   err_msg=n)

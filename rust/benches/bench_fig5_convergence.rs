@@ -1,0 +1,69 @@
+//! Figure 5: convergence curves of pipelined vs non-pipelined training.
+//!
+//! Paper shape to reproduce: for every network, pipelined and
+//! non-pipelined accuracy curves climb with similar shape and converge
+//! in a comparable number of iterations, possibly to slightly different
+//! final accuracies.
+//!
+//! Writes results/fig5_<model>.csv with one accuracy series per
+//! schedule, ready for plotting.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use pipestale::config::Mode;
+
+fn main() {
+    pipestale::util::logging::init();
+    let iters = common::bench_iters(240);
+    // one representative deep-pipelined config per model + baseline
+    let grid: &[(&str, &[(&str, Mode, &str)])] = &[
+        ("lenet5", &[
+            ("non-pipelined", Mode::Sequential, "lenet5_4s"),
+            ("4-stage", Mode::Pipelined, "lenet5_4s"),
+            ("10-stage", Mode::Pipelined, "lenet5_10s"),
+        ]),
+        ("alexnet", &[
+            ("non-pipelined", Mode::Sequential, "alexnet_4s"),
+            ("4-stage", Mode::Pipelined, "alexnet_4s"),
+            ("8-stage", Mode::Pipelined, "alexnet_8s"),
+        ]),
+        ("vgg16", &[
+            ("non-pipelined", Mode::Sequential, "vgg16_4s"),
+            ("4-stage", Mode::Pipelined, "vgg16_4s"),
+            ("10-stage", Mode::Pipelined, "vgg16_10s"),
+        ]),
+        ("resnet20", &[
+            ("non-pipelined", Mode::Sequential, "resnet20_4s"),
+            ("4-stage", Mode::Pipelined, "resnet20_4s"),
+            ("8-stage", Mode::Pipelined, "resnet20_8s"),
+        ]),
+    ];
+
+    for (model, runs) in grid {
+        let mut csv = String::from("schedule,iter,test_acc\n");
+        println!("=== Figure 5: {model} ({iters} iters) ===");
+        for (label, mode, cfg) in *runs {
+            let r = common::run(cfg, mode.clone(), iters, 0);
+            let curve: Vec<String> = r
+                .recorder
+                .evals
+                .iter()
+                .map(|e| format!("{:.0}@{}", 100.0 * e.accuracy, e.iter))
+                .collect();
+            println!("  {label:<14} {}", curve.join(" -> "));
+            for e in &r.recorder.evals {
+                csv.push_str(&format!("{label},{},{}\n", e.iter, e.accuracy));
+            }
+            // convergence check: the curve must rise from its start
+            let first = r.recorder.evals.first().map(|e| e.accuracy).unwrap_or(0.0);
+            let best = r.recorder.best_eval().map(|e| e.accuracy).unwrap_or(0.0);
+            assert!(
+                best >= first,
+                "{model}/{label}: training did not improve ({first} -> {best})"
+            );
+        }
+        common::write_results(&format!("fig5_{model}.csv"), &csv);
+    }
+    println!("\nPaper Fig 5 shape: pipelined curves track non-pipelined convergence.");
+}

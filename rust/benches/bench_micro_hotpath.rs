@@ -1,0 +1,110 @@
+//! Hot-path microbenches (the §Perf instrumentation): where a training
+//! cycle's host-side time goes, independent of XLA compute.
+//!
+//!   * literal <-> tensor conversion (the FFI boundary)
+//!   * SGD update loop (momentum + weight decay)
+//!   * scheduler overhead with a no-op executor (cycles/s)
+//!   * meta.json parse (startup cost)
+//!   * DES throughput (batches simulated / s)
+//!   * XLA stage execution for resnet20_4s (end-to-end cycle cost)
+
+#[path = "common/mod.rs"]
+mod common;
+
+use pipestale::data::batch_seed;
+use pipestale::meta::ConfigMeta;
+use pipestale::model::ModelParams;
+use pipestale::optim::{Schedule, Sgd};
+use pipestale::pipeline::mock::MockExecutor;
+use pipestale::pipeline::perfsim::*;
+use pipestale::pipeline::{Feed, Pipeline, XlaExecutor};
+use pipestale::tensor::{IntTensor, Tensor};
+use pipestale::util::bench::{bench, bench_n};
+use pipestale::util::rng::Pcg32;
+
+fn main() {
+    pipestale::util::logging::init();
+    let root = pipestale::artifacts_root();
+
+    // literal conversion
+    let mut rng = Pcg32::seeded(1);
+    let mut data = vec![0.0f32; 32 * 32 * 32 * 16];
+    data.iter_mut().for_each(|v| *v = rng.normal());
+    let t = Tensor::from_vec(&[32, 32, 32, 16], data).unwrap();
+    let st = bench("tensor->literal (2MB)", 3, 0.5, || {
+        std::hint::black_box(t.to_literal().unwrap());
+    });
+    println!("{}", st.report());
+    let lit = t.to_literal().unwrap();
+    let st = bench("literal->tensor (2MB)", 3, 0.5, || {
+        std::hint::black_box(Tensor::from_literal(&lit, &[32, 32, 32, 16]).unwrap());
+    });
+    println!("{}", st.report());
+
+    // SGD hot loop: 1M params with momentum+wd
+    let mut opt = Sgd::new(Schedule::Const { base: 0.1 }, 0.9, false, 1e-4);
+    let mut params = vec![Tensor::ones(&[1_000_000])];
+    let grads = vec![Tensor::ones(&[1_000_000])];
+    let mut iter = 0usize;
+    let st = bench("sgd step (1M params, momentum+wd)", 3, 0.5, || {
+        opt.step(iter, &mut params, &grads);
+        iter += 1;
+    });
+    println!("{}", st.report());
+
+    // scheduler overhead with mock executor
+    let mut pipe = Pipeline::new(MockExecutor::new(4), 1);
+    let mut b = 0u64;
+    let st = bench("scheduler cycle (mock, P=4)", 10, 0.3, || {
+        let f = Feed {
+            batch_id: b,
+            seed: batch_seed(1, b),
+            x: Tensor::from_vec(&[1], vec![b as f32]).unwrap(),
+            labels: IntTensor::from_vec(&[1], vec![0]).unwrap(),
+        };
+        pipe.cycle(Some(f)).unwrap();
+        b += 1;
+    });
+    println!("{}", st.report());
+
+    // meta.json parse
+    let st = bench("meta.json parse (resnet110_4s)", 2, 0.5, || {
+        std::hint::black_box(ConfigMeta::load_named(&root, "resnet110_4s").unwrap());
+    });
+    println!("{}", st.report());
+
+    // DES throughput
+    let meta = ConfigMeta::load_named(&root, "resnet110_mem").unwrap();
+    let costs = gtx1060_costs(&meta).scale_batch(128.0);
+    let comm = CommModel::default();
+    let st = bench("DES simulate 1000 batches (P=2)", 2, 0.5, || {
+        std::hint::black_box(simulate_pipelined(&costs, &comm, Mapping::Paired, 1000));
+    });
+    println!("{}", st.report());
+
+    // XLA end-to-end cycle for resnet20_4s
+    let meta = ConfigMeta::load_named(&root, "resnet20_4s").unwrap();
+    let runtime = pipestale::runtime::Runtime::cpu().unwrap();
+    let params = ModelParams::init(&meta.partitions, 1).unwrap();
+    let optims = pipestale::train::build_optims(&meta, 100, 1.0);
+    let exec = XlaExecutor::new(&runtime, meta.clone(), params, optims).unwrap();
+    let mut pipe = Pipeline::new(exec, meta.batch);
+    let x = Tensor::ones(&[meta.batch, 32, 32, 3]);
+    let labels = IntTensor::from_vec(&[meta.batch], vec![0; meta.batch]).unwrap();
+    let mut b = 0u64;
+    let st = bench_n("pipeline cycle (XLA, resnet20_4s b32)", 3, if common::fast() { 10 } else { 30 }, || {
+        pipe.cycle(Some(Feed {
+            batch_id: b,
+            seed: batch_seed(2, b),
+            x: x.clone(),
+            labels: labels.clone(),
+        }))
+        .unwrap();
+        b += 1;
+    });
+    println!("{}", st.report());
+
+    let mut csv = String::from("bench,mean_ms,p50_ms\n");
+    csv.push_str(&format!("xla_cycle_resnet20_4s,{},{}\n", st.mean_s * 1e3, st.p50_s * 1e3));
+    common::write_results("micro_hotpath.csv", &csv);
+}

@@ -1,0 +1,63 @@
+//! Table 2 (+ Table 1): inference accuracy of simulated pipelined
+//! training, non-pipelined vs 4/6/8/10 stages, for LeNet-5 / AlexNet /
+//! VGG-16 / ResNet-20.
+//!
+//! Paper values (Table 2, 30k-250k iters on real MNIST/CIFAR):
+//!   LeNet-5   99.00 | 98.64 98.62 98.61 98.47
+//!   AlexNet   82.51 | 78.47 78.32 78.47   —
+//!   VGG-16    91.36 | 90.53 88.96 83.73 79.85
+//!   ResNet-20 91.50 | 90.05 88.00 83.01   —
+//! Shape to reproduce: pipelined converges; small drop at 4-6 stages,
+//! larger drop as pipelining deepens (scaled protocol, DESIGN.md §4).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use pipestale::config::Mode;
+use pipestale::util::bench::Table;
+
+fn main() {
+    pipestale::util::logging::init();
+    let iters = common::bench_iters(240);
+    let grid: &[(&str, &[(&str, &str)])] = &[
+        ("lenet5", &[("4s", "lenet5_4s"), ("6s", "lenet5_6s"), ("8s", "lenet5_8s"), ("10s", "lenet5_10s")]),
+        ("alexnet", &[("4s", "alexnet_4s"), ("6s", "alexnet_6s"), ("8s", "alexnet_8s")]),
+        ("vgg16", &[("4s", "vgg16_4s"), ("6s", "vgg16_6s"), ("8s", "vgg16_8s"), ("10s", "vgg16_10s")]),
+        ("resnet20", &[("4s", "resnet20_4s"), ("6s", "resnet20_6s"), ("8s", "resnet20_8s")]),
+    ];
+
+    let mut table = Table::new(&["CNN", "Non-pipelined", "4-Stage", "6-Stage", "8-Stage", "10-Stage"]);
+    let mut csv = String::from("model,schedule,stages,ppv,accuracy\n");
+    for (model, configs) in grid {
+        // non-pipelined baseline uses the 4s artifacts sequentially
+        let base = common::run(configs[0].1, Mode::Sequential, iters, 0);
+        println!("{model} non-pipelined: {}", common::pct(base.final_accuracy));
+        csv.push_str(&format!("{model},non-pipelined,1,-,{}\n", base.final_accuracy));
+        let mut cells = vec![model.to_string(), common::pct(base.final_accuracy)];
+        for (tag, cfg) in *configs {
+            let r = common::run(cfg, Mode::Pipelined, iters, 0);
+            println!("{model} {tag}: {}", common::pct(r.final_accuracy));
+            csv.push_str(&format!(
+                "{model},pipelined,{},{},{}\n",
+                &tag[..tag.len() - 1],
+                cfg,
+                r.final_accuracy
+            ));
+            cells.push(common::pct(r.final_accuracy));
+        }
+        while cells.len() < 6 {
+            cells.push("N/A".into());
+        }
+        table.row(&cells);
+    }
+    println!("\n=== Table 2 (measured, scaled protocol; {iters} iters) ===");
+    println!("{}", table.render());
+    println!(
+        "\nPaper Table 2:        Non-pip  4s      6s      8s      10s\n\
+         | LeNet-5   | 99.00% | 98.64% | 98.62% | 98.61% | 98.47% |\n\
+         | AlexNet   | 82.51% | 78.47% | 78.32% | 78.47% | N/A    |\n\
+         | VGG-16    | 91.36% | 90.53% | 88.96% | 83.73% | 79.85% |\n\
+         | ResNet-20 | 91.50% | 90.05% | 88.00% | 83.01% | N/A    |"
+    );
+    common::write_results("table2.csv", &csv);
+}

@@ -1,0 +1,46 @@
+//! Table 4 + Figure 7: hybrid pipelined/non-pipelined training on
+//! ResNet-20 with PPV (5,12,17) (8 stages, deep pipelining).
+//!
+//! Paper (30k-iter protocol):
+//!   baseline 30k        91.50%
+//!   pipelined 30k       88.29%
+//!   20k+10k hybrid      90.71%
+//!   20k+20k hybrid      91.72%
+//! Shape to reproduce: deep pipelining costs accuracy; a non-pipelined
+//! tail recovers it to (or past) baseline.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use pipestale::config::Mode;
+use pipestale::util::bench::Table;
+
+fn main() {
+    pipestale::util::logging::init();
+    let n = common::bench_iters(300); // "30k" analog
+    let p = 2 * n / 3; // "20k"
+    let cfg = "resnet20_hybrid";
+
+    let runs = [
+        ("baseline".to_string(), Mode::Sequential, n, 0),
+        ("pipelined".to_string(), Mode::Pipelined, n, 0),
+        (format!("{p}+{} hybrid", n - p), Mode::Hybrid, n, p),
+        (format!("{p}+{p} hybrid"), Mode::Hybrid, p + p, p),
+    ];
+    let paper = ["91.50%", "88.29%", "90.71%", "91.72%"];
+
+    let mut table = Table::new(&["Schedule", "Accuracy", "Paper"]);
+    let mut csv = String::from("schedule,iter,test_acc\n");
+    for ((label, mode, total, np), paper_val) in runs.into_iter().zip(paper) {
+        let r = common::run(cfg, mode, total, np);
+        println!("{label}: {}", common::pct(r.final_accuracy));
+        for e in &r.recorder.evals {
+            csv.push_str(&format!("{label},{},{}\n", e.iter, e.accuracy));
+        }
+        table.row(&[label, common::pct(r.final_accuracy), paper_val.into()]);
+    }
+    println!("\n=== Table 4 (measured, scaled protocol; n={n}) ===");
+    println!("{}", table.render());
+    println!("\nFig 7 curves: see results/fig7.csv (accuracy series per schedule).");
+    common::write_results("fig7.csv", &csv);
+}

@@ -1,0 +1,100 @@
+//! Table 6 (+ §6.7): memory usage of 4-stage pipelined ResNet training.
+//!
+//! Paper (torchsummary accounting, batch 128):
+//!   ResNet  PPV    Activations  Weight   Increase        Increase %
+//!   -20     (7)    3.84MB x bs  1.03MB   2.58MB x bs     67%
+//!   -56     (19)   10.87MB x bs 3.25MB   6.32MB x bs     58%
+//!   -110    (37)   21.43MB x bs 6.59MB   12.35MB x bs    57%
+//!   -224    (75)   43.70MB x bs 13.64MB  25.07MB x bs    57%
+//!   -362    (121)  70.67MB x bs 22.17MB  40.50MB x bs    57%
+//! Shape to reproduce: modest increase (tens of %), roughly constant for
+//! deeper nets; zero weight copies stashed (vs PipeDream).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use pipestale::memory::{pipedream_stash_bytes, MemoryReport};
+use pipestale::meta::ConfigMeta;
+use pipestale::util::bench::Table;
+
+fn main() {
+    let root = pipestale::artifacts_root();
+    let mb = 1024.0 * 1024.0;
+    let paper = [
+        ("20", "3.84", "1.03", "2.58", "67%"),
+        ("56", "10.87", "3.25", "6.32", "58%"),
+        ("110", "21.43", "6.59", "12.35", "57%"),
+        ("224", "43.70", "13.64", "25.07", "57%"),
+        ("362", "70.67", "22.17", "40.50", "57%"),
+    ];
+    let mut t = Table::new(&[
+        "ResNet", "PPV", "Act MB/sample", "Weight MB", "Incr MB/sample (paper-style)",
+        "Incr %", "Paper %", "Ours (recompute) %",
+    ]);
+    let mut csv =
+        String::from("model,ppv,act_mb,weight_mb,incr_paper_style_mb,incr_pct,incr_ours_pct\n");
+    for (d, _pa, _pw, _pi, ppct) in paper {
+        let meta = ConfigMeta::load_named(&root, &format!("resnet{d}_mem")).unwrap();
+        let r = MemoryReport::from_meta(&meta);
+        t.row(&[
+            format!("-{d}"),
+            format!("{:?}", meta.ppv),
+            format!("{:.2}", r.activations_per_sample / mb),
+            format!("{:.2}", r.weight_bytes / mb),
+            format!("{:.2}", r.increase_paper_style_per_sample / mb),
+            format!("{:.0}%", r.increase_pct_paper_style()),
+            ppct.to_string(),
+            format!("{:.0}%", r.increase_pct()),
+        ]);
+        csv.push_str(&format!(
+            "resnet{d},\"{:?}\",{},{},{},{},{}\n",
+            meta.ppv,
+            r.activations_per_sample / mb,
+            r.weight_bytes / mb,
+            r.increase_paper_style_per_sample / mb,
+            r.increase_pct_paper_style(),
+            r.increase_pct()
+        ));
+    }
+    println!("=== Table 6 (analytic model over meta.json shapes) ===");
+    println!("{}", t.render());
+    println!(
+        "\nNotes: paper counts every torch module output; we count paper-\n\
+         numbered layer outputs, so absolute MB are smaller but the\n\
+         increase ratio (the paper's claim) is comparable. 'Ours' is the\n\
+         actual footprint of this implementation, which recomputes the\n\
+         stage forward in bwd and stores only the register carry."
+    );
+
+    // ---- §6.7: vs PipeDream weight stashing ---------------------------
+    // Both schemes hold activations for in-flight batches; PipeDream
+    // additionally stashes one weight version per in-flight batch per
+    // stage. We compare the *extra* training footprint of each scheme
+    // (activation increase [+ stash]) at batch 128.
+    println!("\n=== §6.7: extra memory vs PipeDream (weight stashing) ===");
+    let mut t2 = Table::new(&[
+        "config", "ours MB (recompute)", "shared act incr MB", "PipeDream stash MB",
+        "ours vs PipeDream",
+    ]);
+    for name in ["vgg16_4s", "resnet20_fine8", "resnet110_4s"] {
+        let meta = ConfigMeta::load_named(&root, name).unwrap();
+        let r = MemoryReport::from_meta(&meta);
+        let ours = r.increase_per_sample * 128.0;
+        let act = r.increase_paper_style_per_sample * 128.0;
+        let stash = pipedream_stash_bytes(&meta);
+        t2.row(&[
+            name.to_string(),
+            format!("{:.2}", ours / mb),
+            format!("{:.2}", act / mb),
+            format!("{:.2}", stash / mb),
+            format!("-{:.0}%", 100.0 * (1.0 - ours / (act + stash))),
+        ]);
+    }
+    println!("{}", t2.render());
+    println!(
+        "(paper §6.7 estimates 29-49% less memory than PipeDream for VGG-16;\n \
+         our recompute-from-carry scheme stores even less than the paper's\n \
+         own PyTorch implementation, and stashes zero weight copies)"
+    );
+    common::write_results("table6.csv", &csv);
+}

@@ -1,0 +1,51 @@
+//! Shared helpers for the paper-reproduction benches.
+//!
+//! Scale knobs (environment):
+//!   PIPESTALE_BENCH_ITERS  — training iterations per run (default 200)
+//!   PIPESTALE_FAST=1       — cut everything ~4x for smoke runs
+
+#![allow(dead_code)]
+
+use pipestale::config::{Mode, RunConfig};
+use pipestale::train::TrainResult;
+
+pub fn bench_iters(default: u64) -> u64 {
+    let base = std::env::var("PIPESTALE_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default);
+    if fast() {
+        (base / 4).max(20)
+    } else {
+        base
+    }
+}
+
+pub fn fast() -> bool {
+    std::env::var("PIPESTALE_FAST").as_deref() == Ok("1")
+}
+
+/// One paired training run: every schedule in a bench shares seed, data
+/// and hyperparameters, so differences isolate the schedule itself.
+pub fn run(config: &str, mode: Mode, iters: u64, pipelined_iters: u64) -> TrainResult {
+    let mut rc = RunConfig::new(config);
+    rc.mode = mode;
+    rc.iters = iters;
+    rc.pipelined_iters = pipelined_iters;
+    rc.eval_every = (iters / 6).max(1);
+    rc.train_size = 1024;
+    rc.test_size = 256;
+    rc.noise = 2.0; // hard enough that schedules separate
+    rc.seed = 42;
+    pipestale::train::run(&rc).unwrap_or_else(|e| panic!("{config} [{mode:?}]: {e:#}"))
+}
+
+pub fn write_results(name: &str, content: &str) {
+    let path = pipestale::results_root().join(name);
+    std::fs::write(&path, content).unwrap_or_else(|e| panic!("writing {}: {e}", path.display()));
+    println!("[results] wrote {}", path.display());
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{:.2}%", 100.0 * x)
+}

@@ -1,0 +1,179 @@
+//! Run configuration: which artifact config, which schedule, scale knobs.
+//!
+//! Serializable to/from JSON (configs/ dir, results metadata) via the
+//! from-scratch util::json. CLI flags map 1:1 onto these fields.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::{self, Json};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Pipelined,
+    Sequential,
+    /// Pipelined for `pipelined_iters`, then drained + sequential.
+    Hybrid,
+}
+
+impl Mode {
+    pub fn parse(s: &str) -> Result<Mode> {
+        match s {
+            "pipelined" => Ok(Mode::Pipelined),
+            "sequential" | "non-pipelined" | "baseline" => Ok(Mode::Sequential),
+            "hybrid" => Ok(Mode::Hybrid),
+            _ => Err(anyhow!("unknown mode {s:?} (pipelined|sequential|hybrid)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mode::Pipelined => "pipelined",
+            Mode::Sequential => "sequential",
+            Mode::Hybrid => "hybrid",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Artifact config name under artifacts/ (e.g. "resnet20_4s").
+    pub config: String,
+    pub mode: Mode,
+    pub iters: u64,
+    /// Hybrid only: iterations of the pipelined phase.
+    pub pipelined_iters: u64,
+    pub seed: u64,
+    /// Evaluate every N retired iterations (0 = only at the end).
+    pub eval_every: u64,
+    /// Synthetic dataset knobs (DESIGN.md §4).
+    pub train_size: usize,
+    pub test_size: usize,
+    pub noise: f64,
+    /// Optional directory with real MNIST/CIFAR files.
+    pub data_dir: Option<PathBuf>,
+    /// LR multiplier for the stale (non-final) partitions — Table 7's
+    /// per-BKS learning rate.
+    pub stale_lr_scale: f64,
+    /// Initialize weights from a checkpoint instead of random init
+    /// (cross-process hybrid: pipelined prefix in one run, non-pipelined
+    /// tail in another).
+    pub resume_from: Option<PathBuf>,
+    /// Write a checkpoint of the final weights here.
+    pub save_to: Option<PathBuf>,
+}
+
+impl RunConfig {
+    pub fn new(config: &str) -> Self {
+        RunConfig {
+            config: config.to_string(),
+            mode: Mode::Pipelined,
+            iters: 300,
+            pipelined_iters: 0,
+            seed: 42,
+            eval_every: 0,
+            train_size: 2048,
+            test_size: 512,
+            noise: 0.6,
+            data_dir: None,
+            stale_lr_scale: 1.0,
+            resume_from: None,
+            save_to: None,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("config", json::s(&self.config)),
+            ("mode", json::s(self.mode.name())),
+            ("iters", json::num(self.iters as f64)),
+            ("pipelined_iters", json::num(self.pipelined_iters as f64)),
+            ("seed", json::num(self.seed as f64)),
+            ("eval_every", json::num(self.eval_every as f64)),
+            ("train_size", json::num(self.train_size as f64)),
+            ("test_size", json::num(self.test_size as f64)),
+            ("noise", json::num(self.noise)),
+            (
+                "data_dir",
+                self.data_dir
+                    .as_ref()
+                    .map(|p| json::s(&p.display().to_string()))
+                    .unwrap_or(Json::Null),
+            ),
+            ("stale_lr_scale", json::num(self.stale_lr_scale)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let config = j
+            .get("config")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("run config missing 'config'"))?;
+        let mut rc = RunConfig::new(config);
+        if let Some(m) = j.get("mode").and_then(Json::as_str) {
+            rc.mode = Mode::parse(m)?;
+        }
+        let getn = |k: &str, d: f64| j.get(k).and_then(Json::as_f64).unwrap_or(d);
+        rc.iters = getn("iters", rc.iters as f64) as u64;
+        rc.pipelined_iters = getn("pipelined_iters", 0.0) as u64;
+        rc.seed = getn("seed", rc.seed as f64) as u64;
+        rc.eval_every = getn("eval_every", 0.0) as u64;
+        rc.train_size = getn("train_size", rc.train_size as f64) as usize;
+        rc.test_size = getn("test_size", rc.test_size as f64) as usize;
+        rc.noise = getn("noise", rc.noise);
+        rc.stale_lr_scale = getn("stale_lr_scale", 1.0);
+        if let Some(d) = j.get("data_dir").and_then(Json::as_str) {
+            rc.data_dir = Some(PathBuf::from(d));
+        }
+        Ok(rc)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        Self::from_json(&j)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let mut rc = RunConfig::new("resnet20_4s");
+        rc.mode = Mode::Hybrid;
+        rc.pipelined_iters = 123;
+        rc.noise = 0.4;
+        rc.data_dir = Some(PathBuf::from("/tmp/data"));
+        let j = rc.to_json();
+        let back = RunConfig::from_json(&j).unwrap();
+        assert_eq!(back.mode, Mode::Hybrid);
+        assert_eq!(back.pipelined_iters, 123);
+        assert_eq!(back.data_dir, rc.data_dir);
+        assert!((back.noise - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!(Mode::parse("baseline").unwrap(), Mode::Sequential);
+        assert_eq!(Mode::parse("hybrid").unwrap(), Mode::Hybrid);
+        assert!(Mode::parse("nope").is_err());
+    }
+
+    #[test]
+    fn save_load() {
+        let rc = RunConfig::new("lenet5_4s");
+        let p = std::env::temp_dir().join(format!("rc_{}.json", std::process::id()));
+        rc.save(&p).unwrap();
+        let back = RunConfig::load(&p).unwrap();
+        assert_eq!(back.config, "lenet5_4s");
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,122 @@
+//! CIFAR-10 binary format parser (data_batch_*.bin / test_batch.bin).
+//!
+//! Record layout: 1 label byte + 3072 pixel bytes in CHW planes (R,G,B);
+//! converted here to NHWC normalized f32.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Dataset;
+
+const REC: usize = 1 + 3 * 32 * 32;
+
+pub fn load_cifar10_bin(path: &Path) -> Result<(Vec<f32>, Vec<i32>)> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.is_empty() || bytes.len() % REC != 0 {
+        bail!("{}: size {} is not a multiple of {REC}", path.display(), bytes.len());
+    }
+    let n = bytes.len() / REC;
+    let mut images = Vec::with_capacity(n * 3072);
+    let mut labels = Vec::with_capacity(n);
+    for r in 0..n {
+        let rec = &bytes[r * REC..(r + 1) * REC];
+        let label = rec[0] as i32;
+        if label > 9 {
+            bail!("{}: record {} has label {}", path.display(), r, label);
+        }
+        labels.push(label);
+        let px = &rec[1..];
+        // CHW planes -> HWC
+        for y in 0..32 {
+            for x in 0..32 {
+                for c in 0..3 {
+                    let v = px[c * 1024 + y * 32 + x] as f32 / 255.0 - 0.5;
+                    images.push(v);
+                }
+            }
+        }
+    }
+    Ok((images, labels))
+}
+
+/// Load the standard 5 train batches + test batch from a directory.
+pub fn load_cifar10_dir(dir: &Path) -> Result<(Dataset, Dataset)> {
+    let mut images = Vec::new();
+    let mut labels = Vec::new();
+    for i in 1..=5 {
+        let p = dir.join(format!("data_batch_{i}.bin"));
+        if !p.exists() {
+            break;
+        }
+        let (im, la) = load_cifar10_bin(&p)?;
+        images.extend(im);
+        labels.extend(la);
+    }
+    if labels.is_empty() {
+        bail!("no CIFAR-10 train batches under {}", dir.display());
+    }
+    let train = Dataset {
+        name: "cifar10-train".into(),
+        input_shape: vec![32, 32, 3],
+        images,
+        labels,
+        num_classes: 10,
+    };
+    let (ti, tl) = load_cifar10_bin(&dir.join("test_batch.bin"))?;
+    let test = Dataset {
+        name: "cifar10-test".into(),
+        input_shape: vec![32, 32, 3],
+        images: ti,
+        labels: tl,
+        num_classes: 10,
+    };
+    Ok((train, test))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture(dir: &Path, name: &str, n: usize) {
+        let mut bytes = Vec::with_capacity(n * REC);
+        for r in 0..n {
+            bytes.push((r % 10) as u8);
+            for i in 0..3072 {
+                bytes.push(((r + i) % 256) as u8);
+            }
+        }
+        std::fs::write(dir.join(name), bytes).unwrap();
+    }
+
+    #[test]
+    fn parses_and_transposes() {
+        let dir = std::env::temp_dir().join(format!("cifar_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        fixture(&dir, "data_batch_1.bin", 20);
+        fixture(&dir, "test_batch.bin", 10);
+        let (train, test) = load_cifar10_dir(&dir).unwrap();
+        assert_eq!(train.len(), 20);
+        assert_eq!(test.len(), 10);
+        assert_eq!(train.images.len(), 20 * 3072);
+        // record 0, pixel (0,0): R plane byte 0 = 0 -> -0.5; G plane byte
+        // 1024 -> (1024%256=0)/255-0.5 = -0.5
+        assert!((train.images[0] + 0.5).abs() < 1e-6);
+        assert_eq!(train.labels[3], 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_sizes_and_labels() {
+        let dir = std::env::temp_dir().join(format!("cifar_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.bin");
+        std::fs::write(&p, vec![0u8; REC - 1]).unwrap();
+        assert!(load_cifar10_bin(&p).is_err());
+        let mut rec = vec![0u8; REC];
+        rec[0] = 11; // label out of range
+        std::fs::write(&p, rec).unwrap();
+        assert!(load_cifar10_bin(&p).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,133 @@
+//! MNIST IDX format parser (big-endian, magic 0x801/0x803).
+//!
+//! Used automatically when real MNIST files are present; unit tests
+//! exercise the parser on generated fixture files.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Dataset;
+
+fn read_u32(b: &[u8], off: usize) -> u32 {
+    u32::from_be_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
+}
+
+/// Parse an IDX3 image file into normalized f32 pixels (x/255 - 0.5).
+pub fn load_idx_images(path: &Path) -> Result<(usize, usize, usize, Vec<f32>)> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() < 16 {
+        bail!("{}: truncated IDX header", path.display());
+    }
+    let magic = read_u32(&bytes, 0);
+    if magic != 0x0000_0803 {
+        bail!("{}: bad IDX3 magic {magic:#x}", path.display());
+    }
+    let n = read_u32(&bytes, 4) as usize;
+    let h = read_u32(&bytes, 8) as usize;
+    let w = read_u32(&bytes, 12) as usize;
+    let want = 16 + n * h * w;
+    if bytes.len() < want {
+        bail!("{}: expected {} bytes, got {}", path.display(), want, bytes.len());
+    }
+    let data = bytes[16..want].iter().map(|&b| b as f32 / 255.0 - 0.5).collect();
+    Ok((n, h, w, data))
+}
+
+/// Parse an IDX1 label file.
+pub fn load_idx_labels(path: &Path) -> Result<Vec<i32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() < 8 {
+        bail!("{}: truncated IDX header", path.display());
+    }
+    let magic = read_u32(&bytes, 0);
+    if magic != 0x0000_0801 {
+        bail!("{}: bad IDX1 magic {magic:#x}", path.display());
+    }
+    let n = read_u32(&bytes, 4) as usize;
+    if bytes.len() < 8 + n {
+        bail!("{}: truncated IDX1 body", path.display());
+    }
+    Ok(bytes[8..8 + n].iter().map(|&b| b as i32).collect())
+}
+
+pub fn load_mnist(images: &Path, labels: &Path, name: &str) -> Result<Dataset> {
+    let (n, h, w, data) = load_idx_images(images)?;
+    let lab = load_idx_labels(labels)?;
+    if lab.len() != n {
+        bail!("mnist: {} images but {} labels", n, lab.len());
+    }
+    Ok(Dataset {
+        name: name.to_string(),
+        input_shape: vec![h, w, 1],
+        images: data,
+        labels: lab,
+        num_classes: 10,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture_images(dir: &Path, n: usize, h: usize, w: usize) -> std::path::PathBuf {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&0x0000_0803u32.to_be_bytes());
+        bytes.extend_from_slice(&(n as u32).to_be_bytes());
+        bytes.extend_from_slice(&(h as u32).to_be_bytes());
+        bytes.extend_from_slice(&(w as u32).to_be_bytes());
+        for i in 0..n * h * w {
+            bytes.push((i % 256) as u8);
+        }
+        let p = dir.join("imgs");
+        std::fs::write(&p, bytes).unwrap();
+        p
+    }
+
+    fn fixture_labels(dir: &Path, n: usize) -> std::path::PathBuf {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&0x0000_0801u32.to_be_bytes());
+        bytes.extend_from_slice(&(n as u32).to_be_bytes());
+        for i in 0..n {
+            bytes.push((i % 10) as u8);
+        }
+        let p = dir.join("labels");
+        std::fs::write(&p, bytes).unwrap();
+        p
+    }
+
+    #[test]
+    fn parses_fixture() {
+        let dir = std::env::temp_dir().join(format!("idx_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let ip = fixture_images(&dir, 4, 3, 3);
+        let lp = fixture_labels(&dir, 4);
+        let ds = load_mnist(&ip, &lp, "fixture").unwrap();
+        assert_eq!(ds.len(), 4);
+        assert_eq!(ds.input_shape, vec![3, 3, 1]);
+        assert_eq!(ds.labels, vec![0, 1, 2, 3]);
+        // pixel 0 is 0 -> normalized -0.5
+        assert!((ds.images[0] + 0.5).abs() < 1e-6);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        let dir = std::env::temp_dir().join(format!("idx_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad");
+        std::fs::write(&p, [0u8; 4]).unwrap();
+        assert!(load_idx_images(&p).is_err());
+        std::fs::write(&p, 0x0000_0802u32.to_be_bytes()).unwrap();
+        assert!(load_idx_labels(&p).is_err());
+        // valid header, short body
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&0x0000_0803u32.to_be_bytes());
+        bytes.extend_from_slice(&10u32.to_be_bytes());
+        bytes.extend_from_slice(&28u32.to_be_bytes());
+        bytes.extend_from_slice(&28u32.to_be_bytes());
+        std::fs::write(&p, bytes).unwrap();
+        assert!(load_idx_images(&p).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

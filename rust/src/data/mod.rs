@@ -1,0 +1,207 @@
+//! Data pipeline: synthetic prototype datasets + real-format loaders.
+//!
+//! The testbed has no MNIST/CIFAR files (DESIGN.md §4), so experiments
+//! default to synthetic class-prototype datasets with the same shapes
+//! (28x28x1 / 32x32x3) and train/test splits. Real-format parsers (MNIST
+//! IDX, CIFAR-10 binary) are provided and auto-selected when files exist;
+//! they are unit-tested on generated fixture files.
+
+mod cifar;
+mod idx;
+mod synthetic;
+
+pub use cifar::load_cifar10_dir;
+pub use idx::{load_idx_images, load_idx_labels};
+pub use synthetic::SyntheticSpec;
+
+use anyhow::Result;
+
+use crate::tensor::{IntTensor, Tensor};
+use crate::util::rng::Pcg32;
+
+/// An in-memory labelled image dataset (NHWC f32 + i32 labels).
+#[derive(Clone)]
+pub struct Dataset {
+    pub name: String,
+    /// (H, W, C)
+    pub input_shape: Vec<usize>,
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub num_classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn sample_elems(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Copy samples `idxs` into a batch tensor pair.
+    pub fn gather(&self, idxs: &[usize]) -> (Tensor, IntTensor) {
+        let n = self.sample_elems();
+        let mut images = Vec::with_capacity(idxs.len() * n);
+        let mut labels = Vec::with_capacity(idxs.len());
+        for &i in idxs {
+            images.extend_from_slice(&self.images[i * n..(i + 1) * n]);
+            labels.push(self.labels[i]);
+        }
+        let mut shape = vec![idxs.len()];
+        shape.extend_from_slice(&self.input_shape);
+        (
+            Tensor::from_vec(&shape, images).expect("batch tensor"),
+            IntTensor::from_vec(&[idxs.len()], labels).expect("batch labels"),
+        )
+    }
+}
+
+/// Epoch-shuffling fixed-size batcher. The last partial batch of an epoch
+/// is dropped (static XLA shapes require a fixed batch size).
+pub struct Batcher {
+    order: Vec<usize>,
+    cursor: usize,
+    batch: usize,
+    rng: Pcg32,
+    pub epoch: usize,
+}
+
+impl Batcher {
+    pub fn new(len: usize, batch: usize, seed: u64) -> Self {
+        assert!(batch > 0 && batch <= len, "batch {batch} vs dataset {len}");
+        let mut b = Batcher {
+            order: (0..len).collect(),
+            cursor: 0,
+            batch,
+            rng: Pcg32::seeded(seed),
+            epoch: 0,
+        };
+        b.rng.shuffle(&mut b.order);
+        b
+    }
+
+    /// Indices of the next mini-batch (reshuffles at epoch boundaries).
+    pub fn next_indices(&mut self) -> &[usize] {
+        if self.cursor + self.batch > self.order.len() {
+            self.rng.shuffle(&mut self.order);
+            self.cursor = 0;
+            self.epoch += 1;
+        }
+        let s = &self.order[self.cursor..self.cursor + self.batch];
+        self.cursor += self.batch;
+        s
+    }
+
+    pub fn batches_per_epoch(&self) -> usize {
+        self.order.len() / self.batch
+    }
+}
+
+/// Build train/test datasets for a config: real files when present under
+/// `data_dir`, synthetic otherwise.
+pub fn load_or_synthesize(
+    dataset: &str,
+    data_dir: Option<&std::path::Path>,
+    spec: &SyntheticSpec,
+) -> Result<(Dataset, Dataset)> {
+    if let Some(dir) = data_dir {
+        match dataset {
+            "mnist" => {
+                let ti = dir.join("train-images-idx3-ubyte");
+                let tl = dir.join("train-labels-idx1-ubyte");
+                let vi = dir.join("t10k-images-idx3-ubyte");
+                let vl = dir.join("t10k-labels-idx1-ubyte");
+                if ti.exists() && tl.exists() && vi.exists() && vl.exists() {
+                    let train = idx::load_mnist(&ti, &tl, "mnist-train")?;
+                    let test = idx::load_mnist(&vi, &vl, "mnist-test")?;
+                    return Ok((train, test));
+                }
+            }
+            "cifar10" => {
+                if dir.join("data_batch_1.bin").exists() {
+                    return cifar::load_cifar10_dir(dir);
+                }
+            }
+            _ => {}
+        }
+        log::warn!("no {dataset} files under {}; using synthetic data", dir.display());
+    }
+    Ok(synthetic::generate(dataset, spec))
+}
+
+/// Deterministic per-batch dropout seed (must match between the fwd and
+/// bwd executions of the same mini-batch — the coordinator passes the
+/// value it stored with the activations).
+pub fn batch_seed(global_seed: u64, batch_id: u64) -> i32 {
+    let mut x = global_seed ^ batch_id.wrapping_mul(0x9e3779b97f4a7c15);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58476d1ce4e5b9);
+    x ^= x >> 27;
+    (x as u32 & 0x7fff_ffff) as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        let spec = SyntheticSpec { train: 64, test: 32, noise: 0.5, seed: 1 };
+        synthetic::generate("mnist", &spec).0
+    }
+
+    #[test]
+    fn gather_shapes() {
+        let d = tiny();
+        let (x, y) = d.gather(&[0, 5, 9]);
+        assert_eq!(x.shape, vec![3, 28, 28, 1]);
+        assert_eq!(y.data.len(), 3);
+    }
+
+    #[test]
+    fn batcher_covers_epoch_without_repeats() {
+        let mut b = Batcher::new(100, 10, 3);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..10 {
+            for &i in b.next_indices() {
+                assert!(seen.insert(i), "repeat within epoch");
+            }
+        }
+        assert_eq!(seen.len(), 100);
+        assert_eq!(b.batches_per_epoch(), 10);
+        // next call rolls the epoch
+        b.next_indices();
+        assert_eq!(b.epoch, 1);
+    }
+
+    #[test]
+    fn batcher_drops_partial_batch() {
+        let mut b = Batcher::new(25, 10, 0);
+        b.next_indices();
+        b.next_indices();
+        // only 5 left -> reshuffle, epoch++
+        b.next_indices();
+        assert_eq!(b.epoch, 1);
+    }
+
+    #[test]
+    fn batch_seed_is_deterministic_and_spread() {
+        assert_eq!(batch_seed(1, 2), batch_seed(1, 2));
+        assert_ne!(batch_seed(1, 2), batch_seed(1, 3));
+        assert_ne!(batch_seed(1, 2), batch_seed(2, 2));
+        assert!(batch_seed(0, 0) >= 0);
+    }
+
+    #[test]
+    fn load_or_synthesize_falls_back() {
+        let spec = SyntheticSpec { train: 32, test: 16, noise: 0.5, seed: 0 };
+        let (tr, te) = load_or_synthesize("cifar10", None, &spec).unwrap();
+        assert_eq!(tr.input_shape, vec![32, 32, 3]);
+        assert_eq!(tr.len(), 32);
+        assert_eq!(te.len(), 16);
+    }
+}

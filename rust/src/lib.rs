@@ -1,0 +1,40 @@
+//! pipestale — pipelined backpropagation training with stale weights.
+//!
+//! A Rust + JAX + Pallas reproduction of Zhang & Abdelrahman (2019),
+//! *Pipelined Training with Stale Weights of Deep Convolutional Neural
+//! Networks*. The Rust coordinator (this crate) owns weights, schedules
+//! the cycle-accurate pipeline of Figure 4, and executes AOT-compiled XLA
+//! stage programs via PJRT; Python/JAX/Pallas run only at build time.
+//!
+//! See DESIGN.md for the architecture and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod config;
+pub mod data;
+pub mod memory;
+pub mod meta;
+pub mod model;
+pub mod optim;
+pub mod pipeline;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+use std::path::PathBuf;
+
+/// Default artifacts root: $PIPESTALE_ARTIFACTS or <crate>/artifacts.
+pub fn artifacts_root() -> PathBuf {
+    std::env::var("PIPESTALE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+/// Default results dir for bench/table outputs.
+pub fn results_root() -> PathBuf {
+    let p = std::env::var("PIPESTALE_RESULTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results"));
+    std::fs::create_dir_all(&p).ok();
+    p
+}

@@ -1,0 +1,237 @@
+//! pipestale CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   train        train one config (pipelined | sequential | hybrid)
+//!   inspect      staleness report for a config (paper §3 accounting)
+//!   memory       Table-6-style memory model for a config
+//!   perfsim      discrete-event speedup estimate (Table 5 machinery)
+//!   list-configs enumerate available artifact configs
+
+use anyhow::{anyhow, Result};
+
+use pipestale::config::{Mode, RunConfig};
+use pipestale::memory::{pipedream_stash_bytes, MemoryReport};
+use pipestale::meta::ConfigMeta;
+use pipestale::pipeline::perfsim::{
+    analytic_costs, simulate_nonpipelined, simulate_pipelined, CommModel, Mapping,
+};
+use pipestale::pipeline::StalenessReport;
+use pipestale::util::bench::Table;
+use pipestale::util::cli::Command;
+use pipestale::util::logging;
+
+fn main() {
+    logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("{e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let sub = args.first().map(String::as_str).unwrap_or("help");
+    let rest = if args.is_empty() { &[][..] } else { &args[1..] };
+    match sub {
+        "train" => cmd_train(rest),
+        "inspect" => cmd_inspect(rest),
+        "memory" => cmd_memory(rest),
+        "perfsim" => cmd_perfsim(rest),
+        "list-configs" => cmd_list(),
+        "help" | "--help" | "-h" => {
+            println!(
+                "pipestale — pipelined training with stale weights\n\n\
+                 SUBCOMMANDS:\n  train --config <name> [--mode pipelined|sequential|hybrid] ...\n  \
+                 inspect --config <name>\n  memory --config <name> [--batch N]\n  \
+                 perfsim --config <name> [--iters N]\n  list-configs\n\n\
+                 Run a subcommand with --help for its options."
+            );
+            Ok(())
+        }
+        other => Err(anyhow!("unknown subcommand {other:?}; try `pipestale help`")),
+    }
+}
+
+fn parse(cmd: Command, args: &[String]) -> Result<pipestale::util::cli::Matches> {
+    cmd.parse(args).map_err(|usage| anyhow!("{usage}"))
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let m = parse(
+        Command::new("pipestale train", "train one artifact config")
+            .req("config", "artifact config name (see list-configs)")
+            .opt("mode", "pipelined", "pipelined | sequential | hybrid")
+            .opt("iters", "300", "training iterations (mini-batches)")
+            .opt("pipelined-iters", "0", "hybrid: pipelined prefix length")
+            .opt("seed", "42", "global seed")
+            .opt("eval-every", "0", "evaluate every N iters (0 = end only)")
+            .opt("train-size", "2048", "synthetic train set size")
+            .opt("test-size", "512", "synthetic test set size")
+            .opt("noise", "0.6", "synthetic noise level")
+            .opt("stale-lr-scale", "1.0", "LR multiplier for stale partitions (Table 7)")
+            .opt("data-dir", "", "directory with real MNIST/CIFAR files")
+            .opt("out", "", "write loss/eval CSVs with this prefix")
+            .opt("resume", "", "initialize weights from this checkpoint")
+            .opt("save-checkpoint", "", "write final weights to this path"),
+        args,
+    )?;
+    let mut rc = RunConfig::new(m.get("config"));
+    rc.mode = Mode::parse(m.get("mode"))?;
+    rc.iters = m.get_u64("iters").map_err(|e| anyhow!(e))?;
+    rc.pipelined_iters = m.get_u64("pipelined-iters").map_err(|e| anyhow!(e))?;
+    rc.seed = m.get_u64("seed").map_err(|e| anyhow!(e))?;
+    rc.eval_every = m.get_u64("eval-every").map_err(|e| anyhow!(e))?;
+    rc.train_size = m.get_usize("train-size").map_err(|e| anyhow!(e))?;
+    rc.test_size = m.get_usize("test-size").map_err(|e| anyhow!(e))?;
+    rc.noise = m.get_f64("noise").map_err(|e| anyhow!(e))?;
+    rc.stale_lr_scale = m.get_f64("stale-lr-scale").map_err(|e| anyhow!(e))?;
+    if !m.get("data-dir").is_empty() {
+        rc.data_dir = Some(m.get("data-dir").into());
+    }
+    if !m.get("resume").is_empty() {
+        rc.resume_from = Some(m.get("resume").into());
+    }
+    if !m.get("save-checkpoint").is_empty() {
+        rc.save_to = Some(m.get("save-checkpoint").into());
+    }
+
+    let res = pipestale::train::run(&rc)?;
+    println!(
+        "{} [{}] {} iters: final test acc {:.2}%, train loss {:.4}, wall {:.1}s",
+        res.config,
+        res.mode,
+        res.iters,
+        100.0 * res.final_accuracy,
+        res.final_train_loss,
+        res.wall_seconds
+    );
+    if !m.get("out").is_empty() {
+        let prefix = m.get("out");
+        std::fs::write(format!("{prefix}_train.csv"), res.recorder.train_csv())?;
+        std::fs::write(format!("{prefix}_eval.csv"), res.recorder.eval_csv())?;
+        println!("wrote {prefix}_train.csv / {prefix}_eval.csv");
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &[String]) -> Result<()> {
+    let m = parse(
+        Command::new("pipestale inspect", "staleness report (paper §3)")
+            .req("config", "artifact config name"),
+        args,
+    )?;
+    let meta = ConfigMeta::load_named(&pipestale::artifacts_root(), m.get("config"))?;
+    let r = StalenessReport::from_meta(&meta);
+    println!(
+        "{}: model={} PPV={:?} -> {} paper stages, {:.1}% stale weights",
+        r.config,
+        meta.model,
+        meta.ppv,
+        r.paper_stages,
+        100.0 * r.stale_weight_fraction
+    );
+    let mut t = Table::new(&["partition", "layers", "params", "degree of staleness", "extra act copies"]);
+    for p in &r.partitions {
+        t.row(&[
+            p.partition.to_string(),
+            format!("{}..{}", p.layer_range.0, p.layer_range.1),
+            p.param_count.to_string(),
+            p.degree.to_string(),
+            p.extra_activation_copies.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_memory(args: &[String]) -> Result<()> {
+    let m = parse(
+        Command::new("pipestale memory", "Table-6-style memory model")
+            .req("config", "artifact config name")
+            .opt("batch", "128", "batch size for absolute numbers"),
+        args,
+    )?;
+    let meta = ConfigMeta::load_named(&pipestale::artifacts_root(), m.get("config"))?;
+    let batch = m.get_usize("batch").map_err(|e| anyhow!(e))?;
+    let r = MemoryReport::from_meta(&meta);
+    let mb = 1024.0 * 1024.0;
+    println!("{} (PPV {:?}, batch {batch}):", r.config, r.ppv);
+    println!("  activations: {:7.2} MB x batch", r.activations_per_sample / mb);
+    println!("  weights:     {:7.2} MB", r.weight_bytes / mb);
+    println!(
+        "  increase:    {:7.2} MB x batch ({:.0}% paper-style; ours {:.2} MB x batch = {:.0}%)",
+        r.increase_paper_style_per_sample / mb,
+        r.increase_pct_paper_style(),
+        r.increase_per_sample / mb,
+        r.increase_pct()
+    );
+    println!(
+        "  PipeDream weight stash would add {:.2} MB (we stash none)",
+        pipedream_stash_bytes(&meta) / mb
+    );
+    println!("  total (ours, batch {batch}): {:.1} MB", r.total_bytes(batch) / mb);
+    Ok(())
+}
+
+fn cmd_perfsim(args: &[String]) -> Result<()> {
+    let m = parse(
+        Command::new("pipestale perfsim", "DES speedup estimate from the analytic cost model")
+            .req("config", "artifact config name")
+            .opt("iters", "200", "simulated training iterations")
+            .opt("gflops", "50.0", "assumed accelerator GFLOP/s")
+            .opt("mapping", "paired", "paired | full"),
+        args,
+    )?;
+    let meta = ConfigMeta::load_named(&pipestale::artifacts_root(), m.get("config"))?;
+    let iters = m.get_u64("iters").map_err(|e| anyhow!(e))?;
+    let gflops = m.get_f64("gflops").map_err(|e| anyhow!(e))?;
+    let mapping = match m.get("mapping") {
+        "full" => Mapping::Full,
+        _ => Mapping::Paired,
+    };
+    let costs = analytic_costs(&meta, gflops * 1e9);
+    let comm = CommModel::default();
+    let tp = simulate_pipelined(&costs, &comm, mapping, iters);
+    let tn = simulate_nonpipelined(&costs, iters);
+    println!(
+        "{}: {} iters, mapping={:?}: non-pipelined {:.2}s, pipelined {:.2}s, speedup {:.2}X",
+        meta.config,
+        iters,
+        mapping,
+        tn,
+        tp,
+        tn / tp
+    );
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    let root = pipestale::artifacts_root();
+    let mut names: Vec<String> = std::fs::read_dir(&root)
+        .map_err(|e| anyhow!("{}: {e} (run `make artifacts`)", root.display()))?
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().join("meta.json").exists())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .collect();
+    names.sort();
+    let mut t = Table::new(&["config", "model", "stages", "PPV", "batch", "%stale", "hlo"]);
+    for n in names {
+        if let Ok(meta) = ConfigMeta::load_named(&root, &n) {
+            t.row(&[
+                meta.config.clone(),
+                meta.model.clone(),
+                meta.paper_stages().to_string(),
+                format!("{:?}", meta.ppv),
+                meta.batch.to_string(),
+                format!("{:.1}%", 100.0 * meta.stale_weight_fraction()),
+                if meta.meta_only { "meta-only".into() } else { "yes".into() },
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    Ok(())
+}

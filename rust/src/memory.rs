@@ -1,0 +1,185 @@
+//! Analytic memory model (paper Table 6 + §6.7 PipeDream comparison).
+//!
+//! The paper computes Table 6 with torchsummary: per-network activation
+//! and weight footprints, plus the *increase* pipelining causes by
+//! holding activations for in-flight mini-batches. Our accounting uses
+//! the layer metadata from meta.json:
+//!
+//! * `activations` — Σ over layers of the layer-output elements per
+//!   sample (torchsummary counts every module output; our per-layer
+//!   accounting is the same shape, slightly smaller absolute MB);
+//! * `increase` — each non-final partition p must hold its carry-in for
+//!   `degree(p) = 2(K-p)` extra in-flight batches (the activation FIFO
+//!   depth minus the live copy). Our jax bwd recomputes the partition
+//!   forward from the carry-in, so the carry-in is *all* we store — the
+//!   paper's PyTorch autograd stores every internal activation instead,
+//!   which we also report as `increase_paper_style`.
+//!
+//! No weight copies are stashed in either accounting — the paper's core
+//! memory claim vs PipeDream (§6.7), quantified by `pipedream_estimate`.
+
+use crate::meta::ConfigMeta;
+
+#[derive(Debug, Clone)]
+pub struct MemoryReport {
+    pub config: String,
+    pub model: String,
+    pub ppv: Vec<usize>,
+    /// Per-sample activation bytes of the whole network (f32).
+    pub activations_per_sample: f64,
+    /// Weight bytes (batch-independent).
+    pub weight_bytes: f64,
+    /// Extra per-sample bytes: carry-in copies only (our implementation).
+    pub increase_per_sample: f64,
+    /// Extra per-sample bytes if every stage-internal activation is kept
+    /// for the delayed backward (the paper's PyTorch accounting).
+    pub increase_paper_style_per_sample: f64,
+}
+
+impl MemoryReport {
+    pub fn from_meta(meta: &ConfigMeta) -> Self {
+        let f32b = 4.0;
+        let activations_per_sample: f64 = meta
+            .layers
+            .iter()
+            .map(|l| l.carry_elems_per_sample as f64 * f32b)
+            .sum();
+
+        let mut increase = 0.0;
+        let mut increase_paper = 0.0;
+        for part in &meta.partitions {
+            let degree = meta.degree_of_staleness(part.index) as f64;
+            if degree == 0.0 {
+                continue;
+            }
+            // carry-in elements of this partition (the register contents)
+            let carry_in_elems: usize = part
+                .carry_in
+                .iter()
+                .map(|s| s[1..].iter().product::<usize>())
+                .sum();
+            increase += degree * carry_in_elems as f64 * f32b;
+            // paper-style: all layer outputs inside the partition, one
+            // extra copy per in-flight mini-batch beyond the live one.
+            // Table 6's numbers correspond to degree/2 = K-i+1 extra
+            // copies (activations live for 2(K-i+1) *cycles*, but a new
+            // mini-batch enters every 2 cycles in the paired mapping):
+            // ResNet-20 PPV (7): increase/activations = 2.58/3.84 = 67%
+            // = share of partition-1 activations — exactly 1 copy.
+            let copies = degree / 2.0;
+            let internal: f64 = meta.layers[part.layer_lo - 1..part.layer_hi]
+                .iter()
+                .map(|l| l.carry_elems_per_sample as f64 * f32b)
+                .sum();
+            increase_paper += copies * internal;
+        }
+
+        MemoryReport {
+            config: meta.config.clone(),
+            model: meta.model.clone(),
+            ppv: meta.ppv.clone(),
+            activations_per_sample,
+            weight_bytes: meta.total_params() as f64 * f32b,
+            increase_per_sample: increase,
+            increase_paper_style_per_sample: increase_paper,
+        }
+    }
+
+    /// Paper's "Increase %" column: increase relative to the baseline
+    /// activation footprint (batch-size independent ratio).
+    pub fn increase_pct_paper_style(&self) -> f64 {
+        100.0 * self.increase_paper_style_per_sample / self.activations_per_sample
+    }
+
+    pub fn increase_pct(&self) -> f64 {
+        100.0 * self.increase_per_sample / self.activations_per_sample
+    }
+
+    /// Total training footprint at a given batch size, our implementation.
+    pub fn total_bytes(&self, batch: usize) -> f64 {
+        self.weight_bytes
+            + (self.activations_per_sample + self.increase_per_sample) * batch as f64
+    }
+}
+
+/// PipeDream-style weight stashing estimate (§6.7): partition p (1-based
+/// of P) keeps one weight version per in-flight batch = P - p + 1 copies;
+/// extra = Σ_p (P - p) * weight_bytes_p beyond the single live copy.
+pub fn pipedream_stash_bytes(meta: &ConfigMeta) -> f64 {
+    let p = meta.partitions.len();
+    meta.partitions
+        .iter()
+        .enumerate()
+        .map(|(i, part)| ((p - 1 - i) as f64) * part.param_count as f64 * 4.0)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn report(name: &str) -> MemoryReport {
+        MemoryReport::from_meta(&ConfigMeta::load_named(&root(), name).unwrap())
+    }
+
+    #[test]
+    fn resnet20_full_width_magnitudes() {
+        let r = report("resnet20_mem");
+        // ~0.27M params -> ~1.08 MB weights (paper: 1.03 MB)
+        assert!(r.weight_bytes > 0.9e6 && r.weight_bytes < 1.3e6, "{}", r.weight_bytes);
+        // per-sample activations within 2x of the paper's 3.84 MB/sample
+        // (torchsummary counts every module output, we count layer outputs)
+        assert!(
+            r.activations_per_sample > 0.5e6 && r.activations_per_sample < 8e6,
+            "{}",
+            r.activations_per_sample
+        );
+        assert!(r.increase_per_sample > 0.0);
+        assert!(r.increase_paper_style_per_sample >= r.increase_per_sample);
+    }
+
+    #[test]
+    fn increase_pct_is_modest_and_stable_for_deeper_resnets() {
+        // Paper Table 6: ~57-67%, roughly constant with depth.
+        let pcts: Vec<f64> = [20usize, 56, 110, 224, 362]
+            .iter()
+            .map(|d| report(&format!("resnet{d}_mem")).increase_pct_paper_style())
+            .collect();
+        for w in &pcts {
+            assert!(*w > 20.0 && *w < 150.0, "{pcts:?}");
+        }
+        // deeper nets converge to a stable ratio (max spread of the last
+        // three below 10 points, as in the paper's 57/57/57)
+        let tail = &pcts[2..];
+        let spread = tail.iter().cloned().fold(f64::MIN, f64::max)
+            - tail.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(spread < 10.0, "{pcts:?}");
+    }
+
+    #[test]
+    fn our_recompute_scheme_beats_paper_style_storage() {
+        let r = report("resnet110_mem");
+        assert!(r.increase_per_sample < r.increase_paper_style_per_sample / 2.0);
+    }
+
+    #[test]
+    fn pipedream_stash_is_extra_weight_copies() {
+        let meta = ConfigMeta::load_named(&root(), "resnet20_fine8").unwrap();
+        let stash = pipedream_stash_bytes(&meta);
+        assert!(stash > 0.0);
+        // stash never exceeds (P-1) x full weights
+        let p = meta.partitions.len() as f64;
+        assert!(stash <= (p - 1.0) * meta.total_params() as f64 * 4.0);
+    }
+
+    #[test]
+    fn total_bytes_scales_with_batch() {
+        let r = report("resnet20_mem");
+        assert!(r.total_bytes(128) > r.total_bytes(1));
+    }
+}

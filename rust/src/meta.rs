@@ -1,0 +1,335 @@
+//! Parsed `artifacts/<config>/meta.json` — the L2→L3 contract.
+//!
+//! The AOT driver (python/compile/aot.py) records, per partition, the
+//! exact positional layout of every stage program's inputs and outputs,
+//! parameter/state initialization specs, carry shapes, and the per-layer
+//! data (param counts, activation sizes, FLOPs) behind the staleness and
+//! memory models.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: String,
+    pub fan_in: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct StateSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct LayerMeta {
+    pub name: String,
+    pub param_count: usize,
+    pub carry_elems_per_sample: usize,
+    pub flops_per_sample: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct PartitionMeta {
+    pub index: usize,
+    pub layer_lo: usize,
+    pub layer_hi: usize,
+    pub param_count: usize,
+    pub params: Vec<ParamSpec>,
+    pub state: Vec<StateSpec>,
+    pub carry_in: Vec<Vec<usize>>,
+    pub carry_out: Vec<Vec<usize>>,
+    pub programs: BTreeMap<String, String>,
+}
+
+impl PartitionMeta {
+    pub fn is_last(&self) -> bool {
+        self.programs.contains_key("last")
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ConfigMeta {
+    pub dir: PathBuf,
+    pub config: String,
+    pub model: String,
+    pub width_mult: f64,
+    pub batch: usize,
+    pub dataset: String,
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub num_layers: usize,
+    pub ppv: Vec<usize>,
+    pub meta_only: bool,
+    pub layers: Vec<LayerMeta>,
+    pub partitions: Vec<PartitionMeta>,
+}
+
+impl ConfigMeta {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        Self::from_json(dir, &j)
+    }
+
+    /// Load `artifacts/<name>` relative to a root (default `artifacts/`).
+    pub fn load_named(root: &Path, name: &str) -> Result<Self> {
+        Self::load(&root.join(name))
+    }
+
+    fn from_json(dir: &Path, j: &Json) -> Result<Self> {
+        let gs = |k: &str| -> Result<String> {
+            Ok(j.get(k).and_then(Json::as_str).ok_or_else(|| anyhow!("meta missing {k}"))?.to_string())
+        };
+        let gu = |k: &str| -> Result<usize> {
+            j.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("meta missing {k}"))
+        };
+
+        let layers = j
+            .get("layers")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("meta missing layers"))?
+            .iter()
+            .map(|l| -> Result<LayerMeta> {
+                Ok(LayerMeta {
+                    name: l.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+                    param_count: l.get("param_count").and_then(Json::as_usize).unwrap_or(0),
+                    carry_elems_per_sample: l
+                        .get("carry_elems_per_sample")
+                        .and_then(Json::as_usize)
+                        .unwrap_or(0),
+                    flops_per_sample: l
+                        .get("flops_per_sample")
+                        .and_then(Json::as_i64)
+                        .unwrap_or(0) as u64,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let partitions = j
+            .get("partitions")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("meta missing partitions"))?
+            .iter()
+            .map(|p| parse_partition(p))
+            .collect::<Result<Vec<_>>>()?;
+
+        let meta = ConfigMeta {
+            dir: dir.to_path_buf(),
+            config: gs("config")?,
+            model: gs("model")?,
+            width_mult: j.get("width_mult").and_then(Json::as_f64).unwrap_or(1.0),
+            batch: gu("batch")?,
+            dataset: gs("dataset")?,
+            input_shape: j
+                .get("input_shape")
+                .and_then(Json::as_usize_vec)
+                .ok_or_else(|| anyhow!("meta missing input_shape"))?,
+            num_classes: gu("num_classes")?,
+            num_layers: gu("num_layers")?,
+            ppv: j
+                .get("ppv")
+                .and_then(Json::as_usize_vec)
+                .ok_or_else(|| anyhow!("meta missing ppv"))?,
+            meta_only: j.get("meta_only").and_then(Json::as_bool).unwrap_or(false),
+            layers,
+            partitions,
+        };
+        meta.validate()?;
+        Ok(meta)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.partitions.len() != self.ppv.len() + 1 {
+            bail!("{}: {} partitions but ppv {:?}", self.config, self.partitions.len(), self.ppv);
+        }
+        if self.layers.len() != self.num_layers {
+            bail!("{}: layer metadata arity mismatch", self.config);
+        }
+        for (a, b) in self.partitions.iter().zip(self.partitions.iter().skip(1)) {
+            if a.carry_out != b.carry_in {
+                bail!("carry chain mismatch between partitions {} and {}", a.index, b.index);
+            }
+            if a.layer_hi + 1 != b.layer_lo {
+                bail!("layer range gap between partitions {} and {}", a.index, b.index);
+            }
+        }
+        let last = self.partitions.last().unwrap();
+        if !last.is_last() {
+            bail!("{}: final partition lacks fused last program", self.config);
+        }
+        Ok(())
+    }
+
+    /// Number of pipeline register pairs (K).
+    pub fn num_registers(&self) -> usize {
+        self.ppv.len()
+    }
+
+    /// Paper stage count: 2K + 2 (K+1 forward + K+1 backward stages).
+    pub fn paper_stages(&self) -> usize {
+        2 * self.ppv.len() + 2
+    }
+
+    /// Paper §3: percentage of stale weights = sum_{i<=K} N_i / sum N_i.
+    pub fn stale_weight_fraction(&self) -> f64 {
+        let total: usize = self.partitions.iter().map(|p| p.param_count).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let stale: usize = self
+            .partitions
+            .iter()
+            .take(self.partitions.len() - 1)
+            .map(|p| p.param_count)
+            .sum();
+        stale as f64 / total as f64
+    }
+
+    /// Paper §3: degree of staleness of partition i (1-based) = 2(K-i+1).
+    pub fn degree_of_staleness(&self, partition_index: usize) -> usize {
+        let k = self.num_registers();
+        2 * (k + 1 - partition_index)
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.partitions.iter().map(|p| p.param_count).sum()
+    }
+
+    pub fn program_path(&self, part: &PartitionMeta, which: &str) -> Result<PathBuf> {
+        let f = part
+            .programs
+            .get(which)
+            .ok_or_else(|| anyhow!("partition {} has no {which} program", part.index))?;
+        Ok(self.dir.join(f))
+    }
+}
+
+fn parse_partition(p: &Json) -> Result<PartitionMeta> {
+    let shapes = |key: &str| -> Result<Vec<Vec<usize>>> {
+        p.get(key)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("partition missing {key}"))?
+            .iter()
+            .map(|s| s.as_usize_vec().ok_or_else(|| anyhow!("bad shape in {key}")))
+            .collect()
+    };
+    let params = p
+        .get("params")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("partition missing params"))?
+        .iter()
+        .map(|s| -> Result<ParamSpec> {
+            Ok(ParamSpec {
+                name: s.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+                shape: s.get("shape").and_then(Json::as_usize_vec).unwrap_or_default(),
+                init: s.get("init").and_then(Json::as_str).unwrap_or("zeros").to_string(),
+                fan_in: s.get("fan_in").and_then(Json::as_usize).unwrap_or(0),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let state = p
+        .get("state")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("partition missing state"))?
+        .iter()
+        .map(|s| -> Result<StateSpec> {
+            Ok(StateSpec {
+                name: s.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+                shape: s.get("shape").and_then(Json::as_usize_vec).unwrap_or_default(),
+                init: s.get("init").and_then(Json::as_str).unwrap_or("zeros").to_string(),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let programs = p
+        .get("programs")
+        .and_then(|v| match v {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        })
+        .ok_or_else(|| anyhow!("partition missing programs"))?
+        .iter()
+        .map(|(k, v)| (k.clone(), v.as_str().unwrap_or("").to_string()))
+        .collect();
+
+    Ok(PartitionMeta {
+        index: p.get("index").and_then(Json::as_usize).unwrap_or(0),
+        layer_lo: p.get("layer_lo").and_then(Json::as_usize).unwrap_or(0),
+        layer_hi: p.get("layer_hi").and_then(Json::as_usize).unwrap_or(0),
+        param_count: p.get("param_count").and_then(Json::as_usize).unwrap_or(0),
+        params,
+        state,
+        carry_in: shapes("carry_in")?,
+        carry_out: shapes("carry_out")?,
+        programs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_quickstart_meta() {
+        let m = ConfigMeta::load_named(&artifacts_root(), "quickstart_lenet").unwrap();
+        assert_eq!(m.model, "lenet5");
+        assert_eq!(m.num_layers, 5);
+        assert_eq!(m.partitions.len(), 2);
+        assert!(m.partitions[1].is_last());
+        assert_eq!(m.batch, 32);
+        assert_eq!(m.input_shape, vec![28, 28, 1]);
+    }
+
+    #[test]
+    fn staleness_accounting_matches_paper_definitions() {
+        let m = ConfigMeta::load_named(&artifacts_root(), "resnet20_fine8").unwrap();
+        // K=3 registers -> 8 paper stages; degrees 2K..2 for partitions 1..K
+        assert_eq!(m.paper_stages(), 8);
+        assert_eq!(m.degree_of_staleness(1), 6);
+        assert_eq!(m.degree_of_staleness(3), 2);
+        assert_eq!(m.degree_of_staleness(4), 0);
+        let f = m.stale_weight_fraction();
+        assert!(f > 0.0 && f < 1.0);
+    }
+
+    #[test]
+    fn carry_chain_validated() {
+        let m = ConfigMeta::load_named(&artifacts_root(), "resnet20_4s").unwrap();
+        for (a, b) in m.partitions.iter().zip(m.partitions.iter().skip(1)) {
+            assert_eq!(a.carry_out, b.carry_in);
+        }
+        assert_eq!(m.total_params(), m.layers.iter().map(|l| l.param_count).sum());
+    }
+
+    #[test]
+    fn slide_fraction_monotone() {
+        // Fig 6 premise: %stale grows with the slide position.
+        let mut prev = 0.0;
+        for p in [3usize, 9, 15, 19] {
+            let m = ConfigMeta::load_named(&artifacts_root(), &format!("resnet20_slide{p}")).unwrap();
+            let f = m.stale_weight_fraction();
+            assert!(f > prev, "p={p} f={f} prev={prev}");
+            prev = f;
+        }
+    }
+
+    #[test]
+    fn meta_only_configs_load() {
+        let m = ConfigMeta::load_named(&artifacts_root(), "resnet362_mem").unwrap();
+        assert!(m.meta_only);
+        assert_eq!(m.num_layers, 362);
+    }
+}

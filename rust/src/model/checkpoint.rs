@@ -1,0 +1,277 @@
+//! Checkpointing: save/restore ModelParams (+ iteration counter) to a
+//! self-describing binary format.
+//!
+//! Enables (a) resuming interrupted runs and (b) the paper's hybrid
+//! schedule split across *processes*: train the pipelined prefix,
+//! checkpoint, and finish non-pipelined elsewhere — the same weights
+//! flow through both schedules, exactly as in-process hybrid.
+//!
+//! Format (little-endian):
+//!   magic "PSCKPT01" | u64 iter | u32 n_partitions
+//!   per partition: u64 version | u32 n_params | u32 n_state
+//!     per tensor: u32 rank | u64 dims[rank] | f32 data[numel]
+//! followed by a u32 FNV-1a checksum of everything before it.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::{ModelParams, PartitionParams};
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 8] = b"PSCKPT01";
+
+fn fnv1a(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x01000193);
+    }
+    h
+}
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn tensor(&mut self, t: &Tensor) {
+        self.u32(t.shape.len() as u32);
+        for &d in &t.shape {
+            self.u64(d as u64);
+        }
+        for v in &t.data {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.b.len() {
+            bail!("checkpoint truncated at byte {}", self.pos);
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn tensor(&mut self) -> Result<Tensor> {
+        let rank = self.u32()? as usize;
+        if rank > 8 {
+            bail!("implausible tensor rank {rank}");
+        }
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(self.u64()? as usize);
+        }
+        let numel: usize = shape.iter().product();
+        if numel > (1 << 31) {
+            bail!("implausible tensor size {numel}");
+        }
+        let raw = self.take(numel * 4)?;
+        let data = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Tensor::from_vec(&shape, data)
+    }
+}
+
+/// Serialize params + iteration counter.
+pub fn save(path: &Path, params: &ModelParams, iter: u64) -> Result<()> {
+    let mut w = Writer { buf: Vec::new() };
+    w.buf.extend_from_slice(MAGIC);
+    w.u64(iter);
+    w.u32(params.partitions.len() as u32);
+    for p in &params.partitions {
+        w.u64(p.version);
+        w.u32(p.params.len() as u32);
+        w.u32(p.state.len() as u32);
+        for t in &p.params {
+            w.tensor(t);
+        }
+        for t in &p.state {
+            w.tensor(t);
+        }
+    }
+    let sum = fnv1a(&w.buf);
+    w.u32(sum);
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(&w.buf)?;
+    Ok(())
+}
+
+/// Load params + iteration counter, verifying magic and checksum.
+pub fn load(path: &Path) -> Result<(ModelParams, u64)> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?
+        .read_to_end(&mut bytes)?;
+    if bytes.len() < MAGIC.len() + 4 {
+        bail!("{}: not a checkpoint (too small)", path.display());
+    }
+    let (body, sumb) = bytes.split_at(bytes.len() - 4);
+    let want = u32::from_le_bytes(sumb.try_into().unwrap());
+    if fnv1a(body) != want {
+        bail!("{}: checksum mismatch (corrupt checkpoint)", path.display());
+    }
+    let mut r = Reader { b: body, pos: 0 };
+    if r.take(8)? != MAGIC {
+        bail!("{}: bad magic (not a pipestale checkpoint)", path.display());
+    }
+    let iter = r.u64()?;
+    let n_parts = r.u32()? as usize;
+    if n_parts > 1024 {
+        bail!("implausible partition count {n_parts}");
+    }
+    let mut partitions = Vec::with_capacity(n_parts);
+    for _ in 0..n_parts {
+        let version = r.u64()?;
+        let n_params = r.u32()? as usize;
+        let n_state = r.u32()? as usize;
+        let mut params = Vec::with_capacity(n_params);
+        for _ in 0..n_params {
+            params.push(r.tensor()?);
+        }
+        let mut state = Vec::with_capacity(n_state);
+        for _ in 0..n_state {
+            state.push(r.tensor()?);
+        }
+        partitions.push(PartitionParams { params, state, version });
+    }
+    if r.pos != body.len() {
+        bail!("{}: trailing bytes after checkpoint body", path.display());
+    }
+    Ok((ModelParams { partitions }, iter))
+}
+
+/// Validate a loaded checkpoint against a config's partition specs
+/// (shape-level compatibility before handing weights to executables).
+pub fn validate(params: &ModelParams, meta: &crate::meta::ConfigMeta) -> Result<()> {
+    if params.partitions.len() != meta.partitions.len() {
+        bail!(
+            "checkpoint has {} partitions, config {} has {}",
+            params.partitions.len(),
+            meta.config,
+            meta.partitions.len()
+        );
+    }
+    for (pp, pm) in params.partitions.iter().zip(&meta.partitions) {
+        if pp.params.len() != pm.params.len() || pp.state.len() != pm.state.len() {
+            bail!("partition {} tensor arity mismatch", pm.index);
+        }
+        for (t, spec) in pp.params.iter().zip(&pm.params) {
+            if t.shape != spec.shape {
+                bail!("{}: shape {:?} != {:?}", spec.name, t.shape, spec.shape);
+            }
+        }
+        for (t, spec) in pp.state.iter().zip(&pm.state) {
+            if t.shape != spec.shape {
+                bail!("{}: shape {:?} != {:?}", spec.name, t.shape, spec.shape);
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::meta::ConfigMeta;
+    use crate::util::rng::Pcg32;
+    use std::path::PathBuf;
+
+    fn root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("ckpt_{}_{name}", std::process::id()))
+    }
+
+    fn sample() -> ModelParams {
+        let meta = ConfigMeta::load_named(&root(), "quickstart_lenet").unwrap();
+        let mut mp = ModelParams::init(&meta.partitions, 3).unwrap();
+        let mut rng = Pcg32::seeded(9);
+        for p in &mut mp.partitions {
+            p.version = 17;
+            for t in &mut p.params {
+                for v in &mut t.data {
+                    *v = rng.normal();
+                }
+            }
+        }
+        mp
+    }
+
+    #[test]
+    fn roundtrip_bit_exact() {
+        let mp = sample();
+        let p = tmp("rt");
+        save(&p, &mp, 123).unwrap();
+        let (back, iter) = load(&p).unwrap();
+        assert_eq!(iter, 123);
+        assert_eq!(back.partitions.len(), mp.partitions.len());
+        for (a, b) in back.partitions.iter().zip(&mp.partitions) {
+            assert_eq!(a.version, b.version);
+            assert_eq!(a.params, b.params);
+            assert_eq!(a.state, b.state);
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let mp = sample();
+        let p = tmp("corrupt");
+        save(&p, &mp, 1).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = load(&p).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_and_truncation() {
+        let p = tmp("garbage");
+        std::fs::write(&p, b"not a checkpoint at all................").unwrap();
+        assert!(load(&p).is_err());
+        let mp = sample();
+        save(&p, &mp, 1).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() / 3]).unwrap();
+        assert!(load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn validate_against_meta() {
+        let meta = ConfigMeta::load_named(&root(), "quickstart_lenet").unwrap();
+        let mp = sample();
+        validate(&mp, &meta).unwrap();
+        let other = ConfigMeta::load_named(&root(), "resnet20_4s").unwrap();
+        assert!(validate(&mp, &other).is_err());
+    }
+}

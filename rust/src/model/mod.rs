@@ -1,0 +1,140 @@
+//! Parameter & state stores: the coordinator-owned weight copies.
+//!
+//! One `PartitionParams` per pipeline partition. Initialization mirrors
+//! python/compile/layers.py::init_value exactly in *distribution* (He
+//! normal / Glorot uniform / zeros / ones); bit-level equality with numpy
+//! is not required because both sides train from their own seeds.
+
+pub mod checkpoint;
+
+use anyhow::Result;
+
+use crate::meta::PartitionMeta;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+
+/// Weights + BN state for one partition.
+#[derive(Clone, Debug)]
+pub struct PartitionParams {
+    pub params: Vec<Tensor>,
+    pub state: Vec<Tensor>,
+    /// Monotone count of applied updates (staleness bookkeeping).
+    pub version: u64,
+}
+
+impl PartitionParams {
+    pub fn init(meta: &PartitionMeta, rng: &mut Pcg32) -> Result<Self> {
+        let mut params = Vec::with_capacity(meta.params.len());
+        for spec in &meta.params {
+            let mut t = Tensor::zeros(&spec.shape);
+            match spec.init.as_str() {
+                "zeros" => {}
+                "ones" => t.data.iter_mut().for_each(|v| *v = 1.0),
+                "he" => rng.fill_he(&mut t.data, spec.fan_in),
+                "glorot" => {
+                    let fan_out = *spec.shape.last().unwrap_or(&1);
+                    rng.fill_glorot(&mut t.data, spec.fan_in, fan_out);
+                }
+                other => anyhow::bail!("unknown init {other:?} for {}", spec.name),
+            }
+            params.push(t);
+        }
+        let mut state = Vec::with_capacity(meta.state.len());
+        for spec in &meta.state {
+            state.push(match spec.init.as_str() {
+                "ones" => Tensor::ones(&spec.shape),
+                _ => Tensor::zeros(&spec.shape),
+            });
+        }
+        Ok(PartitionParams { params, state, version: 0 })
+    }
+
+    pub fn num_scalars(&self) -> usize {
+        self.params.iter().map(|t| t.numel()).sum()
+    }
+}
+
+/// All partitions of one model instance.
+#[derive(Clone, Debug)]
+pub struct ModelParams {
+    pub partitions: Vec<PartitionParams>,
+}
+
+impl ModelParams {
+    pub fn init(parts: &[PartitionMeta], seed: u64) -> Result<Self> {
+        // One RNG stream for the whole model, walked in partition order —
+        // the same weights regardless of how the model is partitioned
+        // (paired baselines share initialization across PPVs with equal
+        // partition boundaries walk order; see scheduler tests).
+        let mut rng = Pcg32::seeded(seed);
+        let partitions = parts
+            .iter()
+            .map(|p| PartitionParams::init(p, &mut rng))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ModelParams { partitions })
+    }
+
+    pub fn total_scalars(&self) -> usize {
+        self.partitions.iter().map(|p| p.num_scalars()).sum()
+    }
+
+    pub fn all_finite(&self) -> bool {
+        self.partitions
+            .iter()
+            .all(|p| p.params.iter().chain(p.state.iter()).all(Tensor::is_finite))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::meta::ConfigMeta;
+    use std::path::PathBuf;
+
+    fn artifacts_root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn init_respects_specs() {
+        let m = ConfigMeta::load_named(&artifacts_root(), "quickstart_lenet").unwrap();
+        let mp = ModelParams::init(&m.partitions, 42).unwrap();
+        assert_eq!(mp.total_scalars(), m.total_params());
+        assert!(mp.all_finite());
+        // biases are zero-initialized
+        for (p, pm) in mp.partitions.iter().zip(m.partitions.iter()) {
+            for (t, spec) in p.params.iter().zip(pm.params.iter()) {
+                if spec.init == "zeros" {
+                    assert!(t.data.iter().all(|&v| v == 0.0), "{}", spec.name);
+                } else {
+                    assert!(t.norm() > 0.0, "{}", spec.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn init_is_seed_deterministic() {
+        let m = ConfigMeta::load_named(&artifacts_root(), "quickstart_lenet").unwrap();
+        let a = ModelParams::init(&m.partitions, 7).unwrap();
+        let b = ModelParams::init(&m.partitions, 7).unwrap();
+        let c = ModelParams::init(&m.partitions, 8).unwrap();
+        assert_eq!(a.partitions[0].params[0], b.partitions[0].params[0]);
+        assert_ne!(a.partitions[0].params[0], c.partitions[0].params[0]);
+    }
+
+    #[test]
+    fn bn_state_init_mean_zero_var_one() {
+        let m = ConfigMeta::load_named(&artifacts_root(), "resnet20_4s").unwrap();
+        let mp = ModelParams::init(&m.partitions, 1).unwrap();
+        for (p, pm) in mp.partitions.iter().zip(m.partitions.iter()) {
+            for (t, spec) in p.state.iter().zip(pm.state.iter()) {
+                if spec.name.ends_with("/var") {
+                    assert!(t.data.iter().all(|&v| v == 1.0));
+                } else {
+                    assert!(t.data.iter().all(|&v| v == 0.0));
+                }
+            }
+        }
+    }
+}

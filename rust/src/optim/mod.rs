@@ -1,0 +1,225 @@
+//! SGD optimizer + learning-rate schedules (the paper's Appendix A/B).
+//!
+//! The paper trains with SGD + momentum (Nesterov for AlexNet/VGG) and
+//! per-network LR schedules; the 4-stage "actual" runs additionally use a
+//! *per-backward-stage* learning rate (Table 7: the BKS_2 stage of deeper
+//! ResNets needs a smaller LR to tolerate staleness). `Sgd` therefore
+//! carries an optional per-partition LR scale.
+
+use crate::tensor::Tensor;
+
+/// Learning-rate schedule, evaluated per iteration.
+#[derive(Debug, Clone)]
+pub enum Schedule {
+    Const { base: f64 },
+    /// base * gamma^(iter / every)  (Caffe "step")
+    Step { base: f64, gamma: f64, every: usize },
+    /// base * gamma^(#milestones passed)  (paper: "decreased by 10x twice")
+    MultiStep { base: f64, gamma: f64, milestones: Vec<usize> },
+    /// base * (1 + gamma*iter)^(-power)  (Caffe "inv", LeNet-5)
+    Inv { base: f64, gamma: f64, power: f64 },
+    /// base * 0.5^(iter / every)  (VGG: halved every 50 epochs)
+    HalfEvery { base: f64, every: usize },
+}
+
+impl Schedule {
+    pub fn lr(&self, iter: usize) -> f64 {
+        match self {
+            Schedule::Const { base } => *base,
+            Schedule::Step { base, gamma, every } => {
+                base * gamma.powi((iter / every) as i32)
+            }
+            Schedule::MultiStep { base, gamma, milestones } => {
+                let passed = milestones.iter().filter(|&&m| iter >= m).count();
+                base * gamma.powi(passed as i32)
+            }
+            Schedule::Inv { base, gamma, power } => {
+                base * (1.0 + gamma * iter as f64).powf(-power)
+            }
+            Schedule::HalfEvery { base, every } => {
+                base * 0.5f64.powi((iter / every) as i32)
+            }
+        }
+    }
+}
+
+/// SGD with momentum / Nesterov / weight decay, one velocity buffer per
+/// parameter tensor of one partition.
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    pub schedule: Schedule,
+    pub momentum: f32,
+    pub nesterov: bool,
+    pub weight_decay: f32,
+    /// Per-partition multiplier on the scheduled LR (Table 7).
+    pub lr_scale: f32,
+    velocity: Vec<Vec<f32>>,
+}
+
+impl Sgd {
+    pub fn new(schedule: Schedule, momentum: f32, nesterov: bool, weight_decay: f32) -> Self {
+        Sgd { schedule, momentum, nesterov, weight_decay, lr_scale: 1.0, velocity: Vec::new() }
+    }
+
+    pub fn with_lr_scale(mut self, scale: f32) -> Self {
+        self.lr_scale = scale;
+        self
+    }
+
+    /// Apply one update: params <- params - lr * (grad + wd*param), with
+    /// momentum buffers created lazily. This is the L3 hot loop (§Perf).
+    pub fn step(&mut self, iter: usize, params: &mut [Tensor], grads: &[Tensor]) {
+        debug_assert_eq!(params.len(), grads.len());
+        let lr = (self.schedule.lr(iter) as f32) * self.lr_scale;
+        if self.velocity.len() != params.len() {
+            self.velocity = params.iter().map(|p| vec![0.0; p.data.len()]).collect();
+        }
+        let mu = self.momentum;
+        let wd = self.weight_decay;
+        for ((p, g), v) in params.iter_mut().zip(grads).zip(self.velocity.iter_mut()) {
+            debug_assert_eq!(p.data.len(), g.data.len());
+            if mu == 0.0 {
+                for (pv, gv) in p.data.iter_mut().zip(&g.data) {
+                    let d = gv + wd * *pv;
+                    *pv -= lr * d;
+                }
+            } else if self.nesterov {
+                for ((pv, gv), vv) in p.data.iter_mut().zip(&g.data).zip(v.iter_mut()) {
+                    let d = gv + wd * *pv;
+                    *vv = mu * *vv + d;
+                    *pv -= lr * (d + mu * *vv);
+                }
+            } else {
+                for ((pv, gv), vv) in p.data.iter_mut().zip(&g.data).zip(v.iter_mut()) {
+                    let d = gv + wd * *pv;
+                    *vv = mu * *vv + d;
+                    *pv -= lr * *vv;
+                }
+            }
+        }
+    }
+}
+
+/// Paper hyperparameter presets (Appendix A, simulated runs).
+pub fn paper_schedule(model: &str, total_iters: usize) -> (Schedule, f32, bool, f32) {
+    match model {
+        // LeNet-5: SGD lr 0.01 inv policy, momentum 0.9, wd 5e-4
+        "lenet5" => (
+            Schedule::Inv { base: 0.01, gamma: 1e-4, power: 0.75 },
+            0.9,
+            false,
+            5e-4,
+        ),
+        // AlexNet: Nesterov, lr 1e-3 dropped 10x twice, wd 4e-3
+        "alexnet" => (
+            Schedule::MultiStep {
+                base: 1e-3,
+                gamma: 0.1,
+                milestones: vec![total_iters / 2, 3 * total_iters / 4],
+            },
+            0.9,
+            true,
+            4e-3,
+        ),
+        // VGG: Nesterov, lr 0.1 halved periodically, wd 5e-4
+        m if m.starts_with("vgg") => (
+            Schedule::HalfEvery { base: 0.05, every: (total_iters / 5).max(1) },
+            0.9,
+            true,
+            5e-4,
+        ),
+        // ResNet: lr 0.1 (non-pipelined) dropped 10x twice, wd 1e-4
+        m if m.starts_with("resnet") => (
+            Schedule::MultiStep {
+                base: 0.05,
+                gamma: 0.1,
+                milestones: vec![total_iters / 2, 3 * total_iters / 4],
+            },
+            0.9,
+            false,
+            1e-4,
+        ),
+        _ => (Schedule::Const { base: 0.01 }, 0.9, false, 0.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: &[f32]) -> Tensor {
+        Tensor::from_vec(&[v.len()], v.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn schedules_evaluate() {
+        assert_eq!(Schedule::Const { base: 0.1 }.lr(1000), 0.1);
+        let s = Schedule::MultiStep { base: 1.0, gamma: 0.1, milestones: vec![10, 20] };
+        assert_eq!(s.lr(5), 1.0);
+        assert!((s.lr(10) - 0.1).abs() < 1e-12);
+        assert!((s.lr(25) - 0.01).abs() < 1e-12);
+        let h = Schedule::HalfEvery { base: 1.0, every: 4 };
+        assert_eq!(h.lr(3), 1.0);
+        assert_eq!(h.lr(4), 0.5);
+        assert_eq!(h.lr(8), 0.25);
+        let i = Schedule::Inv { base: 1.0, gamma: 1.0, power: 1.0 };
+        assert!((i.lr(1) - 0.5).abs() < 1e-12);
+        let st = Schedule::Step { base: 1.0, gamma: 0.1, every: 10 };
+        assert!((st.lr(19) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn vanilla_sgd_update() {
+        let mut o = Sgd::new(Schedule::Const { base: 0.5 }, 0.0, false, 0.0);
+        let mut p = vec![t(&[1.0, 2.0])];
+        o.step(0, &mut p, &[t(&[1.0, -1.0])]);
+        assert_eq!(p[0].data, vec![0.5, 2.5]);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut o = Sgd::new(Schedule::Const { base: 1.0 }, 0.9, false, 0.0);
+        let mut p = vec![t(&[0.0])];
+        o.step(0, &mut p, &[t(&[1.0])]); // v=1, p=-1
+        o.step(1, &mut p, &[t(&[1.0])]); // v=1.9, p=-2.9
+        assert!((p[0].data[0] + 2.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nesterov_differs_from_plain() {
+        let g = t(&[1.0]);
+        let mut plain = Sgd::new(Schedule::Const { base: 1.0 }, 0.9, false, 0.0);
+        let mut nest = Sgd::new(Schedule::Const { base: 1.0 }, 0.9, true, 0.0);
+        let mut pp = vec![t(&[0.0])];
+        let mut pn = vec![t(&[0.0])];
+        plain.step(0, &mut pp, std::slice::from_ref(&g));
+        nest.step(0, &mut pn, std::slice::from_ref(&g));
+        assert!(pn[0].data[0] < pp[0].data[0]); // nesterov looks ahead
+    }
+
+    #[test]
+    fn weight_decay_pulls_to_zero() {
+        let mut o = Sgd::new(Schedule::Const { base: 0.1 }, 0.0, false, 0.5);
+        let mut p = vec![t(&[1.0])];
+        o.step(0, &mut p, &[t(&[0.0])]);
+        assert!((p[0].data[0] - 0.95).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lr_scale_applies() {
+        let mut o = Sgd::new(Schedule::Const { base: 1.0 }, 0.0, false, 0.0).with_lr_scale(0.1);
+        let mut p = vec![t(&[0.0])];
+        o.step(0, &mut p, &[t(&[1.0])]);
+        assert!((p[0].data[0] + 0.1).abs() < 1e-7);
+    }
+
+    #[test]
+    fn paper_presets_exist_for_all_models() {
+        for m in ["lenet5", "alexnet", "vgg16", "resnet20", "resnet110"] {
+            let (s, mom, _, wd) = paper_schedule(m, 1000);
+            assert!(s.lr(0) > 0.0);
+            assert!(mom > 0.0);
+            assert!(wd >= 0.0);
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! PartitionEngine: one partition's programs + weights + optimizer.
+//!
+//! The single-process `XlaExecutor` holds a vector of these; each worker
+//! thread of the threaded runtime owns exactly one (its "accelerator"
+//! state), mirroring the paper's one-partition-per-GPU deployment.
+
+use anyhow::{anyhow, Result};
+
+use crate::meta::PartitionMeta;
+use crate::model::PartitionParams;
+use crate::optim::Sgd;
+use crate::runtime::{InputBuilder, StagePrograms};
+use crate::tensor::{IntTensor, Tensor};
+
+use super::executor::LastResult;
+
+pub struct PartitionEngine {
+    pub meta: PartitionMeta,
+    pub programs: StagePrograms,
+    pub params: PartitionParams,
+    pub optim: Sgd,
+    pub update_count: usize,
+}
+
+impl PartitionEngine {
+    pub fn new(
+        meta: PartitionMeta,
+        programs: StagePrograms,
+        params: PartitionParams,
+        optim: Sgd,
+    ) -> Self {
+        PartitionEngine { meta, programs, params, optim, update_count: 0 }
+    }
+
+    fn take_state(&mut self, outputs: &mut Vec<Tensor>, n_keep: usize) {
+        let ns = self.params.state.len();
+        debug_assert_eq!(outputs.len(), n_keep + ns);
+        for (i, t) in outputs.drain(n_keep..).enumerate() {
+            self.params.state[i] = t;
+        }
+    }
+
+    fn apply_update(&mut self, grads: &[Tensor]) {
+        self.optim.step(self.update_count, &mut self.params.params, grads);
+        self.update_count += 1;
+        self.params.version += 1;
+    }
+
+    pub fn forward(&mut self, seed: i32, carry: &[Tensor]) -> Result<Vec<Tensor>> {
+        let prog = self
+            .programs
+            .fwd
+            .as_ref()
+            .ok_or_else(|| anyhow!("partition {} has no fwd program", self.meta.index))?;
+        let inputs = InputBuilder::new()
+            .tensors(&self.params.params)?
+            .tensors(&self.params.state)?
+            .seed(seed)
+            .tensors(carry)?
+            .build();
+        let mut out = prog.run(&inputs)?;
+        let n_carry = self.meta.carry_out.len();
+        self.take_state(&mut out, n_carry);
+        Ok(out)
+    }
+
+    pub fn last(&mut self, seed: i32, carry: &[Tensor], labels: &IntTensor) -> Result<LastResult> {
+        let prog = self
+            .programs
+            .last
+            .as_ref()
+            .ok_or_else(|| anyhow!("partition {} has no last program", self.meta.index))?;
+        let inputs = InputBuilder::new()
+            .tensors(&self.params.params)?
+            .tensors(&self.params.state)?
+            .seed(seed)
+            .tensors(carry)?
+            .ints(labels)?
+            .build();
+        let mut out = prog.run(&inputs)?;
+        let n_carry = self.meta.carry_in.len();
+        let n_params = self.params.params.len();
+        let loss = out[0].scalar();
+        let correct = out[1].scalar();
+        let gcarry: Vec<Tensor> = out[2..2 + n_carry].to_vec();
+        let grads: Vec<Tensor> = out[2 + n_carry..2 + n_carry + n_params].to_vec();
+        let keep = 2 + n_carry + n_params;
+        self.take_state(&mut out, keep);
+        self.apply_update(&grads);
+        Ok(LastResult { loss, correct, gcarry_in: gcarry })
+    }
+
+    pub fn backward(
+        &mut self,
+        seed: i32,
+        carry_in: &[Tensor],
+        gcarry_out: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        let prog = self
+            .programs
+            .bwd
+            .as_ref()
+            .ok_or_else(|| anyhow!("partition {} has no bwd program", self.meta.index))?;
+        let inputs = InputBuilder::new()
+            .tensors(&self.params.params)?
+            .tensors(&self.params.state)?
+            .seed(seed)
+            .tensors(carry_in)?
+            .tensors(gcarry_out)?
+            .build();
+        let mut out = prog.run(&inputs)?;
+        let n_carry_in = self.meta.carry_in.len();
+        let grads: Vec<Tensor> = out.drain(n_carry_in..).collect();
+        self.apply_update(&grads);
+        Ok(out)
+    }
+
+    pub fn eval_forward(&self, carry: &[Tensor]) -> Result<Vec<Tensor>> {
+        let prog = if self.meta.is_last() {
+            self.programs.last_eval.as_ref()
+        } else {
+            self.programs.fwd_eval.as_ref()
+        }
+        .ok_or_else(|| anyhow!("partition {} has no eval program", self.meta.index))?;
+        let inputs = InputBuilder::new()
+            .tensors(&self.params.params)?
+            .tensors(&self.params.state)?
+            .tensors(carry)?
+            .build();
+        prog.run(&inputs)
+    }
+}

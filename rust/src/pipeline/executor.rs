@@ -1,0 +1,134 @@
+//! Stage executors: the compute behind each pipeline stage.
+//!
+//! The scheduler is generic over `StageExecutor` so that staleness
+//! invariants are property-tested against a deterministic mock, while
+//! production uses `XlaExecutor` (AOT-compiled PJRT programs + the
+//! coordinator-owned weights and SGD state, one `PartitionEngine` per
+//! partition).
+//!
+//! Update-visibility contract (matches the paper's schedule, Figure 4):
+//! within one cycle the scheduler calls every `forward` *before* any
+//! `last`/`backward` of the same cycle, and each partition's weights are
+//! mutated only by its own `last`/`backward`; updates therefore become
+//! visible to forwards of the *next* cycle, exactly like the per-
+//! accelerator weight copies of the paper.
+
+use anyhow::Result;
+
+use crate::meta::ConfigMeta;
+use crate::model::ModelParams;
+use crate::optim::Sgd;
+use crate::runtime::Runtime;
+use crate::tensor::{IntTensor, Tensor};
+
+use super::engine::PartitionEngine;
+
+/// Result of the fused last stage (FS_{K+1} + BKS_1).
+#[derive(Debug, Clone)]
+pub struct LastResult {
+    pub loss: f32,
+    pub correct: f32,
+    pub gcarry_in: Vec<Tensor>,
+}
+
+pub trait StageExecutor {
+    /// Number of partitions P = K+1.
+    fn num_partitions(&self) -> usize;
+
+    /// Forward of partition `p` (0-based, p < P-1). Applies BN-state
+    /// updates internally; must not touch weights.
+    fn forward(&mut self, p: usize, seed: i32, carry: &[Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Fused last stage: forward + loss + backward + weight update for
+    /// partition P-1.
+    fn last(&mut self, seed: i32, carry: &[Tensor], labels: &IntTensor) -> Result<LastResult>;
+
+    /// Backward of partition `p` (< P-1) on the *saved* carry_in of the
+    /// same mini-batch; applies the weight update; returns gcarry_in.
+    fn backward(
+        &mut self,
+        p: usize,
+        seed: i32,
+        carry_in: &[Tensor],
+        gcarry_out: &[Tensor],
+    ) -> Result<Vec<Tensor>>;
+
+    /// Eval-mode forward of partition `p`; for p = P-1 returns (logits,).
+    fn eval_forward(&mut self, p: usize, carry: &[Tensor]) -> Result<Vec<Tensor>>;
+}
+
+/// Production executor: PJRT programs + host-owned weights.
+pub struct XlaExecutor {
+    pub meta: ConfigMeta,
+    pub engines: Vec<PartitionEngine>,
+}
+
+impl XlaExecutor {
+    pub fn new(
+        runtime: &Runtime,
+        meta: ConfigMeta,
+        params: ModelParams,
+        optims: Vec<Sgd>,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            optims.len() == meta.partitions.len(),
+            "need one optimizer per partition"
+        );
+        anyhow::ensure!(
+            params.partitions.len() == meta.partitions.len(),
+            "params/partitions arity mismatch"
+        );
+        let programs = runtime.load_config(&meta)?;
+        let engines = meta
+            .partitions
+            .iter()
+            .cloned()
+            .zip(programs)
+            .zip(params.partitions)
+            .zip(optims)
+            .map(|(((pm, prog), pp), opt)| PartitionEngine::new(pm, prog, pp, opt))
+            .collect();
+        Ok(XlaExecutor { meta, engines })
+    }
+
+    /// Snapshot the current weights (e.g. after training, for eval or
+    /// checkpointing).
+    pub fn params_snapshot(&self) -> ModelParams {
+        ModelParams {
+            partitions: self.engines.iter().map(|e| e.params.clone()).collect(),
+        }
+    }
+
+    pub fn update_counts(&self) -> Vec<usize> {
+        self.engines.iter().map(|e| e.update_count).collect()
+    }
+}
+
+impl StageExecutor for XlaExecutor {
+    fn num_partitions(&self) -> usize {
+        self.engines.len()
+    }
+
+    fn forward(&mut self, p: usize, seed: i32, carry: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.engines[p].forward(seed, carry)
+    }
+
+    fn last(&mut self, seed: i32, carry: &[Tensor], labels: &IntTensor) -> Result<LastResult> {
+        let p = self.engines.len() - 1;
+        self.engines[p].last(seed, carry, labels)
+    }
+
+    fn backward(
+        &mut self,
+        p: usize,
+        seed: i32,
+        carry_in: &[Tensor],
+        gcarry_out: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        self.engines[p].backward(seed, carry_in, gcarry_out)
+    }
+
+    fn eval_forward(&mut self, p: usize, carry: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.engines[p].eval_forward(carry)
+    }
+}

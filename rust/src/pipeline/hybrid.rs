@@ -1,0 +1,94 @@
+//! Hybrid pipelined/non-pipelined schedule controller (paper §4).
+//!
+//! Start pipelined (full accelerator utilization, stale weights); after
+//! `pipelined_iters` mini-batches drain the pipe and continue with
+//! non-pipelined training on the *same* weights/executables to recover
+//! the accuracy lost to staleness.
+
+/// Which schedule a given iteration should use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Pipelined,
+    /// Drain must happen exactly once, between the phases.
+    DrainThenSequential,
+    Sequential,
+}
+
+#[derive(Debug, Clone)]
+pub struct HybridSchedule {
+    pub pipelined_iters: u64,
+    pub total_iters: u64,
+}
+
+impl HybridSchedule {
+    pub fn new(pipelined_iters: u64, total_iters: u64) -> Self {
+        HybridSchedule { pipelined_iters: pipelined_iters.min(total_iters), total_iters }
+    }
+
+    /// Fully pipelined / fully sequential degenerate schedules.
+    pub fn all_pipelined(total: u64) -> Self {
+        Self::new(total, total)
+    }
+
+    pub fn all_sequential(total: u64) -> Self {
+        Self::new(0, total)
+    }
+
+    pub fn phase(&self, iter: u64) -> Phase {
+        if iter < self.pipelined_iters {
+            Phase::Pipelined
+        } else if iter == self.pipelined_iters && self.pipelined_iters > 0 {
+            Phase::DrainThenSequential
+        } else {
+            Phase::Sequential
+        }
+    }
+
+    /// Paper §4 ideal speedup vs non-pipelined with `accels` accelerators
+    /// (the pipelined fraction runs `accels`x faster at best).
+    pub fn ideal_speedup(&self, accels: usize) -> f64 {
+        let n = self.total_iters as f64;
+        let np = self.pipelined_iters as f64;
+        n / (np / accels as f64 + (n - np))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_in_order() {
+        let h = HybridSchedule::new(3, 6);
+        assert_eq!(h.phase(0), Phase::Pipelined);
+        assert_eq!(h.phase(2), Phase::Pipelined);
+        assert_eq!(h.phase(3), Phase::DrainThenSequential);
+        assert_eq!(h.phase(4), Phase::Sequential);
+        assert_eq!(h.phase(5), Phase::Sequential);
+    }
+
+    #[test]
+    fn degenerate_schedules() {
+        let p = HybridSchedule::all_pipelined(5);
+        assert!((0..5).all(|i| p.phase(i) == Phase::Pipelined));
+        let s = HybridSchedule::all_sequential(5);
+        assert!((0..5).all(|i| s.phase(i) == Phase::Sequential));
+    }
+
+    #[test]
+    fn clamp_pipelined_to_total() {
+        let h = HybridSchedule::new(100, 10);
+        assert_eq!(h.pipelined_iters, 10);
+    }
+
+    #[test]
+    fn ideal_speedup_matches_paper_bound() {
+        // Paper §6.5: 2 accelerators, half the epochs pipelined -> 1.33x.
+        let h = HybridSchedule::new(100, 200);
+        let s = h.ideal_speedup(2);
+        assert!((s - 4.0 / 3.0).abs() < 1e-9, "{s}");
+        // all-pipelined -> accels x
+        let a = HybridSchedule::all_pipelined(100);
+        assert!((a.ideal_speedup(3) - 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,126 @@
+//! Deterministic mock executor for scheduler/staleness property tests.
+//!
+//! Batch identity is threaded through the data plane itself: every carry
+//! and gradient tensor holds the batch id as its single element, so the
+//! mock can verify that (a) forwards see the batch the registers say they
+//! should, (b) backward receives the *same* saved activations as its
+//! forward, and (c) weight versions evolve exactly per the paper's
+//! staleness formula (asserted by the tests in scheduler.rs).
+
+use anyhow::{ensure, Result};
+
+use crate::tensor::{IntTensor, Tensor};
+
+use super::executor::{LastResult, StageExecutor};
+
+pub struct MockExecutor {
+    p: usize,
+    /// Per-partition applied-update count (the "weight version").
+    pub versions: Vec<u64>,
+    /// versions observed by forward, per partition, in batch order.
+    pub fwd_versions: Vec<Vec<u64>>,
+    /// versions observed by the fused last stage, in batch order.
+    pub last_versions: Vec<u64>,
+    /// retirement order of backward per partition.
+    pub bwd_batches: Vec<Vec<u64>>,
+    /// Flat call trace for equality tests.
+    pub trace: Vec<String>,
+}
+
+fn tag(t: &[Tensor]) -> u64 {
+    t[0].data[0] as u64
+}
+
+fn tagged(b: u64) -> Vec<Tensor> {
+    vec![Tensor::from_vec(&[1], vec![b as f32]).unwrap()]
+}
+
+impl MockExecutor {
+    pub fn new(p: usize) -> Self {
+        MockExecutor {
+            p,
+            versions: vec![0; p],
+            fwd_versions: vec![Vec::new(); p.saturating_sub(1)],
+            last_versions: Vec::new(),
+            bwd_batches: vec![Vec::new(); p.saturating_sub(1)],
+            trace: Vec::new(),
+        }
+    }
+}
+
+impl StageExecutor for MockExecutor {
+    fn num_partitions(&self) -> usize {
+        self.p
+    }
+
+    fn forward(&mut self, p: usize, _seed: i32, carry: &[Tensor]) -> Result<Vec<Tensor>> {
+        let b = tag(carry);
+        ensure!(
+            self.fwd_versions[p].len() as u64 == b,
+            "forward at partition {p} out of batch order: got {b}, expected {}",
+            self.fwd_versions[p].len()
+        );
+        self.fwd_versions[p].push(self.versions[p]);
+        self.trace.push(format!("fwd p{p} b{b} v{}", self.versions[p]));
+        Ok(tagged(b))
+    }
+
+    fn last(&mut self, _seed: i32, carry: &[Tensor], _labels: &IntTensor) -> Result<LastResult> {
+        let b = tag(carry);
+        ensure!(
+            self.last_versions.len() as u64 == b,
+            "last stage out of batch order: got {b}, expected {}",
+            self.last_versions.len()
+        );
+        self.last_versions.push(self.versions[self.p - 1]);
+        self.trace.push(format!("last b{b} v{}", self.versions[self.p - 1]));
+        self.versions[self.p - 1] += 1;
+        Ok(LastResult { loss: b as f32, correct: 1.0, gcarry_in: tagged(b) })
+    }
+
+    fn backward(
+        &mut self,
+        p: usize,
+        _seed: i32,
+        carry_in: &[Tensor],
+        gcarry_out: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        let b_act = tag(carry_in);
+        let b_grad = tag(gcarry_out);
+        ensure!(
+            b_act == b_grad,
+            "backward at partition {p}: activations of batch {b_act} paired with gradient of batch {b_grad}"
+        );
+        self.bwd_batches[p].push(b_grad);
+        self.trace.push(format!("bwd p{p} b{b_grad}"));
+        self.versions[p] += 1;
+        Ok(tagged(b_grad))
+    }
+
+    fn eval_forward(&mut self, _p: usize, carry: &[Tensor]) -> Result<Vec<Tensor>> {
+        Ok(carry.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_tags_roundtrip() {
+        let mut m = MockExecutor::new(3);
+        let out = m.forward(0, 0, &tagged(0)).unwrap();
+        assert_eq!(tag(&out), 0);
+        let r = m
+            .last(0, &tagged(0), &IntTensor::from_vec(&[1], vec![0]).unwrap())
+            .unwrap();
+        assert_eq!(r.loss, 0.0);
+        assert_eq!(m.versions, vec![0, 0, 1]);
+    }
+
+    #[test]
+    fn mock_detects_mismatched_grad_pairing() {
+        let mut m = MockExecutor::new(2);
+        assert!(m.backward(0, 0, &tagged(1), &tagged(2)).is_err());
+    }
+}

@@ -1,0 +1,25 @@
+//! The paper's coordination contribution: pipelined backpropagation with
+//! unconstrained stale weights.
+//!
+//! * `scheduler` — cycle-accurate register pipeline (Figure 4) +
+//!   non-pipelined sequential mode over the same executables;
+//! * `executor`/`engine` — XLA-backed stage compute with coordinator-
+//!   owned weights (and the mock used by property tests);
+//! * `staleness` — paper §3 accounting (degree, % stale weights);
+//! * `hybrid` — paper §4 schedule switching;
+//! * `threaded` — thread-per-accelerator runtime with channel registers;
+//! * `perfsim` — discrete-event timing model for Table 5 speedups.
+
+pub mod engine;
+pub mod executor;
+pub mod hybrid;
+pub mod mock;
+pub mod perfsim;
+pub mod scheduler;
+pub mod staleness;
+pub mod threaded;
+
+pub use executor::{LastResult, StageExecutor, XlaExecutor};
+pub use hybrid::{HybridSchedule, Phase};
+pub use scheduler::{Feed, Pipeline, TrainEvent};
+pub use staleness::StalenessReport;

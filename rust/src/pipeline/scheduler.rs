@@ -1,0 +1,469 @@
+//! Cycle-accurate pipelined-backpropagation scheduler (paper §3, Fig. 4).
+//!
+//! The pipeline has P = K+1 partitions connected by K register pairs.
+//! Per cycle every stage consumes the register value written in the
+//! *previous* cycle (double-buffered registers), computes, and writes its
+//! output register; weight updates (applied inside `last`/`backward`)
+//! become visible to forwards of the next cycle. The fused last stage
+//! (FS_{K+1}+BKS_1 on one accelerator) updates in-cycle, giving the last
+//! partition staleness 0 — exactly the paper's co-location trick.
+//!
+//! The same scheduler also provides `sequential_step` (non-pipelined
+//! K=0 semantics over the same partitions/executables), which hybrid
+//! training switches to after draining the pipe (paper §4).
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use crate::tensor::{IntTensor, Tensor};
+
+use super::executor::StageExecutor;
+
+/// One mini-batch travelling forward through the pipe.
+#[derive(Debug, Clone)]
+struct InFlight {
+    batch_id: u64,
+    seed: i32,
+    carry: Vec<Tensor>,
+}
+
+/// A gradient message travelling backward.
+#[derive(Debug, Clone)]
+struct GradMsg {
+    batch_id: u64,
+    gcarry: Vec<Tensor>,
+}
+
+/// Saved intermediate activations of one partition (paper §3): the
+/// carry_in (plus seed) of every in-flight mini-batch, FIFO-ordered.
+#[derive(Debug, Default)]
+struct ActivationFifo {
+    entries: VecDeque<InFlight>,
+    pub max_depth: usize,
+}
+
+impl ActivationFifo {
+    fn push(&mut self, e: InFlight) {
+        self.entries.push_back(e);
+        self.max_depth = self.max_depth.max(self.entries.len());
+    }
+
+    fn pop_for(&mut self, batch_id: u64) -> Result<InFlight> {
+        match self.entries.pop_front() {
+            Some(e) if e.batch_id == batch_id => Ok(e),
+            Some(e) => bail!(
+                "activation FIFO order violated: popped batch {} for gradient of batch {}",
+                e.batch_id,
+                batch_id
+            ),
+            None => bail!("activation FIFO empty for gradient of batch {batch_id}"),
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+/// Per-completed-batch training record.
+#[derive(Debug, Clone)]
+pub struct TrainEvent {
+    pub batch_id: u64,
+    pub loss: f32,
+    pub correct: f32,
+    pub batch_size: usize,
+    /// Cycle at which the fused last stage processed this batch.
+    pub cycle: u64,
+}
+
+/// Input for one fed mini-batch.
+#[derive(Debug, Clone)]
+pub struct Feed {
+    pub batch_id: u64,
+    pub seed: i32,
+    pub x: Tensor,
+    pub labels: IntTensor,
+}
+
+pub struct Pipeline<E: StageExecutor> {
+    pub exec: E,
+    p: usize,
+    fwd_reg: Vec<Option<InFlight>>,
+    bwd_reg: Vec<Option<GradMsg>>,
+    fifos: Vec<ActivationFifo>,
+    labels_q: VecDeque<(u64, IntTensor)>,
+    cycle: u64,
+    batch_size: usize,
+    /// Gradients-for-input of completed batches are discarded; count them
+    /// for the drain logic.
+    completed_backward: u64,
+    fed: u64,
+}
+
+impl<E: StageExecutor> Pipeline<E> {
+    pub fn new(exec: E, batch_size: usize) -> Self {
+        let p = exec.num_partitions();
+        assert!(p >= 1);
+        Pipeline {
+            exec,
+            p,
+            fwd_reg: (0..p.saturating_sub(1)).map(|_| None).collect(),
+            bwd_reg: (0..p.saturating_sub(1)).map(|_| None).collect(),
+            fifos: (0..p.saturating_sub(1)).map(|_| ActivationFifo::default()).collect(),
+            labels_q: VecDeque::new(),
+            cycle: 0,
+            batch_size,
+            completed_backward: 0,
+            fed: 0,
+        }
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.p
+    }
+
+    pub fn cycles_run(&self) -> u64 {
+        self.cycle
+    }
+
+    /// Number of register pairs K.
+    pub fn k(&self) -> usize {
+        self.p - 1
+    }
+
+    /// True when no mini-batch is in flight.
+    pub fn is_drained(&self) -> bool {
+        self.fwd_reg.iter().all(Option::is_none)
+            && self.bwd_reg.iter().all(Option::is_none)
+            && self.fifos.iter().all(|f| f.len() == 0)
+            && self.labels_q.is_empty()
+    }
+
+    /// Observed maximum FIFO depth per partition (staleness invariant:
+    /// must equal 2(P-1-p)+1 at steady state).
+    pub fn fifo_max_depths(&self) -> Vec<usize> {
+        self.fifos.iter().map(|f| f.max_depth).collect()
+    }
+
+    /// Execute one pipeline cycle, optionally feeding a new mini-batch
+    /// into FS_1. Returns a TrainEvent if the fused last stage ran.
+    pub fn cycle(&mut self, feed: Option<Feed>) -> Result<Option<TrainEvent>> {
+        // ---- register reads: values written in previous cycles --------
+        let fwd_in: Vec<Option<InFlight>> =
+            (0..self.p - 1).map(|e| self.fwd_reg[e].take()).collect::<Vec<_>>();
+        let bwd_in: Vec<Option<GradMsg>> =
+            (0..self.p - 1).map(|e| self.bwd_reg[e].take()).collect::<Vec<_>>();
+
+        let mut fwd_out: Vec<Option<InFlight>> = (0..self.p - 1).map(|_| None).collect();
+        let mut bwd_out: Vec<Option<GradMsg>> = (0..self.p - 1).map(|_| None).collect();
+
+        let feed_inflight = feed.map(|f| {
+            self.labels_q.push_back((f.batch_id, f.labels));
+            self.fed += 1;
+            InFlight { batch_id: f.batch_id, seed: f.seed, carry: vec![f.x] }
+        });
+
+        // ---- forward stages 0..P-2 (cycle-start weights) --------------
+        let mut event = None;
+        for p in 0..self.p - 1 {
+            let input = if p == 0 { feed_inflight.clone() } else { fwd_in[p - 1].clone() };
+            if let Some(inf) = input {
+                let carry_out = self.exec.forward(p, inf.seed, &inf.carry)?;
+                self.fifos[p].push(inf.clone());
+                fwd_out[p] =
+                    Some(InFlight { batch_id: inf.batch_id, seed: inf.seed, carry: carry_out });
+            }
+        }
+
+        // ---- fused last stage ------------------------------------------
+        let last_input =
+            if self.p == 1 { feed_inflight } else { fwd_in.last().cloned().flatten() };
+        if let Some(inf) = last_input {
+            let labels = match self.labels_q.pop_front() {
+                Some((id, l)) if id == inf.batch_id => l,
+                Some((id, _)) => bail!(
+                    "label queue out of order: batch {} arrived, labels for {}",
+                    inf.batch_id,
+                    id
+                ),
+                None => bail!("label queue empty for batch {}", inf.batch_id),
+            };
+            let res = self.exec.last(inf.seed, &inf.carry, &labels)?;
+            if self.p > 1 {
+                bwd_out[self.p - 2] =
+                    Some(GradMsg { batch_id: inf.batch_id, gcarry: res.gcarry_in });
+            } else {
+                self.completed_backward += 1;
+            }
+            event = Some(TrainEvent {
+                batch_id: inf.batch_id,
+                loss: res.loss,
+                correct: res.correct,
+                batch_size: self.batch_size,
+                cycle: self.cycle,
+            });
+        }
+
+        // ---- backward stages P-2..0 ------------------------------------
+        for p in (0..self.p - 1).rev() {
+            if let Some(g) = bwd_in[p].clone() {
+                let saved = self.fifos[p].pop_for(g.batch_id)?;
+                let gcarry_in = self.exec.backward(p, saved.seed, &saved.carry, &g.gcarry)?;
+                if p > 0 {
+                    bwd_out[p - 1] = Some(GradMsg { batch_id: g.batch_id, gcarry: gcarry_in });
+                } else {
+                    self.completed_backward += 1;
+                }
+            }
+        }
+
+        // ---- register writes become visible next cycle -----------------
+        self.fwd_reg = fwd_out;
+        self.bwd_reg = bwd_out;
+        self.cycle += 1;
+        Ok(event)
+    }
+
+    /// Run cycles without feeding until every in-flight batch has fully
+    /// retired (hybrid-switch and end-of-training drain). Returns events
+    /// from last-stage completions during the drain.
+    pub fn drain(&mut self) -> Result<Vec<TrainEvent>> {
+        let mut events = Vec::new();
+        let mut guard = 0;
+        while !self.is_drained() {
+            if let Some(e) = self.cycle(None)? {
+                events.push(e);
+            }
+            guard += 1;
+            if guard > 4 * self.p as u64 + 8 {
+                bail!("pipeline failed to drain after {guard} cycles");
+            }
+        }
+        Ok(events)
+    }
+
+    /// Non-pipelined training step (paper's baseline): forward through
+    /// all partitions, fused last, backward chain — all on one batch with
+    /// immediate updates. Uses the same executables; only the schedule
+    /// differs.
+    pub fn sequential_step(&mut self, feed: Feed) -> Result<TrainEvent> {
+        if !self.is_drained() {
+            bail!("sequential_step on a non-drained pipeline");
+        }
+        let mut carry = vec![feed.x];
+        let mut saved: Vec<Vec<Tensor>> = Vec::with_capacity(self.p - 1);
+        for p in 0..self.p - 1 {
+            saved.push(carry.clone());
+            carry = self.exec.forward(p, feed.seed, &carry)?;
+        }
+        let res = self.exec.last(feed.seed, &carry, &feed.labels)?;
+        let mut gcarry = res.gcarry_in;
+        for p in (0..self.p - 1).rev() {
+            gcarry = self.exec.backward(p, feed.seed, &saved[p], &gcarry)?;
+        }
+        self.cycle += 1;
+        self.completed_backward += 1;
+        Ok(TrainEvent {
+            batch_id: feed.batch_id,
+            loss: res.loss,
+            correct: res.correct,
+            batch_size: self.batch_size,
+            cycle: self.cycle - 1,
+        })
+    }
+
+    /// Eval-mode forward through the whole chain; returns logits.
+    pub fn eval_forward(&mut self, x: Tensor) -> Result<Tensor> {
+        let mut carry = vec![x];
+        for p in 0..self.p {
+            carry = self.exec.eval_forward(p, &carry)?;
+        }
+        Ok(carry.remove(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::mock::MockExecutor;
+    use super::*;
+    use crate::util::prop;
+
+    fn feed(b: u64) -> Feed {
+        Feed {
+            batch_id: b,
+            seed: b as i32,
+            x: Tensor::from_vec(&[1], vec![b as f32]).unwrap(),
+            labels: IntTensor::from_vec(&[1], vec![0]).unwrap(),
+        }
+    }
+
+    #[test]
+    fn single_partition_is_sequential() {
+        let mut pipe = Pipeline::new(MockExecutor::new(1), 1);
+        for b in 0..5 {
+            let e = pipe.cycle(Some(feed(b))).unwrap().unwrap();
+            assert_eq!(e.batch_id, b);
+        }
+        assert!(pipe.is_drained());
+        // every forward used fully-fresh weights
+        for (b, v) in pipe.exec.last_versions.iter().enumerate() {
+            assert_eq!(*v, b as u64, "batch {b}");
+        }
+    }
+
+    #[test]
+    fn staleness_matches_paper_formula() {
+        // P=3 (K=2): partition p sees weights missing the last 2(P-1-p)
+        // updates; version used by batch b must be max(0, b - 2(P-1-p)).
+        let p = 3;
+        let mut pipe = Pipeline::new(MockExecutor::new(p), 1);
+        let batches = 12u64;
+        let mut fed = 0;
+        let mut done = 0;
+        while done < batches {
+            let f = if fed < batches {
+                fed += 1;
+                Some(feed(fed - 1))
+            } else {
+                None
+            };
+            if pipe.cycle(f).unwrap().is_some() {
+                done += 1;
+            }
+        }
+        pipe.drain().unwrap();
+        for part in 0..p - 1 {
+            let degree = 2 * (p - 1 - part) as u64;
+            for (b, &v) in pipe.exec.fwd_versions[part].iter().enumerate() {
+                let want = (b as u64).saturating_sub(degree);
+                assert_eq!(v, want, "partition {part} batch {b}");
+            }
+        }
+        // last partition always fresh
+        for (b, &v) in pipe.exec.last_versions.iter().enumerate() {
+            assert_eq!(v, b as u64);
+        }
+    }
+
+    #[test]
+    fn fifo_depth_is_2k_minus_2p_plus_1() {
+        let p = 4;
+        let mut pipe = Pipeline::new(MockExecutor::new(p), 1);
+        for b in 0..20u64 {
+            pipe.cycle(Some(feed(b))).unwrap();
+        }
+        pipe.drain().unwrap();
+        let depths = pipe.fifo_max_depths();
+        for (part, &d) in depths.iter().enumerate() {
+            assert_eq!(d, 2 * (p - 1 - part) + 1, "partition {part}");
+        }
+    }
+
+    #[test]
+    fn bwd_uses_same_activations_as_fwd() {
+        let p = 3;
+        let mut pipe = Pipeline::new(MockExecutor::new(p), 1);
+        for b in 0..10u64 {
+            pipe.cycle(Some(feed(b))).unwrap();
+        }
+        pipe.drain().unwrap();
+        // MockExecutor asserts batch-tagged activations internally; also
+        // check every batch retired exactly once per partition.
+        for part in 0..p - 1 {
+            assert_eq!(pipe.exec.bwd_batches[part], (0..10u64).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn drain_completes_all_in_flight() {
+        let p = 4;
+        let mut pipe = Pipeline::new(MockExecutor::new(p), 1);
+        let mut events = 0;
+        for b in 0..6u64 {
+            if pipe.cycle(Some(feed(b))).unwrap().is_some() {
+                events += 1;
+            }
+        }
+        let drained = pipe.drain().unwrap();
+        assert_eq!(events + drained.len(), 6);
+        assert!(pipe.is_drained());
+        // updates: every batch updated every partition exactly once
+        for v in &pipe.exec.versions {
+            assert_eq!(*v, 6);
+        }
+    }
+
+    #[test]
+    fn sequential_step_equals_single_batch_pipeline() {
+        // One batch fed into an otherwise empty pipe experiences zero
+        // staleness, so it must match sequential_step exactly.
+        let p = 3;
+        let mut a = Pipeline::new(MockExecutor::new(p), 1);
+        let mut b = Pipeline::new(MockExecutor::new(p), 1);
+        a.sequential_step(feed(0)).unwrap();
+        b.cycle(Some(feed(0))).unwrap();
+        b.drain().unwrap();
+        assert_eq!(a.exec.trace, b.exec.trace);
+    }
+
+    #[test]
+    fn sequential_on_dirty_pipe_errors() {
+        let mut pipe = Pipeline::new(MockExecutor::new(3), 1);
+        pipe.cycle(Some(feed(0))).unwrap();
+        assert!(pipe.sequential_step(feed(1)).is_err());
+    }
+
+    #[test]
+    fn prop_staleness_invariant_random_shapes() {
+        // Property over (P, n_batches, stall pattern): staleness formula
+        // holds for every partition and batch, with arbitrary feed gaps.
+        prop::check(
+            0xBEEF,
+            40,
+            |rng| {
+                let p = 2 + rng.below(4) as usize; // 2..=5 partitions
+                let n = 4 + rng.below(16) as u64;
+                let gaps = rng.below(3) as usize; // every gaps-th cycle skips a feed
+                (p, n as usize, gaps)
+            },
+            |&(p, n, gaps)| {
+                let mut pipe = Pipeline::new(MockExecutor::new(p), 1);
+                let mut b = 0u64;
+                let mut cycle_idx = 0usize;
+                while b < n as u64 {
+                    let f = if gaps > 0 && cycle_idx % (gaps + 1) == gaps {
+                        None // bubble: no feed this cycle
+                    } else {
+                        b += 1;
+                        Some(feed(b - 1))
+                    };
+                    pipe.cycle(f).map_err(|e| e.to_string())?;
+                    cycle_idx += 1;
+                }
+                pipe.drain().map_err(|e| e.to_string())?;
+                // With bubbles the staleness bound becomes an inequality:
+                // version used is at most b (fresh) and at least
+                // b - 2(P-1-p) (paper's full-pipe staleness).
+                for part in 0..p - 1 {
+                    let degree = 2 * (p - 1 - part) as u64;
+                    for (bi, &v) in pipe.exec.fwd_versions[part].iter().enumerate() {
+                        let lo = (bi as u64).saturating_sub(degree);
+                        if v < lo || v > bi as u64 {
+                            return Err(format!(
+                                "partition {part} batch {bi}: version {v} outside [{lo}, {bi}]"
+                            ));
+                        }
+                        // with NO bubbles the bound is exact
+                        if gaps == 0 && v != lo {
+                            return Err(format!(
+                                "partition {part} batch {bi}: version {v} != {lo}"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

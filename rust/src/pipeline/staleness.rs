@@ -1,0 +1,110 @@
+//! Staleness accounting (paper §3 definitions) over a config.
+
+use crate::meta::ConfigMeta;
+
+/// Per-partition staleness report.
+#[derive(Debug, Clone)]
+pub struct PartitionStaleness {
+    pub partition: usize,
+    pub layer_range: (usize, usize),
+    pub param_count: usize,
+    /// Paper's "degree of staleness": 2(K - i + 1) for stage i (1-based).
+    pub degree: usize,
+    /// Extra activation copies this partition must hold: degree (the
+    /// FIFO holds degree+1 entries; one is the live batch).
+    pub extra_activation_copies: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct StalenessReport {
+    pub config: String,
+    pub paper_stages: usize,
+    pub stale_weight_fraction: f64,
+    pub partitions: Vec<PartitionStaleness>,
+}
+
+impl StalenessReport {
+    pub fn from_meta(meta: &ConfigMeta) -> Self {
+        let partitions = meta
+            .partitions
+            .iter()
+            .map(|p| {
+                let degree = meta.degree_of_staleness(p.index);
+                PartitionStaleness {
+                    partition: p.index,
+                    layer_range: (p.layer_lo, p.layer_hi),
+                    param_count: p.param_count,
+                    degree,
+                    extra_activation_copies: degree,
+                }
+            })
+            .collect();
+        StalenessReport {
+            config: meta.config.clone(),
+            paper_stages: meta.paper_stages(),
+            stale_weight_fraction: meta.stale_weight_fraction(),
+            partitions,
+        }
+    }
+
+    /// Weighted mean degree of staleness (weights = param counts) — used
+    /// by the Fig-6 analysis to contrast "increasing stages" (varying
+    /// degree) against "sliding stage" (constant degree).
+    pub fn mean_degree(&self) -> f64 {
+        let total: usize = self.partitions.iter().map(|p| p.param_count).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        self.partitions
+            .iter()
+            .map(|p| p.degree as f64 * p.param_count as f64)
+            .sum::<f64>()
+            / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::meta::ConfigMeta;
+    use std::path::PathBuf;
+
+    fn root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn degrees_descend_to_zero() {
+        let m = ConfigMeta::load_named(&root(), "resnet20_fine8").unwrap();
+        let r = StalenessReport::from_meta(&m);
+        assert_eq!(r.paper_stages, 8);
+        let degrees: Vec<usize> = r.partitions.iter().map(|p| p.degree).collect();
+        assert_eq!(degrees, vec![6, 4, 2, 0]);
+    }
+
+    #[test]
+    fn sliding_stage_has_constant_degree() {
+        // Fig 6 "sliding stage": one register pair => every stale
+        // partition has degree 2 regardless of position.
+        for p in [3usize, 11, 19] {
+            let m = ConfigMeta::load_named(&root(), &format!("resnet20_slide{p}")).unwrap();
+            let r = StalenessReport::from_meta(&m);
+            assert_eq!(r.partitions[0].degree, 2);
+            assert_eq!(r.partitions[1].degree, 0);
+        }
+    }
+
+    #[test]
+    fn increasing_stages_raises_mean_degree_and_fraction() {
+        let mut prev_frac = 0.0;
+        let mut prev_deg = 0.0;
+        for ns in [8usize, 12, 16, 20] {
+            let m = ConfigMeta::load_named(&root(), &format!("resnet20_fine{ns}")).unwrap();
+            let r = StalenessReport::from_meta(&m);
+            assert!(r.stale_weight_fraction >= prev_frac);
+            assert!(r.mean_degree() >= prev_deg);
+            prev_frac = r.stale_weight_fraction;
+            prev_deg = r.mean_degree();
+        }
+    }
+}

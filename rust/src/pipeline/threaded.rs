@@ -1,0 +1,235 @@
+//! Threaded pipeline runtime: one OS thread per accelerator, mpsc
+//! channels as pipeline registers (the paper's §5 "actual" PyTorch
+//! implementation, adapted: each worker owns its partition's weights —
+//! one copy, no stashing — and runs both its forward and backward stage,
+//! the paper's 2-GPU pairing).
+//!
+//! PJRT handles are not Send, so every worker creates its own CPU client
+//! and compiles its own partition programs — faithfully "one device per
+//! worker". Tensors cross threads as host buffers. On this 1-core
+//! container the threads time-slice (no wall-clock speedup is possible —
+//! DESIGN.md §4); the runtime demonstrates the architecture and feeds the
+//! Table-5 cross-check, while speedups come from the calibrated DES
+//! (perfsim).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::data::batch_seed;
+use crate::meta::ConfigMeta;
+use crate::model::{ModelParams, PartitionParams};
+use crate::optim::Sgd;
+use crate::runtime::Runtime;
+use crate::tensor::{IntTensor, Tensor};
+
+use super::engine::PartitionEngine;
+use super::scheduler::TrainEvent;
+
+enum ToWorker {
+    /// Forward payload: carries labels through to the last worker.
+    Fwd { batch_id: u64, seed: i32, carry: Vec<Tensor>, labels: IntTensor },
+    /// Backward payload.
+    Bwd { batch_id: u64, gcarry: Vec<Tensor> },
+    /// Return the partition params and stop.
+    Stop,
+}
+
+enum FromWorker {
+    Trained(TrainEvent),
+    Retired(u64),
+    Params(usize, Box<PartitionParams>),
+    Fatal(String),
+}
+
+struct Worker {
+    handle: JoinHandle<()>,
+    inbox: Sender<ToWorker>,
+}
+
+/// Orchestrates P worker threads and feeds mini-batches.
+pub struct ThreadedPipeline {
+    workers: Vec<Worker>,
+    events: Receiver<FromWorker>,
+    p: usize,
+    batch_size: usize,
+}
+
+impl ThreadedPipeline {
+    pub fn launch(meta: &ConfigMeta, params: ModelParams, optims: Vec<Sgd>) -> Result<Self> {
+        let p = meta.partitions.len();
+        anyhow::ensure!(optims.len() == p && params.partitions.len() == p);
+        let (ev_tx, ev_rx) = channel::<FromWorker>();
+
+        // Build inboxes first so each worker can hold its neighbours'.
+        let channels: Vec<(Sender<ToWorker>, Receiver<ToWorker>)> =
+            (0..p).map(|_| channel()).collect();
+        let senders: Vec<Sender<ToWorker>> = channels.iter().map(|(s, _)| s.clone()).collect();
+        let mut receivers: Vec<Option<Receiver<ToWorker>>> =
+            channels.into_iter().map(|(_, r)| Some(r)).collect();
+
+        let mut workers = Vec::with_capacity(p);
+        for (idx, pp) in params.partitions.into_iter().enumerate() {
+            let rx = receivers[idx].take().unwrap();
+            let next = if idx + 1 < p { Some(senders[idx + 1].clone()) } else { None };
+            let prev = if idx > 0 { Some(senders[idx - 1].clone()) } else { None };
+            let meta = meta.clone();
+            let optim = optims[idx].clone();
+            let events = ev_tx.clone();
+            let batch = meta.batch;
+            let handle = std::thread::Builder::new()
+                .name(format!("accel-{idx}"))
+                .spawn(move || {
+                    if let Err(e) =
+                        worker_main(idx, meta, pp, optim, rx, next, prev, events.clone(), batch)
+                    {
+                        let _ = events.send(FromWorker::Fatal(format!("worker {idx}: {e:#}")));
+                    }
+                })
+                .context("spawning worker")?;
+            workers.push(Worker { handle, inbox: senders[idx].clone() });
+        }
+        Ok(ThreadedPipeline { workers, events: ev_rx, p, batch_size: meta.batch })
+    }
+
+    /// Train for `feeds` mini-batches; returns (events, wall_seconds).
+    /// In-flight batches are capped at 2P+2 (the pipeline's natural
+    /// occupancy) to bound activation memory, as the register-file does
+    /// in the synchronous scheduler.
+    pub fn train<F>(&mut self, feeds: u64, global_seed: u64, mut next_batch: F) -> Result<(Vec<TrainEvent>, f64)>
+    where
+        F: FnMut(u64) -> (Tensor, IntTensor),
+    {
+        let start = std::time::Instant::now();
+        let cap = (2 * self.p + 2) as u64;
+        let mut fed = 0u64;
+        let mut retired = 0u64;
+        let mut events = Vec::new();
+        while retired < feeds {
+            while fed < feeds && fed - retired < cap {
+                let (x, labels) = next_batch(fed);
+                self.workers[0]
+                    .inbox
+                    .send(ToWorker::Fwd {
+                        batch_id: fed,
+                        seed: batch_seed(global_seed, fed),
+                        carry: vec![x],
+                        labels,
+                    })
+                    .map_err(|_| anyhow!("worker 0 hung up"))?;
+                fed += 1;
+            }
+            match self.events.recv().map_err(|_| anyhow!("all workers hung up"))? {
+                FromWorker::Trained(e) => events.push(e),
+                FromWorker::Retired(_) => retired += 1,
+                FromWorker::Fatal(msg) => return Err(anyhow!(msg)),
+                FromWorker::Params(..) => unreachable!("params before stop"),
+            }
+        }
+        Ok((events, start.elapsed().as_secs_f64()))
+    }
+
+    /// Stop workers and collect the trained weights.
+    pub fn shutdown(self) -> Result<ModelParams> {
+        for w in &self.workers {
+            let _ = w.inbox.send(ToWorker::Stop);
+        }
+        let mut parts: Vec<Option<PartitionParams>> = (0..self.p).map(|_| None).collect();
+        let mut got = 0;
+        while got < self.p {
+            match self.events.recv().map_err(|_| anyhow!("workers died before params"))? {
+                FromWorker::Params(idx, pp) => {
+                    parts[idx] = Some(*pp);
+                    got += 1;
+                }
+                FromWorker::Fatal(msg) => return Err(anyhow!(msg)),
+                _ => {}
+            }
+        }
+        for w in self.workers {
+            let _ = w.handle.join();
+        }
+        Ok(ModelParams { partitions: parts.into_iter().map(Option::unwrap).collect() })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch_size
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_main(
+    idx: usize,
+    meta: ConfigMeta,
+    params: PartitionParams,
+    optim: Sgd,
+    rx: Receiver<ToWorker>,
+    next: Option<Sender<ToWorker>>,
+    prev: Option<Sender<ToWorker>>,
+    events: Sender<FromWorker>,
+    batch_size: usize,
+) -> Result<()> {
+    // Each worker is its own accelerator: own PJRT client + programs.
+    let runtime = Runtime::cpu()?;
+    let pm = meta.partitions[idx].clone();
+    let programs = runtime.load_partition(&meta, &pm)?;
+    let mut engine = PartitionEngine::new(pm, programs, params, optim);
+    let is_last = engine.meta.is_last();
+
+    // Saved activations + label store (FIFO, like the register scheduler).
+    let mut fifo: std::collections::VecDeque<(u64, i32, Vec<Tensor>)> = Default::default();
+
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ToWorker::Fwd { batch_id, seed, carry, labels } => {
+                if is_last {
+                    let res = engine.last(seed, &carry, &labels)?;
+                    let _ = events.send(FromWorker::Trained(TrainEvent {
+                        batch_id,
+                        loss: res.loss,
+                        correct: res.correct,
+                        batch_size,
+                        cycle: batch_id,
+                    }));
+                    match &prev {
+                        Some(tx) => {
+                            let _ = tx.send(ToWorker::Bwd { batch_id, gcarry: res.gcarry_in });
+                        }
+                        None => {
+                            let _ = events.send(FromWorker::Retired(batch_id));
+                        }
+                    }
+                } else {
+                    let out = engine.forward(seed, &carry)?;
+                    fifo.push_back((batch_id, seed, carry));
+                    let _ = next
+                        .as_ref()
+                        .expect("non-last worker has next")
+                        .send(ToWorker::Fwd { batch_id, seed, carry: out, labels });
+                }
+            }
+            ToWorker::Bwd { batch_id, gcarry } => {
+                let (saved_id, seed, saved) = fifo
+                    .pop_front()
+                    .ok_or_else(|| anyhow!("worker {idx}: FIFO empty for batch {batch_id}"))?;
+                anyhow::ensure!(
+                    saved_id == batch_id,
+                    "worker {idx}: FIFO order violated ({saved_id} vs {batch_id})"
+                );
+                let gin = engine.backward(seed, &saved, &gcarry)?;
+                match &prev {
+                    Some(tx) => {
+                        let _ = tx.send(ToWorker::Bwd { batch_id, gcarry: gin });
+                    }
+                    None => {
+                        let _ = events.send(FromWorker::Retired(batch_id));
+                    }
+                }
+            }
+            ToWorker::Stop => break,
+        }
+    }
+    let _ = events.send(FromWorker::Params(idx, Box::new(engine.params.clone())));
+    Ok(())
+}

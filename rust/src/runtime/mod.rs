@@ -1,0 +1,191 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! One `Runtime` wraps one PJRT client ("one accelerator"). Stage
+//! programs are compiled once per process and cached. HLO *text* is the
+//! interchange format (jax >= 0.5 protos are rejected by xla_extension
+//! 0.5.1 — see DESIGN.md §1 and /opt/xla-example/README.md).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::meta::{ConfigMeta, PartitionMeta};
+use crate::tensor::{numel, seed_literal, IntTensor, Tensor};
+
+/// A compiled stage program plus its output signature.
+pub struct Program {
+    exe: xla::PjRtLoadedExecutable,
+    /// Expected output shapes, positionally (f32 unless noted).
+    pub out_shapes: Vec<Vec<usize>>,
+    pub name: String,
+}
+
+impl Program {
+    /// Execute with positional literal inputs; unpack the output tuple
+    /// into host tensors using the recorded shapes.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<Tensor>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        // aot.py lowers with return_tuple=True: outputs arrive as a tuple.
+        let mut parts = lit.to_tuple().context("decompose output tuple")?;
+        if parts.len() != self.out_shapes.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.name,
+                self.out_shapes.len(),
+                parts.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, shape) in parts.drain(..).zip(self.out_shapes.iter()) {
+            if lit.element_count() != numel(shape) {
+                bail!(
+                    "{}: output numel mismatch: literal {} vs shape {:?}",
+                    self.name,
+                    lit.element_count(),
+                    shape
+                );
+            }
+            out.push(Tensor::from_literal(&lit, shape)?);
+        }
+        Ok(out)
+    }
+}
+
+/// All compiled programs for one partition.
+pub struct StagePrograms {
+    pub fwd: Option<Program>,
+    pub bwd: Option<Program>,
+    pub fwd_eval: Option<Program>,
+    pub last: Option<Program>,
+    pub last_eval: Option<Program>,
+}
+
+/// One PJRT device context; owns a client and compiles stage programs.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn compile_hlo_text(&self, path: &Path, name: &str, out_shapes: Vec<Vec<usize>>) -> Result<Program> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Program { exe, out_shapes, name: name.to_string() })
+    }
+
+    /// Compile every program of one partition, deriving output signatures
+    /// from meta.json.
+    pub fn load_partition(&self, meta: &ConfigMeta, part: &PartitionMeta) -> Result<StagePrograms> {
+        let state_shapes: Vec<Vec<usize>> = part.state.iter().map(|s| s.shape.clone()).collect();
+        let param_shapes: Vec<Vec<usize>> = part.params.iter().map(|p| p.shape.clone()).collect();
+        let mut sp = StagePrograms { fwd: None, bwd: None, fwd_eval: None, last: None, last_eval: None };
+
+        if part.is_last() {
+            // last: (loss, correct, gcarry_in.., dparams.., new_state..)
+            let mut shapes = vec![vec![], vec![]];
+            shapes.extend(part.carry_in.clone());
+            shapes.extend(param_shapes.clone());
+            shapes.extend(state_shapes.clone());
+            sp.last = Some(self.compile_hlo_text(
+                &meta.program_path(part, "last")?,
+                &format!("{}/stage{}_last", meta.config, part.index),
+                shapes,
+            )?);
+            // last_eval: (logits,)
+            sp.last_eval = Some(self.compile_hlo_text(
+                &meta.program_path(part, "last_eval")?,
+                &format!("{}/stage{}_last_eval", meta.config, part.index),
+                vec![vec![meta.batch, meta.num_classes]],
+            )?);
+        } else {
+            // fwd: (carry_out.., new_state..)
+            let mut shapes = part.carry_out.clone();
+            shapes.extend(state_shapes.clone());
+            sp.fwd = Some(self.compile_hlo_text(
+                &meta.program_path(part, "fwd")?,
+                &format!("{}/stage{}_fwd", meta.config, part.index),
+                shapes,
+            )?);
+            // bwd: (gcarry_in.., dparams..)
+            let mut shapes = part.carry_in.clone();
+            shapes.extend(param_shapes.clone());
+            sp.bwd = Some(self.compile_hlo_text(
+                &meta.program_path(part, "bwd")?,
+                &format!("{}/stage{}_bwd", meta.config, part.index),
+                shapes,
+            )?);
+            // fwd_eval: (carry_out..)
+            sp.fwd_eval = Some(self.compile_hlo_text(
+                &meta.program_path(part, "fwd_eval")?,
+                &format!("{}/stage{}_fwd_eval", meta.config, part.index),
+                part.carry_out.clone(),
+            )?);
+        }
+        Ok(sp)
+    }
+
+    /// Compile all partitions of a config.
+    pub fn load_config(&self, meta: &ConfigMeta) -> Result<Vec<StagePrograms>> {
+        if meta.meta_only {
+            bail!("{} is a meta-only config (no HLO artifacts)", meta.config);
+        }
+        meta.partitions.iter().map(|p| self.load_partition(meta, p)).collect()
+    }
+}
+
+/// Assemble the positional input list for a fwd/bwd/last call.
+pub struct InputBuilder {
+    literals: Vec<xla::Literal>,
+}
+
+impl InputBuilder {
+    pub fn new() -> Self {
+        InputBuilder { literals: Vec::new() }
+    }
+
+    pub fn tensors(mut self, ts: &[Tensor]) -> Result<Self> {
+        for t in ts {
+            self.literals.push(t.to_literal()?);
+        }
+        Ok(self)
+    }
+
+    pub fn seed(mut self, seed: i32) -> Self {
+        self.literals.push(seed_literal(seed));
+        self
+    }
+
+    pub fn ints(mut self, t: &IntTensor) -> Result<Self> {
+        self.literals.push(t.to_literal()?);
+        Ok(self)
+    }
+
+    pub fn build(self) -> Vec<xla::Literal> {
+        self.literals
+    }
+}
+
+impl Default for InputBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}

@@ -1,0 +1,137 @@
+//! Host-side tensors and conversions to/from `xla::Literal`.
+//!
+//! The coordinator's authoritative copies of weights, optimizer state,
+//! activations and gradients are host tensors; stage programs consume and
+//! produce PJRT literals. Conversions are the FFI boundary and are
+//! profiled in the §Perf pass.
+
+use anyhow::{bail, Context, Result};
+
+/// Dense f32 tensor (row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; numel(shape)] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![1.0; numel(shape)] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        if numel(shape) != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, numel(shape), data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn numel(&self) -> usize {
+        numel(&self.shape)
+    }
+
+    pub fn scalar(&self) -> f32 {
+        debug_assert_eq!(self.numel(), 1);
+        self.data[0]
+    }
+
+    /// L2 norm (metrics / debugging).
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|v| v.is_finite())
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(&self.data)
+            .reshape(&dims)
+            .context("reshape literal")
+    }
+
+    pub fn from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<Self> {
+        let data = lit.to_vec::<f32>().context("literal -> f32 vec")?;
+        Tensor::from_vec(shape, data)
+    }
+}
+
+/// Dense i32 tensor (labels, seeds).
+#[derive(Clone, Debug, PartialEq)]
+pub struct IntTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl IntTensor {
+    pub fn from_vec(shape: &[usize], data: Vec<i32>) -> Result<Self> {
+        if numel(shape) != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, numel(shape), data.len());
+        }
+        Ok(IntTensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(&self.data)
+            .reshape(&dims)
+            .context("reshape literal")
+    }
+}
+
+/// Scalar i32 literal (the per-batch dropout seed).
+pub fn seed_literal(seed: i32) -> xla::Literal {
+    xla::Literal::scalar(seed)
+}
+
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_numel() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.numel(), 24);
+        assert!(Tensor::from_vec(&[2, 2], vec![1.0; 3]).is_err());
+        assert!(IntTensor::from_vec(&[2], vec![1, 2]).is_ok());
+    }
+
+    #[test]
+    fn norm_and_finite() {
+        let t = Tensor::from_vec(&[4], vec![3.0, 4.0, 0.0, 0.0]).unwrap();
+        assert!((t.norm() - 5.0).abs() < 1e-6);
+        assert!(t.is_finite());
+        let bad = Tensor::from_vec(&[1], vec![f32::NAN]).unwrap();
+        assert!(!bad.is_finite());
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit, &[2, 3]).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = IntTensor::from_vec(&[4], vec![7, -1, 0, 3]).unwrap();
+        let lit = t.to_literal().unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![7, -1, 0, 3]);
+    }
+
+    #[test]
+    fn scalar_seed() {
+        let lit = seed_literal(42);
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![42]);
+    }
+}

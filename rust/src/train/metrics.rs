@@ -1,0 +1,135 @@
+//! Training metrics: loss/accuracy curves, CSV/JSON export.
+
+use crate::pipeline::TrainEvent;
+use crate::util::json::{self, Json};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalPoint {
+    pub iter: u64,
+    pub accuracy: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Recorder {
+    /// (batch_id, loss, batch_accuracy)
+    pub train: Vec<(u64, f32, f32)>,
+    pub evals: Vec<EvalPoint>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn train_event(&mut self, e: &TrainEvent) {
+        let acc = if e.batch_size > 0 { e.correct / e.batch_size as f32 } else { 0.0 };
+        self.train.push((e.batch_id, e.loss, acc));
+    }
+
+    pub fn eval_point(&mut self, iter: u64, accuracy: f64) {
+        self.evals.push(EvalPoint { iter, accuracy });
+    }
+
+    /// Mean loss over the last `n` retired batches.
+    pub fn recent_loss(&self, n: usize) -> f64 {
+        if self.train.is_empty() {
+            return f64::NAN;
+        }
+        let tail = &self.train[self.train.len().saturating_sub(n)..];
+        tail.iter().map(|(_, l, _)| *l as f64).sum::<f64>() / tail.len() as f64
+    }
+
+    /// Mean batch accuracy over the last `n` retired batches.
+    pub fn recent_train_acc(&self, n: usize) -> f64 {
+        if self.train.is_empty() {
+            return f64::NAN;
+        }
+        let tail = &self.train[self.train.len().saturating_sub(n)..];
+        tail.iter().map(|(_, _, a)| *a as f64).sum::<f64>() / tail.len() as f64
+    }
+
+    pub fn best_eval(&self) -> Option<EvalPoint> {
+        self.evals
+            .iter()
+            .copied()
+            .max_by(|a, b| a.accuracy.partial_cmp(&b.accuracy).unwrap())
+    }
+
+    /// losses as CSV: iter,loss,batch_acc
+    pub fn train_csv(&self) -> String {
+        let mut out = String::from("iter,loss,batch_acc");
+        for (i, l, a) in &self.train {
+            out.push_str(&format!("\n{i},{l},{a}"));
+        }
+        out
+    }
+
+    /// eval curve as CSV: iter,test_acc
+    pub fn eval_csv(&self) -> String {
+        let mut out = String::from("iter,test_acc");
+        for e in &self.evals {
+            out.push_str(&format!("\n{},{}", e.iter, e.accuracy));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            (
+                "evals",
+                Json::Arr(
+                    self.evals
+                        .iter()
+                        .map(|e| {
+                            json::obj(vec![
+                                ("iter", json::num(e.iter as f64)),
+                                ("acc", json::num(e.accuracy)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("final_loss", json::num(self.recent_loss(50))),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(b: u64, loss: f32, correct: f32) -> TrainEvent {
+        TrainEvent { batch_id: b, loss, correct, batch_size: 10, cycle: b }
+    }
+
+    #[test]
+    fn records_and_summarizes() {
+        let mut r = Recorder::new();
+        for b in 0..10 {
+            r.train_event(&ev(b, 2.0 - b as f32 * 0.1, b as f32));
+        }
+        assert_eq!(r.train.len(), 10);
+        assert!(r.recent_loss(5) < 2.0);
+        assert!((r.recent_train_acc(1) - 0.9).abs() < 1e-6);
+        r.eval_point(10, 0.5);
+        r.eval_point(20, 0.7);
+        assert_eq!(r.best_eval().unwrap().iter, 20);
+    }
+
+    #[test]
+    fn csv_shapes() {
+        let mut r = Recorder::new();
+        r.train_event(&ev(0, 1.5, 3.0));
+        r.eval_point(1, 0.25);
+        assert_eq!(r.train_csv().lines().count(), 2);
+        assert!(r.eval_csv().contains("1,0.25"));
+        assert!(r.to_json().to_string().contains("evals"));
+    }
+
+    #[test]
+    fn empty_recorder_is_nan() {
+        let r = Recorder::new();
+        assert!(r.recent_loss(5).is_nan());
+        assert!(r.best_eval().is_none());
+    }
+}

@@ -1,0 +1,198 @@
+//! Training driver: wires data, executor, scheduler and metrics into the
+//! three schedules the paper evaluates (pipelined / non-pipelined /
+//! hybrid), plus the eval loop.
+
+pub mod metrics;
+
+use anyhow::{Context, Result};
+
+use crate::config::{Mode, RunConfig};
+use crate::data::{batch_seed, load_or_synthesize, Batcher, Dataset, SyntheticSpec};
+use crate::meta::ConfigMeta;
+use crate::model::ModelParams;
+use crate::optim::{paper_schedule, Sgd};
+use crate::pipeline::{Feed, HybridSchedule, Phase, Pipeline, StageExecutor, XlaExecutor};
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+pub use metrics::{EvalPoint, Recorder};
+
+#[derive(Debug, Clone)]
+pub struct TrainResult {
+    pub config: String,
+    pub mode: String,
+    pub iters: u64,
+    pub final_accuracy: f64,
+    pub final_train_loss: f64,
+    pub wall_seconds: f64,
+    pub recorder: Recorder,
+}
+
+/// Build per-partition optimizers with the paper's hyperparameters;
+/// non-final (stale) partitions get `stale_lr_scale` (Table 7).
+pub fn build_optims(meta: &ConfigMeta, total_iters: u64, stale_lr_scale: f64) -> Vec<Sgd> {
+    let (sched, mom, nesterov, wd) = paper_schedule(&meta.model, total_iters as usize);
+    (0..meta.partitions.len())
+        .map(|p| {
+            let o = Sgd::new(sched.clone(), mom, nesterov, wd);
+            if p + 1 < meta.partitions.len() {
+                o.with_lr_scale(stale_lr_scale as f32)
+            } else {
+                o
+            }
+        })
+        .collect()
+}
+
+/// Top-1 accuracy over the test set (floor(len/batch) full batches).
+pub fn evaluate<E: StageExecutor>(
+    pipe: &mut Pipeline<E>,
+    ds: &Dataset,
+    batch: usize,
+) -> Result<f64> {
+    let n_batches = ds.len() / batch;
+    anyhow::ensure!(n_batches > 0, "test set smaller than a batch");
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for b in 0..n_batches {
+        let idxs: Vec<usize> = (b * batch..(b + 1) * batch).collect();
+        let (x, labels) = ds.gather(&idxs);
+        let logits = pipe.eval_forward(x)?;
+        correct += count_correct(&logits, &labels.data, batch);
+        total += batch;
+    }
+    Ok(correct as f64 / total as f64)
+}
+
+pub fn count_correct(logits: &Tensor, labels: &[i32], batch: usize) -> usize {
+    let classes = logits.numel() / batch;
+    let mut correct = 0;
+    for i in 0..batch {
+        let row = &logits.data[i * classes..(i + 1) * classes];
+        let mut best = 0usize;
+        for (j, v) in row.iter().enumerate() {
+            if *v > row[best] {
+                best = j;
+            }
+        }
+        if best as i32 == labels[i] {
+            correct += 1;
+        }
+    }
+    correct
+}
+
+/// Run a full training experiment per the RunConfig.
+pub fn run(rc: &RunConfig) -> Result<TrainResult> {
+    let meta = ConfigMeta::load_named(&crate::artifacts_root(), &rc.config)
+        .with_context(|| format!("loading config {}", rc.config))?;
+    let runtime = Runtime::cpu()?;
+    run_with_runtime(rc, &meta, &runtime)
+}
+
+/// Variant that reuses an existing runtime/artifacts (benches share one
+/// PJRT client across many runs).
+pub fn run_with_runtime(rc: &RunConfig, meta: &ConfigMeta, runtime: &Runtime) -> Result<TrainResult> {
+    let spec = SyntheticSpec {
+        train: rc.train_size,
+        test: rc.test_size,
+        noise: rc.noise as f32,
+        seed: rc.seed ^ 0x5eed_da7a,
+    };
+    let (train_ds, test_ds) =
+        load_or_synthesize(&meta.dataset, rc.data_dir.as_deref(), &spec)?;
+    anyhow::ensure!(
+        train_ds.input_shape == meta.input_shape,
+        "dataset shape {:?} vs model input {:?}",
+        train_ds.input_shape,
+        meta.input_shape
+    );
+
+    let params = match &rc.resume_from {
+        Some(path) => {
+            let (p, at) = crate::model::checkpoint::load(path)?;
+            crate::model::checkpoint::validate(&p, meta)?;
+            log::info!("resumed weights from {} (saved at iter {at})", path.display());
+            p
+        }
+        None => ModelParams::init(&meta.partitions, rc.seed)?,
+    };
+    let optims = build_optims(meta, rc.iters, rc.stale_lr_scale);
+    let exec = XlaExecutor::new(runtime, meta.clone(), params, optims)?;
+    let mut pipe = Pipeline::new(exec, meta.batch);
+    let mut batcher = Batcher::new(train_ds.len(), meta.batch, rc.seed ^ 0xba7c4);
+
+    let schedule = match rc.mode {
+        Mode::Pipelined => HybridSchedule::all_pipelined(rc.iters),
+        Mode::Sequential => HybridSchedule::all_sequential(rc.iters),
+        Mode::Hybrid => HybridSchedule::new(rc.pipelined_iters, rc.iters),
+    };
+
+    let mut rec = Recorder::new();
+    let start = std::time::Instant::now();
+    let mut fed = 0u64;
+
+    log::info!(
+        "train {}: mode={} iters={} batch={} P={} stages={} %stale={:.1}",
+        meta.config,
+        rc.mode.name(),
+        rc.iters,
+        meta.batch,
+        meta.partitions.len(),
+        meta.paper_stages(),
+        100.0 * meta.stale_weight_fraction()
+    );
+
+    while fed < rc.iters {
+        let phase = schedule.phase(fed);
+        if phase == Phase::DrainThenSequential {
+            for e in pipe.drain()? {
+                rec.train_event(&e);
+            }
+            log::info!("hybrid switch at iter {fed}: pipeline drained");
+        }
+        let idxs = batcher.next_indices().to_vec();
+        let (x, labels) = train_ds.gather(&idxs);
+        let feed = Feed { batch_id: fed, seed: batch_seed(rc.seed, fed), x, labels };
+        match phase {
+            Phase::Pipelined => {
+                if let Some(e) = pipe.cycle(Some(feed))? {
+                    rec.train_event(&e);
+                }
+            }
+            _ => {
+                let e = pipe.sequential_step(feed)?;
+                rec.train_event(&e);
+            }
+        }
+        fed += 1;
+        if rc.eval_every > 0 && fed % rc.eval_every == 0 {
+            // NOTE: in pipelined mode some batches are still in flight;
+            // eval reflects the weights as of this cycle, like the
+            // paper's periodic tests during training.
+            let acc = evaluate(&mut pipe, &test_ds, meta.batch)?;
+            rec.eval_point(fed, acc);
+            log::info!("iter {fed}: test acc {:.2}%", 100.0 * acc);
+        }
+    }
+    for e in pipe.drain()? {
+        rec.train_event(&e);
+    }
+    let final_accuracy = evaluate(&mut pipe, &test_ds, meta.batch)?;
+    rec.eval_point(rc.iters, final_accuracy);
+    if let Some(path) = &rc.save_to {
+        crate::model::checkpoint::save(path, &pipe.exec.params_snapshot(), rc.iters)?;
+        log::info!("saved checkpoint to {}", path.display());
+    }
+    let wall = start.elapsed().as_secs_f64();
+
+    Ok(TrainResult {
+        config: meta.config.clone(),
+        mode: rc.mode.name().to_string(),
+        iters: rc.iters,
+        final_accuracy,
+        final_train_loss: rec.recent_loss(50),
+        wall_seconds: wall,
+        recorder: rec,
+    })
+}

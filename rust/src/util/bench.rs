@@ -1,0 +1,174 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Runs a closure with warmup, collects per-iteration wall times, and
+//! reports mean / p50 / p95 / min. `cargo bench` targets use this plus
+//! table printers for the paper-reproduction harnesses.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} iters={:<5} mean={:>10.3}ms p50={:>10.3}ms p95={:>10.3}ms min={:>10.3}ms",
+            self.name,
+            self.iters,
+            self.mean_s * 1e3,
+            self.p50_s * 1e3,
+            self.p95_s * 1e3,
+            self.min_s * 1e3
+        )
+    }
+}
+
+/// Benchmark `f`, auto-scaling iteration count to roughly `budget_s`
+/// seconds of measurement after `warmup` runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, budget_s: f64, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    // estimate a single-iter cost
+    let t0 = Instant::now();
+    f();
+    let est = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((budget_s / est) as usize).clamp(5, 10_000);
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    stats_from(name, &mut samples)
+}
+
+/// Fixed-iteration variant.
+pub fn bench_n<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    stats_from(name, &mut samples)
+}
+
+fn stats_from(name: &str, samples: &mut [f64]) -> BenchStats {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean_s: samples.iter().sum::<f64>() / n as f64,
+        p50_s: samples[n / 2],
+        p95_s: samples[(n as f64 * 0.95) as usize % n],
+        min_s: samples[0],
+    }
+}
+
+/// Markdown-ish table printer used by the paper-table benches.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        let mut out = line(&self.headers);
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        for row in &self.rows {
+            out.push('\n');
+            out.push_str(&line(row));
+        }
+        out
+    }
+
+    /// CSV for results/ dumps.
+    pub fn to_csv(&self) -> String {
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let mut out = self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",");
+        for row in &self.rows {
+            out.push('\n');
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let st = bench_n("noop-ish", 1, 50, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(st.iters, 50);
+        assert!(st.min_s <= st.p50_s && st.p50_s <= st.p95_s);
+        assert!(st.mean_s > 0.0);
+    }
+
+    #[test]
+    fn table_renders_and_csv() {
+        let mut t = Table::new(&["ResNet", "Speedup"]);
+        t.row(&["-20".into(), "1.23X".into()]);
+        t.row(&["-362".into(), "1.82X".into()]);
+        let r = t.render();
+        assert!(r.contains("| ResNet"));
+        assert!(r.lines().count() == 4);
+        let csv = t.to_csv();
+        assert!(csv.starts_with("ResNet,Speedup\n"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

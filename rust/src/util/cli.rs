@@ -1,0 +1,241 @@
+//! Declarative command-line parsing (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! subcommands, defaults, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_flag: bool,
+    pub required: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    args: Vec<ArgSpec>,
+    positionals: Vec<ArgSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, args: Vec::new(), positionals: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.args.push(ArgSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+            required: false,
+        });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgSpec { name, help, default: None, is_flag: false, required: true });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgSpec { name, help, default: None, is_flag: true, required: false });
+        self
+    }
+
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push(ArgSpec {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+            required: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about, self.name);
+        for p in &self.positionals {
+            out.push_str(&format!(" <{}>", p.name));
+        }
+        out.push_str(" [OPTIONS]\n\nOPTIONS:\n");
+        for a in &self.args {
+            let head = if a.is_flag {
+                format!("--{}", a.name)
+            } else {
+                format!("--{} <v>", a.name)
+            };
+            let def = match &a.default {
+                Some(d) if !a.is_flag => format!(" [default: {}]", d),
+                _ => String::new(),
+            };
+            out.push_str(&format!("  {:<24} {}{}\n", head, a.help, def));
+        }
+        out
+    }
+
+    /// Parse argv (without program/subcommand names).
+    pub fn parse(&self, argv: &[String]) -> Result<Matches, String> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut pos_iter = self.positionals.iter();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .args
+                    .iter()
+                    .find(|a| a.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{key} takes no value"));
+                    }
+                    flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("option --{key} needs a value"))?
+                        }
+                    };
+                    values.insert(key, val);
+                }
+            } else {
+                let spec = pos_iter
+                    .next()
+                    .ok_or_else(|| format!("unexpected argument {tok:?}\n\n{}", self.usage()))?;
+                values.insert(spec.name.to_string(), tok.clone());
+            }
+            i += 1;
+        }
+        for a in &self.args {
+            if a.required && !values.contains_key(a.name) {
+                return Err(format!("missing required --{}\n\n{}", a.name, self.usage()));
+            }
+            if let Some(d) = &a.default {
+                values.entry(a.name.to_string()).or_insert_with(|| d.clone());
+            }
+        }
+        if let Some(p) = pos_iter.next() {
+            return Err(format!("missing <{}>\n\n{}", p.name, self.usage()));
+        }
+        Ok(Matches { values, flags })
+    }
+}
+
+#[derive(Debug)]
+pub struct Matches {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Matches {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("arg {name} not declared"))
+    }
+
+    pub fn get_opt(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, String> {
+        self.get(name)
+            .parse()
+            .map_err(|_| format!("--{name} expects an integer, got {:?}", self.get(name)))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, String> {
+        self.get(name)
+            .parse()
+            .map_err(|_| format!("--{name} expects an integer, got {:?}", self.get(name)))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, String> {
+        self.get(name)
+            .parse()
+            .map_err(|_| format!("--{name} expects a number, got {:?}", self.get(name)))
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("train", "train a model")
+            .req("config", "config name")
+            .opt("iters", "100", "iterations")
+            .flag("verbose", "log more")
+            .positional("outdir", "output directory")
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let m = cmd()
+            .parse(&argv(&["--config=resnet20_4s", "out", "--iters", "500", "--verbose"]))
+            .unwrap();
+        assert_eq!(m.get("config"), "resnet20_4s");
+        assert_eq!(m.get_usize("iters").unwrap(), 500);
+        assert_eq!(m.get("outdir"), "out");
+        assert!(m.has("verbose"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let m = cmd().parse(&argv(&["--config", "c", "out"])).unwrap();
+        assert_eq!(m.get_usize("iters").unwrap(), 100);
+        assert!(!m.has("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cmd().parse(&argv(&["out"])).is_err());
+        assert!(cmd().parse(&argv(&["--config", "c"])).is_err()); // no positional
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cmd().parse(&argv(&["--config", "c", "--nope", "1", "out"])).is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let err = cmd().parse(&argv(&["--help"])).unwrap_err();
+        assert!(err.contains("USAGE"));
+        assert!(err.contains("--iters"));
+    }
+
+    #[test]
+    fn numeric_errors_are_friendly() {
+        let m = cmd().parse(&argv(&["--config", "c", "--iters", "abc", "out"])).unwrap();
+        assert!(m.get_usize("iters").is_err());
+    }
+}

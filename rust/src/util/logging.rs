@@ -1,0 +1,71 @@
+//! Tiny leveled logger implementing the `log` facade.
+//!
+//! `PIPESTALE_LOG=debug|info|warn|error` controls the level (default info).
+
+use std::io::Write;
+use std::sync::Once;
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+static INIT: Once = Once::new();
+static mut START: Option<Instant> = None;
+
+struct Logger;
+
+impl log::Log for Logger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let elapsed = unsafe {
+            #[allow(static_mut_refs)]
+            START.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0)
+        };
+        let level = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(err, "[{elapsed:9.3}s {level}] {}", record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: Logger = Logger;
+
+/// Install the logger (idempotent).
+pub fn init() {
+    INIT.call_once(|| {
+        unsafe {
+            START = Some(Instant::now());
+        }
+        let level = match std::env::var("PIPESTALE_LOG").as_deref() {
+            Ok("trace") => LevelFilter::Trace,
+            Ok("debug") => LevelFilter::Debug,
+            Ok("warn") => LevelFilter::Warn,
+            Ok("error") => LevelFilter::Error,
+            _ => LevelFilter::Info,
+        };
+        let _ = log::set_logger(&LOGGER);
+        log::set_max_level(level);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logger smoke");
+    }
+}

@@ -1,0 +1,10 @@
+//! From-scratch substrates: JSON, CLI, RNG, logging, bench harness,
+//! property testing (the offline vendor set lacks serde/clap/criterion/
+//! proptest — see DESIGN.md §5).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,148 @@
+//! Mini property-testing driver (proptest is unavailable offline).
+//!
+//! `check(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop`; on failure it performs greedy shrinking via the
+//! input's `Shrink` implementation and panics with the minimal
+//! counterexample. Coordinator invariants (routing/staleness/batching)
+//! are property-tested with this.
+
+use crate::util::rng::Pcg32;
+
+/// Types that can propose smaller versions of themselves.
+pub trait Shrink: Sized + Clone + std::fmt::Debug {
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        match self {
+            0 => vec![],
+            1 => vec![0],
+            n => vec![0, n / 2, n - 1],
+        }
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        match self {
+            0 => vec![],
+            1 => vec![0],
+            n => vec![0, n / 2, n - 1],
+        }
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> =
+            self.0.shrink().into_iter().map(|a| (a, self.1.clone())).collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink, C: Shrink> Shrink for (A, B, C) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b, self.2.clone())));
+        out.extend(self.2.shrink().into_iter().map(|c| (self.0.clone(), self.1.clone(), c)));
+        out
+    }
+}
+
+impl Shrink for Vec<usize> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if !self.is_empty() {
+            out.push(self[..self.len() - 1].to_vec());
+            out.push(self[1..].to_vec());
+            out.push(self[..self.len() / 2].to_vec());
+        }
+        out
+    }
+}
+
+/// Run a property over random cases with shrinking on failure.
+pub fn check<T, G, P>(seed: u64, cases: usize, mut gen: G, prop: P)
+where
+    T: Shrink,
+    G: FnMut(&mut Pcg32) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Pcg32::seeded(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // greedy shrink
+            let mut best = (input.clone(), msg.clone());
+            let mut improved = true;
+            let mut budget = 200;
+            while improved && budget > 0 {
+                improved = false;
+                for cand in best.0.shrink() {
+                    budget -= 1;
+                    if let Err(m) = prop(&cand) {
+                        best = (cand, m);
+                        improved = true;
+                        break;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property failed (case {case}, seed {seed}):\n  input: {:?}\n  error: {}\n  (shrunk from: {:?} — {})",
+                best.0, best.1, input, msg
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(1, 100, |r| r.below(100) as usize, |&n| {
+            if n < 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let res = std::panic::catch_unwind(|| {
+            check(2, 100, |r| r.below(1000) as usize + 10, |&n| {
+                if n < 50 {
+                    Ok(())
+                } else {
+                    Err(format!("{n} too big"))
+                }
+            });
+        });
+        let msg = format!("{:?}", res.unwrap_err().downcast_ref::<String>().unwrap());
+        // greedy shrink should land well below the original draw
+        assert!(msg.contains("property failed"));
+    }
+
+    #[test]
+    fn tuple_shrink_covers_both_sides() {
+        let t = (4usize, 6usize);
+        let sh = t.shrink();
+        assert!(sh.contains(&(0, 6)));
+        assert!(sh.contains(&(4, 0)));
+    }
+}

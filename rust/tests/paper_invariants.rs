@@ -1,0 +1,130 @@
+//! Cross-config invariants tying the artifact set to the paper's tables.
+
+use pipestale::memory::MemoryReport;
+use pipestale::meta::ConfigMeta;
+use pipestale::pipeline::perfsim::{
+    analytic_costs, simulate_nonpipelined, simulate_pipelined, CommModel, Mapping,
+};
+use pipestale::pipeline::StalenessReport;
+
+fn root() -> std::path::PathBuf {
+    pipestale::artifacts_root()
+}
+
+fn load(name: &str) -> ConfigMeta {
+    ConfigMeta::load_named(&root(), name).unwrap_or_else(|e| panic!("{name}: {e}"))
+}
+
+#[test]
+fn table1_ppvs_present_with_correct_stage_counts() {
+    // (config, expected paper stages, expected PPV)
+    let grid: &[(&str, usize, &[usize])] = &[
+        ("lenet5_4s", 4, &[1]),
+        ("lenet5_6s", 6, &[1, 2]),
+        ("lenet5_8s", 8, &[1, 2, 3]),
+        ("lenet5_10s", 10, &[1, 2, 3, 4]),
+        ("alexnet_4s", 4, &[1]),
+        ("alexnet_6s", 6, &[1, 2]),
+        ("alexnet_8s", 8, &[1, 2, 3]),
+        ("vgg16_4s", 4, &[2]),
+        ("vgg16_6s", 6, &[2, 4]),
+        ("vgg16_8s", 8, &[2, 4, 7]),
+        ("vgg16_10s", 10, &[2, 4, 7, 10]),
+        ("resnet20_4s", 4, &[7]),
+        ("resnet20_6s", 6, &[7, 13]),
+        ("resnet20_8s", 8, &[7, 13, 19]),
+    ];
+    for (name, stages, ppv) in grid {
+        let m = load(name);
+        assert_eq!(m.paper_stages(), *stages, "{name}");
+        assert_eq!(m.ppv, ppv.to_vec(), "{name}");
+    }
+}
+
+#[test]
+fn table3_fine_grained_set_is_complete() {
+    for ns in [8usize, 10, 12, 14, 16, 18, 20] {
+        let m = load(&format!("resnet20_fine{ns}"));
+        assert_eq!(m.paper_stages(), ns);
+    }
+}
+
+#[test]
+fn fig6_slide_positions_cover_the_network() {
+    let mut prev = 0.0;
+    for p in [3usize, 5, 7, 9, 11, 13, 15, 17, 19] {
+        let m = load(&format!("resnet20_slide{p}"));
+        assert_eq!(m.ppv, vec![p]);
+        let frac = m.stale_weight_fraction();
+        assert!(frac > prev, "slide{p}: {frac} <= {prev}");
+        prev = frac;
+        // constant degree of 2 for the single stale partition
+        assert_eq!(m.degree_of_staleness(1), 2);
+    }
+    assert!(prev > 0.9, "last slide should have ~all weights stale: {prev}");
+}
+
+#[test]
+fn table5_resnet_family_loads_and_speedup_grows_with_depth() {
+    // DES with the GTX1060 roofline cost model (paper's testbed): deeper
+    // ResNets have a higher compute-to-communication ratio, so the
+    // projected speedup grows toward 2.0 under the paired 2-worker
+    // mapping — Table 5's trend (1.23X .. 1.82X).
+    let comm = CommModel::default();
+    let mut prev = 0.0;
+    for name in ["resnet20_4s", "resnet56_4s", "resnet110_4s", "resnet224_4s", "resnet362_4s"] {
+        let m = load(name);
+        assert_eq!(m.partitions.len(), 2, "{name} should be 4-stage (K=1)");
+        let costs = pipestale::pipeline::perfsim::gtx1060_costs(&m);
+        let s = simulate_nonpipelined(&costs, 200)
+            / simulate_pipelined(&costs, &comm, Mapping::Paired, 200);
+        assert!(s > 1.0 && s <= 2.0 + 1e-9, "{name}: speedup {s}");
+        assert!(s >= prev - 0.02, "{name}: speedup {s} fell from {prev}");
+        prev = prev.max(s);
+    }
+    assert!(prev > 1.5, "deepest ResNet should exceed 1.5x: {prev}");
+    // the analytic flops-only model also yields sane (1..2] speedups
+    let m = load("resnet110_4s");
+    let costs = analytic_costs(&m, 50e9);
+    let s = simulate_nonpipelined(&costs, 100)
+        / simulate_pipelined(&costs, &CommModel::free(), Mapping::Paired, 100);
+    assert!(s > 1.0 && s <= 2.0 + 1e-9, "{s}");
+}
+
+#[test]
+fn table6_memory_reports_for_all_depths() {
+    for d in [20usize, 56, 110, 224, 362] {
+        let m = load(&format!("resnet{d}_mem"));
+        let r = MemoryReport::from_meta(&m);
+        assert!(r.weight_bytes > 0.0 && r.activations_per_sample > 0.0);
+        assert!(r.increase_paper_style_per_sample > 0.0, "resnet{d}");
+    }
+}
+
+#[test]
+fn staleness_reports_consistent_across_all_configs() {
+    for entry in std::fs::read_dir(root()).unwrap() {
+        let dir = entry.unwrap().path();
+        if !dir.join("meta.json").exists() {
+            continue;
+        }
+        let m = ConfigMeta::load(&dir).unwrap();
+        let r = StalenessReport::from_meta(&m);
+        // degrees strictly decrease by 2 to zero
+        for (i, p) in r.partitions.iter().enumerate() {
+            assert_eq!(p.degree, 2 * (m.ppv.len() - i), "{}", m.config);
+        }
+        assert!(r.stale_weight_fraction >= 0.0 && r.stale_weight_fraction < 1.0);
+        // param accounting: partition sums == layer sums
+        let by_part: usize = m.partitions.iter().map(|p| p.param_count).sum();
+        let by_layer: usize = m.layers.iter().map(|l| l.param_count).sum();
+        assert_eq!(by_part, by_layer, "{}", m.config);
+    }
+}
+
+#[test]
+fn hybrid_config_matches_paper_ppv() {
+    let m = load("resnet20_hybrid");
+    assert_eq!(m.ppv, vec![5, 12, 17]);
+    assert_eq!(m.paper_stages(), 8);
+}
