@@ -14,6 +14,10 @@ mod common;
 use pipestale::config::Mode;
 
 fn main() {
+    if !pipestale::xla_ready() {
+        eprintln!("skipping {}: needs artifacts + real XLA backend", file!());
+        return;
+    }
     pipestale::util::logging::init();
     let iters = common::bench_iters(240);
     // one representative deep-pipelined config per model + baseline

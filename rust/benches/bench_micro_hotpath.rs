@@ -1,12 +1,22 @@
 //! Hot-path microbenches (the §Perf instrumentation): where a training
 //! cycle's host-side time goes, independent of XLA compute.
 //!
-//!   * literal <-> tensor conversion (the FFI boundary)
-//!   * SGD update loop (momentum + weight decay)
-//!   * scheduler overhead with a no-op executor (cycles/s)
-//!   * meta.json parse (startup cost)
-//!   * DES throughput (batches simulated / s)
-//!   * XLA stage execution for resnet20_4s (end-to-end cycle cost)
+//! Each hot path is measured twice — the seed-era "before" shape and
+//! the zero-copy "after" shape — so the speedups the pool/fused-kernel
+//! work claims are reproduced in the same binary:
+//!
+//!   * literal <-> tensor conversion: vec1+reshape / to_vec+from_vec
+//!     (two copies + fresh allocs) vs single-copy pooled conversion
+//!   * SGD update (1M params): pre-fusion reference loops vs the fused
+//!     kernel behind `Sgd::step`
+//!   * scheduler cycle (mock executor, P=4): pool disabled (every
+//!     backing store freshly allocated, as in the seed) vs pool enabled
+//!   * meta.json parse, DES throughput, XLA stage execution (unchanged
+//!     paths, artifact/backend gated)
+//!
+//! Results go to stdout, `micro_hotpath.csv`, and machine-readable
+//! `BENCH_micro.json` in `results_root()` so the perf trajectory is
+//! tracked across PRs.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -14,97 +24,220 @@ mod common;
 use pipestale::data::batch_seed;
 use pipestale::meta::ConfigMeta;
 use pipestale::model::ModelParams;
-use pipestale::optim::{Schedule, Sgd};
+use pipestale::optim::{kernel, Schedule, Sgd};
 use pipestale::pipeline::mock::MockExecutor;
 use pipestale::pipeline::perfsim::*;
 use pipestale::pipeline::{Feed, Pipeline, XlaExecutor};
+use pipestale::pool::TensorPool;
 use pipestale::tensor::{IntTensor, Tensor};
-use pipestale::util::bench::{bench, bench_n};
+use pipestale::util::bench::{bench, bench_n, BenchStats};
+use pipestale::util::json::{self, Json};
 use pipestale::util::rng::Pcg32;
+
+struct Report {
+    all: Vec<BenchStats>,
+    pairs: Vec<(&'static str, String, String)>,
+}
+
+impl Report {
+    fn push(&mut self, st: BenchStats) -> String {
+        println!("{}", st.report());
+        let name = st.name.clone();
+        self.all.push(st);
+        name
+    }
+
+    fn pair(&mut self, key: &'static str, before: BenchStats, after: BenchStats) {
+        let b = self.push(before);
+        let a = self.push(after);
+        self.pairs.push((key, b, a));
+    }
+
+    fn stat(&self, name: &str) -> &BenchStats {
+        self.all.iter().find(|s| s.name == name).expect("bench name")
+    }
+}
 
 fn main() {
     pipestale::util::logging::init();
     let root = pipestale::artifacts_root();
+    let pool = TensorPool::global();
+    let mut rep = Report { all: Vec::new(), pairs: Vec::new() };
 
-    // literal conversion
+    // ---- literal conversions (the FFI boundary), 2MB tensor ------------
     let mut rng = Pcg32::seeded(1);
     let mut data = vec![0.0f32; 32 * 32 * 32 * 16];
     data.iter_mut().for_each(|v| *v = rng.normal());
-    let t = Tensor::from_vec(&[32, 32, 32, 16], data).unwrap();
-    let st = bench("tensor->literal (2MB)", 3, 0.5, || {
+    let shape = [32usize, 32, 32, 16];
+    let t = Tensor::from_vec(&shape, data).unwrap();
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+
+    let before = bench("tensor->literal legacy (2MB)", 3, 0.5, || {
+        // Seed path: rank-1 literal + reshape = two copies, two allocs.
+        let lit = xla::Literal::vec1(t.data()).reshape(&dims).unwrap();
+        std::hint::black_box(lit);
+    });
+    let after = bench("tensor->literal pooled (2MB)", 3, 0.5, || {
         std::hint::black_box(t.to_literal().unwrap());
     });
-    println!("{}", st.report());
-    let lit = t.to_literal().unwrap();
-    let st = bench("literal->tensor (2MB)", 3, 0.5, || {
-        std::hint::black_box(Tensor::from_literal(&lit, &[32, 32, 32, 16]).unwrap());
-    });
-    println!("{}", st.report());
+    rep.pair("tensor_to_literal_2mb", before, after);
 
-    // SGD hot loop: 1M params with momentum+wd
+    let lit = t.to_literal().unwrap();
+    let before = bench("literal->tensor legacy (2MB)", 3, 0.5, || {
+        // Seed path: to_vec allocates a fresh backing store every call.
+        let v = lit.to_vec::<f32>().unwrap();
+        std::hint::black_box(Tensor::from_vec(&shape, v).unwrap());
+    });
+    let after = bench("literal->tensor pooled (2MB)", 3, 0.5, || {
+        std::hint::black_box(Tensor::from_literal(&lit, &shape).unwrap());
+    });
+    rep.pair("literal_to_tensor_2mb", before, after);
+
+    // ---- SGD hot loop: 1M params with momentum+wd -----------------------
+    let n = 1_000_000;
+    let mut p_ref = vec![1.0f32; n];
+    let g_ref = vec![1.0f32; n];
+    let mut v_ref = vec![0.0f32; n];
+    let before = bench("sgd step reference (1M params, momentum+wd)", 3, 0.5, || {
+        kernel::reference_update(&mut p_ref, &g_ref, &mut v_ref, 0.1, 0.9, false, 1e-4);
+    });
     let mut opt = Sgd::new(Schedule::Const { base: 0.1 }, 0.9, false, 1e-4);
-    let mut params = vec![Tensor::ones(&[1_000_000])];
-    let grads = vec![Tensor::ones(&[1_000_000])];
+    let mut params = vec![Tensor::ones(&[n])];
+    let grads = vec![Tensor::ones(&[n])];
     let mut iter = 0usize;
-    let st = bench("sgd step (1M params, momentum+wd)", 3, 0.5, || {
-        opt.step(iter, &mut params, &grads);
+    let after = bench("sgd step fused (1M params, momentum+wd)", 3, 0.5, || {
+        opt.step(iter, &mut params, &grads).unwrap();
         iter += 1;
     });
-    println!("{}", st.report());
+    rep.pair("sgd_step_1m", before, after);
 
-    // scheduler overhead with mock executor
-    let mut pipe = Pipeline::new(MockExecutor::new(4), 1);
-    let mut b = 0u64;
-    let st = bench("scheduler cycle (mock, P=4)", 10, 0.3, || {
-        let f = Feed {
-            batch_id: b,
-            seed: batch_seed(1, b),
-            x: Tensor::from_vec(&[1], vec![b as f32]).unwrap(),
-            labels: IntTensor::from_vec(&[1], vec![0]).unwrap(),
-        };
-        pipe.cycle(Some(f)).unwrap();
-        b += 1;
-    });
-    println!("{}", st.report());
+    // ---- scheduler overhead with mock executor, pool off vs on ----------
+    let cycle_bench = |name: &str| -> BenchStats {
+        let mut pipe = Pipeline::new(MockExecutor::new(4), 1);
+        let mut b = 0u64;
+        bench(name, 10, 0.3, || {
+            let f = Feed {
+                batch_id: b,
+                seed: batch_seed(1, b),
+                x: Tensor::filled(&[1], b as f32),
+                labels: IntTensor::from_vec(&[1], vec![0]).unwrap(),
+            };
+            pipe.cycle(Some(f)).unwrap();
+            b += 1;
+        })
+    };
+    pool.set_enabled(false);
+    let before = cycle_bench("scheduler cycle (mock, P=4, pool off)");
+    pool.set_enabled(true);
+    // Snapshot around the pool-on run only: the emitted counters must
+    // reflect the optimized configuration, not the disabled control or
+    // the legacy conversion benches above.
+    let base = pool.stats();
+    let after = cycle_bench("scheduler cycle (mock, P=4, pool on)");
+    rep.pair("scheduler_cycle_mock_p4", before, after);
+    let now = pool.stats();
+    let pool_stats = pipestale::pool::PoolStats {
+        fresh_allocs: now.fresh_allocs - base.fresh_allocs,
+        reuses: now.reuses - base.reuses,
+        recycled: now.recycled - base.recycled,
+        discarded: now.discarded - base.discarded,
+        retained_scalars: now.retained_scalars,
+    };
+    println!(
+        "[pool] steady-state: fresh={} reuses={} hit_rate={:.3}",
+        pool_stats.fresh_allocs,
+        pool_stats.reuses,
+        pool_stats.hit_rate()
+    );
 
-    // meta.json parse
-    let st = bench("meta.json parse (resnet110_4s)", 2, 0.5, || {
-        std::hint::black_box(ConfigMeta::load_named(&root, "resnet110_4s").unwrap());
-    });
-    println!("{}", st.report());
+    // ---- artifact-dependent sections ------------------------------------
+    if pipestale::artifacts_present() {
+        let st = bench("meta.json parse (resnet110_4s)", 2, 0.5, || {
+            std::hint::black_box(ConfigMeta::load_named(&root, "resnet110_4s").unwrap());
+        });
+        rep.push(st);
 
-    // DES throughput
-    let meta = ConfigMeta::load_named(&root, "resnet110_mem").unwrap();
-    let costs = gtx1060_costs(&meta).scale_batch(128.0);
-    let comm = CommModel::default();
-    let st = bench("DES simulate 1000 batches (P=2)", 2, 0.5, || {
-        std::hint::black_box(simulate_pipelined(&costs, &comm, Mapping::Paired, 1000));
-    });
-    println!("{}", st.report());
+        let meta = ConfigMeta::load_named(&root, "resnet110_mem").unwrap();
+        let costs = gtx1060_costs(&meta).scale_batch(128.0);
+        let comm = CommModel::default();
+        let st = bench("DES simulate 1000 batches (P=2)", 2, 0.5, || {
+            std::hint::black_box(simulate_pipelined(&costs, &comm, Mapping::Paired, 1000));
+        });
+        rep.push(st);
+    } else {
+        eprintln!("[skip] meta/DES benches: artifacts not built");
+    }
 
-    // XLA end-to-end cycle for resnet20_4s
-    let meta = ConfigMeta::load_named(&root, "resnet20_4s").unwrap();
-    let runtime = pipestale::runtime::Runtime::cpu().unwrap();
-    let params = ModelParams::init(&meta.partitions, 1).unwrap();
-    let optims = pipestale::train::build_optims(&meta, 100, 1.0);
-    let exec = XlaExecutor::new(&runtime, meta.clone(), params, optims).unwrap();
-    let mut pipe = Pipeline::new(exec, meta.batch);
-    let x = Tensor::ones(&[meta.batch, 32, 32, 3]);
-    let labels = IntTensor::from_vec(&[meta.batch], vec![0; meta.batch]).unwrap();
-    let mut b = 0u64;
-    let st = bench_n("pipeline cycle (XLA, resnet20_4s b32)", 3, if common::fast() { 10 } else { 30 }, || {
-        pipe.cycle(Some(Feed {
-            batch_id: b,
-            seed: batch_seed(2, b),
-            x: x.clone(),
-            labels: labels.clone(),
-        }))
-        .unwrap();
-        b += 1;
-    });
-    println!("{}", st.report());
+    if pipestale::xla_ready() {
+        let meta = ConfigMeta::load_named(&root, "resnet20_4s").unwrap();
+        let runtime = pipestale::runtime::Runtime::cpu().unwrap();
+        let params = ModelParams::init(&meta.partitions, 1).unwrap();
+        let optims = pipestale::train::build_optims(&meta, 100, 1.0);
+        let exec = XlaExecutor::new(&runtime, meta.clone(), params, optims).unwrap();
+        let mut pipe = Pipeline::new(exec, meta.batch);
+        let x = Tensor::ones(&[meta.batch, 32, 32, 3]);
+        let labels = IntTensor::from_vec(&[meta.batch], vec![0; meta.batch]).unwrap();
+        let mut b = 0u64;
+        let iters = if common::fast() { 10 } else { 30 };
+        let st = bench_n("pipeline cycle (XLA, resnet20_4s b32)", 3, iters, || {
+            pipe.cycle(Some(Feed {
+                batch_id: b,
+                seed: batch_seed(2, b),
+                x: x.clone(),
+                labels: labels.clone(),
+            }))
+            .unwrap();
+            b += 1;
+        });
+        rep.push(st);
+    } else {
+        eprintln!("[skip] XLA cycle bench: needs artifacts + real backend");
+    }
 
-    let mut csv = String::from("bench,mean_ms,p50_ms\n");
-    csv.push_str(&format!("xla_cycle_resnet20_4s,{},{}\n", st.mean_s * 1e3, st.p50_s * 1e3));
+    // ---- emit machine-readable results ----------------------------------
+    let mut benches = std::collections::BTreeMap::new();
+    for st in &rep.all {
+        benches.insert(st.name.clone(), st.to_json());
+    }
+    let mut pairs = std::collections::BTreeMap::new();
+    for (key, before, after) in &rep.pairs {
+        let (b, a) = (rep.stat(before), rep.stat(after));
+        pairs.insert(
+            key.to_string(),
+            json::obj(vec![
+                ("before", json::s(before)),
+                ("after", json::s(after)),
+                ("speedup_mean", json::num(b.mean_s / a.mean_s)),
+                ("speedup_p50", json::num(b.p50_s / a.p50_s)),
+            ]),
+        );
+    }
+    let doc = json::obj(vec![
+        ("schema", json::s("pipestale/bench_micro/v2")),
+        ("benches", Json::Obj(benches)),
+        ("pairs", Json::Obj(pairs)),
+        (
+            "pool",
+            json::obj(vec![
+                ("fresh_allocs", json::num(pool_stats.fresh_allocs as f64)),
+                ("reuses", json::num(pool_stats.reuses as f64)),
+                ("recycled", json::num(pool_stats.recycled as f64)),
+                ("hit_rate", json::num(pool_stats.hit_rate())),
+            ]),
+        ),
+    ]);
+    common::write_results("BENCH_micro.json", &doc.to_string_pretty());
+
+    let mut csv = String::from("bench,mean_ms,p50_ms,p95_ms,min_ms\n");
+    for st in &rep.all {
+        csv.push_str(&format!(
+            "\"{}\",{},{},{},{}\n",
+            st.name,
+            st.mean_s * 1e3,
+            st.p50_s * 1e3,
+            st.p95_s * 1e3,
+            st.min_s * 1e3
+        ));
+    }
     common::write_results("micro_hotpath.csv", &csv);
 }

@@ -17,6 +17,10 @@ use pipestale::config::Mode;
 use pipestale::util::bench::Table;
 
 fn main() {
+    if !pipestale::xla_ready() {
+        eprintln!("skipping {}: needs artifacts + real XLA backend", file!());
+        return;
+    }
     pipestale::util::logging::init();
     let iters = common::bench_iters(240);
     let grid: &[(&str, &[(&str, &str)])] = &[

@@ -20,6 +20,10 @@ use pipestale::pipeline::StalenessReport;
 use pipestale::util::bench::Table;
 
 fn main() {
+    if !pipestale::xla_ready() {
+        eprintln!("skipping {}: needs artifacts + real XLA backend", file!());
+        return;
+    }
     pipestale::util::logging::init();
     let iters = common::bench_iters(240);
     let root = pipestale::artifacts_root();

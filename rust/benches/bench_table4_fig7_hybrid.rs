@@ -16,6 +16,10 @@ use pipestale::config::Mode;
 use pipestale::util::bench::Table;
 
 fn main() {
+    if !pipestale::xla_ready() {
+        eprintln!("skipping {}: needs artifacts + real XLA backend", file!());
+        return;
+    }
     pipestale::util::logging::init();
     let n = common::bench_iters(300); // "30k" analog
     let p = 2 * n / 3; // "20k"

@@ -68,6 +68,10 @@ fn measured_costs(meta: &ConfigMeta, exec: &mut XlaExecutor, reps: usize) -> Sta
 }
 
 fn main() {
+    if !pipestale::xla_ready() {
+        eprintln!("skipping {}: needs artifacts + real XLA backend", file!());
+        return;
+    }
     pipestale::util::logging::init();
     let iters = 400u64;
     let comm = CommModel::default();

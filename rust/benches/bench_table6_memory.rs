@@ -18,6 +18,10 @@ use pipestale::meta::ConfigMeta;
 use pipestale::util::bench::Table;
 
 fn main() {
+    if !pipestale::artifacts_present() {
+        eprintln!("skipping {}: artifacts not built", file!());
+        return;
+    }
     let root = pipestale::artifacts_root();
     let mb = 1024.0 * 1024.0;
     let paper = [

@@ -43,19 +43,22 @@ impl Dataset {
         self.input_shape.iter().product()
     }
 
-    /// Copy samples `idxs` into a batch tensor pair.
+    /// Copy samples `idxs` into a batch tensor pair. The image tensor is
+    /// assembled in pooled storage, so per-iteration batch construction
+    /// stops allocating once the pool is warm (§Perf).
     pub fn gather(&self, idxs: &[usize]) -> (Tensor, IntTensor) {
         let n = self.sample_elems();
-        let mut images = Vec::with_capacity(idxs.len() * n);
+        let mut images = crate::pool::acquire(idxs.len() * n);
+        let buf = images.as_mut_slice();
         let mut labels = Vec::with_capacity(idxs.len());
-        for &i in idxs {
-            images.extend_from_slice(&self.images[i * n..(i + 1) * n]);
+        for (k, &i) in idxs.iter().enumerate() {
+            buf[k * n..(k + 1) * n].copy_from_slice(&self.images[i * n..(i + 1) * n]);
             labels.push(self.labels[i]);
         }
         let mut shape = vec![idxs.len()];
         shape.extend_from_slice(&self.input_shape);
         (
-            Tensor::from_vec(&shape, images).expect("batch tensor"),
+            Tensor::from_pooled(&shape, images).expect("batch tensor"),
             IntTensor::from_vec(&[idxs.len()], labels).expect("batch labels"),
         )
     }

@@ -16,6 +16,7 @@ pub mod meta;
 pub mod model;
 pub mod optim;
 pub mod pipeline;
+pub mod pool;
 pub mod runtime;
 pub mod tensor;
 pub mod train;
@@ -30,11 +31,27 @@ pub fn artifacts_root() -> PathBuf {
         .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
 }
 
-/// Default results dir for bench/table outputs.
+/// True when the AOT artifact set has been built (`make artifacts`).
+/// Artifact-dependent tests and benches skip gracefully when absent.
+pub fn artifacts_present() -> bool {
+    artifacts_root().join("quickstart_lenet").join("meta.json").exists()
+}
+
+/// True when both the artifacts and a real (non-stub) XLA backend are
+/// available, i.e. stage programs can actually compile and run.
+pub fn xla_ready() -> bool {
+    runtime::backend_available() && artifacts_present()
+}
+
+/// Default results dir for bench/table outputs. Creation failures are
+/// surfaced (not swallowed): callers writing results will also fail, and
+/// the log line explains why.
 pub fn results_root() -> PathBuf {
     let p = std::env::var("PIPESTALE_RESULTS")
         .map(PathBuf::from)
         .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results"));
-    std::fs::create_dir_all(&p).ok();
+    if let Err(e) = std::fs::create_dir_all(&p) {
+        log::warn!("could not create results dir {}: {e}", p.display());
+    }
     p
 }

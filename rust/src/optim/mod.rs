@@ -6,6 +6,11 @@
 //! ResNets needs a smaller LR to tolerate staleness). `Sgd` therefore
 //! carries an optional per-partition LR scale.
 
+pub mod kernel;
+
+use anyhow::{ensure, Result};
+
+use crate::pool::{self, PoolVec};
 use crate::tensor::Tensor;
 
 /// Learning-rate schedule, evaluated per iteration.
@@ -44,7 +49,8 @@ impl Schedule {
 }
 
 /// SGD with momentum / Nesterov / weight decay, one velocity buffer per
-/// parameter tensor of one partition.
+/// parameter tensor of one partition. Velocity buffers are leased from
+/// the tensor pool, so they recycle across partitions and runs.
 #[derive(Debug, Clone)]
 pub struct Sgd {
     pub schedule: Schedule,
@@ -53,7 +59,7 @@ pub struct Sgd {
     pub weight_decay: f32,
     /// Per-partition multiplier on the scheduled LR (Table 7).
     pub lr_scale: f32,
-    velocity: Vec<Vec<f32>>,
+    velocity: Vec<PoolVec>,
 }
 
 impl Sgd {
@@ -66,37 +72,67 @@ impl Sgd {
         self
     }
 
-    /// Apply one update: params <- params - lr * (grad + wd*param), with
-    /// momentum buffers created lazily. This is the L3 hot loop (§Perf).
-    pub fn step(&mut self, iter: usize, params: &mut [Tensor], grads: &[Tensor]) {
-        debug_assert_eq!(params.len(), grads.len());
+    /// Apply one update: params <- params - lr * (grad + wd*param), via
+    /// the fused kernel. This is the L3 hot loop (§Perf).
+    ///
+    /// Momentum buffers initialize lazily exactly once (first step); any
+    /// later params/velocity arity or length mismatch is an error —
+    /// silently resetting momentum would corrupt optimizer state across
+    /// a checkpoint restore or a partition change.
+    pub fn step(&mut self, iter: usize, params: &mut [Tensor], grads: &[Tensor]) -> Result<()> {
+        ensure!(
+            params.len() == grads.len(),
+            "sgd step: {} params vs {} grads",
+            params.len(),
+            grads.len()
+        );
         let lr = (self.schedule.lr(iter) as f32) * self.lr_scale;
-        if self.velocity.len() != params.len() {
-            self.velocity = params.iter().map(|p| vec![0.0; p.data.len()]).collect();
-        }
         let mu = self.momentum;
         let wd = self.weight_decay;
-        for ((p, g), v) in params.iter_mut().zip(grads).zip(self.velocity.iter_mut()) {
-            debug_assert_eq!(p.data.len(), g.data.len());
+        if mu != 0.0 {
+            if self.velocity.is_empty() {
+                self.velocity =
+                    params.iter().map(|p| pool::acquire_zeroed(p.numel())).collect();
+            }
+            ensure!(
+                self.velocity.len() == params.len(),
+                "sgd step: velocity holds {} buffers but got {} param tensors; \
+                 refusing to silently reset momentum (fresh optimizer required \
+                 after repartitioning)",
+                self.velocity.len(),
+                params.len()
+            );
+        }
+        for (i, (p, g)) in params.iter_mut().zip(grads).enumerate() {
+            ensure!(
+                p.numel() == g.numel(),
+                "sgd step: param {i} has {} elements, grad has {}",
+                p.numel(),
+                g.numel()
+            );
             if mu == 0.0 {
-                for (pv, gv) in p.data.iter_mut().zip(&g.data) {
-                    let d = gv + wd * *pv;
-                    *pv -= lr * d;
-                }
-            } else if self.nesterov {
-                for ((pv, gv), vv) in p.data.iter_mut().zip(&g.data).zip(v.iter_mut()) {
-                    let d = gv + wd * *pv;
-                    *vv = mu * *vv + d;
-                    *pv -= lr * (d + mu * *vv);
-                }
+                kernel::fused_update(p.data_mut(), g.data(), None, lr, mu, false, wd);
             } else {
-                for ((pv, gv), vv) in p.data.iter_mut().zip(&g.data).zip(v.iter_mut()) {
-                    let d = gv + wd * *pv;
-                    *vv = mu * *vv + d;
-                    *pv -= lr * *vv;
-                }
+                let v = &mut self.velocity[i];
+                ensure!(
+                    v.len() == p.numel(),
+                    "sgd step: velocity {i} has {} elements, param has {}; \
+                     refusing to silently reset momentum",
+                    v.len(),
+                    p.numel()
+                );
+                kernel::fused_update(
+                    p.data_mut(),
+                    g.data(),
+                    Some(v.as_mut_slice()),
+                    lr,
+                    mu,
+                    self.nesterov,
+                    wd,
+                );
             }
         }
+        Ok(())
     }
 }
 
@@ -172,17 +208,17 @@ mod tests {
     fn vanilla_sgd_update() {
         let mut o = Sgd::new(Schedule::Const { base: 0.5 }, 0.0, false, 0.0);
         let mut p = vec![t(&[1.0, 2.0])];
-        o.step(0, &mut p, &[t(&[1.0, -1.0])]);
-        assert_eq!(p[0].data, vec![0.5, 2.5]);
+        o.step(0, &mut p, &[t(&[1.0, -1.0])]).unwrap();
+        assert_eq!(p[0].data(), &[0.5, 2.5]);
     }
 
     #[test]
     fn momentum_accumulates() {
         let mut o = Sgd::new(Schedule::Const { base: 1.0 }, 0.9, false, 0.0);
         let mut p = vec![t(&[0.0])];
-        o.step(0, &mut p, &[t(&[1.0])]); // v=1, p=-1
-        o.step(1, &mut p, &[t(&[1.0])]); // v=1.9, p=-2.9
-        assert!((p[0].data[0] + 2.9).abs() < 1e-6);
+        o.step(0, &mut p, &[t(&[1.0])]).unwrap(); // v=1, p=-1
+        o.step(1, &mut p, &[t(&[1.0])]).unwrap(); // v=1.9, p=-2.9
+        assert!((p[0].data()[0] + 2.9).abs() < 1e-6);
     }
 
     #[test]
@@ -192,25 +228,56 @@ mod tests {
         let mut nest = Sgd::new(Schedule::Const { base: 1.0 }, 0.9, true, 0.0);
         let mut pp = vec![t(&[0.0])];
         let mut pn = vec![t(&[0.0])];
-        plain.step(0, &mut pp, std::slice::from_ref(&g));
-        nest.step(0, &mut pn, std::slice::from_ref(&g));
-        assert!(pn[0].data[0] < pp[0].data[0]); // nesterov looks ahead
+        plain.step(0, &mut pp, std::slice::from_ref(&g)).unwrap();
+        nest.step(0, &mut pn, std::slice::from_ref(&g)).unwrap();
+        assert!(pn[0].data()[0] < pp[0].data()[0]); // nesterov looks ahead
     }
 
     #[test]
     fn weight_decay_pulls_to_zero() {
         let mut o = Sgd::new(Schedule::Const { base: 0.1 }, 0.0, false, 0.5);
         let mut p = vec![t(&[1.0])];
-        o.step(0, &mut p, &[t(&[0.0])]);
-        assert!((p[0].data[0] - 0.95).abs() < 1e-6);
+        o.step(0, &mut p, &[t(&[0.0])]).unwrap();
+        assert!((p[0].data()[0] - 0.95).abs() < 1e-6);
     }
 
     #[test]
     fn lr_scale_applies() {
         let mut o = Sgd::new(Schedule::Const { base: 1.0 }, 0.0, false, 0.0).with_lr_scale(0.1);
         let mut p = vec![t(&[0.0])];
-        o.step(0, &mut p, &[t(&[1.0])]);
-        assert!((p[0].data[0] + 0.1).abs() < 1e-7);
+        o.step(0, &mut p, &[t(&[1.0])]).unwrap();
+        assert!((p[0].data()[0] + 0.1).abs() < 1e-7);
+    }
+
+    #[test]
+    fn velocity_arity_mismatch_is_an_explicit_error() {
+        // Seed behavior silently re-zeroed momentum when the param list
+        // changed mid-training; that must now fail loudly.
+        let mut o = Sgd::new(Schedule::Const { base: 0.1 }, 0.9, false, 0.0);
+        let mut p1 = vec![t(&[0.0])];
+        o.step(0, &mut p1, &[t(&[1.0])]).unwrap();
+        let mut p2 = vec![t(&[0.0]), t(&[0.0])];
+        let err = o.step(1, &mut p2, &[t(&[1.0]), t(&[1.0])]).unwrap_err();
+        assert!(err.to_string().contains("refusing to silently reset"), "{err}");
+    }
+
+    #[test]
+    fn velocity_length_mismatch_is_an_explicit_error() {
+        let mut o = Sgd::new(Schedule::Const { base: 0.1 }, 0.9, false, 0.0);
+        let mut p1 = vec![t(&[0.0, 0.0])];
+        o.step(0, &mut p1, &[t(&[1.0, 1.0])]).unwrap();
+        let mut p2 = vec![t(&[0.0, 0.0, 0.0])];
+        assert!(o.step(1, &mut p2, &[t(&[1.0, 1.0, 1.0])]).is_err());
+    }
+
+    #[test]
+    fn vanilla_mode_skips_velocity_allocation() {
+        let mut o = Sgd::new(Schedule::Const { base: 0.1 }, 0.0, false, 0.0);
+        let mut p = vec![t(&[1.0; 16])];
+        o.step(0, &mut p, &[t(&[1.0; 16])]).unwrap();
+        // changing arity is fine without momentum: no state to corrupt
+        let mut p2 = vec![t(&[1.0]), t(&[2.0])];
+        o.step(1, &mut p2, &[t(&[0.0]), t(&[0.0])]).unwrap();
     }
 
     #[test]

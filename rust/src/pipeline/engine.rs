@@ -3,13 +3,18 @@
 //! The single-process `XlaExecutor` holds a vector of these; each worker
 //! thread of the threaded runtime owns exactly one (its "accelerator"
 //! state), mirroring the paper's one-partition-per-GPU deployment.
+//!
+//! §Perf: each engine owns an `InputScratch` so the positional literal
+//! list is assembled into a persistent buffer, and stage outputs are
+//! split by moving tensors out of the result vec (no per-call clones of
+//! gradient or carry tensors).
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use crate::meta::PartitionMeta;
 use crate::model::PartitionParams;
 use crate::optim::Sgd;
-use crate::runtime::{InputBuilder, StagePrograms};
+use crate::runtime::{InputScratch, StagePrograms};
 use crate::tensor::{IntTensor, Tensor};
 
 use super::executor::LastResult;
@@ -20,6 +25,7 @@ pub struct PartitionEngine {
     pub params: PartitionParams,
     pub optim: Sgd,
     pub update_count: usize,
+    scratch: InputScratch,
 }
 
 impl PartitionEngine {
@@ -29,7 +35,14 @@ impl PartitionEngine {
         params: PartitionParams,
         optim: Sgd,
     ) -> Self {
-        PartitionEngine { meta, programs, params, optim, update_count: 0 }
+        PartitionEngine {
+            meta,
+            programs,
+            params,
+            optim,
+            update_count: 0,
+            scratch: InputScratch::new(),
+        }
     }
 
     fn take_state(&mut self, outputs: &mut Vec<Tensor>, n_keep: usize) {
@@ -40,10 +53,11 @@ impl PartitionEngine {
         }
     }
 
-    fn apply_update(&mut self, grads: &[Tensor]) {
-        self.optim.step(self.update_count, &mut self.params.params, grads);
+    fn apply_update(&mut self, grads: &[Tensor]) -> Result<()> {
+        self.optim.step(self.update_count, &mut self.params.params, grads)?;
         self.update_count += 1;
         self.params.version += 1;
+        Ok(())
     }
 
     pub fn forward(&mut self, seed: i32, carry: &[Tensor]) -> Result<Vec<Tensor>> {
@@ -52,13 +66,12 @@ impl PartitionEngine {
             .fwd
             .as_ref()
             .ok_or_else(|| anyhow!("partition {} has no fwd program", self.meta.index))?;
-        let inputs = InputBuilder::new()
-            .tensors(&self.params.params)?
-            .tensors(&self.params.state)?
-            .seed(seed)
-            .tensors(carry)?
-            .build();
-        let mut out = prog.run(&inputs)?;
+        self.scratch.clear();
+        self.scratch.push_tensors(&self.params.params)?;
+        self.scratch.push_tensors(&self.params.state)?;
+        self.scratch.push_seed(seed);
+        self.scratch.push_tensors(carry)?;
+        let mut out = prog.run(self.scratch.literals())?;
         let n_carry = self.meta.carry_out.len();
         self.take_state(&mut out, n_carry);
         Ok(out)
@@ -70,23 +83,31 @@ impl PartitionEngine {
             .last
             .as_ref()
             .ok_or_else(|| anyhow!("partition {} has no last program", self.meta.index))?;
-        let inputs = InputBuilder::new()
-            .tensors(&self.params.params)?
-            .tensors(&self.params.state)?
-            .seed(seed)
-            .tensors(carry)?
-            .ints(labels)?
-            .build();
-        let mut out = prog.run(&inputs)?;
+        self.scratch.clear();
+        self.scratch.push_tensors(&self.params.params)?;
+        self.scratch.push_tensors(&self.params.state)?;
+        self.scratch.push_seed(seed);
+        self.scratch.push_tensors(carry)?;
+        self.scratch.push_ints(labels)?;
+        let mut out = prog.run(self.scratch.literals())?;
         let n_carry = self.meta.carry_in.len();
         let n_params = self.params.params.len();
+        let keep = 2 + n_carry + n_params;
+        ensure!(
+            out.len() == keep + self.params.state.len(),
+            "last stage of partition {} returned {} outputs, want {}",
+            self.meta.index,
+            out.len(),
+            keep + self.params.state.len()
+        );
         let loss = out[0].scalar();
         let correct = out[1].scalar();
-        let gcarry: Vec<Tensor> = out[2..2 + n_carry].to_vec();
-        let grads: Vec<Tensor> = out[2 + n_carry..2 + n_carry + n_params].to_vec();
-        let keep = 2 + n_carry + n_params;
         self.take_state(&mut out, keep);
-        self.apply_update(&grads);
+        // out is now [loss, correct, gcarry.., dparams..]; move the
+        // tails out instead of cloning them.
+        let grads: Vec<Tensor> = out.drain(2 + n_carry..).collect();
+        let gcarry: Vec<Tensor> = out.drain(2..).collect();
+        self.apply_update(&grads)?;
         Ok(LastResult { loss, correct, gcarry_in: gcarry })
     }
 
@@ -101,32 +122,30 @@ impl PartitionEngine {
             .bwd
             .as_ref()
             .ok_or_else(|| anyhow!("partition {} has no bwd program", self.meta.index))?;
-        let inputs = InputBuilder::new()
-            .tensors(&self.params.params)?
-            .tensors(&self.params.state)?
-            .seed(seed)
-            .tensors(carry_in)?
-            .tensors(gcarry_out)?
-            .build();
-        let mut out = prog.run(&inputs)?;
+        self.scratch.clear();
+        self.scratch.push_tensors(&self.params.params)?;
+        self.scratch.push_tensors(&self.params.state)?;
+        self.scratch.push_seed(seed);
+        self.scratch.push_tensors(carry_in)?;
+        self.scratch.push_tensors(gcarry_out)?;
+        let mut out = prog.run(self.scratch.literals())?;
         let n_carry_in = self.meta.carry_in.len();
         let grads: Vec<Tensor> = out.drain(n_carry_in..).collect();
-        self.apply_update(&grads);
+        self.apply_update(&grads)?;
         Ok(out)
     }
 
-    pub fn eval_forward(&self, carry: &[Tensor]) -> Result<Vec<Tensor>> {
+    pub fn eval_forward(&mut self, carry: &[Tensor]) -> Result<Vec<Tensor>> {
         let prog = if self.meta.is_last() {
             self.programs.last_eval.as_ref()
         } else {
             self.programs.fwd_eval.as_ref()
         }
         .ok_or_else(|| anyhow!("partition {} has no eval program", self.meta.index))?;
-        let inputs = InputBuilder::new()
-            .tensors(&self.params.params)?
-            .tensors(&self.params.state)?
-            .tensors(carry)?
-            .build();
-        prog.run(&inputs)
+        self.scratch.clear();
+        self.scratch.push_tensors(&self.params.params)?;
+        self.scratch.push_tensors(&self.params.state)?;
+        self.scratch.push_tensors(carry)?;
+        prog.run(self.scratch.literals())
     }
 }

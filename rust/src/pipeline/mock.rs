@@ -28,11 +28,14 @@ pub struct MockExecutor {
 }
 
 fn tag(t: &[Tensor]) -> u64 {
-    t[0].data[0] as u64
+    t[0].data()[0] as u64
 }
 
 fn tagged(b: u64) -> Vec<Tensor> {
-    vec![Tensor::from_vec(&[1], vec![b as f32]).unwrap()]
+    // Pooled construction: the mock's data plane recycles backing
+    // stores exactly like the XLA executor's, so scheduler benches and
+    // the zero-alloc steady-state test measure the real cycle behavior.
+    vec![Tensor::filled(&[1], b as f32)]
 }
 
 impl MockExecutor {

@@ -91,6 +91,11 @@ pub struct Pipeline<E: StageExecutor> {
     p: usize,
     fwd_reg: Vec<Option<InFlight>>,
     bwd_reg: Vec<Option<GradMsg>>,
+    /// Persistent scratch for the register-read phase: values taken from
+    /// the registers at cycle start live here, so a steady-state cycle
+    /// allocates no vectors and clones no tensors (§Perf).
+    fwd_cur: Vec<Option<InFlight>>,
+    bwd_cur: Vec<Option<GradMsg>>,
     fifos: Vec<ActivationFifo>,
     labels_q: VecDeque<(u64, IntTensor)>,
     cycle: u64,
@@ -110,6 +115,8 @@ impl<E: StageExecutor> Pipeline<E> {
             p,
             fwd_reg: (0..p.saturating_sub(1)).map(|_| None).collect(),
             bwd_reg: (0..p.saturating_sub(1)).map(|_| None).collect(),
+            fwd_cur: (0..p.saturating_sub(1)).map(|_| None).collect(),
+            bwd_cur: (0..p.saturating_sub(1)).map(|_| None).collect(),
             fifos: (0..p.saturating_sub(1)).map(|_| ActivationFifo::default()).collect(),
             labels_q: VecDeque::new(),
             cycle: 0,
@@ -148,17 +155,22 @@ impl<E: StageExecutor> Pipeline<E> {
 
     /// Execute one pipeline cycle, optionally feeding a new mini-batch
     /// into FS_1. Returns a TrainEvent if the fused last stage ran.
+    ///
+    /// §Perf: the register-read snapshot goes into persistent scratch
+    /// (`fwd_cur`/`bwd_cur`) and every in-flight payload is *moved* —
+    /// into the executor, the activation FIFO, or the next register —
+    /// so a steady-state cycle performs no tensor clones and no vector
+    /// allocations beyond what the executor itself produces.
     pub fn cycle(&mut self, feed: Option<Feed>) -> Result<Option<TrainEvent>> {
         // ---- register reads: values written in previous cycles --------
-        let fwd_in: Vec<Option<InFlight>> =
-            (0..self.p - 1).map(|e| self.fwd_reg[e].take()).collect::<Vec<_>>();
-        let bwd_in: Vec<Option<GradMsg>> =
-            (0..self.p - 1).map(|e| self.bwd_reg[e].take()).collect::<Vec<_>>();
+        // (double buffering: `*_cur` is this cycle's read snapshot,
+        // `*_reg` collects writes that become visible next cycle)
+        for e in 0..self.p - 1 {
+            self.fwd_cur[e] = self.fwd_reg[e].take();
+            self.bwd_cur[e] = self.bwd_reg[e].take();
+        }
 
-        let mut fwd_out: Vec<Option<InFlight>> = (0..self.p - 1).map(|_| None).collect();
-        let mut bwd_out: Vec<Option<GradMsg>> = (0..self.p - 1).map(|_| None).collect();
-
-        let feed_inflight = feed.map(|f| {
+        let mut feed_inflight = feed.map(|f| {
             self.labels_q.push_back((f.batch_id, f.labels));
             self.fed += 1;
             InFlight { batch_id: f.batch_id, seed: f.seed, carry: vec![f.x] }
@@ -167,18 +179,18 @@ impl<E: StageExecutor> Pipeline<E> {
         // ---- forward stages 0..P-2 (cycle-start weights) --------------
         let mut event = None;
         for p in 0..self.p - 1 {
-            let input = if p == 0 { feed_inflight.clone() } else { fwd_in[p - 1].clone() };
+            let input = if p == 0 { feed_inflight.take() } else { self.fwd_cur[p - 1].take() };
             if let Some(inf) = input {
                 let carry_out = self.exec.forward(p, inf.seed, &inf.carry)?;
-                self.fifos[p].push(inf.clone());
-                fwd_out[p] =
+                self.fwd_reg[p] =
                     Some(InFlight { batch_id: inf.batch_id, seed: inf.seed, carry: carry_out });
+                self.fifos[p].push(inf);
             }
         }
 
         // ---- fused last stage ------------------------------------------
         let last_input =
-            if self.p == 1 { feed_inflight } else { fwd_in.last().cloned().flatten() };
+            if self.p == 1 { feed_inflight.take() } else { self.fwd_cur[self.p - 2].take() };
         if let Some(inf) = last_input {
             let labels = match self.labels_q.pop_front() {
                 Some((id, l)) if id == inf.batch_id => l,
@@ -191,7 +203,7 @@ impl<E: StageExecutor> Pipeline<E> {
             };
             let res = self.exec.last(inf.seed, &inf.carry, &labels)?;
             if self.p > 1 {
-                bwd_out[self.p - 2] =
+                self.bwd_reg[self.p - 2] =
                     Some(GradMsg { batch_id: inf.batch_id, gcarry: res.gcarry_in });
             } else {
                 self.completed_backward += 1;
@@ -207,20 +219,17 @@ impl<E: StageExecutor> Pipeline<E> {
 
         // ---- backward stages P-2..0 ------------------------------------
         for p in (0..self.p - 1).rev() {
-            if let Some(g) = bwd_in[p].clone() {
+            if let Some(g) = self.bwd_cur[p].take() {
                 let saved = self.fifos[p].pop_for(g.batch_id)?;
                 let gcarry_in = self.exec.backward(p, saved.seed, &saved.carry, &g.gcarry)?;
                 if p > 0 {
-                    bwd_out[p - 1] = Some(GradMsg { batch_id: g.batch_id, gcarry: gcarry_in });
+                    self.bwd_reg[p - 1] = Some(GradMsg { batch_id: g.batch_id, gcarry: gcarry_in });
                 } else {
                     self.completed_backward += 1;
                 }
             }
         }
 
-        // ---- register writes become visible next cycle -----------------
-        self.fwd_reg = fwd_out;
-        self.bwd_reg = bwd_out;
         self.cycle += 1;
         Ok(event)
     }

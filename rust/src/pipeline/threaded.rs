@@ -170,6 +170,11 @@ fn worker_main(
     events: Sender<FromWorker>,
     batch_size: usize,
 ) -> Result<()> {
+    // Each worker leases tensor buffers from a private pool, so the
+    // steady-state acquire path never contends on the global pool's
+    // lock (buffers acquired here but dropped by a neighbour return to
+    // this pool — contention is at worst pairwise along pipe edges).
+    let _pool = crate::pool::PoolScope::new();
     // Each worker is its own accelerator: own PJRT client + programs.
     let runtime = Runtime::cpu()?;
     let pm = meta.partitions[idx].clone();

@@ -1,0 +1,506 @@
+//! Pooled tensor backing stores (§Perf tentpole).
+//!
+//! Every `Tensor` in the training cycle is backed by a `PoolVec`: an
+//! f32 buffer leased from a `TensorPool` that recycles buffers by size
+//! class when the last owner drops. Training workloads touch a small,
+//! fixed set of tensor sizes (per-partition weights, carries, batch
+//! inputs), so after a few warmup cycles every acquire is served from
+//! the shelf and the steady-state cycle performs **zero heap
+//! allocations of tensor backing stores** — verified by the pool-stats
+//! counters and `tests/pool_and_kernel.rs`.
+//!
+//! Sharing: `Storage` wraps `Arc<PoolVec>`, so cloning a tensor (e.g.
+//! a carry crossing an mpsc channel in `pipeline/threaded.rs`, or a
+//! `params_snapshot`) is a refcount bump, never a deep copy. Mutation
+//! goes through `Storage::make_mut`, which is in-place when unique and
+//! copy-on-write (into a fresh pooled buffer) when shared — the SGD hot
+//! loop mutates uniquely-owned weights in place.
+//!
+//! Scoping: `TensorPool::global()` serves all allocations by default.
+//! Tests that assert on counters install a private pool for the current
+//! thread with `PoolScope::new()`, so parallel test threads cannot
+//! perturb each other's stats. A buffer always returns to the pool that
+//! issued it ("home"), regardless of which thread drops it.
+//!
+//! Safety contract: a recycled buffer is returned with **arbitrary
+//! contents**. The only constructors of `Tensor`/`IntTensor` either
+//! fully overwrite the buffer or zero it (`acquire_zeroed`), so stale
+//! data can never leak through the public tensor API — property-tested
+//! in `tests/pool_and_kernel.rs`.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Per-size-class shelf capacity; bounds pool memory at
+/// `MAX_BUFS_PER_CLASS * live size classes` buffers.
+const MAX_BUFS_PER_CLASS: usize = 32;
+
+/// Global cap on shelved scalars (1 GiB of f32); beyond it, returned
+/// buffers are freed instead of shelved.
+const MAX_RETAINED_SCALARS: u64 = 1 << 28;
+
+#[derive(Default)]
+struct Shelves {
+    by_len: HashMap<usize, Vec<Vec<f32>>>,
+    retained_scalars: u64,
+}
+
+impl Shelves {
+    fn take(&mut self, len: usize) -> Option<Vec<f32>> {
+        let buf = self.by_len.get_mut(&len)?.pop()?;
+        self.retained_scalars -= len as u64;
+        Some(buf)
+    }
+
+    /// Shelve `data` if caps allow; returns false (freeing it) otherwise.
+    fn try_shelve(&mut self, data: Vec<f32>) -> bool {
+        let len = data.len() as u64;
+        if self.retained_scalars + len > MAX_RETAINED_SCALARS {
+            return false;
+        }
+        let bucket = self.by_len.entry(data.len()).or_default();
+        if bucket.len() >= MAX_BUFS_PER_CLASS {
+            return false;
+        }
+        bucket.push(data);
+        self.retained_scalars += len;
+        true
+    }
+}
+
+/// Counter snapshot for perf assertions and diagnostics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Buffers created with a fresh heap allocation.
+    pub fresh_allocs: u64,
+    /// Acquires served from the shelf (no heap allocation).
+    pub reuses: u64,
+    /// Buffers returned to the shelf on drop.
+    pub recycled: u64,
+    /// Buffers freed on drop (pool disabled, odd capacity, or caps hit).
+    pub discarded: u64,
+    /// Scalars currently sitting on shelves.
+    pub retained_scalars: u64,
+}
+
+impl PoolStats {
+    /// Fraction of acquires that avoided a heap allocation.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.fresh_allocs + self.reuses;
+        if total == 0 {
+            0.0
+        } else {
+            self.reuses as f64 / total as f64
+        }
+    }
+}
+
+struct PoolInner {
+    shelves: Mutex<Shelves>,
+    enabled: AtomicBool,
+    fresh_allocs: AtomicU64,
+    reuses: AtomicU64,
+    recycled: AtomicU64,
+    discarded: AtomicU64,
+}
+
+impl PoolInner {
+    fn new() -> Self {
+        PoolInner {
+            shelves: Mutex::new(Shelves::default()),
+            enabled: AtomicBool::new(true),
+            fresh_allocs: AtomicU64::new(0),
+            reuses: AtomicU64::new(0),
+            recycled: AtomicU64::new(0),
+            discarded: AtomicU64::new(0),
+        }
+    }
+
+    fn acquire(this: &Arc<PoolInner>, len: usize) -> PoolVec {
+        if len > 0 && this.enabled.load(Ordering::Relaxed) {
+            let reused = this.shelves.lock().expect("pool lock").take(len);
+            if let Some(buf) = reused {
+                this.reuses.fetch_add(1, Ordering::Relaxed);
+                return PoolVec { data: buf, home: Arc::clone(this) };
+            }
+        }
+        if len > 0 {
+            this.fresh_allocs.fetch_add(1, Ordering::Relaxed);
+        }
+        PoolVec { data: vec![0.0; len], home: Arc::clone(this) }
+    }
+
+    fn release(&self, data: Vec<f32>) {
+        let len = data.len();
+        // Only shelve exact-capacity buffers: `acquire(len)` hands out
+        // whatever sits in bucket `len`, so capacity must equal length.
+        if len == 0 || !self.enabled.load(Ordering::Relaxed) || data.capacity() != len {
+            self.discarded.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let shelved = self.shelves.lock().expect("pool lock").try_shelve(data);
+        if shelved {
+            self.recycled.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.discarded.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn stats(&self) -> PoolStats {
+        let retained = self.shelves.lock().expect("pool lock").retained_scalars;
+        PoolStats {
+            fresh_allocs: self.fresh_allocs.load(Ordering::Relaxed),
+            reuses: self.reuses.load(Ordering::Relaxed),
+            recycled: self.recycled.load(Ordering::Relaxed),
+            discarded: self.discarded.load(Ordering::Relaxed),
+            retained_scalars: retained,
+        }
+    }
+}
+
+static GLOBAL: OnceLock<Arc<PoolInner>> = OnceLock::new();
+
+thread_local! {
+    /// Stack of scoped pools; the innermost serves this thread's
+    /// acquires (see `PoolScope`).
+    static SCOPED: RefCell<Vec<Arc<PoolInner>>> = const { RefCell::new(Vec::new()) };
+}
+
+fn global_inner() -> Arc<PoolInner> {
+    Arc::clone(GLOBAL.get_or_init(|| Arc::new(PoolInner::new())))
+}
+
+fn current_inner() -> Arc<PoolInner> {
+    SCOPED
+        .with(|s| s.borrow().last().cloned())
+        .unwrap_or_else(global_inner)
+}
+
+/// Handle to a buffer pool (the process-global one, or a scoped one).
+#[derive(Clone)]
+pub struct TensorPool {
+    inner: Arc<PoolInner>,
+}
+
+impl TensorPool {
+    /// The pool serving the current thread (scoped pool if one is
+    /// installed, else the process-global pool).
+    pub fn current() -> TensorPool {
+        TensorPool { inner: current_inner() }
+    }
+
+    /// The process-global pool.
+    pub fn global() -> TensorPool {
+        TensorPool { inner: global_inner() }
+    }
+
+    /// Lease a buffer of exactly `len` scalars. Contents are
+    /// ARBITRARY (recycled buffers keep old data) — the caller must
+    /// fully overwrite, or use `acquire_zeroed`.
+    pub fn acquire(&self, len: usize) -> PoolVec {
+        PoolInner::acquire(&self.inner, len)
+    }
+
+    /// Lease a buffer of `len` zeros.
+    pub fn acquire_zeroed(&self, len: usize) -> PoolVec {
+        let mut b = PoolInner::acquire(&self.inner, len);
+        b.data.fill(0.0);
+        b
+    }
+
+    /// Wrap an externally-allocated vec so it recycles into this pool
+    /// on drop (exact-capacity vecs only; others are freed normally).
+    pub fn adopt(&self, data: Vec<f32>) -> PoolVec {
+        PoolVec { data, home: Arc::clone(&self.inner) }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.inner.stats()
+    }
+
+    /// Turn recycling on/off (off: every acquire allocates fresh and
+    /// every drop frees — the "before" configuration for benches).
+    pub fn set_enabled(&self, enabled: bool) {
+        self.inner.enabled.store(enabled, Ordering::Relaxed);
+        if !enabled {
+            // Flush shelves so disabled means "no pool memory held".
+            let mut sh = self.inner.shelves.lock().expect("pool lock");
+            sh.by_len.clear();
+            sh.retained_scalars = 0;
+        }
+    }
+}
+
+/// Convenience: lease from the current pool.
+pub fn acquire(len: usize) -> PoolVec {
+    TensorPool::current().acquire(len)
+}
+
+/// Convenience: lease zeros from the current pool.
+pub fn acquire_zeroed(len: usize) -> PoolVec {
+    TensorPool::current().acquire_zeroed(len)
+}
+
+/// Convenience: adopt a vec into the current pool.
+pub fn adopt(data: Vec<f32>) -> PoolVec {
+    TensorPool::current().adopt(data)
+}
+
+/// Installs a fresh private pool for the current thread; restores the
+/// previous pool on drop. Lets tests assert on counters without
+/// interference from parallel test threads.
+pub struct PoolScope {
+    pool: TensorPool,
+}
+
+impl PoolScope {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> PoolScope {
+        let inner = Arc::new(PoolInner::new());
+        SCOPED.with(|s| s.borrow_mut().push(Arc::clone(&inner)));
+        PoolScope { pool: TensorPool { inner } }
+    }
+
+    pub fn pool(&self) -> &TensorPool {
+        &self.pool
+    }
+}
+
+impl Drop for PoolScope {
+    fn drop(&mut self) {
+        SCOPED.with(|s| {
+            s.borrow_mut().pop();
+        });
+    }
+}
+
+/// An f32 buffer leased from a pool; returns home when dropped.
+pub struct PoolVec {
+    data: Vec<f32>,
+    home: Arc<PoolInner>,
+}
+
+impl PoolVec {
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+impl Deref for PoolVec {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+impl DerefMut for PoolVec {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+}
+
+impl Clone for PoolVec {
+    fn clone(&self) -> PoolVec {
+        let mut fresh = PoolInner::acquire(&self.home, self.data.len());
+        fresh.data.copy_from_slice(&self.data);
+        fresh
+    }
+}
+
+impl Drop for PoolVec {
+    fn drop(&mut self) {
+        let data = std::mem::take(&mut self.data);
+        self.home.release(data);
+    }
+}
+
+impl std::fmt::Debug for PoolVec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_list().entries(self.data.iter()).finish()
+    }
+}
+
+/// Shared, cheaply-clonable tensor storage with copy-on-write mutation.
+#[derive(Clone, Debug)]
+pub struct Storage {
+    buf: Arc<PoolVec>,
+}
+
+impl Storage {
+    pub fn from_pool_vec(buf: PoolVec) -> Storage {
+        Storage { buf: Arc::new(buf) }
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// True if both handles view the same buffer (fast equality path).
+    pub fn ptr_eq(&self, other: &Storage) -> bool {
+        Arc::ptr_eq(&self.buf, &other.buf)
+    }
+
+    /// Mutable view: in place when uniquely owned, copy-on-write into a
+    /// fresh pooled buffer when shared.
+    pub fn make_mut(&mut self) -> &mut [f32] {
+        if Arc::get_mut(&mut self.buf).is_none() {
+            self.buf = Arc::new((*self.buf).clone());
+        }
+        Arc::get_mut(&mut self.buf)
+            .expect("storage unique after copy-on-write")
+            .as_mut_slice()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recycles_by_size_class() {
+        let scope = PoolScope::new();
+        let pool = scope.pool().clone();
+        let a = pool.acquire(128);
+        drop(a);
+        let b = pool.acquire(128);
+        let st = pool.stats();
+        assert_eq!(st.fresh_allocs, 1, "{st:?}");
+        assert_eq!(st.reuses, 1, "{st:?}");
+        assert_eq!(st.recycled, 1, "{st:?}");
+        drop(b);
+        // different size class -> fresh allocation
+        let _c = pool.acquire(64);
+        assert_eq!(pool.stats().fresh_allocs, 2);
+    }
+
+    #[test]
+    fn acquire_zeroed_always_zeroes() {
+        let scope = PoolScope::new();
+        let pool = scope.pool().clone();
+        let mut a = pool.acquire(16);
+        a.as_mut_slice().fill(7.5);
+        drop(a);
+        let b = pool.acquire_zeroed(16);
+        assert!(b.iter().all(|&v| v == 0.0));
+        assert_eq!(pool.stats().reuses, 1, "must reuse the dirtied buffer");
+    }
+
+    #[test]
+    fn adopt_recycles_exact_capacity_only() {
+        let scope = PoolScope::new();
+        let pool = scope.pool().clone();
+        drop(pool.adopt(vec![1.0; 8]));
+        assert_eq!(pool.stats().recycled, 1);
+        // over-capacity vec is freed, not shelved
+        let mut v = Vec::with_capacity(100);
+        v.extend_from_slice(&[0.0; 8]);
+        drop(pool.adopt(v));
+        assert_eq!(pool.stats().recycled, 1);
+        assert_eq!(pool.stats().discarded, 1);
+    }
+
+    #[test]
+    fn disabled_pool_never_shelves() {
+        let scope = PoolScope::new();
+        let pool = scope.pool().clone();
+        pool.set_enabled(false);
+        drop(pool.acquire(32));
+        drop(pool.acquire(32));
+        let st = pool.stats();
+        assert_eq!(st.fresh_allocs, 2);
+        assert_eq!(st.reuses, 0);
+        assert_eq!(st.retained_scalars, 0);
+    }
+
+    #[test]
+    fn per_class_cap_bounds_memory() {
+        let scope = PoolScope::new();
+        let pool = scope.pool().clone();
+        let bufs: Vec<PoolVec> = (0..MAX_BUFS_PER_CLASS + 5).map(|_| pool.acquire(4)).collect();
+        drop(bufs);
+        let st = pool.stats();
+        assert_eq!(st.recycled, MAX_BUFS_PER_CLASS as u64);
+        assert_eq!(st.discarded, 5);
+        assert_eq!(st.retained_scalars, 4 * MAX_BUFS_PER_CLASS as u64);
+    }
+
+    #[test]
+    fn scope_isolates_and_restores() {
+        // Outer scope shields this test from the global pool (which
+        // other test threads share); the inner scope nests on top.
+        let _outer_scope = PoolScope::new();
+        let outer = TensorPool::current();
+        let outer_allocs = outer.stats().fresh_allocs;
+        {
+            let scope = PoolScope::new();
+            let _x = acquire(8); // routed to the innermost scoped pool
+            assert_eq!(scope.pool().stats().fresh_allocs, 1);
+        }
+        assert_eq!(outer.stats().fresh_allocs, outer_allocs);
+        let _y = acquire(8); // back to the outer scope's pool
+        assert_eq!(outer.stats().fresh_allocs, outer_allocs + 1);
+    }
+
+    #[test]
+    fn buffers_return_to_their_home_pool() {
+        let scope = PoolScope::new();
+        let pool = scope.pool().clone();
+        let buf = pool.acquire(12);
+        drop(scope); // scope ends while the lease is live
+        drop(buf); // must return to its issuing pool, not the global one
+        assert_eq!(pool.stats().recycled, 1);
+    }
+
+    #[test]
+    fn storage_cow_copies_only_when_shared() {
+        let scope = PoolScope::new();
+        let pool = scope.pool().clone();
+        let mut a = Storage::from_pool_vec(pool.acquire_zeroed(4));
+        let before = pool.stats().fresh_allocs;
+        a.make_mut()[0] = 1.0; // unique: in place
+        assert_eq!(pool.stats().fresh_allocs, before);
+        let b = a.clone();
+        assert!(a.ptr_eq(&b));
+        a.make_mut()[1] = 2.0; // shared: copy-on-write
+        assert!(!a.ptr_eq(&b));
+        assert_eq!(b.as_slice(), &[1.0, 0.0, 0.0, 0.0]);
+        assert_eq!(a.as_slice(), &[1.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn hit_rate_reflects_reuse() {
+        let scope = PoolScope::new();
+        let pool = scope.pool().clone();
+        for _ in 0..10 {
+            drop(pool.acquire(256));
+        }
+        let st = pool.stats();
+        assert_eq!(st.fresh_allocs, 1);
+        assert_eq!(st.reuses, 9);
+        assert!(st.hit_rate() > 0.89);
+    }
+}

@@ -22,7 +22,9 @@ pub struct Program {
 
 impl Program {
     /// Execute with positional literal inputs; unpack the output tuple
-    /// into host tensors using the recorded shapes.
+    /// into host tensors using the recorded shapes. Output tensors are
+    /// built in pooled storage (`Tensor::from_literal`), so at steady
+    /// state this path performs no backing-store allocations.
     pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<Tensor>> {
         let result = self
             .exe
@@ -32,7 +34,7 @@ impl Program {
             .to_literal_sync()
             .with_context(|| format!("fetching result of {}", self.name))?;
         // aot.py lowers with return_tuple=True: outputs arrive as a tuple.
-        let mut parts = lit.to_tuple().context("decompose output tuple")?;
+        let parts = lit.to_tuple().context("decompose output tuple")?;
         if parts.len() != self.out_shapes.len() {
             bail!(
                 "{}: expected {} outputs, got {}",
@@ -42,7 +44,7 @@ impl Program {
             );
         }
         let mut out = Vec::with_capacity(parts.len());
-        for (lit, shape) in parts.drain(..).zip(self.out_shapes.iter()) {
+        for (lit, shape) in parts.into_iter().zip(self.out_shapes.iter()) {
             if lit.element_count() != numel(shape) {
                 bail!(
                     "{}: output numel mismatch: literal {} vs shape {:?}",
@@ -152,40 +154,52 @@ impl Runtime {
     }
 }
 
-/// Assemble the positional input list for a fwd/bwd/last call.
-pub struct InputBuilder {
+/// Reusable positional-input assembly for fwd/bwd/last calls.
+///
+/// Replaces the per-call `InputBuilder` (which allocated a fresh
+/// `Vec<Literal>` every stage execution): each `PartitionEngine` owns
+/// one `InputScratch` and the outer vec's capacity persists across the
+/// whole run. Call `clear()` first, push positionally, then pass
+/// `literals()` to `Program::run`.
+#[derive(Default)]
+pub struct InputScratch {
     literals: Vec<xla::Literal>,
 }
 
-impl InputBuilder {
+impl InputScratch {
     pub fn new() -> Self {
-        InputBuilder { literals: Vec::new() }
+        InputScratch { literals: Vec::new() }
     }
 
-    pub fn tensors(mut self, ts: &[Tensor]) -> Result<Self> {
+    /// Drop the previous call's literals, keeping the vec's capacity.
+    pub fn clear(&mut self) {
+        self.literals.clear();
+    }
+
+    pub fn push_tensors(&mut self, ts: &[Tensor]) -> Result<()> {
+        self.literals.reserve(ts.len());
         for t in ts {
             self.literals.push(t.to_literal()?);
         }
-        Ok(self)
+        Ok(())
     }
 
-    pub fn seed(mut self, seed: i32) -> Self {
+    pub fn push_seed(&mut self, seed: i32) {
         self.literals.push(seed_literal(seed));
-        self
     }
 
-    pub fn ints(mut self, t: &IntTensor) -> Result<Self> {
+    pub fn push_ints(&mut self, t: &IntTensor) -> Result<()> {
         self.literals.push(t.to_literal()?);
-        Ok(self)
+        Ok(())
     }
 
-    pub fn build(self) -> Vec<xla::Literal> {
-        self.literals
+    pub fn literals(&self) -> &[xla::Literal] {
+        &self.literals
     }
 }
 
-impl Default for InputBuilder {
-    fn default() -> Self {
-        Self::new()
-    }
+/// True when the crate is linked against a real XLA backend rather than
+/// the bundled stub; XLA-dependent tests and benches gate on this.
+pub fn backend_available() -> bool {
+    !xla::IS_STUB
 }

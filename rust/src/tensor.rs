@@ -4,60 +4,224 @@
 //! activations and gradients are host tensors; stage programs consume and
 //! produce PJRT literals. Conversions are the FFI boundary and are
 //! profiled in the §Perf pass.
+//!
+//! Since the zero-copy data plane (DESIGN.md §Perf):
+//! * backing stores are pooled (`crate::pool`): construction after
+//!   warmup reuses recycled buffers instead of allocating;
+//! * storage is shared (`Arc`-based): `Tensor::clone` is a refcount
+//!   bump, mutation via `data_mut` is copy-on-write;
+//! * shapes are inline (`Shape`, max rank 8): cloning a tensor touches
+//!   no heap at all;
+//! * `to_literal`/`from_literal` are single-copy (no intermediate
+//!   rank-1 literal, no fresh `Vec` per conversion).
 
 use anyhow::{bail, Context, Result};
 
-/// Dense f32 tensor (row-major).
-#[derive(Clone, Debug, PartialEq)]
+use crate::pool::{self, PoolVec, Storage};
+
+/// Maximum tensor rank (matches the checkpoint format's sanity bound).
+pub const MAX_RANK: usize = 8;
+
+/// Inline tensor shape: no heap allocation, `Copy`, derefs to `[usize]`.
+#[derive(Clone, Copy)]
+pub struct Shape {
+    dims: [usize; MAX_RANK],
+    rank: u8,
+}
+
+impl Shape {
+    /// Build from a slice. Panics on rank > `MAX_RANK` (no real network
+    /// comes close; fallible construction goes through
+    /// `Tensor::from_vec`, which checks first).
+    pub fn from_slice(dims: &[usize]) -> Shape {
+        assert!(
+            dims.len() <= MAX_RANK,
+            "tensor rank {} exceeds MAX_RANK {}",
+            dims.len(),
+            MAX_RANK
+        );
+        let mut s = Shape { dims: [0; MAX_RANK], rank: dims.len() as u8 };
+        s.dims[..dims.len()].copy_from_slice(dims);
+        s
+    }
+
+    pub fn as_slice(&self) -> &[usize] {
+        &self.dims[..self.rank as usize]
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank as usize
+    }
+
+    pub fn numel(&self) -> usize {
+        self.as_slice().iter().product()
+    }
+
+    /// Dims as i64 for literal APIs, in a stack buffer.
+    fn dims_i64(&self) -> ([i64; MAX_RANK], usize) {
+        let mut out = [0i64; MAX_RANK];
+        for (o, &d) in out.iter_mut().zip(self.as_slice()) {
+            *o = d as i64;
+        }
+        (out, self.rank())
+    }
+}
+
+impl std::ops::Deref for Shape {
+    type Target = [usize];
+
+    fn deref(&self) -> &[usize] {
+        self.as_slice()
+    }
+}
+
+impl std::fmt::Debug for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.as_slice().fmt(f)
+    }
+}
+
+impl PartialEq for Shape {
+    fn eq(&self, other: &Shape) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for Shape {}
+
+impl PartialEq<Vec<usize>> for Shape {
+    fn eq(&self, other: &Vec<usize>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<Shape> for Vec<usize> {
+    fn eq(&self, other: &Shape) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<&[usize]> for Shape {
+    fn eq(&self, other: &&[usize]) -> bool {
+        self.as_slice() == *other
+    }
+}
+
+impl From<&[usize]> for Shape {
+    fn from(dims: &[usize]) -> Shape {
+        Shape::from_slice(dims)
+    }
+}
+
+/// Dense f32 tensor (row-major) over pooled, shared storage.
+#[derive(Clone, Debug)]
 pub struct Tensor {
-    pub shape: Vec<usize>,
-    pub data: Vec<f32>,
+    pub shape: Shape,
+    data: Storage,
+}
+
+impl PartialEq for Tensor {
+    fn eq(&self, other: &Tensor) -> bool {
+        self.shape == other.shape
+            && (self.data.ptr_eq(&other.data) || self.data.as_slice() == other.data.as_slice())
+    }
 }
 
 impl Tensor {
     pub fn zeros(shape: &[usize]) -> Self {
-        Tensor { shape: shape.to_vec(), data: vec![0.0; numel(shape)] }
+        let s = Shape::from_slice(shape);
+        Tensor { shape: s, data: Storage::from_pool_vec(pool::acquire_zeroed(s.numel())) }
     }
 
     pub fn ones(shape: &[usize]) -> Self {
-        Tensor { shape: shape.to_vec(), data: vec![1.0; numel(shape)] }
+        Tensor::filled(shape, 1.0)
     }
 
+    /// Pooled construction with every element set to `v`.
+    pub fn filled(shape: &[usize], v: f32) -> Self {
+        let s = Shape::from_slice(shape);
+        let mut buf = pool::acquire(s.numel());
+        buf.as_mut_slice().fill(v);
+        Tensor { shape: s, data: Storage::from_pool_vec(buf) }
+    }
+
+    /// Adopt an existing vec (it recycles into the pool when the tensor
+    /// fully drops, if exactly sized).
     pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        if shape.len() > MAX_RANK {
+            bail!("shape {:?} exceeds max rank {}", shape, MAX_RANK);
+        }
         if numel(shape) != data.len() {
             bail!("shape {:?} wants {} elements, got {}", shape, numel(shape), data.len());
         }
-        Ok(Tensor { shape: shape.to_vec(), data })
+        Ok(Tensor {
+            shape: Shape::from_slice(shape),
+            data: Storage::from_pool_vec(pool::adopt(data)),
+        })
+    }
+
+    /// Wrap a pool lease directly (the zero-copy construction path).
+    pub fn from_pooled(shape: &[usize], buf: PoolVec) -> Result<Self> {
+        if shape.len() > MAX_RANK {
+            bail!("shape {:?} exceeds max rank {}", shape, MAX_RANK);
+        }
+        if numel(shape) != buf.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, numel(shape), buf.len());
+        }
+        Ok(Tensor { shape: Shape::from_slice(shape), data: Storage::from_pool_vec(buf) })
+    }
+
+    /// Read-only view of the elements.
+    pub fn data(&self) -> &[f32] {
+        self.data.as_slice()
+    }
+
+    /// Mutable view: in place when this tensor is the sole owner,
+    /// copy-on-write otherwise.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        self.data.make_mut()
+    }
+
+    /// True if `other` shares this tensor's backing buffer.
+    pub fn shares_storage(&self, other: &Tensor) -> bool {
+        self.data.ptr_eq(&other.data)
     }
 
     pub fn numel(&self) -> usize {
-        numel(&self.shape)
+        self.shape.numel()
     }
 
     pub fn scalar(&self) -> f32 {
         debug_assert_eq!(self.numel(), 1);
-        self.data[0]
+        self.data()[0]
     }
 
     /// L2 norm (metrics / debugging).
     pub fn norm(&self) -> f32 {
-        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+        self.data().iter().map(|v| v * v).sum::<f32>().sqrt()
     }
 
     pub fn is_finite(&self) -> bool {
-        self.data.iter().all(|v| v.is_finite())
+        self.data().iter().all(|v| v.is_finite())
     }
 
+    /// Single-copy conversion to a shaped literal.
     pub fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        xla::Literal::vec1(&self.data)
-            .reshape(&dims)
-            .context("reshape literal")
+        let (dims, rank) = self.shape.dims_i64();
+        xla::Literal::from_f32_and_dims(self.data(), &dims[..rank])
+            .context("tensor -> literal")
     }
 
+    /// Single-copy conversion from a literal into pooled storage.
     pub fn from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<Self> {
-        let data = lit.to_vec::<f32>().context("literal -> f32 vec")?;
-        Tensor::from_vec(shape, data)
+        let n = numel(shape);
+        let src = lit.f32_slice().context("literal -> f32 view")?;
+        if src.len() != n {
+            bail!("literal has {} elements, shape {:?} wants {}", src.len(), shape, n);
+        }
+        let mut buf = pool::acquire(n);
+        buf.as_mut_slice().copy_from_slice(src);
+        Tensor::from_pooled(shape, buf)
     }
 }
 
@@ -77,10 +241,15 @@ impl IntTensor {
     }
 
     pub fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        xla::Literal::vec1(&self.data)
-            .reshape(&dims)
-            .context("reshape literal")
+        let mut dims = [0i64; MAX_RANK];
+        if self.shape.len() > MAX_RANK {
+            bail!("shape {:?} exceeds max rank {}", self.shape, MAX_RANK);
+        }
+        for (o, &d) in dims.iter_mut().zip(&self.shape) {
+            *o = d as i64;
+        }
+        xla::Literal::from_i32_and_dims(&self.data, &dims[..self.shape.len()])
+            .context("int tensor -> literal")
     }
 }
 
@@ -118,6 +287,7 @@ mod tests {
     fn literal_roundtrip_f32() {
         let t = Tensor::from_vec(&[2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
         let lit = t.to_literal().unwrap();
+        assert_eq!(lit.dims(), &[2, 3]);
         let back = Tensor::from_literal(&lit, &[2, 3]).unwrap();
         assert_eq!(t, back);
     }
@@ -133,5 +303,34 @@ mod tests {
     fn scalar_seed() {
         let lit = seed_literal(42);
         assert_eq!(lit.to_vec::<i32>().unwrap(), vec![42]);
+    }
+
+    #[test]
+    fn clone_shares_storage_and_mutation_unshares() {
+        let a = Tensor::filled(&[8], 3.0);
+        let mut b = a.clone();
+        assert!(a.shares_storage(&b));
+        assert_eq!(a, b);
+        b.data_mut()[0] = -1.0;
+        assert!(!a.shares_storage(&b));
+        assert_eq!(a.data()[0], 3.0);
+        assert_eq!(b.data()[0], -1.0);
+    }
+
+    #[test]
+    fn shape_compares_with_vecs_and_slices() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.shape, vec![2, 3]);
+        assert!(t.shape == [2usize, 3].as_slice());
+        assert_eq!(t.shape.rank(), 2);
+        assert_eq!(t.shape.numel(), 6);
+        assert_eq!(&t.shape[..], &[2, 3]);
+    }
+
+    #[test]
+    fn from_literal_rejects_wrong_numel() {
+        let t = Tensor::filled(&[4], 1.0);
+        let lit = t.to_literal().unwrap();
+        assert!(Tensor::from_literal(&lit, &[5]).is_err());
     }
 }

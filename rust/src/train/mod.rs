@@ -68,7 +68,7 @@ pub fn count_correct(logits: &Tensor, labels: &[i32], batch: usize) -> usize {
     let classes = logits.numel() / batch;
     let mut correct = 0;
     for i in 0..batch {
-        let row = &logits.data[i * classes..(i + 1) * classes];
+        let row = &logits.data()[i * classes..(i + 1) * classes];
         let mut best = 0usize;
         for (j, v) in row.iter().enumerate() {
             if *v > row[best] {

@@ -17,6 +17,19 @@ pub struct BenchStats {
 }
 
 impl BenchStats {
+    /// Machine-readable form (BENCH_micro.json schema): name ->
+    /// {mean_ms, p50_ms, p95_ms, min_ms, iters}.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{num, obj};
+        obj(vec![
+            ("mean_ms", num(self.mean_s * 1e3)),
+            ("p50_ms", num(self.p50_s * 1e3)),
+            ("p95_ms", num(self.p95_s * 1e3)),
+            ("min_ms", num(self.min_s * 1e3)),
+            ("iters", num(self.iters as f64)),
+        ])
+    }
+
     pub fn report(&self) -> String {
         format!(
             "{:<40} iters={:<5} mean={:>10.3}ms p50={:>10.3}ms p95={:>10.3}ms min={:>10.3}ms",

@@ -1,0 +1,246 @@
+//! §Perf acceptance tests: pooled storage safety, fused-kernel
+//! equivalence, and the zero-allocation steady-state cycle.
+//!
+//! All pool-stats assertions run under a `PoolScope`, which installs a
+//! private pool for the current thread — parallel test threads cannot
+//! perturb the counters.
+
+use pipestale::optim::{kernel, Schedule, Sgd};
+use pipestale::pipeline::mock::MockExecutor;
+use pipestale::pipeline::{Feed, Pipeline};
+use pipestale::pool::PoolScope;
+use pipestale::tensor::{IntTensor, Tensor};
+use pipestale::util::prop;
+use pipestale::util::rng::Pcg32;
+
+// ---------------------------------------------------------------------
+// Pool safety: recycled buffers never leak stale data through the
+// public tensor constructors.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_recycled_buffers_never_expose_stale_data() {
+    prop::check(
+        0x5EED_900,
+        60,
+        |rng| {
+            let len = 1 + rng.below(512) as usize;
+            let seed = rng.next_u64();
+            (len, seed)
+        },
+        |&(len, seed)| {
+            if len == 0 {
+                return Ok(()); // shrinker artifact: empty tensors hold no data
+            }
+            let scope = PoolScope::new();
+            let pool = scope.pool().clone();
+            let mut rng = Pcg32::seeded(seed);
+
+            // Dirty a buffer of this size class, then recycle it.
+            let junk = Tensor::filled(&[len], f32::from_bits(0xDEAD_BEEF) + rng.normal());
+            drop(junk);
+            if pool.stats().recycled != 1 {
+                return Err(format!("buffer was not recycled: {:?}", pool.stats()));
+            }
+
+            // zeros() must fully zero a recycled buffer.
+            let z = Tensor::zeros(&[len]);
+            if !z.data().iter().all(|&v| v == 0.0) {
+                return Err("zeros() exposed stale data".into());
+            }
+            drop(z);
+
+            // ones()/filled() must fully overwrite.
+            let o = Tensor::ones(&[len]);
+            if !o.data().iter().all(|&v| v == 1.0) {
+                return Err("ones() exposed stale data".into());
+            }
+            drop(o);
+
+            // from_literal must copy exactly the literal's contents.
+            let src: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+            let expect = src.clone();
+            let lit = Tensor::from_vec(&[len], src).unwrap().to_literal().unwrap();
+            let round = Tensor::from_literal(&lit, &[len]).unwrap();
+            if round.data() != expect.as_slice() {
+                return Err("from_literal exposed stale data".into());
+            }
+
+            // The reuse path must actually have been exercised.
+            if pool.stats().reuses == 0 {
+                return Err(format!("pool never reused: {:?}", pool.stats()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn clone_is_shared_until_mutated() {
+    let a = Tensor::filled(&[256], 4.0);
+    let b = a.clone();
+    assert!(a.shares_storage(&b), "clone must not deep-copy");
+    let mut c = b.clone();
+    c.data_mut()[7] = -4.0;
+    assert!(!c.shares_storage(&a), "mutation must unshare");
+    assert_eq!(a.data()[7], 4.0);
+}
+
+// ---------------------------------------------------------------------
+// Fused SGD kernel: bitwise equivalence with the pre-fusion scalar
+// loops across momentum / Nesterov / weight-decay combinations.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_fused_sgd_matches_reference_bitwise() {
+    prop::check(
+        0x0097_1D,
+        60,
+        |rng| {
+            let len = 1 + rng.below(300) as usize;
+            let mode = rng.below(6) as usize;
+            let seed = rng.next_u64();
+            (len, mode, seed)
+        },
+        |&(len, mode, seed)| {
+            // (momentum, nesterov, weight decay) grid
+            let (mu, nesterov, wd) = match mode {
+                0 => (0.0, false, 0.0),
+                1 => (0.0, false, 5e-4),
+                2 => (0.9, false, 0.0),
+                3 => (0.9, false, 1e-4),
+                4 => (0.9, true, 0.0),
+                _ => (0.9, true, 5e-4),
+            };
+            let mut rng = Pcg32::seeded(seed);
+            let init: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+
+            let mut opt = Sgd::new(Schedule::Const { base: 0.05 }, mu, nesterov, wd);
+            let mut fused = vec![Tensor::from_vec(&[len], init.clone()).unwrap()];
+            let mut p_ref = init;
+            let mut v_ref = vec![0.0f32; len];
+            let lr = 0.05f64 as f32;
+
+            for step in 0..4 {
+                let g: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+                let gt = Tensor::from_vec(&[len], g.clone()).unwrap();
+                opt.step(step, &mut fused, std::slice::from_ref(&gt))
+                    .map_err(|e| e.to_string())?;
+                kernel::reference_update(&mut p_ref, &g, &mut v_ref, lr, mu, nesterov, wd);
+                for (i, (a, b)) in fused[0].data().iter().zip(&p_ref).enumerate() {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!(
+                            "step {step} elem {i}: fused {a} ({:#x}) != reference {b} ({:#x}) \
+                             [mu={mu} nesterov={nesterov} wd={wd}]",
+                            a.to_bits(),
+                            b.to_bits()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Zero-allocation steady state: a warm P=4 pipeline cycle allocates no
+// tensor backing stores (acceptance criterion of the §Perf tentpole).
+// ---------------------------------------------------------------------
+
+#[test]
+fn steady_state_cycle_allocates_no_backing_stores() {
+    let scope = PoolScope::new();
+    let pool = scope.pool().clone();
+    let mut pipe = Pipeline::new(MockExecutor::new(4), 1);
+    let mut b = 0u64;
+    let mut cycle = |pipe: &mut Pipeline<MockExecutor>| {
+        let f = Feed {
+            batch_id: b,
+            seed: b as i32,
+            x: Tensor::filled(&[1], b as f32),
+            labels: IntTensor::from_vec(&[1], vec![0]).unwrap(),
+        };
+        pipe.cycle(Some(f)).unwrap();
+        b += 1;
+    };
+
+    // Warmup: fill the pipe and prime every size class.
+    for _ in 0..50 {
+        cycle(&mut pipe);
+    }
+    let warm = pool.stats();
+    assert!(warm.reuses > 0, "pool must be serving reuses after warmup: {warm:?}");
+
+    // Steady state: no fresh backing-store allocations over 200 cycles.
+    for _ in 0..200 {
+        cycle(&mut pipe);
+    }
+    let steady = pool.stats();
+    assert_eq!(
+        steady.fresh_allocs, warm.fresh_allocs,
+        "steady-state cycles must not allocate backing stores \
+         (warm {warm:?} vs steady {steady:?})"
+    );
+    assert!(steady.reuses > warm.reuses, "steady-state cycles must hit the pool");
+
+    // And the pipeline still retires everything correctly.
+    let events = pipe.drain().unwrap();
+    assert!(!events.is_empty());
+    assert!(pipe.is_drained());
+}
+
+#[test]
+fn disabled_pool_allocates_every_cycle() {
+    // Control for the test above: with recycling off, the same loop
+    // must allocate continuously — proving the counter actually
+    // measures the cycle's allocations.
+    let scope = PoolScope::new();
+    let pool = scope.pool().clone();
+    pool.set_enabled(false);
+    let mut pipe = Pipeline::new(MockExecutor::new(4), 1);
+    for b in 0..50u64 {
+        let f = Feed {
+            batch_id: b,
+            seed: b as i32,
+            x: Tensor::filled(&[1], b as f32),
+            labels: IntTensor::from_vec(&[1], vec![0]).unwrap(),
+        };
+        pipe.cycle(Some(f)).unwrap();
+    }
+    let mid = pool.stats().fresh_allocs;
+    for b in 50..100u64 {
+        let f = Feed {
+            batch_id: b,
+            seed: b as i32,
+            x: Tensor::filled(&[1], b as f32),
+            labels: IntTensor::from_vec(&[1], vec![0]).unwrap(),
+        };
+        pipe.cycle(Some(f)).unwrap();
+    }
+    assert!(pool.stats().fresh_allocs > mid, "disabled pool must keep allocating");
+}
+
+// ---------------------------------------------------------------------
+// Sequential schedule equivalence is untouched by the zero-copy
+// refactor: one batch through a drained pipe still matches
+// sequential_step exactly (guards against aliasing bugs in the shared
+// storage — a CoW mistake would corrupt one of the two traces).
+// ---------------------------------------------------------------------
+
+#[test]
+fn refactored_cycle_preserves_schedule_semantics() {
+    let p = 3;
+    let mut a = Pipeline::new(MockExecutor::new(p), 1);
+    let mut bpipe = Pipeline::new(MockExecutor::new(p), 1);
+    let feed = |b: u64| Feed {
+        batch_id: b,
+        seed: b as i32,
+        x: Tensor::filled(&[1], b as f32),
+        labels: IntTensor::from_vec(&[1], vec![0]).unwrap(),
+    };
+    a.sequential_step(feed(0)).unwrap();
+    bpipe.cycle(Some(feed(0))).unwrap();
+    bpipe.drain().unwrap();
+    assert_eq!(a.exec.trace, bpipe.exec.trace);
+}

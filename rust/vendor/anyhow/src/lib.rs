@@ -1,0 +1,246 @@
+//! Offline shim of the `anyhow` API surface pipestale uses.
+//!
+//! The testbed has no crates.io access, so this workspace vendors a
+//! minimal reimplementation: `Error` (a boxed message chain), `Result`,
+//! the `anyhow!` / `bail!` / `ensure!` macros, and the `Context`
+//! extension trait for `Result` and `Option`. Error chains render like
+//! upstream anyhow: `{}` prints the outermost message, `{:#}` the full
+//! `a: b: c` chain, `{:?}` a "Caused by" listing.
+//!
+//! Like upstream, `Error` deliberately does NOT implement
+//! `std::error::Error`, which is what makes the blanket
+//! `From<E: std::error::Error>` conversion coherent.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A message with an optional chain of causes.
+pub struct Error {
+    head: Box<Frame>,
+}
+
+struct Frame {
+    msg: String,
+    cause: Option<Box<Frame>>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { head: Box::new(Frame { msg: m.to_string(), cause: None }) }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error {
+            head: Box::new(Frame { msg: c.to_string(), cause: Some(self.head) }),
+        }
+    }
+
+    /// The cause messages, outermost first.
+    pub fn chain(&self) -> Vec<&str> {
+        let mut out = Vec::new();
+        let mut cur = Some(&self.head);
+        while let Some(f) = cur {
+            out.push(f.msg.as_str());
+            cur = f.cause.as_ref();
+        }
+        out
+    }
+
+    /// The innermost message (the original failure).
+    pub fn root_cause(&self) -> &str {
+        self.chain().last().copied().unwrap_or("")
+    }
+
+    fn from_std<E: std::error::Error>(e: E) -> Error {
+        // Capture the source chain eagerly as messages.
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut frame: Option<Box<Frame>> = None;
+        for msg in msgs.into_iter().rev() {
+            frame = Some(Box::new(Frame { msg, cause: frame }));
+        }
+        Error { head: frame.expect("at least one message") }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain().join(": "))
+        } else {
+            write!(f, "{}", self.head.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.head.msg)?;
+        let chain = self.chain();
+        if chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for msg in &chain[1..] {
+                write!(f, "\n    {msg}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::from_std(e)
+    }
+}
+
+mod private {
+    /// Sealed conversion used by `Context` so it covers both plain
+    /// `std::error::Error` results and already-`anyhow` results.
+    pub trait IntoAnyhow {
+        fn into_anyhow(self) -> crate::Error;
+    }
+
+    impl IntoAnyhow for crate::Error {
+        fn into_anyhow(self) -> crate::Error {
+            self
+        }
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoAnyhow for E {
+        fn into_anyhow(self) -> crate::Error {
+            crate::Error::from_std(self)
+        }
+    }
+}
+
+/// Attach context to errors (mirrors `anyhow::Context`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: private::IntoAnyhow> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into_anyhow().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into_anyhow().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an `Error` from a format string or a printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Early-return with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($arg)+)
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(concat!("condition failed: ", stringify!($cond)))
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading weights")
+            .unwrap_err()
+            .context("loading checkpoint");
+        assert_eq!(format!("{e}"), "loading checkpoint");
+        assert_eq!(format!("{e:#}"), "loading checkpoint: reading weights: disk on fire");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(inner().unwrap_err().root_cause(), "disk on fire");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(n: usize) -> Result<usize> {
+            ensure!(n < 10, "n too big: {n}");
+            if n == 3 {
+                bail!("three is right out");
+            }
+            Ok(n)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert!(f(12).unwrap_err().to_string().contains("too big"));
+        assert!(f(3).unwrap_err().to_string().contains("right out"));
+        let e = anyhow!(String::from("plain message"));
+        assert_eq!(e.to_string(), "plain message");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+    }
+
+    #[test]
+    fn bare_ensure_names_the_condition() {
+        fn f(a: usize, b: usize) -> Result<()> {
+            ensure!(a == b);
+            Ok(())
+        }
+        assert!(f(1, 2).unwrap_err().to_string().contains("a == b"));
+    }
+}

@@ -1,0 +1,215 @@
+//! Offline shim of the `log` crate facade used by pipestale.
+//!
+//! Provides `Level`, `LevelFilter`, `Metadata`, `Record`, the `Log`
+//! trait, `set_logger`/`set_max_level`, and the level macros. The
+//! consumer (util/logging.rs) installs a static logger exactly as with
+//! upstream `log`.
+
+use std::fmt;
+use std::sync::atomic::{AtomicPtr, AtomicUsize, Ordering};
+
+/// Verbosity of a single log record. Ordered: Error < Warn < ... < Trace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    Error = 1,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+/// Maximum verbosity the facade lets through.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    Off = 0,
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl PartialEq<LevelFilter> for Level {
+    fn eq(&self, other: &LevelFilter) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<LevelFilter> for Level {
+    fn partial_cmp(&self, other: &LevelFilter) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+impl PartialEq<Level> for LevelFilter {
+    fn eq(&self, other: &Level) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<Level> for LevelFilter {
+    fn partial_cmp(&self, other: &Level) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+/// Record metadata (level only — targets/modules are out of scope).
+#[derive(Clone, Copy, Debug)]
+pub struct Metadata {
+    level: Level,
+}
+
+impl Metadata {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+}
+
+/// One log event, borrowed for the duration of the `Log::log` call.
+pub struct Record<'a> {
+    metadata: Metadata,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    pub fn metadata(&self) -> &Metadata {
+        &self.metadata
+    }
+
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+}
+
+/// A logger sink, installed once per process.
+pub trait Log: Sync + Send {
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    fn log(&self, record: &Record);
+    fn flush(&self);
+}
+
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "a logger is already installed")
+    }
+}
+
+impl std::error::Error for SetLoggerError {}
+
+// The installed logger, stored as a raw pointer to the wide-pointer box.
+static LOGGER: AtomicPtr<&'static dyn Log> = AtomicPtr::new(std::ptr::null_mut());
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(LevelFilter::Off as usize);
+
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    let boxed = Box::into_raw(Box::new(logger));
+    match LOGGER.compare_exchange(
+        std::ptr::null_mut(),
+        boxed,
+        Ordering::SeqCst,
+        Ordering::SeqCst,
+    ) {
+        Ok(_) => Ok(()),
+        Err(_) => {
+            // Someone else installed first; free our box.
+            unsafe { drop(Box::from_raw(boxed)) };
+            Err(SetLoggerError(()))
+        }
+    }
+}
+
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, Ordering::SeqCst);
+}
+
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        0 => LevelFilter::Off,
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        _ => LevelFilter::Trace,
+    }
+}
+
+/// Macro plumbing: dispatch one record to the installed logger.
+#[doc(hidden)]
+pub fn __private_log(level: Level, args: fmt::Arguments) {
+    if level > max_level() {
+        return;
+    }
+    let ptr = LOGGER.load(Ordering::Relaxed);
+    if ptr.is_null() {
+        return;
+    }
+    let logger: &'static dyn Log = unsafe { *ptr };
+    let record = Record { metadata: Metadata { level }, args };
+    if logger.enabled(record.metadata()) {
+        logger.log(&record);
+    }
+}
+
+#[macro_export]
+macro_rules! log {
+    ($lvl:expr, $($arg:tt)+) => {
+        $crate::__private_log($lvl, format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Error, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Warn, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Info, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Debug, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Trace, $($arg)+) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_orderings_match_upstream() {
+        assert!(Level::Error < Level::Trace);
+        assert!(Level::Info <= LevelFilter::Info);
+        assert!(Level::Debug > LevelFilter::Info);
+        assert!(LevelFilter::Warn < Level::Info);
+    }
+
+    #[test]
+    fn logging_without_logger_is_a_noop() {
+        info!("nobody is listening: {}", 42);
+    }
+
+    #[test]
+    fn max_level_roundtrip() {
+        set_max_level(LevelFilter::Debug);
+        assert_eq!(max_level(), LevelFilter::Debug);
+        set_max_level(LevelFilter::Off);
+        assert_eq!(max_level(), LevelFilter::Off);
+    }
+}

@@ -1,0 +1,330 @@
+//! Host-only stub of the `xla` (xla_extension) binding surface.
+//!
+//! The testbed image has no xla_extension shared library, so this crate
+//! supplies the exact API shape pipestale's runtime compiles against:
+//! `Literal` is a real host container (fully functional — conversions,
+//! reshape, tuples), while `PjRtClient::compile` fails with a clear
+//! "stub backend" error. Everything except actually executing stage
+//! programs therefore works offline: tensor<->literal conversion, the
+//! mock-executor pipeline, the DES, benches and property tests.
+//!
+//! Swapping in a real binding: replace the `xla = { path = "xla-stub" }`
+//! dependency with an xla_extension binding crate exposing this surface
+//! (see rust/DESIGN.md §Backends). `IS_STUB` gates runtime-dependent
+//! tests and benches.
+//!
+//! Beyond the upstream surface, the stub exposes two single-copy
+//! constructors/readers (`from_f32_and_dims`, `f32_slice` and the i32
+//! twins) used by pipestale's zero-copy data plane; upstream bindings
+//! offer equivalents (`create_from_shape_and_untyped_data`, raw literal
+//! views).
+
+use std::fmt;
+use std::path::Path;
+
+/// True for this crate: lets consumers skip compile/execute paths.
+pub const IS_STUB: bool = true;
+
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Self {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element payload of a literal.
+#[derive(Debug, Clone, PartialEq)]
+enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host literal: typed buffer + dimensions (row-major), or a tuple.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    payload: Payload,
+    dims: Vec<i64>,
+}
+
+/// Element types a literal can hold (f32/i32 are all pipestale needs).
+pub trait NativeType: Copy + Sized {
+    fn to_payload(v: &[Self]) -> Payload;
+    fn from_payload(p: &Payload) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn to_payload(v: &[Self]) -> Payload {
+        Payload::F32(v.to_vec())
+    }
+
+    fn from_payload(p: &Payload) -> Result<Vec<Self>> {
+        match p {
+            Payload::F32(v) => Ok(v.clone()),
+            _ => Err(Error::new("literal is not f32")),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn to_payload(v: &[Self]) -> Payload {
+        Payload::I32(v.to_vec())
+    }
+
+    fn from_payload(p: &Payload) -> Result<Vec<Self>> {
+        match p {
+            Payload::I32(v) => Ok(v.clone()),
+            _ => Err(Error::new("literal is not i32")),
+        }
+    }
+}
+
+fn dims_elems(dims: &[i64]) -> usize {
+    dims.iter().map(|&d| d.max(0) as usize).product()
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice (upstream `Literal::vec1`).
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { payload: T::to_payload(v), dims: vec![v.len() as i64] }
+    }
+
+    /// Rank-0 literal (upstream `Literal::scalar`).
+    pub fn scalar(v: i32) -> Literal {
+        Literal { payload: Payload::I32(vec![v]), dims: vec![] }
+    }
+
+    /// Single-copy shaped construction (stub extension; upstream has
+    /// `create_from_shape_and_untyped_data`).
+    pub fn from_f32_and_dims(data: &[f32], dims: &[i64]) -> Result<Literal> {
+        if dims_elems(dims) != data.len() {
+            return Err(Error::new(format!(
+                "dims {dims:?} want {} elements, got {}",
+                dims_elems(dims),
+                data.len()
+            )));
+        }
+        Ok(Literal { payload: Payload::F32(data.to_vec()), dims: dims.to_vec() })
+    }
+
+    /// Single-copy shaped construction for i32 (stub extension).
+    pub fn from_i32_and_dims(data: &[i32], dims: &[i64]) -> Result<Literal> {
+        if dims_elems(dims) != data.len() {
+            return Err(Error::new(format!(
+                "dims {dims:?} want {} elements, got {}",
+                dims_elems(dims),
+                data.len()
+            )));
+        }
+        Ok(Literal { payload: Payload::I32(data.to_vec()), dims: dims.to_vec() })
+    }
+
+    /// Zero-copy read of an f32 payload (stub extension).
+    pub fn f32_slice(&self) -> Result<&[f32]> {
+        match &self.payload {
+            Payload::F32(v) => Ok(v),
+            _ => Err(Error::new("literal is not f32")),
+        }
+    }
+
+    /// Zero-copy read of an i32 payload (stub extension).
+    pub fn i32_slice(&self) -> Result<&[i32]> {
+        match &self.payload {
+            Payload::I32(v) => Ok(v),
+            _ => Err(Error::new("literal is not i32")),
+        }
+    }
+
+    /// Reshape into new dimensions. Mirrors upstream cost: produces a
+    /// fresh literal (payload copy), so the legacy vec1+reshape path
+    /// pays two copies just like xla_extension does.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        if dims_elems(dims) != self.element_count() {
+            return Err(Error::new(format!(
+                "cannot reshape {} elements into {dims:?}",
+                self.element_count()
+            )));
+        }
+        Ok(Literal { payload: self.payload.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy out as a typed vec (upstream `to_vec::<T>()`).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::from_payload(&self.payload)
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.payload {
+            Payload::F32(v) => v.len(),
+            Payload::I32(v) => v.len(),
+            Payload::Tuple(_) => dims_elems(&self.dims),
+        }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Build a tuple literal (used by stub tests; stage programs return
+    /// tuples in the real backend).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { payload: Payload::Tuple(parts), dims: vec![] }
+    }
+
+    /// Decompose a tuple literal (upstream `to_tuple`).
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.payload {
+            Payload::Tuple(parts) => Ok(parts),
+            _ => Err(Error::new("literal is not a tuple")),
+        }
+    }
+}
+
+/// Parsed HLO module placeholder. Parsing is deferred to the real
+/// backend; the stub only checks the file exists so config errors
+/// surface early with a useful message.
+#[derive(Debug)]
+pub struct HloModuleProto {
+    path: std::path::PathBuf,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &Path) -> Result<HloModuleProto> {
+        if !path.exists() {
+            return Err(Error::new(format!("HLO text not found: {}", path.display())));
+        }
+        Ok(HloModuleProto { path: path.to_path_buf() })
+    }
+}
+
+#[derive(Debug)]
+pub struct XlaComputation {
+    _path: std::path::PathBuf,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _path: proto.path.clone() }
+    }
+}
+
+/// Device buffer handle returned by `execute` (never produced by the
+/// stub, but required for the API shape).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.lit.clone())
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new("stub backend cannot execute programs"))
+    }
+}
+
+/// One PJRT device client. The stub client constructs fine (so hosts
+/// without xla_extension can still build executors around mocks) but
+/// refuses to compile programs.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-cpu".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::new(
+            "XLA backend unavailable: pipestale was built against the bundled \
+             stub (rust/xla-stub). Point the `xla` dependency at a real \
+             xla_extension binding to execute stage programs — see \
+             rust/DESIGN.md §Backends",
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec1_reshape_roundtrip() {
+        let l = Literal::vec1(&[0.0f32, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.element_count(), 6);
+        assert_eq!(r.dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn single_copy_paths_match_legacy() {
+        let data = [1.5f32, -2.0, 0.25, 8.0];
+        let fast = Literal::from_f32_and_dims(&data, &[2, 2]).unwrap();
+        let legacy = Literal::vec1(&data).reshape(&[2, 2]).unwrap();
+        assert_eq!(fast, legacy);
+        assert_eq!(fast.f32_slice().unwrap(), &data);
+        assert!(Literal::from_f32_and_dims(&data, &[3, 2]).is_err());
+    }
+
+    #[test]
+    fn typed_mismatch_errors() {
+        let l = Literal::vec1(&[1i32, 2]);
+        assert!(l.to_vec::<f32>().is_err());
+        assert!(l.f32_slice().is_err());
+        assert_eq!(l.i32_slice().unwrap(), &[1, 2]);
+        assert_eq!(Literal::scalar(7).to_vec::<i32>().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn tuple_decomposes() {
+        let t = Literal::tuple(vec![Literal::scalar(1), Literal::vec1(&[1.0f32])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(Literal::scalar(0).to_tuple().is_err());
+    }
+
+    #[test]
+    fn compile_is_gated_with_clear_error() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "stub-cpu");
+        let proto = HloModuleProto { path: std::path::PathBuf::from("/dev/null") };
+        let comp = XlaComputation::from_proto(&proto);
+        let err = client.compile(&comp).unwrap_err().to_string();
+        assert!(err.contains("stub"), "{err}");
+        assert!(IS_STUB);
+    }
+}

@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Tier-1 verification: build, tests, formatting.
+#
+# Everything runs offline against the bundled stub backend (see
+# rust/DESIGN.md §Backends); artifact/XLA-dependent tests skip
+# themselves. Pass --bench to also run the hot-path microbench and
+# refresh results/BENCH_micro.json.
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+cargo build --release --workspace
+cargo test -q --workspace
+cargo fmt --all --check
+
+if [[ "${1:-}" == "--bench" ]]; then
+    cargo bench --bench bench_micro_hotpath
+fi
