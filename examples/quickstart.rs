@@ -7,9 +7,14 @@
 //!   3. hybrid (pipelined prefix + non-pipelined tail, paper §4),
 //! printing loss curves and final accuracies side by side.
 //!
-//! Run: cargo run --release --example quickstart [--iters N]
+//! Runs on whichever backend is available (`--backend auto`): the XLA
+//! executor when AOT artifacts + a real PJRT backend exist, otherwise
+//! the native pure-Rust backend — so this works out of the box with no
+//! artifacts and no Python step.
+//!
+//! Run: cargo run --release --example quickstart [--iters N] [--backend auto|native|xla]
 
-use pipestale::config::{Mode, RunConfig};
+use pipestale::config::{Backend, Mode, RunConfig};
 use pipestale::util::bench::Table;
 use pipestale::util::cli::Command;
 
@@ -19,12 +24,14 @@ fn main() -> anyhow::Result<()> {
     let m = Command::new("quickstart", "pipelined vs non-pipelined vs hybrid on LeNet-5")
         .opt("iters", "300", "training iterations")
         .opt("noise", "1.8", "synthetic dataset noise (higher = harder)")
+        .opt("backend", "auto", "auto | native | xla")
         .parse(&argv)
         .map_err(|u| anyhow::anyhow!("{u}"))?;
     let iters: u64 = m.get_u64("iters").map_err(anyhow::Error::msg)?;
     let noise = m.get_f64("noise").map_err(anyhow::Error::msg)?;
 
     let mut base = RunConfig::new("quickstart_lenet");
+    base.backend = Backend::parse(m.get("backend"))?;
     base.iters = iters;
     base.eval_every = (iters / 5).max(1);
     base.train_size = 1024;

@@ -150,6 +150,33 @@ fn main() {
         pool_stats.hit_rate()
     );
 
+    // ---- native backend: one full pipeline cycle, artifact-free ---------
+    // (the compute twin of the XLA cycle bench below; runs everywhere)
+    {
+        let meta = pipestale::backend::native_config("native_lenet_small").unwrap();
+        let params = ModelParams::init(&meta.partitions, 1).unwrap();
+        let optims = pipestale::train::build_optims(&meta, 1000, 1.0);
+        let exec = pipestale::backend::NativeExecutor::new(meta.clone(), params, optims).unwrap();
+        let mut pipe = Pipeline::new(exec, meta.batch);
+        let spec = pipestale::data::SyntheticSpec { train: 64, test: 32, noise: 1.0, seed: 4 };
+        let (ds, _) = pipestale::data::load_or_synthesize(&meta.dataset, None, &spec).unwrap();
+        let idxs: Vec<usize> = (0..meta.batch).collect();
+        let (x, labels) = ds.gather(&idxs);
+        let mut b = 0u64;
+        let iters = if common::fast() { 10 } else { 30 };
+        let st = bench_n("pipeline cycle (native, lenet-small b16)", 3, iters, || {
+            pipe.cycle(Some(Feed {
+                batch_id: b,
+                seed: batch_seed(3, b),
+                x: x.clone(),
+                labels: labels.clone(),
+            }))
+            .unwrap();
+            b += 1;
+        });
+        rep.push(st);
+    }
+
     // ---- artifact-dependent sections ------------------------------------
     if pipestale::artifacts_present() {
         let st = bench("meta.json parse (resnet110_4s)", 2, 0.5, || {

@@ -1,0 +1,633 @@
+//! Pure-Rust forward/backward compute kernels for the native backend.
+//!
+//! Each kernel mirrors the math of its JAX counterpart in
+//! `python/compile/layers.py` / `python/compile/kernels/ref.py` (NHWC
+//! activations, HWIO conv weights, biased batch-norm variance, XLA-style
+//! SAME padding with `pad_before = total // 2`), so a native stage
+//! computes the same function the AOT-compiled HLO program would — only
+//! the backend differs, not the model. Backward passes are analytic and
+//! finite-difference-checked in `tests/native_backend.rs`.
+//!
+//! Kernels operate on flat `&[f32]` buffers with explicit dimensions;
+//! tensor plumbing (shapes, caches, parameter slicing) lives in
+//! `backend::ops`.
+
+/// Elementwise activation fused into `Dense` or standing alone (`Act`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActKind {
+    None,
+    Relu,
+    Tanh,
+}
+
+impl ActKind {
+    pub fn parse(s: &str) -> Option<ActKind> {
+        match s {
+            "none" => Some(ActKind::None),
+            "relu" => Some(ActKind::Relu),
+            "tanh" => Some(ActKind::Tanh),
+            _ => None,
+        }
+    }
+
+    /// Apply in place.
+    pub fn apply(self, y: &mut [f32]) {
+        match self {
+            ActKind::None => {}
+            ActKind::Relu => {
+                for v in y.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            ActKind::Tanh => {
+                for v in y.iter_mut() {
+                    *v = v.tanh();
+                }
+            }
+        }
+    }
+
+    /// d act / d preactivation, expressed through the *output* value
+    /// (valid for relu/tanh, which is all the model zoo uses).
+    #[inline]
+    pub fn grad_from_output(self, y: f32) -> f32 {
+        match self {
+            ActKind::None => 1.0,
+            ActKind::Relu => {
+                if y > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            ActKind::Tanh => 1.0 - y * y,
+        }
+    }
+}
+
+/// Output spatial dims + top/left padding for a square-kernel conv.
+/// SAME matches XLA: `out = ceil(in/stride)`, `pad_before = total // 2`.
+pub fn conv_out_dims(
+    h: usize,
+    w: usize,
+    k: usize,
+    stride: usize,
+    same: bool,
+) -> (usize, usize, usize, usize) {
+    if same {
+        let oh = (h + stride - 1) / stride;
+        let ow = (w + stride - 1) / stride;
+        let pad_h = ((oh - 1) * stride + k).saturating_sub(h);
+        let pad_w = ((ow - 1) * stride + k).saturating_sub(w);
+        (oh, ow, pad_h / 2, pad_w / 2)
+    } else {
+        ((h - k) / stride + 1, (w - k) / stride + 1, 0, 0)
+    }
+}
+
+/// 2-D convolution forward: x `[n,h,w,cin]`, wgt `[k,k,cin,cout]` (HWIO),
+/// optional bias `[cout]`, out `[n,oh,ow,cout]` (fully overwritten).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_forward(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    wgt: &[f32],
+    k: usize,
+    cout: usize,
+    stride: usize,
+    same: bool,
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    let (oh, ow, pt, pl) = conv_out_dims(h, w, k, stride, same);
+    debug_assert_eq!(out.len(), n * oh * ow * cout);
+    match bias {
+        Some(b) => {
+            for chunk in out.chunks_exact_mut(cout) {
+                chunk.copy_from_slice(b);
+            }
+        }
+        None => out.fill(0.0),
+    }
+    for ni in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let obase = ((ni * oh + oy) * ow + ox) * cout;
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - pt as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * stride + kx) as isize - pl as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let xbase = ((ni * h + iy as usize) * w + ix as usize) * cin;
+                        let wbase = (ky * k + kx) * cin * cout;
+                        for ci in 0..cin {
+                            let xv = x[xbase + ci];
+                            let wrow = &wgt[wbase + ci * cout..wbase + (ci + 1) * cout];
+                            let orow = &mut out[obase..obase + cout];
+                            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                                *o += xv * wv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Conv backward: given dy `[n,oh,ow,cout]`, accumulate dx (zeroed by
+/// caller), dw (zeroed), and optionally db (zeroed).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_backward(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    wgt: &[f32],
+    k: usize,
+    cout: usize,
+    stride: usize,
+    same: bool,
+    dy: &[f32],
+    dx: &mut [f32],
+    dw: &mut [f32],
+    mut db: Option<&mut [f32]>,
+) {
+    let (oh, ow, pt, pl) = conv_out_dims(h, w, k, stride, same);
+    debug_assert_eq!(dy.len(), n * oh * ow * cout);
+    debug_assert_eq!(dx.len(), x.len());
+    debug_assert_eq!(dw.len(), wgt.len());
+    for ni in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let dyrow = &dy[((ni * oh + oy) * ow + ox) * cout..][..cout];
+                if let Some(db) = db.as_deref_mut() {
+                    for (d, &g) in db.iter_mut().zip(dyrow) {
+                        *d += g;
+                    }
+                }
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - pt as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * stride + kx) as isize - pl as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let xbase = ((ni * h + iy as usize) * w + ix as usize) * cin;
+                        let wbase = (ky * k + kx) * cin * cout;
+                        for ci in 0..cin {
+                            let xv = x[xbase + ci];
+                            let wrow = &wgt[wbase + ci * cout..wbase + (ci + 1) * cout];
+                            let dwrow = &mut dw[wbase + ci * cout..wbase + (ci + 1) * cout];
+                            let mut acc = 0.0f32;
+                            for co in 0..cout {
+                                let g = dyrow[co];
+                                acc += g * wrow[co];
+                                dwrow[co] += g * xv;
+                            }
+                            dx[xbase + ci] += acc;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Dense forward: x `[n,din]`, wgt `[din,dout]`, bias `[dout]`,
+/// y `[n,dout]` (fully overwritten, activation applied).
+pub fn dense_forward(
+    x: &[f32],
+    n: usize,
+    din: usize,
+    wgt: &[f32],
+    bias: &[f32],
+    dout: usize,
+    act: ActKind,
+    y: &mut [f32],
+) {
+    debug_assert_eq!(y.len(), n * dout);
+    for ni in 0..n {
+        let yrow = &mut y[ni * dout..(ni + 1) * dout];
+        yrow.copy_from_slice(bias);
+        let xrow = &x[ni * din..(ni + 1) * din];
+        for (di, &xv) in xrow.iter().enumerate() {
+            let wrow = &wgt[di * dout..(di + 1) * dout];
+            for (o, &wv) in yrow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+        act.apply(yrow);
+    }
+}
+
+/// Dense backward: `y` is the *post-activation* forward output; dx/dw/db
+/// must be zeroed by the caller.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_backward(
+    x: &[f32],
+    n: usize,
+    din: usize,
+    wgt: &[f32],
+    dout: usize,
+    act: ActKind,
+    y: &[f32],
+    dy: &[f32],
+    dx: &mut [f32],
+    dw: &mut [f32],
+    db: &mut [f32],
+) {
+    let mut dyp = vec![0.0f32; dout];
+    for ni in 0..n {
+        let yrow = &y[ni * dout..(ni + 1) * dout];
+        let dyrow = &dy[ni * dout..(ni + 1) * dout];
+        for ((p, &g), &yv) in dyp.iter_mut().zip(dyrow).zip(yrow) {
+            *p = g * act.grad_from_output(yv);
+        }
+        for (d, &p) in db.iter_mut().zip(&dyp) {
+            *d += p;
+        }
+        let xrow = &x[ni * din..(ni + 1) * din];
+        let dxrow = &mut dx[ni * din..(ni + 1) * din];
+        for di in 0..din {
+            let wrow = &wgt[di * dout..(di + 1) * dout];
+            let dwrow = &mut dw[di * dout..(di + 1) * dout];
+            let xv = xrow[di];
+            let mut acc = 0.0f32;
+            for ((&p, &wv), dwv) in dyp.iter().zip(wrow).zip(dwrow.iter_mut()) {
+                acc += p * wv;
+                *dwv += p * xv;
+            }
+            dxrow[di] += acc;
+        }
+    }
+}
+
+/// Max-pool forward (VALID padding): records the flat input index of each
+/// window maximum for the backward scatter. Returns `(oh, ow)`.
+#[allow(clippy::too_many_arguments)]
+pub fn maxpool_forward(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    y: &mut [f32],
+    argmax: &mut [u32],
+) -> (usize, usize) {
+    let oh = (h - k) / stride + 1;
+    let ow = (w - k) / stride + 1;
+    debug_assert_eq!(y.len(), n * oh * ow * c);
+    debug_assert_eq!(argmax.len(), y.len());
+    for ni in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let obase = ((ni * oh + oy) * ow + ox) * c;
+                for ch in 0..c {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut best_idx = 0usize;
+                    for ky in 0..k {
+                        let iy = oy * stride + ky;
+                        for kx in 0..k {
+                            let ix = ox * stride + kx;
+                            let idx = ((ni * h + iy) * w + ix) * c + ch;
+                            let v = x[idx];
+                            if v > best {
+                                best = v;
+                                best_idx = idx;
+                            }
+                        }
+                    }
+                    y[obase + ch] = best;
+                    argmax[obase + ch] = best_idx as u32;
+                }
+            }
+        }
+    }
+    (oh, ow)
+}
+
+/// Max-pool backward: scatter dy through the recorded argmax indices
+/// (dx zeroed by caller).
+pub fn maxpool_backward(dy: &[f32], argmax: &[u32], dx: &mut [f32]) {
+    for (&g, &idx) in dy.iter().zip(argmax) {
+        dx[idx as usize] += g;
+    }
+}
+
+/// Batch-norm training forward over `rows` samples of `c` channels
+/// (rows = N*H*W for conv activations, N for dense). Writes y and the
+/// normalized activations `xhat`; returns per-channel
+/// `(batch_mean, batch_var, inv_std)` (biased variance, like `jnp.var`).
+#[allow(clippy::too_many_arguments)]
+pub fn batchnorm_forward_train(
+    x: &[f32],
+    rows: usize,
+    c: usize,
+    gamma: &[f32],
+    beta: &[f32],
+    eps: f32,
+    y: &mut [f32],
+    xhat: &mut [f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let m = rows as f32;
+    let mut mean = vec![0.0f32; c];
+    let mut var = vec![0.0f32; c];
+    for row in x.chunks_exact(c) {
+        for (s, &v) in mean.iter_mut().zip(row) {
+            *s += v;
+        }
+    }
+    for s in mean.iter_mut() {
+        *s /= m;
+    }
+    for row in x.chunks_exact(c) {
+        for ((s, &v), &mu) in var.iter_mut().zip(row).zip(&mean) {
+            let d = v - mu;
+            *s += d * d;
+        }
+    }
+    for s in var.iter_mut() {
+        *s /= m;
+    }
+    let inv_std: Vec<f32> = var.iter().map(|&v| 1.0 / (v + eps).sqrt()).collect();
+    for ((yrow, xrow), hrow) in
+        y.chunks_exact_mut(c).zip(x.chunks_exact(c)).zip(xhat.chunks_exact_mut(c))
+    {
+        for ch in 0..c {
+            let h = (xrow[ch] - mean[ch]) * inv_std[ch];
+            hrow[ch] = h;
+            yrow[ch] = h * gamma[ch] + beta[ch];
+        }
+    }
+    (mean, var, inv_std)
+}
+
+/// Batch-norm inference forward using running statistics.
+#[allow(clippy::too_many_arguments)]
+pub fn batchnorm_forward_eval(
+    x: &[f32],
+    c: usize,
+    gamma: &[f32],
+    beta: &[f32],
+    mean: &[f32],
+    var: &[f32],
+    eps: f32,
+    y: &mut [f32],
+) {
+    let inv_std: Vec<f32> = var.iter().map(|&v| 1.0 / (v + eps).sqrt()).collect();
+    for (yrow, xrow) in y.chunks_exact_mut(c).zip(x.chunks_exact(c)) {
+        for ch in 0..c {
+            yrow[ch] = (xrow[ch] - mean[ch]) * inv_std[ch] * gamma[ch] + beta[ch];
+        }
+    }
+}
+
+/// Batch-norm backward through the batch statistics:
+/// `dx = inv_std/m * (m*dxhat - sum(dxhat) - xhat*sum(dxhat*xhat))`.
+/// dx/dgamma/dbeta are fully overwritten.
+#[allow(clippy::too_many_arguments)]
+pub fn batchnorm_backward(
+    xhat: &[f32],
+    inv_std: &[f32],
+    gamma: &[f32],
+    rows: usize,
+    c: usize,
+    dy: &[f32],
+    dx: &mut [f32],
+    dgamma: &mut [f32],
+    dbeta: &mut [f32],
+) {
+    let m = rows as f32;
+    dgamma.fill(0.0);
+    dbeta.fill(0.0);
+    // sums of dxhat and dxhat*xhat per channel (dxhat = dy * gamma)
+    let mut s1 = vec![0.0f32; c];
+    let mut s2 = vec![0.0f32; c];
+    for (dyrow, hrow) in dy.chunks_exact(c).zip(xhat.chunks_exact(c)) {
+        for ch in 0..c {
+            let dh = dyrow[ch] * gamma[ch];
+            s1[ch] += dh;
+            s2[ch] += dh * hrow[ch];
+            dgamma[ch] += dyrow[ch] * hrow[ch];
+            dbeta[ch] += dyrow[ch];
+        }
+    }
+    for ((dxrow, dyrow), hrow) in
+        dx.chunks_exact_mut(c).zip(dy.chunks_exact(c)).zip(xhat.chunks_exact(c))
+    {
+        for ch in 0..c {
+            let dh = dyrow[ch] * gamma[ch];
+            dxrow[ch] = inv_std[ch] / m * (m * dh - s1[ch] - hrow[ch] * s2[ch]);
+        }
+    }
+}
+
+/// Global average pool forward: `[n,h,w,c] -> [n,c]`.
+pub fn global_avg_pool_forward(x: &[f32], n: usize, h: usize, w: usize, c: usize, y: &mut [f32]) {
+    let hw = (h * w) as f32;
+    y.fill(0.0);
+    for ni in 0..n {
+        let yrow = &mut y[ni * c..(ni + 1) * c];
+        for row in x[ni * h * w * c..(ni + 1) * h * w * c].chunks_exact(c) {
+            for (o, &v) in yrow.iter_mut().zip(row) {
+                *o += v;
+            }
+        }
+        for o in yrow.iter_mut() {
+            *o /= hw;
+        }
+    }
+}
+
+/// Global average pool backward (dx fully overwritten).
+pub fn global_avg_pool_backward(
+    dy: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    dx: &mut [f32],
+) {
+    let hw = (h * w) as f32;
+    for ni in 0..n {
+        let dyrow = &dy[ni * c..(ni + 1) * c];
+        for row in dx[ni * h * w * c..(ni + 1) * h * w * c].chunks_exact_mut(c) {
+            for (o, &g) in row.iter_mut().zip(dyrow) {
+                *o = g / hw;
+            }
+        }
+    }
+}
+
+/// Softmax cross-entropy over logits `[n,classes]` with integer labels:
+/// returns `(mean_loss, correct_count, dlogits)` where
+/// `dlogits = (softmax - onehot)/n` — the gradient of the mean loss,
+/// mirroring `stages._loss_and_metrics` + its vjp. Argmax ties resolve
+/// to the first maximum (like `jnp.argmax` and `train::count_correct`).
+pub fn softmax_xent(
+    logits: &[f32],
+    n: usize,
+    classes: usize,
+    labels: &[i32],
+) -> (f32, f32, Vec<f32>) {
+    debug_assert_eq!(logits.len(), n * classes);
+    debug_assert_eq!(labels.len(), n);
+    let mut dlogits = vec![0.0f32; n * classes];
+    let mut loss = 0.0f64;
+    let mut correct = 0usize;
+    for ni in 0..n {
+        let row = &logits[ni * classes..(ni + 1) * classes];
+        let mut maxv = row[0];
+        let mut argmax = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > maxv {
+                maxv = v;
+                argmax = j;
+            }
+        }
+        let label = labels[ni] as usize;
+        if argmax == label {
+            correct += 1;
+        }
+        let mut denom = 0.0f32;
+        for &v in row {
+            denom += (v - maxv).exp();
+        }
+        let log_denom = denom.ln();
+        loss += (log_denom - (row[label] - maxv)) as f64;
+        let drow = &mut dlogits[ni * classes..(ni + 1) * classes];
+        for (j, &v) in row.iter().enumerate() {
+            let p = (v - maxv).exp() / denom;
+            drow[j] = (p - if j == label { 1.0 } else { 0.0 }) / n as f32;
+        }
+    }
+    ((loss / n as f64) as f32, correct as f32, dlogits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_out_dims_match_xla_conventions() {
+        // SAME stride 1: shape preserved, pad (k-1)/2 on the before side.
+        assert_eq!(conv_out_dims(28, 28, 5, 1, true), (28, 28, 2, 2));
+        // SAME stride 2 on even input: ceil(32/2)=16.
+        assert_eq!(conv_out_dims(32, 32, 3, 2, true), (16, 16, 0, 0));
+        // VALID: (h-k)/s+1.
+        assert_eq!(conv_out_dims(14, 14, 5, 1, false), (10, 10, 0, 0));
+    }
+
+    #[test]
+    fn conv_identity_kernel_passes_through() {
+        // 1x1 kernel with identity channel map == copy.
+        let x: Vec<f32> = (0..2 * 3 * 3 * 2).map(|i| i as f32).collect();
+        let wgt = vec![1.0, 0.0, 0.0, 1.0]; // [1,1,2,2] identity
+        let mut out = vec![0.0; x.len()];
+        conv2d_forward(&x, 2, 3, 3, 2, &wgt, 1, 2, 1, true, None, &mut out);
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn conv_bias_is_added() {
+        let x = vec![0.0; 1 * 2 * 2 * 1];
+        let wgt = vec![0.0; 1]; // [1,1,1,1]
+        let mut out = vec![9.0; 4];
+        conv2d_forward(&x, 1, 2, 2, 1, &wgt, 1, 1, 1, true, Some(&[0.5]), &mut out);
+        assert_eq!(out, vec![0.5; 4]);
+    }
+
+    #[test]
+    fn dense_matches_manual_matmul() {
+        // x [1,2] @ w [2,3] + b
+        let x = vec![1.0, 2.0];
+        let wgt = vec![1.0, 0.0, -1.0, 0.5, 2.0, 1.0];
+        let b = vec![0.1, 0.2, 0.3];
+        let mut y = vec![0.0; 3];
+        dense_forward(&x, 1, 2, &wgt, &b, 3, ActKind::None, &mut y);
+        assert!((y[0] - 2.1).abs() < 1e-6);
+        assert!((y[1] - 4.2).abs() < 1e-6);
+        assert!((y[2] - 1.3).abs() < 1e-6);
+        let mut yr = vec![0.0; 3];
+        dense_forward(&x, 1, 2, &wgt, &[-10.0, 0.0, 10.0], 3, ActKind::Relu, &mut yr);
+        assert_eq!(yr[0], 0.0); // relu clamps
+    }
+
+    #[test]
+    fn maxpool_picks_maxima_and_scatters_back() {
+        // 1x4x4x1, 2x2 pool stride 2
+        let x: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let mut y = vec![0.0; 4];
+        let mut am = vec![0u32; 4];
+        let (oh, ow) = maxpool_forward(&x, 1, 4, 4, 1, 2, 2, &mut y, &mut am);
+        assert_eq!((oh, ow), (2, 2));
+        assert_eq!(y, vec![5.0, 7.0, 13.0, 15.0]);
+        let mut dx = vec![0.0; 16];
+        maxpool_backward(&[1.0, 2.0, 3.0, 4.0], &am, &mut dx);
+        assert_eq!(dx[5], 1.0);
+        assert_eq!(dx[7], 2.0);
+        assert_eq!(dx[13], 3.0);
+        assert_eq!(dx[15], 4.0);
+        assert_eq!(dx.iter().sum::<f32>(), 10.0);
+    }
+
+    #[test]
+    fn batchnorm_train_normalizes() {
+        let x = vec![1.0, 2.0, 3.0, 4.0]; // rows=4, c=1
+        let mut y = vec![0.0; 4];
+        let mut xhat = vec![0.0; 4];
+        let (mean, var, _) =
+            batchnorm_forward_train(&x, 4, 1, &[1.0], &[0.0], 1e-5, &mut y, &mut xhat);
+        assert!((mean[0] - 2.5).abs() < 1e-6);
+        assert!((var[0] - 1.25).abs() < 1e-6);
+        let m: f32 = y.iter().sum::<f32>() / 4.0;
+        assert!(m.abs() < 1e-6);
+    }
+
+    #[test]
+    fn gap_averages_and_distributes() {
+        let x: Vec<f32> = vec![1.0, 3.0, 5.0, 7.0]; // 1x2x2x1
+        let mut y = vec![0.0; 1];
+        global_avg_pool_forward(&x, 1, 2, 2, 1, &mut y);
+        assert!((y[0] - 4.0).abs() < 1e-6);
+        let mut dx = vec![0.0; 4];
+        global_avg_pool_backward(&[1.0], 1, 2, 2, 1, &mut dx);
+        assert!(dx.iter().all(|&v| (v - 0.25).abs() < 1e-7));
+    }
+
+    #[test]
+    fn softmax_xent_uniform_logits() {
+        let (loss, correct, d) = softmax_xent(&[0.0; 8], 2, 4, &[1, 2]);
+        assert!((loss - (4.0f32).ln()).abs() < 1e-5);
+        // argmax ties resolve to index 0 -> neither label matches
+        assert_eq!(correct, 0.0);
+        // gradient rows sum to zero
+        assert!(d[..4].iter().sum::<f32>().abs() < 1e-6);
+        // gradient points away from the label
+        assert!(d[1] < 0.0 && d[0] > 0.0);
+    }
+
+    #[test]
+    fn softmax_xent_confident_correct_prediction() {
+        let (loss, correct, _) = softmax_xent(&[10.0, -10.0, 0.0, 20.0], 2, 2, &[0, 1]);
+        assert!(loss < 1e-3, "{loss}");
+        assert_eq!(correct, 2.0);
+    }
+}

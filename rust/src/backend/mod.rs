@@ -1,0 +1,337 @@
+//! Native pure-Rust compute backend.
+//!
+//! `NativeExecutor` implements the same `StageExecutor` contract the
+//! XLA engine does — `forward` / `last` / `backward` / `eval_forward`
+//! with coordinator-owned weights and per-partition SGD — but computes
+//! every stage with the in-crate kernels instead of AOT-compiled PJRT
+//! programs. The scheduler, hybrid controller, train driver, evaluate
+//! loop and checkpointing all run unchanged on either backend; only the
+//! compute substrate differs. This is what lets the full pipelined-
+//! training suite (convergence, single-in-flight equivalence, staleness
+//! divergence) execute on any machine, offline, with no artifacts.
+//!
+//! Semantics mirrored from the stage programs (`python/compile/stages.py`):
+//! * `forward` applies BN-state updates internally and never touches
+//!   weights;
+//! * `backward` *recomputes* the partition forward from the saved
+//!   carry_in (the jax.vjp recompute), discards its state updates, and
+//!   applies the weight update;
+//! * the fused `last` stage does forward + softmax-CE + backward +
+//!   update in one call (staleness 0 for the final partition);
+//! * `eval_forward` uses running BN statistics and, on the last
+//!   partition, returns logits.
+
+pub mod kernels;
+pub mod models;
+pub mod ops;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::meta::{ConfigMeta, PartitionMeta};
+use crate::model::{ModelParams, PartitionParams};
+use crate::optim::Sgd;
+use crate::pipeline::executor::{LastResult, StageExecutor};
+use crate::tensor::{IntTensor, Tensor};
+
+pub use kernels::ActKind;
+pub use models::{build_model, native_config, native_config_names, partition_ops};
+pub use ops::{NativeOp, OpCache};
+
+/// One partition's native compute: op stack + weights + optimizer.
+pub struct NativePartition {
+    pub meta: PartitionMeta,
+    ops: Vec<NativeOp>,
+    /// Per-op (param, state) offsets into the flat partition vectors.
+    offsets: Vec<(usize, usize)>,
+    pub params: PartitionParams,
+    pub optim: Sgd,
+    pub update_count: usize,
+}
+
+impl NativePartition {
+    fn new(
+        meta: PartitionMeta,
+        ops: Vec<NativeOp>,
+        params: PartitionParams,
+        optim: Sgd,
+    ) -> Result<Self> {
+        let mut po = 0usize;
+        let mut so = 0usize;
+        let mut offsets = Vec::with_capacity(ops.len());
+        for op in &ops {
+            offsets.push((po, so));
+            po += op.n_params();
+            so += op.n_state();
+        }
+        ensure!(
+            po == params.params.len() && so == params.state.len(),
+            "partition {}: op stack wants {po} params / {so} state, got {} / {}",
+            meta.index,
+            params.params.len(),
+            params.state.len()
+        );
+        Ok(NativePartition { meta, ops, offsets, params, optim, update_count: 0 })
+    }
+
+    fn op_params(&self, i: usize) -> &[Tensor] {
+        let (po, _) = self.offsets[i];
+        &self.params.params[po..po + self.ops[i].n_params()]
+    }
+
+    fn op_state(&self, i: usize) -> &[Tensor] {
+        let (_, so) = self.offsets[i];
+        &self.params.state[so..so + self.ops[i].n_state()]
+    }
+
+    /// Training forward walk: `(output, caches, state_updates)` where
+    /// state_updates pairs a state offset with the op's new state values.
+    #[allow(clippy::type_complexity)]
+    fn forward_train(
+        &self,
+        x: &Tensor,
+    ) -> Result<(Tensor, Vec<OpCache>, Vec<(usize, Vec<Tensor>)>)> {
+        let mut cur = x.clone();
+        let mut caches = Vec::with_capacity(self.ops.len());
+        let mut updates = Vec::new();
+        for i in 0..self.ops.len() {
+            let (y, cache, new_state) =
+                self.ops[i].train_forward(self.op_params(i), self.op_state(i), &cur)?;
+            caches.push(cache);
+            if !new_state.is_empty() {
+                updates.push((self.offsets[i].1, new_state));
+            }
+            cur = y;
+        }
+        Ok((cur, caches, updates))
+    }
+
+    fn commit_state(&mut self, updates: Vec<(usize, Vec<Tensor>)>) {
+        for (so, vals) in updates {
+            for (j, t) in vals.into_iter().enumerate() {
+                self.params.state[so + j] = t;
+            }
+        }
+    }
+
+    /// Backward walk from `dy` through the recorded caches:
+    /// `(gcarry_in, grads)` with grads aligned to `params.params`.
+    fn backward_walk(&self, caches: &[OpCache], dy: Tensor) -> Result<(Tensor, Vec<Tensor>)> {
+        let mut grads: Vec<Option<Tensor>> = vec![None; self.params.params.len()];
+        let mut g = dy;
+        for i in (0..self.ops.len()).rev() {
+            let (dx, dparams) = self.ops[i].backward(self.op_params(i), &caches[i], &g)?;
+            let (po, _) = self.offsets[i];
+            for (j, dp) in dparams.into_iter().enumerate() {
+                grads[po + j] = Some(dp);
+            }
+            g = dx;
+        }
+        let grads = grads
+            .into_iter()
+            .enumerate()
+            .map(|(j, g)| g.ok_or_else(|| anyhow!("missing gradient for param {j}")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok((g, grads))
+    }
+
+    fn apply_update(&mut self, grads: &[Tensor]) -> Result<()> {
+        self.optim.step(self.update_count, &mut self.params.params, grads)?;
+        self.update_count += 1;
+        self.params.version += 1;
+        Ok(())
+    }
+}
+
+/// Artifact-free executor: the whole pipeline on in-crate kernels.
+pub struct NativeExecutor {
+    pub meta: ConfigMeta,
+    pub parts: Vec<NativePartition>,
+}
+
+impl NativeExecutor {
+    pub fn new(meta: ConfigMeta, params: ModelParams, optims: Vec<Sgd>) -> Result<Self> {
+        ensure!(
+            optims.len() == meta.partitions.len(),
+            "need one optimizer per partition"
+        );
+        ensure!(
+            params.partitions.len() == meta.partitions.len(),
+            "params/partitions arity mismatch"
+        );
+        let parts = meta
+            .partitions
+            .iter()
+            .zip(params.partitions)
+            .zip(optims)
+            .map(|((pm, pp), opt)| {
+                let ops = models::partition_ops(&meta, pm)?;
+                NativePartition::new(pm.clone(), ops, pp, opt)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(NativeExecutor { meta, parts })
+    }
+
+    /// Snapshot the current weights (eval / checkpointing), like
+    /// `XlaExecutor::params_snapshot`.
+    pub fn params_snapshot(&self) -> ModelParams {
+        ModelParams { partitions: self.parts.iter().map(|p| p.params.clone()).collect() }
+    }
+
+    pub fn update_counts(&self) -> Vec<usize> {
+        self.parts.iter().map(|p| p.update_count).collect()
+    }
+
+    fn single_carry<'a>(&self, carry: &'a [Tensor], what: &str) -> Result<&'a Tensor> {
+        ensure!(carry.len() == 1, "native {what}: expected 1 carry tensor, got {}", carry.len());
+        Ok(&carry[0])
+    }
+}
+
+impl StageExecutor for NativeExecutor {
+    fn num_partitions(&self) -> usize {
+        self.parts.len()
+    }
+
+    fn forward(&mut self, p: usize, _seed: i32, carry: &[Tensor]) -> Result<Vec<Tensor>> {
+        let x = self.single_carry(carry, "forward")?.clone();
+        let part = &mut self.parts[p];
+        ensure!(!part.meta.is_last(), "forward called on the last partition");
+        let (y, _caches, updates) = part.forward_train(&x)?;
+        part.commit_state(updates);
+        Ok(vec![y])
+    }
+
+    fn last(&mut self, _seed: i32, carry: &[Tensor], labels: &IntTensor) -> Result<LastResult> {
+        let x = self.single_carry(carry, "last")?.clone();
+        let p = self.parts.len() - 1;
+        let part = &mut self.parts[p];
+        let (logits, caches, updates) = part.forward_train(&x)?;
+        let n = logits.shape[0];
+        let classes = logits.numel() / n;
+        ensure!(
+            labels.data.len() == n,
+            "last: {} labels for batch of {n}",
+            labels.data.len()
+        );
+        let (loss, correct, dlogits) =
+            kernels::softmax_xent(logits.data(), n, classes, &labels.data);
+        let dl = Tensor::from_vec(&[n, classes], dlogits)?;
+        let (gcarry, grads) = part.backward_walk(&caches, dl)?;
+        part.commit_state(updates);
+        part.apply_update(&grads)?;
+        Ok(LastResult { loss, correct, gcarry_in: vec![gcarry] })
+    }
+
+    fn backward(
+        &mut self,
+        p: usize,
+        _seed: i32,
+        carry_in: &[Tensor],
+        gcarry_out: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        let x = self.single_carry(carry_in, "backward")?.clone();
+        let g = self.single_carry(gcarry_out, "backward grad")?.clone();
+        let part = &mut self.parts[p];
+        // jax.vjp semantics: recompute the forward from the saved
+        // carry_in with the *current* (stale-by-schedule) weights; the
+        // recompute's BN-state updates are discarded.
+        let (_y, caches, _updates) = part.forward_train(&x)?;
+        let (gcarry_in, grads) = part.backward_walk(&caches, g)?;
+        part.apply_update(&grads)?;
+        Ok(vec![gcarry_in])
+    }
+
+    fn eval_forward(&mut self, p: usize, carry: &[Tensor]) -> Result<Vec<Tensor>> {
+        let x = self.single_carry(carry, "eval_forward")?;
+        let part = &self.parts[p];
+        let mut cur = x.clone();
+        for i in 0..part.ops.len() {
+            cur = part.ops[i].eval_forward(part.op_params(i), part.op_state(i), &cur)?;
+        }
+        Ok(vec![cur])
+    }
+
+    fn params_snapshot(&self) -> ModelParams {
+        NativeExecutor::params_snapshot(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::{Feed, Pipeline};
+
+    fn mk_exec(seed: u64) -> NativeExecutor {
+        let meta = native_config("native_lenet_small").unwrap();
+        let params = ModelParams::init(&meta.partitions, seed).unwrap();
+        let optims = crate::train::build_optims(&meta, 10, 1.0);
+        NativeExecutor::new(meta, params, optims).unwrap()
+    }
+
+    fn mk_feed(exec: &NativeExecutor, b: u64) -> Feed {
+        let meta = &exec.meta;
+        let spec = crate::data::SyntheticSpec { train: 32, test: 16, noise: 0.8, seed: 7 };
+        let (ds, _) = crate::data::load_or_synthesize(&meta.dataset, None, &spec).unwrap();
+        let idxs: Vec<usize> = (0..meta.batch).collect();
+        let (x, labels) = ds.gather(&idxs);
+        Feed { batch_id: b, seed: crate::data::batch_seed(1, b), x, labels }
+    }
+
+    #[test]
+    fn executor_builds_and_snapshots() {
+        let exec = mk_exec(3);
+        assert_eq!(exec.num_partitions(), 2);
+        let snap = NativeExecutor::params_snapshot(&exec);
+        assert_eq!(snap.partitions.len(), 2);
+        assert!(snap.all_finite());
+        assert_eq!(exec.update_counts(), vec![0, 0]);
+    }
+
+    #[test]
+    fn one_sequential_step_updates_every_partition_once() {
+        let mut pipe = Pipeline::new(mk_exec(5), 16);
+        let feed = mk_feed(&pipe.exec, 0);
+        let before = NativeExecutor::params_snapshot(&pipe.exec);
+        let e = pipe.sequential_step(feed).unwrap();
+        assert!(e.loss.is_finite() && e.loss > 0.0);
+        assert_eq!(pipe.exec.update_counts(), vec![1, 1]);
+        let after = NativeExecutor::params_snapshot(&pipe.exec);
+        assert!(after.all_finite());
+        let moved = before
+            .partitions
+            .iter()
+            .zip(&after.partitions)
+            .all(|(a, b)| a.params.iter().zip(&b.params).any(|(t, u)| t.data() != u.data()));
+        assert!(moved, "every partition's weights must move");
+    }
+
+    #[test]
+    fn eval_forward_yields_logits_and_is_pure() {
+        let mut pipe = Pipeline::new(mk_exec(9), 16);
+        let feed = mk_feed(&pipe.exec, 0);
+        let before = NativeExecutor::params_snapshot(&pipe.exec);
+        let logits = pipe.eval_forward(feed.x.clone()).unwrap();
+        assert_eq!(logits.shape, vec![16, 10]);
+        assert!(logits.is_finite());
+        let again = pipe.eval_forward(feed.x).unwrap();
+        assert_eq!(logits.data(), again.data(), "eval must be deterministic");
+        let after = NativeExecutor::params_snapshot(&pipe.exec);
+        for (a, b) in before.partitions.iter().zip(&after.partitions) {
+            for (t, u) in a.params.iter().zip(&b.params) {
+                assert_eq!(t.data(), u.data(), "eval must not touch weights");
+            }
+            for (t, u) in a.state.iter().zip(&b.state) {
+                assert_eq!(t.data(), u.data(), "eval must not touch state");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_rejects_last_partition_and_multi_carry() {
+        let mut exec = mk_exec(1);
+        let x = Tensor::zeros(&[16, 28, 28, 1]);
+        let last_p = exec.num_partitions() - 1;
+        assert!(exec.forward(last_p, 0, &[x.clone()]).is_err());
+        assert!(exec.forward(0, 0, &[x.clone(), x]).is_err());
+    }
+}

@@ -1,0 +1,425 @@
+//! Native model zoo + artifact-free config generation.
+//!
+//! `build_model` mirrors `python/compile/models.py` for the LeNet family
+//! (including the `_w` width-scaling rule with Python's banker's
+//! rounding), so a native op stack produces the same parameter/state
+//! specs and carry shapes the AOT pipeline records in `meta.json`.
+//!
+//! `native_config` synthesizes a full `ConfigMeta` in memory — layer
+//! metadata, partition specs, carry chains — for a built-in manifest of
+//! LeNet configs, so training, evaluation, checkpointing and the paper's
+//! staleness accounting all run with **no Python step and no artifacts
+//! directory**. `partition_ops` then cross-validates the generated (or
+//! artifact-loaded) meta against the native op stack: any drift between
+//! the two worlds is an error, not silent divergence.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::meta::{ConfigMeta, LayerMeta, PartitionMeta};
+use crate::tensor::numel;
+
+use super::kernels::ActKind;
+use super::ops::NativeOp;
+
+/// One paper-numbered layer: a pipeline register may follow it.
+#[derive(Debug, Clone)]
+pub struct NativeLayer {
+    pub name: String,
+    pub ops: Vec<NativeOp>,
+}
+
+/// A whole model as a flat layer list (the paper's PPV numbering).
+#[derive(Debug, Clone)]
+pub struct NativeModel {
+    pub name: String,
+    pub layers: Vec<NativeLayer>,
+    /// (H, W, C)
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub dataset: String,
+}
+
+/// Python's `round()` (banker's rounding), needed to mirror `_w` exactly.
+fn round_half_even(x: f64) -> f64 {
+    let f = x.floor();
+    let d = x - f;
+    if d > 0.5 {
+        f + 1.0
+    } else if d < 0.5 {
+        f
+    } else if (f as i64) % 2 == 0 {
+        f
+    } else {
+        f + 1.0
+    }
+}
+
+/// Width scaling, mirroring `models.py::_w`.
+fn w_scale(c: usize, mult: f64) -> usize {
+    if mult >= 1.0 {
+        round_half_even(c as f64 * mult) as usize
+    } else {
+        (round_half_even(c as f64 * mult / 4.0) as usize * 4).max(4)
+    }
+}
+
+/// LeNet-5 on MNIST (5 layers, tanh activations), mirroring
+/// `models.py::lenet5`.
+fn lenet5(width_mult: f64, num_classes: usize) -> NativeModel {
+    let c1 = w_scale(6, width_mult);
+    let c2 = w_scale(16, width_mult);
+    let f1 = w_scale(120, width_mult);
+    let f2 = w_scale(84, width_mult);
+    let flat = 5 * 5 * c2;
+    let layer = |name: &str, ops: Vec<NativeOp>| NativeLayer { name: name.to_string(), ops };
+    NativeModel {
+        name: "lenet5".to_string(),
+        layers: vec![
+            layer(
+                "l1",
+                vec![
+                    NativeOp::conv("conv1", 1, c1, 5, 1, true, true),
+                    NativeOp::act("act1", ActKind::Tanh),
+                    NativeOp::max_pool("pool1", 2),
+                ],
+            ),
+            layer(
+                "l2",
+                vec![
+                    NativeOp::conv("conv2", c1, c2, 5, 1, false, true),
+                    NativeOp::act("act2", ActKind::Tanh),
+                    NativeOp::max_pool("pool2", 2),
+                ],
+            ),
+            layer(
+                "l3",
+                vec![
+                    NativeOp::flatten("flat"),
+                    NativeOp::dense("fc1", flat, f1, ActKind::Tanh),
+                ],
+            ),
+            layer("l4", vec![NativeOp::dense("fc2", f1, f2, ActKind::Tanh)]),
+            layer("l5", vec![NativeOp::dense("fc3", f2, num_classes, ActKind::None)]),
+        ],
+        input_shape: vec![28, 28, 1],
+        num_classes,
+        dataset: "mnist".to_string(),
+    }
+}
+
+/// Build a native model by name. Models whose ops the native backend
+/// does not implement (residual blocks, dropout) are rejected here.
+pub fn build_model(name: &str, width_mult: f64, num_classes: usize) -> Result<NativeModel> {
+    match name {
+        "lenet5" => Ok(lenet5(width_mult, num_classes)),
+        other => bail!(
+            "native backend has no model {other:?} (supported: lenet5); \
+             use the XLA backend with AOT artifacts for the full zoo"
+        ),
+    }
+}
+
+impl NativeModel {
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Carry shape (batch-inclusive) after each layer; index i = after
+    /// layer i+1 in paper numbering.
+    pub fn carry_shapes_after(&self, batch: usize) -> Result<Vec<Vec<usize>>> {
+        let mut shape: Vec<usize> = std::iter::once(batch)
+            .chain(self.input_shape.iter().copied())
+            .collect();
+        let mut out = Vec::with_capacity(self.layers.len());
+        for layer in &self.layers {
+            for op in &layer.ops {
+                shape = op.out_shape(&shape)?;
+            }
+            out.push(shape.clone());
+        }
+        Ok(out)
+    }
+}
+
+/// The built-in native manifest: LeNet configs runnable with no
+/// artifacts, as `(name, model, width_mult, ppv, batch)`. Names shared
+/// with `python/compile/experiments.py` use the same
+/// (model, width, PPV, batch), so a run is configured identically
+/// whichever backend serves it. `native_lenet_small` is a narrow,
+/// small-batch variant for fast native CI runs.
+const NATIVE_MANIFEST: &[(&str, &str, f64, &[usize], usize)] = &[
+    ("quickstart_lenet", "lenet5", 1.0, &[2], 32),
+    ("lenet5_4s", "lenet5", 1.0, &[1], 64),
+    ("lenet5_6s", "lenet5", 1.0, &[1, 2], 64),
+    ("lenet5_8s", "lenet5", 1.0, &[1, 2, 3], 64),
+    ("lenet5_10s", "lenet5", 1.0, &[1, 2, 3, 4], 64),
+    ("native_lenet_small", "lenet5", 0.5, &[2], 16),
+];
+
+/// Returns `(model, width_mult, ppv, batch)` for a built-in config.
+fn manifest(name: &str) -> Option<(&'static str, f64, Vec<usize>, usize)> {
+    NATIVE_MANIFEST
+        .iter()
+        .find(|e| e.0 == name)
+        .map(|&(_, model, width, ppv, batch)| (model, width, ppv.to_vec(), batch))
+}
+
+/// Names the native manifest can synthesize (for CLI listings/errors).
+pub fn native_config_names() -> Vec<&'static str> {
+    NATIVE_MANIFEST.iter().map(|e| e.0).collect()
+}
+
+/// Synthesize the full `ConfigMeta` for a built-in native config —
+/// everything `aot.py::config_meta` would record, minus the HLO files.
+pub fn native_config(name: &str) -> Result<ConfigMeta> {
+    let Some((model_name, width_mult, ppv, batch)) = manifest(name) else {
+        bail!(
+            "unknown native config {name:?}; built-ins: {} (or build artifacts for the full set)",
+            native_config_names().join(", ")
+        );
+    };
+    let model = build_model(model_name, width_mult, 10)?;
+    let num_layers = model.num_layers();
+    ensure!(
+        ppv.windows(2).all(|w| w[0] < w[1]) && ppv.iter().all(|&p| p >= 1 && p < num_layers),
+        "PPV {ppv:?} invalid for {model_name} ({num_layers} layers)"
+    );
+
+    // Per-layer metadata (param counts, carry sizes, FLOPs).
+    let after = model.carry_shapes_after(batch)?;
+    let mut layers_meta = Vec::with_capacity(num_layers);
+    let mut shape: Vec<usize> = std::iter::once(batch)
+        .chain(model.input_shape.iter().copied())
+        .collect();
+    for (layer, out_shape) in model.layers.iter().zip(&after) {
+        let mut flops = 0u64;
+        let mut param_count = 0usize;
+        for op in &layer.ops {
+            flops += op.flops_per_sample(&shape)?;
+            param_count += op.param_specs().iter().map(|s| numel(&s.shape)).sum::<usize>();
+            shape = op.out_shape(&shape)?;
+        }
+        layers_meta.push(LayerMeta {
+            name: layer.name.clone(),
+            param_count,
+            carry_elems_per_sample: numel(&out_shape[1..]),
+            flops_per_sample: flops,
+        });
+    }
+
+    // Partitions: layer ranges [lo, hi] (1-based) from the PPV bounds.
+    let mut bounds = vec![0usize];
+    bounds.extend(ppv.iter().copied());
+    bounds.push(num_layers);
+    let n_parts = bounds.len() - 1;
+    let mut partitions = Vec::with_capacity(n_parts);
+    for i in 0..n_parts {
+        let (lo, hi) = (bounds[i] + 1, bounds[i + 1]);
+        let is_last = i == n_parts - 1;
+        let layers = &model.layers[lo - 1..hi];
+        let params: Vec<_> =
+            layers.iter().flat_map(|l| l.ops.iter().flat_map(|o| o.param_specs())).collect();
+        let state: Vec<_> =
+            layers.iter().flat_map(|l| l.ops.iter().flat_map(|o| o.state_specs())).collect();
+        let param_count = params.iter().map(|s| numel(&s.shape)).sum();
+        let carry_in = if i == 0 {
+            vec![std::iter::once(batch).chain(model.input_shape.iter().copied()).collect()]
+        } else {
+            vec![after[bounds[i] - 1].clone()]
+        };
+        let carry_out = if is_last {
+            vec![vec![batch, model.num_classes]]
+        } else {
+            vec![after[bounds[i + 1] - 1].clone()]
+        };
+        let program_keys: &[&str] =
+            if is_last { &["last", "last_eval"] } else { &["fwd", "bwd", "fwd_eval"] };
+        let programs: BTreeMap<String, String> = program_keys
+            .iter()
+            .map(|k| (k.to_string(), format!("native://{k}")))
+            .collect();
+        partitions.push(PartitionMeta {
+            index: i + 1,
+            layer_lo: lo,
+            layer_hi: hi,
+            param_count,
+            params,
+            state,
+            carry_in,
+            carry_out,
+            programs,
+        });
+    }
+
+    Ok(ConfigMeta {
+        dir: PathBuf::from(format!("native://{name}")),
+        config: name.to_string(),
+        model: model.name,
+        width_mult,
+        batch,
+        dataset: model.dataset,
+        input_shape: model.input_shape,
+        num_classes: model.num_classes,
+        num_layers,
+        ppv,
+        meta_only: false,
+        layers: layers_meta,
+        partitions,
+    })
+}
+
+/// Build the native op stack for one partition of a config, validating
+/// the generated ops against the partition's recorded specs. Works for
+/// both artifact-loaded and natively generated `ConfigMeta`.
+pub fn partition_ops(meta: &ConfigMeta, part: &PartitionMeta) -> Result<Vec<NativeOp>> {
+    let model = build_model(&meta.model, meta.width_mult, meta.num_classes)?;
+    ensure!(
+        part.layer_lo >= 1 && part.layer_hi <= model.num_layers() && part.layer_lo <= part.layer_hi,
+        "partition {} layer range {}..{} out of bounds",
+        part.index,
+        part.layer_lo,
+        part.layer_hi
+    );
+    ensure!(
+        part.carry_in.len() == 1 && part.carry_out.len() == 1,
+        "native backend supports single-tensor carries; partition {} has {}/{}",
+        part.index,
+        part.carry_in.len(),
+        part.carry_out.len()
+    );
+    let ops: Vec<NativeOp> = model.layers[part.layer_lo - 1..part.layer_hi]
+        .iter()
+        .flat_map(|l| l.ops.iter().cloned())
+        .collect();
+
+    // Cross-check against the recorded contract: same params, same state.
+    let specs: Vec<_> = ops.iter().flat_map(|o| o.param_specs()).collect();
+    ensure!(
+        specs.len() == part.params.len(),
+        "partition {}: native stack has {} params, meta records {}",
+        part.index,
+        specs.len(),
+        part.params.len()
+    );
+    for (a, b) in specs.iter().zip(&part.params) {
+        ensure!(
+            a.name == b.name && a.shape == b.shape && a.init == b.init && a.fan_in == b.fan_in,
+            "partition {}: param spec drift: native {:?}/{:?} vs meta {:?}/{:?}",
+            part.index,
+            a.name,
+            a.shape,
+            b.name,
+            b.shape
+        );
+    }
+    let sspecs: Vec<_> = ops.iter().flat_map(|o| o.state_specs()).collect();
+    ensure!(
+        sspecs.len() == part.state.len(),
+        "partition {}: native stack has {} state tensors, meta records {}",
+        part.index,
+        sspecs.len(),
+        part.state.len()
+    );
+    for (a, b) in sspecs.iter().zip(&part.state) {
+        ensure!(
+            a.name == b.name && a.shape == b.shape,
+            "partition {}: state spec drift: {:?} vs {:?}",
+            part.index,
+            a.name,
+            b.name
+        );
+    }
+    Ok(ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn width_scaling_matches_python_round() {
+        // mult >= 1: plain banker's round
+        assert_eq!(w_scale(6, 1.0), 6);
+        assert_eq!(w_scale(16, 1.5), 24);
+        // mult < 1: multiples of 4, floor 4, banker's tie-break
+        assert_eq!(w_scale(6, 0.5), 4); // 0.75 -> 1 -> 4
+        assert_eq!(w_scale(16, 0.5), 8); // 2.0 -> 8
+        assert_eq!(w_scale(120, 0.5), 60); // 15.0 -> 60
+        assert_eq!(w_scale(84, 0.5), 40); // 10.5 ties to even 10 -> 40
+        assert_eq!(w_scale(4, 0.25), 4); // floor at 4
+    }
+
+    #[test]
+    fn lenet_carry_chain_matches_paper_shapes() {
+        let m = build_model("lenet5", 1.0, 10).unwrap();
+        let after = m.carry_shapes_after(32).unwrap();
+        assert_eq!(after[0], vec![32, 14, 14, 6]);
+        assert_eq!(after[1], vec![32, 5, 5, 16]);
+        assert_eq!(after[2], vec![32, 120]);
+        assert_eq!(after[3], vec![32, 84]);
+        assert_eq!(after[4], vec![32, 10]);
+    }
+
+    #[test]
+    fn native_quickstart_meta_mirrors_artifact_contract() {
+        // Same assertions meta.rs::loads_quickstart_meta makes against
+        // the artifact-built meta.json — now artifact-free.
+        let m = native_config("quickstart_lenet").unwrap();
+        assert_eq!(m.model, "lenet5");
+        assert_eq!(m.num_layers, 5);
+        assert_eq!(m.partitions.len(), 2);
+        assert!(m.partitions[1].is_last());
+        assert!(!m.partitions[0].is_last());
+        assert_eq!(m.batch, 32);
+        assert_eq!(m.input_shape, vec![28, 28, 1]);
+        // LeNet-5 full-width parameter count: 61,706
+        assert_eq!(m.total_params(), 61_706);
+        // carry chain is consistent
+        for (a, b) in m.partitions.iter().zip(m.partitions.iter().skip(1)) {
+            assert_eq!(a.carry_out, b.carry_in);
+            assert_eq!(a.layer_hi + 1, b.layer_lo);
+        }
+        // layer accounting consistent with partition accounting
+        let by_layer: usize = m.layers.iter().map(|l| l.param_count).sum();
+        assert_eq!(by_layer, m.total_params());
+    }
+
+    #[test]
+    fn native_table1_lenet_ppvs() {
+        for (name, stages, ppv) in [
+            ("lenet5_4s", 4usize, vec![1usize]),
+            ("lenet5_6s", 6, vec![1, 2]),
+            ("lenet5_8s", 8, vec![1, 2, 3]),
+            ("lenet5_10s", 10, vec![1, 2, 3, 4]),
+        ] {
+            let m = native_config(name).unwrap();
+            assert_eq!(m.paper_stages(), stages, "{name}");
+            assert_eq!(m.ppv, ppv, "{name}");
+            let f = m.stale_weight_fraction();
+            assert!(f > 0.0 && f < 1.0, "{name}: {f}");
+        }
+    }
+
+    #[test]
+    fn partition_ops_validate_against_meta() {
+        let m = native_config("quickstart_lenet").unwrap();
+        let ops0 = partition_ops(&m, &m.partitions[0]).unwrap();
+        let ops1 = partition_ops(&m, &m.partitions[1]).unwrap();
+        assert_eq!(ops0.len(), 6); // conv,act,pool x2
+        assert_eq!(ops1.len(), 4); // flatten,fc1,fc2,fc3
+        // tampering with a recorded spec is caught
+        let mut bad = m.partitions[0].clone();
+        bad.params[0].shape = vec![3, 3, 1, 6];
+        assert!(partition_ops(&m, &bad).is_err());
+    }
+
+    #[test]
+    fn unknown_configs_and_models_error_clearly() {
+        let err = native_config("resnet20_4s").unwrap_err().to_string();
+        assert!(err.contains("unknown native config"), "{err}");
+        assert!(build_model("resnet20", 1.0, 10).is_err());
+    }
+}

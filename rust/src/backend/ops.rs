@@ -1,0 +1,551 @@
+//! Native op zoo: the Rust twin of `python/compile/layers.py`.
+//!
+//! A partition's compute is a flat `Vec<NativeOp>`; each op transforms
+//! the carry tensor and (for batch-norm) produces functional state
+//! updates that the executor commits exactly where the XLA engine's
+//! `take_state` would. `train_forward` records an `OpCache` so the
+//! backward walk is analytic; `backward` consumes it and returns
+//! `(dx, dparams)` with dparams positionally aligned to the op's
+//! `param_specs` — the same ordering `meta.json` records and `Sgd::step`
+//! zips against.
+//!
+//! Scope: the ops the LeNet-style configs need (conv / batch-norm /
+//! activation / max-pool / global-avg-pool / flatten / dense). Residual
+//! markers and dropout are XLA-only for now; `backend::models` refuses
+//! to build models that use them.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::meta::{ParamSpec, StateSpec};
+use crate::tensor::Tensor;
+
+use super::kernels::{self, ActKind};
+
+/// One atomic native operation.
+#[derive(Debug, Clone)]
+pub struct NativeOp {
+    pub name: String,
+    pub kind: OpKind,
+}
+
+#[derive(Debug, Clone)]
+pub enum OpKind {
+    Conv { cin: usize, cout: usize, k: usize, stride: usize, same: bool, bias: bool },
+    BatchNorm { c: usize, momentum: f32, eps: f32 },
+    Act { kind: ActKind },
+    MaxPool { k: usize, stride: usize },
+    GlobalAvgPool,
+    Flatten,
+    Dense { din: usize, dout: usize, act: ActKind },
+}
+
+/// Saved forward intermediates for one op's backward pass.
+#[derive(Debug, Clone)]
+pub enum OpCache {
+    Conv { x: Tensor },
+    Dense { x: Tensor, y: Tensor },
+    Act { y: Tensor },
+    MaxPool { in_shape: Vec<usize>, argmax: Vec<u32> },
+    BatchNorm { xhat: Tensor, inv_std: Vec<f32> },
+    Gap { in_shape: Vec<usize> },
+    Flatten { in_shape: Vec<usize> },
+}
+
+fn dims4(t: &Tensor) -> Result<(usize, usize, usize, usize)> {
+    let s = t.shape.as_slice();
+    ensure!(s.len() == 4, "expected NHWC tensor, got shape {:?}", s);
+    Ok((s[0], s[1], s[2], s[3]))
+}
+
+fn dims2(t: &Tensor) -> Result<(usize, usize)> {
+    let s = t.shape.as_slice();
+    ensure!(s.len() == 2, "expected [N,D] tensor, got shape {:?}", s);
+    Ok((s[0], s[1]))
+}
+
+impl NativeOp {
+    pub fn conv(
+        name: &str,
+        cin: usize,
+        cout: usize,
+        k: usize,
+        stride: usize,
+        same: bool,
+        bias: bool,
+    ) -> Self {
+        NativeOp {
+            name: name.to_string(),
+            kind: OpKind::Conv { cin, cout, k, stride, same, bias },
+        }
+    }
+
+    pub fn batch_norm(name: &str, c: usize) -> Self {
+        NativeOp { name: name.to_string(), kind: OpKind::BatchNorm { c, momentum: 0.9, eps: 1e-5 } }
+    }
+
+    pub fn act(name: &str, kind: ActKind) -> Self {
+        NativeOp { name: name.to_string(), kind: OpKind::Act { kind } }
+    }
+
+    pub fn max_pool(name: &str, k: usize) -> Self {
+        NativeOp { name: name.to_string(), kind: OpKind::MaxPool { k, stride: k } }
+    }
+
+    pub fn global_avg_pool(name: &str) -> Self {
+        NativeOp { name: name.to_string(), kind: OpKind::GlobalAvgPool }
+    }
+
+    pub fn flatten(name: &str) -> Self {
+        NativeOp { name: name.to_string(), kind: OpKind::Flatten }
+    }
+
+    pub fn dense(name: &str, din: usize, dout: usize, act: ActKind) -> Self {
+        NativeOp { name: name.to_string(), kind: OpKind::Dense { din, dout, act } }
+    }
+
+    /// Parameter specs, mirroring `layers.py::*.param_specs` exactly
+    /// (names, shapes, init kinds, fan-in).
+    pub fn param_specs(&self) -> Vec<ParamSpec> {
+        let p = |pname: &str| format!("{}/{}", self.name, pname);
+        match &self.kind {
+            OpKind::Conv { cin, cout, k, bias, .. } => {
+                let mut specs = vec![ParamSpec {
+                    name: p("w"),
+                    shape: vec![*k, *k, *cin, *cout],
+                    init: "he".to_string(),
+                    fan_in: k * k * cin,
+                }];
+                if *bias {
+                    specs.push(ParamSpec {
+                        name: p("b"),
+                        shape: vec![*cout],
+                        init: "zeros".to_string(),
+                        fan_in: 0,
+                    });
+                }
+                specs
+            }
+            OpKind::BatchNorm { c, .. } => vec![
+                ParamSpec { name: p("gamma"), shape: vec![*c], init: "ones".into(), fan_in: 0 },
+                ParamSpec { name: p("beta"), shape: vec![*c], init: "zeros".into(), fan_in: 0 },
+            ],
+            OpKind::Dense { din, dout, .. } => vec![
+                ParamSpec {
+                    name: p("w"),
+                    shape: vec![*din, *dout],
+                    init: "glorot".into(),
+                    fan_in: *din,
+                },
+                ParamSpec { name: p("b"), shape: vec![*dout], init: "zeros".into(), fan_in: 0 },
+            ],
+            _ => Vec::new(),
+        }
+    }
+
+    pub fn state_specs(&self) -> Vec<StateSpec> {
+        let p = |sname: &str| format!("{}/{}", self.name, sname);
+        match &self.kind {
+            OpKind::BatchNorm { c, .. } => vec![
+                StateSpec { name: p("mean"), shape: vec![*c], init: "zeros".into() },
+                StateSpec { name: p("var"), shape: vec![*c], init: "ones".into() },
+            ],
+            _ => Vec::new(),
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        match &self.kind {
+            OpKind::Conv { bias, .. } => 1 + usize::from(*bias),
+            OpKind::BatchNorm { .. } | OpKind::Dense { .. } => 2,
+            _ => 0,
+        }
+    }
+
+    pub fn n_state(&self) -> usize {
+        match &self.kind {
+            OpKind::BatchNorm { .. } => 2,
+            _ => 0,
+        }
+    }
+
+    /// Carry shape out given the (batch-inclusive) carry shape in,
+    /// mirroring `layers.py::*.out_shapes`.
+    pub fn out_shape(&self, s: &[usize]) -> Result<Vec<usize>> {
+        match &self.kind {
+            OpKind::Conv { cin, cout, k, stride, same, .. } => {
+                ensure!(s.len() == 4 && s[3] == *cin, "{}: bad input shape {:?}", self.name, s);
+                let (oh, ow, _, _) = kernels::conv_out_dims(s[1], s[2], *k, *stride, *same);
+                Ok(vec![s[0], oh, ow, *cout])
+            }
+            OpKind::BatchNorm { c, .. } => {
+                ensure!(s.last() == Some(c), "{}: bad input shape {:?}", self.name, s);
+                Ok(s.to_vec())
+            }
+            OpKind::Act { .. } => Ok(s.to_vec()),
+            OpKind::MaxPool { k, stride } => {
+                ensure!(s.len() == 4, "{}: bad input shape {:?}", self.name, s);
+                Ok(vec![s[0], (s[1] - k) / stride + 1, (s[2] - k) / stride + 1, s[3]])
+            }
+            OpKind::GlobalAvgPool => {
+                ensure!(s.len() == 4, "{}: bad input shape {:?}", self.name, s);
+                Ok(vec![s[0], s[3]])
+            }
+            OpKind::Flatten => Ok(vec![s[0], s[1..].iter().product()]),
+            OpKind::Dense { din, dout, .. } => {
+                ensure!(s.len() == 2 && s[1] == *din, "{}: bad input shape {:?}", self.name, s);
+                Ok(vec![s[0], *dout])
+            }
+        }
+    }
+
+    /// Forward-pass FLOPs for one sample (the perfsim cost model),
+    /// mirroring `layers.py::*.flops_per_sample`.
+    pub fn flops_per_sample(&self, s: &[usize]) -> Result<u64> {
+        Ok(match &self.kind {
+            OpKind::Conv { cin, cout, k, .. } => {
+                let out = self.out_shape(s)?;
+                (2 * out[1] * out[2] * k * k * cin * cout) as u64
+            }
+            OpKind::BatchNorm { .. } => 4 * s[1..].iter().product::<usize>() as u64,
+            OpKind::Act { .. } => s[1..].iter().product::<usize>() as u64,
+            OpKind::MaxPool { k, .. } => {
+                let out = self.out_shape(s)?;
+                (out[1] * out[2] * out[3] * k * k) as u64
+            }
+            OpKind::GlobalAvgPool => (s[1] * s[2] * s[3]) as u64,
+            OpKind::Flatten => 0,
+            OpKind::Dense { din, dout, .. } => (2 * din * dout) as u64,
+        })
+    }
+
+    /// Training-mode forward: `(y, cache, new_state)`. `new_state` is
+    /// positionally aligned with `state_specs` (empty for stateless ops);
+    /// the caller decides whether to commit it (fwd/last do, the bwd
+    /// recompute discards it — exactly the jax.vjp semantics).
+    pub fn train_forward(
+        &self,
+        params: &[Tensor],
+        state: &[Tensor],
+        x: &Tensor,
+    ) -> Result<(Tensor, OpCache, Vec<Tensor>)> {
+        match &self.kind {
+            OpKind::Conv { cin, cout, k, stride, same, bias } => {
+                let (n, h, w, ci) = dims4(x)?;
+                ensure!(ci == *cin, "{}: input has {} channels, want {}", self.name, ci, cin);
+                let (oh, ow, _, _) = kernels::conv_out_dims(h, w, *k, *stride, *same);
+                let mut y = Tensor::zeros(&[n, oh, ow, *cout]);
+                let b = if *bias { Some(params[1].data()) } else { None };
+                kernels::conv2d_forward(
+                    x.data(),
+                    n,
+                    h,
+                    w,
+                    *cin,
+                    params[0].data(),
+                    *k,
+                    *cout,
+                    *stride,
+                    *same,
+                    b,
+                    y.data_mut(),
+                );
+                Ok((y, OpCache::Conv { x: x.clone() }, Vec::new()))
+            }
+            OpKind::BatchNorm { c, momentum, eps } => {
+                ensure!(x.shape.last() == Some(c), "{}: bad shape {:?}", self.name, x.shape);
+                let rows = x.numel() / c;
+                let mut y = Tensor::zeros(x.shape.as_slice());
+                let mut xhat = Tensor::zeros(x.shape.as_slice());
+                let (mean, var, inv_std) = kernels::batchnorm_forward_train(
+                    x.data(),
+                    rows,
+                    *c,
+                    params[0].data(),
+                    params[1].data(),
+                    *eps,
+                    y.data_mut(),
+                    xhat.data_mut(),
+                );
+                let m = *momentum;
+                let mut new_mean = state[0].clone();
+                for (o, &b) in new_mean.data_mut().iter_mut().zip(&mean) {
+                    *o = m * *o + (1.0 - m) * b;
+                }
+                let mut new_var = state[1].clone();
+                for (o, &b) in new_var.data_mut().iter_mut().zip(&var) {
+                    *o = m * *o + (1.0 - m) * b;
+                }
+                Ok((y, OpCache::BatchNorm { xhat, inv_std }, vec![new_mean, new_var]))
+            }
+            OpKind::Act { kind } => {
+                let mut y = x.clone();
+                kind.apply(y.data_mut());
+                let cache = OpCache::Act { y: y.clone() };
+                Ok((y, cache, Vec::new()))
+            }
+            OpKind::MaxPool { k, stride } => {
+                let (n, h, w, c) = dims4(x)?;
+                let (oh, ow) = ((h - k) / stride + 1, (w - k) / stride + 1);
+                let mut y = Tensor::zeros(&[n, oh, ow, c]);
+                let mut argmax = vec![0u32; n * oh * ow * c];
+                kernels::maxpool_forward(
+                    x.data(),
+                    n,
+                    h,
+                    w,
+                    c,
+                    *k,
+                    *stride,
+                    y.data_mut(),
+                    &mut argmax,
+                );
+                Ok((
+                    y,
+                    OpCache::MaxPool { in_shape: x.shape.as_slice().to_vec(), argmax },
+                    Vec::new(),
+                ))
+            }
+            OpKind::GlobalAvgPool => {
+                let (n, h, w, c) = dims4(x)?;
+                let mut y = Tensor::zeros(&[n, c]);
+                kernels::global_avg_pool_forward(x.data(), n, h, w, c, y.data_mut());
+                Ok((y, OpCache::Gap { in_shape: x.shape.as_slice().to_vec() }, Vec::new()))
+            }
+            OpKind::Flatten => {
+                let in_shape = x.shape.as_slice().to_vec();
+                let y = x.reshape(&[in_shape[0], x.numel() / in_shape[0]])?;
+                Ok((y, OpCache::Flatten { in_shape }, Vec::new()))
+            }
+            OpKind::Dense { din, dout, act } => {
+                let (n, d) = dims2(x)?;
+                ensure!(d == *din, "{}: input dim {} want {}", self.name, d, din);
+                let mut y = Tensor::zeros(&[n, *dout]);
+                kernels::dense_forward(
+                    x.data(),
+                    n,
+                    *din,
+                    params[0].data(),
+                    params[1].data(),
+                    *dout,
+                    *act,
+                    y.data_mut(),
+                );
+                Ok((Tensor::clone(&y), OpCache::Dense { x: x.clone(), y }, Vec::new()))
+            }
+        }
+    }
+
+    /// Inference-mode forward (batch-norm uses running stats; no cache,
+    /// no state updates).
+    pub fn eval_forward(&self, params: &[Tensor], state: &[Tensor], x: &Tensor) -> Result<Tensor> {
+        match &self.kind {
+            OpKind::BatchNorm { c, eps, .. } => {
+                ensure!(x.shape.last() == Some(c), "{}: bad shape {:?}", self.name, x.shape);
+                let mut y = Tensor::zeros(x.shape.as_slice());
+                kernels::batchnorm_forward_eval(
+                    x.data(),
+                    *c,
+                    params[0].data(),
+                    params[1].data(),
+                    state[0].data(),
+                    state[1].data(),
+                    *eps,
+                    y.data_mut(),
+                );
+                Ok(y)
+            }
+            // every other op is train/eval-identical (no dropout here)
+            _ => Ok(self.train_forward(params, state, x)?.0),
+        }
+    }
+
+    /// Backward: `(dx, dparams)` with dparams aligned to `param_specs`.
+    pub fn backward(
+        &self,
+        params: &[Tensor],
+        cache: &OpCache,
+        dy: &Tensor,
+    ) -> Result<(Tensor, Vec<Tensor>)> {
+        match (&self.kind, cache) {
+            (OpKind::Conv { cin, cout, k, stride, same, bias }, OpCache::Conv { x }) => {
+                let (n, h, w, _) = dims4(x)?;
+                let mut dx = Tensor::zeros(x.shape.as_slice());
+                let mut dw = Tensor::zeros(params[0].shape.as_slice());
+                let mut db = if *bias { Some(Tensor::zeros(&[*cout])) } else { None };
+                kernels::conv2d_backward(
+                    x.data(),
+                    n,
+                    h,
+                    w,
+                    *cin,
+                    params[0].data(),
+                    *k,
+                    *cout,
+                    *stride,
+                    *same,
+                    dy.data(),
+                    dx.data_mut(),
+                    dw.data_mut(),
+                    db.as_mut().map(|t| t.data_mut()),
+                );
+                let mut grads = vec![dw];
+                if let Some(db) = db {
+                    grads.push(db);
+                }
+                Ok((dx, grads))
+            }
+            (OpKind::BatchNorm { c, .. }, OpCache::BatchNorm { xhat, inv_std }) => {
+                let rows = xhat.numel() / c;
+                let mut dx = Tensor::zeros(xhat.shape.as_slice());
+                let mut dgamma = Tensor::zeros(&[*c]);
+                let mut dbeta = Tensor::zeros(&[*c]);
+                kernels::batchnorm_backward(
+                    xhat.data(),
+                    inv_std,
+                    params[0].data(),
+                    rows,
+                    *c,
+                    dy.data(),
+                    dx.data_mut(),
+                    dgamma.data_mut(),
+                    dbeta.data_mut(),
+                );
+                Ok((dx, vec![dgamma, dbeta]))
+            }
+            (OpKind::Act { kind }, OpCache::Act { y }) => {
+                let mut dx = dy.clone();
+                for (g, &yv) in dx.data_mut().iter_mut().zip(y.data()) {
+                    *g *= kind.grad_from_output(yv);
+                }
+                Ok((dx, Vec::new()))
+            }
+            (OpKind::MaxPool { .. }, OpCache::MaxPool { in_shape, argmax }) => {
+                let mut dx = Tensor::zeros(in_shape);
+                kernels::maxpool_backward(dy.data(), argmax, dx.data_mut());
+                Ok((dx, Vec::new()))
+            }
+            (OpKind::GlobalAvgPool, OpCache::Gap { in_shape }) => {
+                let mut dx = Tensor::zeros(in_shape);
+                kernels::global_avg_pool_backward(
+                    dy.data(),
+                    in_shape[0],
+                    in_shape[1],
+                    in_shape[2],
+                    in_shape[3],
+                    dx.data_mut(),
+                );
+                Ok((dx, Vec::new()))
+            }
+            (OpKind::Flatten, OpCache::Flatten { in_shape }) => {
+                Ok((dy.reshape(in_shape)?, Vec::new()))
+            }
+            (OpKind::Dense { din, dout, act }, OpCache::Dense { x, y }) => {
+                let (n, _) = dims2(x)?;
+                let mut dx = Tensor::zeros(x.shape.as_slice());
+                let mut dw = Tensor::zeros(params[0].shape.as_slice());
+                let mut db = Tensor::zeros(&[*dout]);
+                kernels::dense_backward(
+                    x.data(),
+                    n,
+                    *din,
+                    params[0].data(),
+                    *dout,
+                    *act,
+                    y.data(),
+                    dy.data(),
+                    dx.data_mut(),
+                    dw.data_mut(),
+                    db.data_mut(),
+                );
+                Ok((dx, vec![dw, db]))
+            }
+            _ => bail!("{}: cache/op kind mismatch in backward", self.name),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_mirror_python_layer_zoo() {
+        let conv = NativeOp::conv("conv1", 1, 6, 5, 1, true, true);
+        let specs = conv.param_specs();
+        assert_eq!(specs[0].name, "conv1/w");
+        assert_eq!(specs[0].shape, vec![5, 5, 1, 6]);
+        assert_eq!(specs[0].init, "he");
+        assert_eq!(specs[0].fan_in, 25);
+        assert_eq!(specs[1].name, "conv1/b");
+        assert_eq!(conv.n_params(), 2);
+
+        let bn = NativeOp::batch_norm("bn1", 8);
+        assert_eq!(bn.param_specs()[0].init, "ones");
+        assert_eq!(bn.state_specs()[1].name, "bn1/var");
+        assert_eq!(bn.n_state(), 2);
+
+        let fc = NativeOp::dense("fc1", 400, 120, ActKind::Tanh);
+        assert_eq!(fc.param_specs()[0].init, "glorot");
+        assert_eq!(fc.param_specs()[0].fan_in, 400);
+    }
+
+    #[test]
+    fn lenet_shape_chain() {
+        // The quickstart LeNet-5 carry chain, batch 32.
+        let ops = [
+            NativeOp::conv("conv1", 1, 6, 5, 1, true, true),
+            NativeOp::act("act1", ActKind::Tanh),
+            NativeOp::max_pool("pool1", 2),
+            NativeOp::conv("conv2", 6, 16, 5, 1, false, true),
+            NativeOp::act("act2", ActKind::Tanh),
+            NativeOp::max_pool("pool2", 2),
+            NativeOp::flatten("flat"),
+            NativeOp::dense("fc1", 400, 120, ActKind::Tanh),
+        ];
+        let mut s = vec![32usize, 28, 28, 1];
+        for op in &ops {
+            s = op.out_shape(&s).unwrap();
+        }
+        assert_eq!(s, vec![32, 120]);
+    }
+
+    #[test]
+    fn train_and_eval_forward_agree_without_state() {
+        // tanh act has no state: train and eval paths must be identical.
+        let op = NativeOp::act("a", ActKind::Tanh);
+        let x = Tensor::from_vec(&[2, 3], vec![-1.0, 0.0, 1.0, 2.0, -2.0, 0.5]).unwrap();
+        let (yt, _, st) = op.train_forward(&[], &[], &x).unwrap();
+        let ye = op.eval_forward(&[], &[], &x).unwrap();
+        assert_eq!(yt.data(), ye.data());
+        assert!(st.is_empty());
+    }
+
+    #[test]
+    fn batchnorm_train_updates_state_eval_uses_it() {
+        let op = NativeOp::batch_norm("bn", 2);
+        let params = vec![Tensor::ones(&[2]), Tensor::zeros(&[2])];
+        let state = vec![Tensor::zeros(&[2]), Tensor::ones(&[2])];
+        let x = Tensor::from_vec(&[3, 2], vec![1.0, 10.0, 2.0, 20.0, 3.0, 30.0]).unwrap();
+        let (_, _, new_state) = op.train_forward(&params, &state, &x).unwrap();
+        assert_eq!(new_state.len(), 2);
+        // running mean moved toward the batch mean (momentum 0.9)
+        assert!((new_state[0].data()[0] - 0.1 * 2.0).abs() < 1e-5);
+        assert!((new_state[0].data()[1] - 0.1 * 20.0).abs() < 1e-4);
+        // eval with the fresh state differs from eval with the old state
+        let e_old = op.eval_forward(&params, &state, &x).unwrap();
+        let e_new = op.eval_forward(&params, &new_state, &x).unwrap();
+        assert_ne!(e_old.data(), e_new.data());
+    }
+
+    #[test]
+    fn flatten_roundtrips_through_backward() {
+        let op = NativeOp::flatten("flat");
+        let x = Tensor::from_vec(&[2, 2, 2, 1], (0..8).map(|i| i as f32).collect()).unwrap();
+        let (y, cache, _) = op.train_forward(&[], &[], &x).unwrap();
+        assert_eq!(y.shape, vec![2, 4]);
+        let (dx, grads) = op.backward(&[], &cache, &y).unwrap();
+        assert_eq!(dx.shape, vec![2, 2, 2, 1]);
+        assert_eq!(dx.data(), x.data());
+        assert!(grads.is_empty());
+    }
+}

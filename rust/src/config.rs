@@ -36,11 +36,45 @@ impl Mode {
     }
 }
 
+/// Which compute backend serves the stage programs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// XLA when artifacts + a real PJRT backend are available, native
+    /// pure-Rust kernels otherwise.
+    Auto,
+    /// In-crate kernels; needs no artifacts and no Python step.
+    Native,
+    /// AOT-compiled PJRT programs (errors without artifacts/backend).
+    Xla,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Backend> {
+        match s {
+            "auto" => Ok(Backend::Auto),
+            "native" => Ok(Backend::Native),
+            "xla" => Ok(Backend::Xla),
+            _ => Err(anyhow!("unknown backend {s:?} (auto|native|xla)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Auto => "auto",
+            Backend::Native => "native",
+            Backend::Xla => "xla",
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct RunConfig {
-    /// Artifact config name under artifacts/ (e.g. "resnet20_4s").
+    /// Artifact config name under artifacts/ (e.g. "resnet20_4s") or a
+    /// built-in native config (see `backend::native_config_names`).
     pub config: String,
     pub mode: Mode,
+    /// Compute backend (default Auto: XLA when ready, else native).
+    pub backend: Backend,
     pub iters: u64,
     /// Hybrid only: iterations of the pipelined phase.
     pub pipelined_iters: u64,
@@ -69,6 +103,7 @@ impl RunConfig {
         RunConfig {
             config: config.to_string(),
             mode: Mode::Pipelined,
+            backend: Backend::Auto,
             iters: 300,
             pipelined_iters: 0,
             seed: 42,
@@ -87,6 +122,7 @@ impl RunConfig {
         json::obj(vec![
             ("config", json::s(&self.config)),
             ("mode", json::s(self.mode.name())),
+            ("backend", json::s(self.backend.name())),
             ("iters", json::num(self.iters as f64)),
             ("pipelined_iters", json::num(self.pipelined_iters as f64)),
             ("seed", json::num(self.seed as f64)),
@@ -113,6 +149,9 @@ impl RunConfig {
         let mut rc = RunConfig::new(config);
         if let Some(m) = j.get("mode").and_then(Json::as_str) {
             rc.mode = Mode::parse(m)?;
+        }
+        if let Some(b) = j.get("backend").and_then(Json::as_str) {
+            rc.backend = Backend::parse(b)?;
         }
         let getn = |k: &str, d: f64| j.get(k).and_then(Json::as_f64).unwrap_or(d);
         rc.iters = getn("iters", rc.iters as f64) as u64;
@@ -165,6 +204,19 @@ mod tests {
         assert_eq!(Mode::parse("baseline").unwrap(), Mode::Sequential);
         assert_eq!(Mode::parse("hybrid").unwrap(), Mode::Hybrid);
         assert!(Mode::parse("nope").is_err());
+    }
+
+    #[test]
+    fn backend_parsing_and_roundtrip() {
+        assert_eq!(Backend::parse("native").unwrap(), Backend::Native);
+        assert_eq!(Backend::parse("xla").unwrap(), Backend::Xla);
+        assert_eq!(Backend::parse("auto").unwrap(), Backend::Auto);
+        assert!(Backend::parse("tpu").is_err());
+        let mut rc = RunConfig::new("quickstart_lenet");
+        assert_eq!(rc.backend, Backend::Auto); // default
+        rc.backend = Backend::Native;
+        let back = RunConfig::from_json(&rc.to_json()).unwrap();
+        assert_eq!(back.backend, Backend::Native);
     }
 
     #[test]

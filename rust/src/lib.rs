@@ -9,6 +9,7 @@
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for the
 //! paper-vs-measured results.
 
+pub mod backend;
 pub mod config;
 pub mod data;
 pub mod memory;

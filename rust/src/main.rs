@@ -9,7 +9,7 @@
 
 use anyhow::{anyhow, Result};
 
-use pipestale::config::{Mode, RunConfig};
+use pipestale::config::{Backend, Mode, RunConfig};
 use pipestale::memory::{pipedream_stash_bytes, MemoryReport};
 use pipestale::meta::ConfigMeta;
 use pipestale::pipeline::perfsim::{
@@ -65,6 +65,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
         Command::new("pipestale train", "train one artifact config")
             .req("config", "artifact config name (see list-configs)")
             .opt("mode", "pipelined", "pipelined | sequential | hybrid")
+            .opt("backend", "auto", "auto | native | xla (native needs no artifacts)")
             .opt("iters", "300", "training iterations (mini-batches)")
             .opt("pipelined-iters", "0", "hybrid: pipelined prefix length")
             .opt("seed", "42", "global seed")
@@ -81,6 +82,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
     )?;
     let mut rc = RunConfig::new(m.get("config"));
     rc.mode = Mode::parse(m.get("mode"))?;
+    rc.backend = Backend::parse(m.get("backend"))?;
     rc.iters = m.get_u64("iters").map_err(|e| anyhow!(e))?;
     rc.pipelined_iters = m.get_u64("pipelined-iters").map_err(|e| anyhow!(e))?;
     rc.seed = m.get_u64("seed").map_err(|e| anyhow!(e))?;
@@ -124,7 +126,7 @@ fn cmd_inspect(args: &[String]) -> Result<()> {
             .req("config", "artifact config name"),
         args,
     )?;
-    let meta = ConfigMeta::load_named(&pipestale::artifacts_root(), m.get("config"))?;
+    let meta = pipestale::train::load_native_meta(m.get("config"))?;
     let r = StalenessReport::from_meta(&meta);
     println!(
         "{}: model={} PPV={:?} -> {} paper stages, {:.1}% stale weights",
@@ -155,7 +157,7 @@ fn cmd_memory(args: &[String]) -> Result<()> {
             .opt("batch", "128", "batch size for absolute numbers"),
         args,
     )?;
-    let meta = ConfigMeta::load_named(&pipestale::artifacts_root(), m.get("config"))?;
+    let meta = pipestale::train::load_native_meta(m.get("config"))?;
     let batch = m.get_usize("batch").map_err(|e| anyhow!(e))?;
     let r = MemoryReport::from_meta(&meta);
     let mb = 1024.0 * 1024.0;
@@ -186,7 +188,7 @@ fn cmd_perfsim(args: &[String]) -> Result<()> {
             .opt("mapping", "paired", "paired | full"),
         args,
     )?;
-    let meta = ConfigMeta::load_named(&pipestale::artifacts_root(), m.get("config"))?;
+    let meta = pipestale::train::load_native_meta(m.get("config"))?;
     let iters = m.get_u64("iters").map_err(|e| anyhow!(e))?;
     let gflops = m.get_f64("gflops").map_err(|e| anyhow!(e))?;
     let mapping = match m.get("mapping") {
@@ -212,24 +214,38 @@ fn cmd_perfsim(args: &[String]) -> Result<()> {
 fn cmd_list() -> Result<()> {
     let root = pipestale::artifacts_root();
     let mut names: Vec<String> = std::fs::read_dir(&root)
-        .map_err(|e| anyhow!("{}: {e} (run `make artifacts`)", root.display()))?
-        .filter_map(|e| e.ok())
-        .filter(|e| e.path().join("meta.json").exists())
-        .map(|e| e.file_name().to_string_lossy().into_owned())
-        .collect();
+        .map(|rd| {
+            rd.filter_map(|e| e.ok())
+                .filter(|e| e.path().join("meta.json").exists())
+                .map(|e| e.file_name().to_string_lossy().into_owned())
+                .collect()
+        })
+        .unwrap_or_default();
     names.sort();
-    let mut t = Table::new(&["config", "model", "stages", "PPV", "batch", "%stale", "hlo"]);
-    for n in names {
-        if let Ok(meta) = ConfigMeta::load_named(&root, &n) {
-            t.row(&[
-                meta.config.clone(),
-                meta.model.clone(),
-                meta.paper_stages().to_string(),
-                format!("{:?}", meta.ppv),
-                meta.batch.to_string(),
-                format!("{:.1}%", 100.0 * meta.stale_weight_fraction()),
-                if meta.meta_only { "meta-only".into() } else { "yes".into() },
-            ]);
+    let mut t = Table::new(&["config", "model", "stages", "PPV", "batch", "%stale", "backend"]);
+    let mut row = |meta: &ConfigMeta, backend: &str| {
+        t.row(&[
+            meta.config.clone(),
+            meta.model.clone(),
+            meta.paper_stages().to_string(),
+            format!("{:?}", meta.ppv),
+            meta.batch.to_string(),
+            format!("{:.1}%", 100.0 * meta.stale_weight_fraction()),
+            backend.to_string(),
+        ]);
+    };
+    for n in &names {
+        if let Ok(meta) = ConfigMeta::load_named(&root, n) {
+            row(&meta, if meta.meta_only { "meta-only" } else { "xla" });
+        }
+    }
+    // Built-in native configs need no artifacts at all.
+    for n in pipestale::backend::native_config_names() {
+        if names.iter().any(|a| a.as_str() == n) {
+            continue; // artifact version already listed
+        }
+        if let Ok(meta) = pipestale::backend::native_config(n) {
+            row(&meta, "native");
         }
     }
     println!("{}", t.render());

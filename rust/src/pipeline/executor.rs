@@ -55,6 +55,13 @@ pub trait StageExecutor {
 
     /// Eval-mode forward of partition `p`; for p = P-1 returns (logits,).
     fn eval_forward(&mut self, p: usize, carry: &[Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Snapshot of the executor's weights (checkpointing at the end of
+    /// a training run). Executors without real weights (the mock) keep
+    /// the empty default.
+    fn params_snapshot(&self) -> ModelParams {
+        ModelParams { partitions: Vec::new() }
+    }
 }
 
 /// Production executor: PJRT programs + host-owned weights.
@@ -130,5 +137,9 @@ impl StageExecutor for XlaExecutor {
 
     fn eval_forward(&mut self, p: usize, carry: &[Tensor]) -> Result<Vec<Tensor>> {
         self.engines[p].eval_forward(carry)
+    }
+
+    fn params_snapshot(&self) -> ModelParams {
+        XlaExecutor::params_snapshot(self)
     }
 }

@@ -45,8 +45,12 @@ impl HybridSchedule {
     }
 
     /// Paper §4 ideal speedup vs non-pipelined with `accels` accelerators
-    /// (the pipelined fraction runs `accels`x faster at best).
+    /// (the pipelined fraction runs `accels`x faster at best). An empty
+    /// schedule has nothing to speed up: 1.0, not 0/0 = NaN.
     pub fn ideal_speedup(&self, accels: usize) -> f64 {
+        if self.total_iters == 0 {
+            return 1.0;
+        }
         let n = self.total_iters as f64;
         let np = self.pipelined_iters as f64;
         n / (np / accels as f64 + (n - np))
@@ -79,6 +83,16 @@ mod tests {
     fn clamp_pipelined_to_total() {
         let h = HybridSchedule::new(100, 10);
         assert_eq!(h.pipelined_iters, 10);
+    }
+
+    #[test]
+    fn ideal_speedup_of_empty_schedule_is_one() {
+        // Regression: 0/0 used to yield NaN and poison downstream math.
+        for accels in [1usize, 2, 8] {
+            let s = HybridSchedule::new(0, 0).ideal_speedup(accels);
+            assert!(s.is_finite(), "accels={accels}: {s}");
+            assert_eq!(s, 1.0, "accels={accels}");
+        }
     }
 
     #[test]

@@ -19,6 +19,7 @@ pub mod scheduler;
 pub mod staleness;
 pub mod threaded;
 
+pub use crate::backend::NativeExecutor;
 pub use executor::{LastResult, StageExecutor, XlaExecutor};
 pub use hybrid::{HybridSchedule, Phase};
 pub use scheduler::{Feed, Pipeline, TrainEvent};

@@ -187,6 +187,18 @@ impl Tensor {
         self.data.ptr_eq(&other.data)
     }
 
+    /// Same storage, different shape (zero-copy view; numel must match).
+    /// The native backend's flatten/unflatten path.
+    pub fn reshape(&self, shape: &[usize]) -> Result<Tensor> {
+        if shape.len() > MAX_RANK {
+            bail!("shape {:?} exceeds max rank {}", shape, MAX_RANK);
+        }
+        if numel(shape) != self.numel() {
+            bail!("cannot reshape {:?} ({} elems) to {:?}", self.shape, self.numel(), shape);
+        }
+        Ok(Tensor { shape: Shape::from_slice(shape), data: self.data.clone() })
+    }
+
     pub fn numel(&self) -> usize {
         self.shape.numel()
     }
@@ -325,6 +337,16 @@ mod tests {
         assert_eq!(t.shape.rank(), 2);
         assert_eq!(t.shape.numel(), 6);
         assert_eq!(&t.shape[..], &[2, 3]);
+    }
+
+    #[test]
+    fn reshape_is_zero_copy_and_checked() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
+        let r = t.reshape(&[6]).unwrap();
+        assert_eq!(r.shape, vec![6]);
+        assert!(t.shares_storage(&r));
+        assert_eq!(r.data(), t.data());
+        assert!(t.reshape(&[4]).is_err());
     }
 
     #[test]

@@ -1,12 +1,19 @@
 //! Training driver: wires data, executor, scheduler and metrics into the
 //! three schedules the paper evaluates (pipelined / non-pipelined /
 //! hybrid), plus the eval loop.
+//!
+//! The driver is generic over the compute backend: `run` dispatches on
+//! `RunConfig::backend` between the XLA executor (AOT artifacts + PJRT)
+//! and the native pure-Rust executor (no artifacts, no Python step);
+//! `Backend::Auto` picks XLA when `xla_ready()` and native otherwise,
+//! so the same code path trains end-to-end on any machine.
 
 pub mod metrics;
 
 use anyhow::{Context, Result};
 
-use crate::config::{Mode, RunConfig};
+use crate::backend::NativeExecutor;
+use crate::config::{Backend, Mode, RunConfig};
 use crate::data::{batch_seed, load_or_synthesize, Batcher, Dataset, SyntheticSpec};
 use crate::meta::ConfigMeta;
 use crate::model::ModelParams;
@@ -44,30 +51,37 @@ pub fn build_optims(meta: &ConfigMeta, total_iters: u64, stale_lr_scale: f64) ->
         .collect()
 }
 
-/// Top-1 accuracy over the test set (floor(len/batch) full batches).
+/// Top-1 accuracy over the *whole* test set. Stage programs have a
+/// static batch size, so the `len % batch` remainder is padded up to a
+/// full batch (repeating the first tail sample) and only the real
+/// samples are scored — no silently dropped tail.
 pub fn evaluate<E: StageExecutor>(
     pipe: &mut Pipeline<E>,
     ds: &Dataset,
     batch: usize,
 ) -> Result<f64> {
-    let n_batches = ds.len() / batch;
-    anyhow::ensure!(n_batches > 0, "test set smaller than a batch");
+    anyhow::ensure!(batch > 0, "evaluate: zero batch size");
+    anyhow::ensure!(!ds.is_empty(), "evaluate: empty test set");
     let mut correct = 0usize;
-    let mut total = 0usize;
-    for b in 0..n_batches {
-        let idxs: Vec<usize> = (b * batch..(b + 1) * batch).collect();
+    let mut scored = 0usize;
+    while scored < ds.len() {
+        let real = (ds.len() - scored).min(batch);
+        let mut idxs: Vec<usize> = (scored..scored + real).collect();
+        idxs.resize(batch, idxs[0]); // pad to the static batch size
         let (x, labels) = ds.gather(&idxs);
         let logits = pipe.eval_forward(x)?;
-        correct += count_correct(&logits, &labels.data, batch);
-        total += batch;
+        correct += count_correct_rows(&logits, &labels.data, batch, real);
+        scored += real;
     }
-    Ok(correct as f64 / total as f64)
+    Ok(correct as f64 / scored as f64)
 }
 
-pub fn count_correct(logits: &Tensor, labels: &[i32], batch: usize) -> usize {
+/// Count argmax==label over the first `rows` of a `[batch, classes]`
+/// logits tensor (ties resolve to the first maximum).
+pub fn count_correct_rows(logits: &Tensor, labels: &[i32], batch: usize, rows: usize) -> usize {
     let classes = logits.numel() / batch;
     let mut correct = 0;
-    for i in 0..batch {
+    for i in 0..rows {
         let row = &logits.data()[i * classes..(i + 1) * classes];
         let mut best = 0usize;
         for (j, v) in row.iter().enumerate() {
@@ -82,43 +96,110 @@ pub fn count_correct(logits: &Tensor, labels: &[i32], batch: usize) -> usize {
     correct
 }
 
-/// Run a full training experiment per the RunConfig.
-pub fn run(rc: &RunConfig) -> Result<TrainResult> {
-    let meta = ConfigMeta::load_named(&crate::artifacts_root(), &rc.config)
-        .with_context(|| format!("loading config {}", rc.config))?;
-    let runtime = Runtime::cpu()?;
-    run_with_runtime(rc, &meta, &runtime)
+pub fn count_correct(logits: &Tensor, labels: &[i32], batch: usize) -> usize {
+    count_correct_rows(logits, labels, batch, batch)
 }
 
-/// Variant that reuses an existing runtime/artifacts (benches share one
-/// PJRT client across many runs).
-pub fn run_with_runtime(rc: &RunConfig, meta: &ConfigMeta, runtime: &Runtime) -> Result<TrainResult> {
+/// True when this specific config has a recorded artifact contract.
+fn artifact_meta_exists(name: &str) -> bool {
+    crate::artifacts_root().join(name).join("meta.json").exists()
+}
+
+/// Resolve the meta for a config on the native backend: a built
+/// artifact meta.json takes precedence (so artifact configs run
+/// natively too, against the recorded contract) and a corrupt one is an
+/// error — only a genuinely absent artifact falls back to the in-crate
+/// native manifest.
+pub fn load_native_meta(name: &str) -> Result<ConfigMeta> {
+    if artifact_meta_exists(name) {
+        return ConfigMeta::load_named(&crate::artifacts_root(), name);
+    }
+    crate::backend::native_config(name)
+}
+
+/// Run a full training experiment per the RunConfig, on whichever
+/// backend it selects. `Auto` picks XLA only when the runtime is ready
+/// AND this config's artifacts exist; native-only built-ins (e.g.
+/// `native_lenet_small`) therefore run everywhere under the default.
+pub fn run(rc: &RunConfig) -> Result<TrainResult> {
+    let use_xla = match rc.backend {
+        Backend::Xla => true,
+        Backend::Native => false,
+        Backend::Auto => crate::xla_ready() && artifact_meta_exists(&rc.config),
+    };
+    if use_xla {
+        let meta = ConfigMeta::load_named(&crate::artifacts_root(), &rc.config)
+            .with_context(|| format!("loading config {}", rc.config))?;
+        let runtime = Runtime::cpu()?;
+        run_with_runtime(rc, &meta, &runtime)
+    } else {
+        run_native(rc)
+    }
+}
+
+/// XLA-backend variant that reuses an existing runtime/artifacts
+/// (benches share one PJRT client across many runs).
+pub fn run_with_runtime(
+    rc: &RunConfig,
+    meta: &ConfigMeta,
+    runtime: &Runtime,
+) -> Result<TrainResult> {
+    let (train_ds, test_ds) = build_datasets(rc, meta)?;
+    let params = initial_params(rc, meta)?;
+    let optims = build_optims(meta, rc.iters, rc.stale_lr_scale);
+    let exec = XlaExecutor::new(runtime, meta.clone(), params, optims)?;
+    train_loop(rc, meta, exec, &train_ds, &test_ds)
+}
+
+/// Native-backend variant: pure-Rust kernels, no artifacts required.
+pub fn run_native(rc: &RunConfig) -> Result<TrainResult> {
+    let meta = load_native_meta(&rc.config)
+        .with_context(|| format!("resolving native config {}", rc.config))?;
+    let (train_ds, test_ds) = build_datasets(rc, &meta)?;
+    let params = initial_params(rc, &meta)?;
+    let optims = build_optims(&meta, rc.iters, rc.stale_lr_scale);
+    let exec = NativeExecutor::new(meta.clone(), params, optims)?;
+    train_loop(rc, &meta, exec, &train_ds, &test_ds)
+}
+
+fn build_datasets(rc: &RunConfig, meta: &ConfigMeta) -> Result<(Dataset, Dataset)> {
     let spec = SyntheticSpec {
         train: rc.train_size,
         test: rc.test_size,
         noise: rc.noise as f32,
         seed: rc.seed ^ 0x5eed_da7a,
     };
-    let (train_ds, test_ds) =
-        load_or_synthesize(&meta.dataset, rc.data_dir.as_deref(), &spec)?;
+    let (train_ds, test_ds) = load_or_synthesize(&meta.dataset, rc.data_dir.as_deref(), &spec)?;
     anyhow::ensure!(
         train_ds.input_shape == meta.input_shape,
         "dataset shape {:?} vs model input {:?}",
         train_ds.input_shape,
         meta.input_shape
     );
+    Ok((train_ds, test_ds))
+}
 
-    let params = match &rc.resume_from {
+fn initial_params(rc: &RunConfig, meta: &ConfigMeta) -> Result<ModelParams> {
+    match &rc.resume_from {
         Some(path) => {
             let (p, at) = crate::model::checkpoint::load(path)?;
             crate::model::checkpoint::validate(&p, meta)?;
             log::info!("resumed weights from {} (saved at iter {at})", path.display());
-            p
+            Ok(p)
         }
-        None => ModelParams::init(&meta.partitions, rc.seed)?,
-    };
-    let optims = build_optims(meta, rc.iters, rc.stale_lr_scale);
-    let exec = XlaExecutor::new(runtime, meta.clone(), params, optims)?;
+        None => ModelParams::init(&meta.partitions, rc.seed),
+    }
+}
+
+/// The backend-agnostic training loop: any `StageExecutor` plugged into
+/// the cycle-accurate pipeline, with the paper's schedule switching.
+fn train_loop<E: StageExecutor>(
+    rc: &RunConfig,
+    meta: &ConfigMeta,
+    exec: E,
+    train_ds: &Dataset,
+    test_ds: &Dataset,
+) -> Result<TrainResult> {
     let mut pipe = Pipeline::new(exec, meta.batch);
     let mut batcher = Batcher::new(train_ds.len(), meta.batch, rc.seed ^ 0xba7c4);
 
@@ -170,7 +251,7 @@ pub fn run_with_runtime(rc: &RunConfig, meta: &ConfigMeta, runtime: &Runtime) ->
             // NOTE: in pipelined mode some batches are still in flight;
             // eval reflects the weights as of this cycle, like the
             // paper's periodic tests during training.
-            let acc = evaluate(&mut pipe, &test_ds, meta.batch)?;
+            let acc = evaluate(&mut pipe, test_ds, meta.batch)?;
             rec.eval_point(fed, acc);
             log::info!("iter {fed}: test acc {:.2}%", 100.0 * acc);
         }
@@ -178,7 +259,7 @@ pub fn run_with_runtime(rc: &RunConfig, meta: &ConfigMeta, runtime: &Runtime) ->
     for e in pipe.drain()? {
         rec.train_event(&e);
     }
-    let final_accuracy = evaluate(&mut pipe, &test_ds, meta.batch)?;
+    let final_accuracy = evaluate(&mut pipe, test_ds, meta.batch)?;
     rec.eval_point(rc.iters, final_accuracy);
     if let Some(path) = &rc.save_to {
         crate::model::checkpoint::save(path, &pipe.exec.params_snapshot(), rc.iters)?;

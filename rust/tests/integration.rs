@@ -1,9 +1,13 @@
-//! Integration tests over the real AOT artifacts + PJRT runtime.
+//! Integration tests over both compute backends.
 //!
-//! These need `make artifacts` to have produced at least the quickstart
-//! and resnet20_4s configs.
+//! The `*_native` tests run the full training paths — pipelined,
+//! sequential, hybrid, checkpointing, evaluation — on the pure-Rust
+//! `NativeExecutor` and therefore execute everywhere, with no artifacts
+//! and no XLA. The XLA twins of the same scenarios need
+//! `make artifacts` + a real PJRT backend and skip gracefully otherwise.
 
-use pipestale::config::{Mode, RunConfig};
+use pipestale::backend::{native_config, NativeExecutor};
+use pipestale::config::{Backend, Mode, RunConfig};
 use pipestale::data::{batch_seed, load_or_synthesize, Batcher, SyntheticSpec};
 use pipestale::meta::ConfigMeta;
 use pipestale::model::ModelParams;
@@ -224,6 +228,225 @@ fn cross_process_hybrid_via_checkpoint() {
             "tail regressed: {} -> {}", a.final_accuracy, b.final_accuracy);
     assert!(b.final_accuracy > 0.5);
     std::fs::remove_file(&ckpt).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Native-backend ports: the same paper scenarios, executed unconditionally.
+// ---------------------------------------------------------------------------
+
+/// Small native config (narrow LeNet, batch 16) so the suite stays fast.
+fn native_rc(mode: Mode, iters: u64) -> RunConfig {
+    let mut rc = RunConfig::new("native_lenet_small");
+    rc.backend = Backend::Native;
+    rc.mode = mode;
+    rc.iters = iters;
+    rc.train_size = 512;
+    rc.test_size = 96;
+    rc.noise = 0.8;
+    rc
+}
+
+#[test]
+fn native_pipelined_training_learns() {
+    // Run through Backend::Auto: this config has no artifacts, so Auto
+    // must resolve to the native executor on every machine — covering
+    // the auto-dispatch path end to end.
+    let mut rc = native_rc(Mode::Pipelined, 80);
+    rc.backend = Backend::Auto;
+    let res = pipestale::train::run(&rc).unwrap();
+    // loss decreased vs the first few batches (chance-level CE is ln 10)
+    let early: f64 =
+        res.recorder.train[..10].iter().map(|(_, l, _)| *l as f64).sum::<f64>() / 10.0;
+    assert!(
+        res.final_train_loss < early,
+        "loss did not fall: {} vs {early}",
+        res.final_train_loss
+    );
+    assert!(res.final_accuracy > 0.25, "acc {} (chance 0.1)", res.final_accuracy);
+    // every fed batch retired exactly once
+    assert_eq!(res.recorder.train.len(), 80);
+    let mut ids: Vec<u64> = res.recorder.train.iter().map(|(b, _, _)| *b).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..80).collect::<Vec<_>>());
+}
+
+#[test]
+fn native_sequential_training_learns() {
+    let res = pipestale::train::run(&native_rc(Mode::Sequential, 60)).unwrap();
+    let early: f64 =
+        res.recorder.train[..10].iter().map(|(_, l, _)| *l as f64).sum::<f64>() / 10.0;
+    assert!(res.final_train_loss < early, "{} vs {early}", res.final_train_loss);
+    assert!(res.final_accuracy > 0.25, "acc {}", res.final_accuracy);
+}
+
+#[test]
+fn native_hybrid_switches_and_learns() {
+    let mut rc = native_rc(Mode::Hybrid, 60);
+    rc.pipelined_iters = 30;
+    let res = pipestale::train::run(&rc).unwrap();
+    assert_eq!(res.recorder.train.len(), 60);
+    let early: f64 =
+        res.recorder.train[..10].iter().map(|(_, l, _)| *l as f64).sum::<f64>() / 10.0;
+    assert!(res.final_train_loss < early, "{} vs {early}", res.final_train_loss);
+    assert!(res.final_train_loss.is_finite());
+}
+
+#[test]
+fn single_inflight_pipelined_equals_sequential_on_native() {
+    // With one batch in flight staleness is zero: cycle+drain must leave
+    // the weights bit-identical to sequential_step.
+    let meta = native_config("native_lenet_small").unwrap();
+    let spec = SyntheticSpec { train: 64, test: 32, noise: 1.0, seed: 5 };
+    let (ds, _) = load_or_synthesize(&meta.dataset, None, &spec).unwrap();
+    let mut batcher = Batcher::new(ds.len(), meta.batch, 1);
+    let idxs = batcher.next_indices().to_vec();
+    let (x, labels) = ds.gather(&idxs);
+
+    let mk_pipe = || {
+        let params = ModelParams::init(&meta.partitions, 7).unwrap();
+        let optims = pipestale::train::build_optims(&meta, 10, 1.0);
+        let exec = NativeExecutor::new(meta.clone(), params, optims).unwrap();
+        Pipeline::new(exec, meta.batch)
+    };
+    let feed =
+        || Feed { batch_id: 0, seed: batch_seed(3, 0), x: x.clone(), labels: labels.clone() };
+
+    let mut a = mk_pipe();
+    a.sequential_step(feed()).unwrap();
+    let mut b = mk_pipe();
+    b.cycle(Some(feed())).unwrap();
+    b.drain().unwrap();
+
+    let pa = a.exec.params_snapshot();
+    let pb = b.exec.params_snapshot();
+    assert_eq!(pa.partitions.len(), pb.partitions.len());
+    for (x, y) in pa.partitions.iter().zip(pb.partitions.iter()) {
+        for (t, u) in x.params.iter().zip(y.params.iter()) {
+            assert_eq!(t.data(), u.data(), "weights must be bit-identical");
+        }
+        for (t, u) in x.state.iter().zip(y.state.iter()) {
+            assert_eq!(t.data(), u.data(), "state must be bit-identical");
+        }
+    }
+}
+
+#[test]
+fn stale_pipelined_diverges_from_sequential_weights_native() {
+    // With many batches in flight the pipelined run must NOT match
+    // sequential bit-for-bit: stale gradients are actually used.
+    let a = pipestale::train::run(&native_rc(Mode::Pipelined, 25)).unwrap();
+    let b = pipestale::train::run(&native_rc(Mode::Sequential, 25)).unwrap();
+    let la: Vec<f32> = a.recorder.train.iter().rev().take(5).map(|(_, l, _)| *l).collect();
+    let lb: Vec<f32> = b.recorder.train.iter().rev().take(5).map(|(_, l, _)| *l).collect();
+    assert_ne!(la, lb, "stale weights should alter the trajectory");
+}
+
+#[test]
+fn native_eval_is_deterministic_and_training_changes_weights() {
+    let meta = native_config("native_lenet_small").unwrap();
+    let params = ModelParams::init(&meta.partitions, 9).unwrap();
+    let before = params.clone();
+    let optims = pipestale::train::build_optims(&meta, 10, 1.0);
+    let exec = NativeExecutor::new(meta.clone(), params, optims).unwrap();
+    let mut pipe = Pipeline::new(exec, meta.batch);
+
+    let spec = SyntheticSpec { train: 64, test: 64, noise: 1.0, seed: 2 };
+    let (train_ds, test_ds) = load_or_synthesize(&meta.dataset, None, &spec).unwrap();
+
+    let a1 = pipestale::train::evaluate(&mut pipe, &test_ds, meta.batch).unwrap();
+    let a2 = pipestale::train::evaluate(&mut pipe, &test_ds, meta.batch).unwrap();
+    assert_eq!(a1, a2, "eval must be deterministic");
+
+    let mut batcher = Batcher::new(train_ds.len(), meta.batch, 3);
+    for b in 0..3u64 {
+        let idxs = batcher.next_indices().to_vec();
+        let (x, labels) = train_ds.gather(&idxs);
+        pipe.sequential_step(Feed { batch_id: b, seed: batch_seed(1, b), x, labels }).unwrap();
+    }
+    let after = pipe.exec.params_snapshot();
+    let changed = before
+        .partitions
+        .iter()
+        .zip(after.partitions.iter())
+        .any(|(x, y)| x.params.iter().zip(y.params.iter()).any(|(t, u)| t.data() != u.data()));
+    assert!(changed, "training must move weights");
+    assert!(after.all_finite());
+}
+
+#[test]
+fn evaluate_scores_the_test_set_remainder() {
+    // Regression: evaluate() used to drop the `len % batch` tail. With
+    // all-zero weights the model predicts class 0 for every sample, so
+    // accuracy over a balanced 50-sample set (5 zeros) is exactly 5/50 —
+    // a tail-dropping evaluate (48 scored, 5 zeros) would report 5/48.
+    let meta = native_config("native_lenet_small").unwrap();
+    assert_eq!(meta.batch, 16);
+    let mut params = ModelParams::init(&meta.partitions, 1).unwrap();
+    for p in &mut params.partitions {
+        for t in &mut p.params {
+            t.data_mut().fill(0.0);
+        }
+    }
+    let optims = pipestale::train::build_optims(&meta, 1, 1.0);
+    let exec = NativeExecutor::new(meta.clone(), params, optims).unwrap();
+    let mut pipe = Pipeline::new(exec, meta.batch);
+    let spec = SyntheticSpec { train: 32, test: 50, noise: 0.5, seed: 3 };
+    let (_, test_ds) = load_or_synthesize(&meta.dataset, None, &spec).unwrap();
+    assert_eq!(test_ds.len() % meta.batch, 2, "test fixture must have a tail");
+    let acc = pipestale::train::evaluate(&mut pipe, &test_ds, meta.batch).unwrap();
+    assert!((acc - 0.1).abs() < 1e-9, "tail samples must be scored: {acc}");
+}
+
+#[test]
+fn native_cross_process_hybrid_via_checkpoint() {
+    // Paper §4 hybrid split across "processes": pipelined prefix saved
+    // to a checkpoint, non-pipelined tail resumed from it on the native
+    // backend. The tail must start from trained weights (first losses
+    // well below the chance-level ln(10) ≈ 2.30 a fresh init produces).
+    let ckpt = std::env::temp_dir().join(format!("native_hybrid_{}.ckpt", std::process::id()));
+    let mut prefix = native_rc(Mode::Pipelined, 60);
+    prefix.save_to = Some(ckpt.clone());
+    pipestale::train::run(&prefix).unwrap();
+
+    let mut tail = native_rc(Mode::Sequential, 25);
+    tail.resume_from = Some(ckpt.clone());
+    let b = pipestale::train::run(&tail).unwrap();
+    assert_eq!(b.recorder.train.len(), 25);
+    let resumed_early: f64 =
+        b.recorder.train[..5].iter().map(|(_, l, _)| *l as f64).sum::<f64>() / 5.0;
+    assert!(resumed_early < 2.25, "resumed run started from scratch? loss {resumed_early}");
+    std::fs::remove_file(&ckpt).ok();
+}
+
+#[test]
+fn native_checkpoint_rejects_wrong_config() {
+    let ckpt = std::env::temp_dir().join(format!("native_wrongcfg_{}.ckpt", std::process::id()));
+    let mut rc = native_rc(Mode::Sequential, 2);
+    rc.save_to = Some(ckpt.clone());
+    pipestale::train::run(&rc).unwrap();
+
+    // quickstart_lenet is full-width: every tensor shape differs.
+    let mut other = RunConfig::new("quickstart_lenet");
+    other.backend = Backend::Native;
+    other.iters = 2;
+    other.train_size = 64;
+    other.test_size = 32;
+    other.resume_from = Some(ckpt.clone());
+    assert!(pipestale::train::run(&other).is_err());
+    std::fs::remove_file(&ckpt).ok();
+}
+
+#[test]
+fn explicit_xla_backend_fails_loudly_on_stub() {
+    // --backend xla with the stub linked must error, not silently fall
+    // back to native (the user asked for a specific substrate).
+    if pipestale::xla_ready() {
+        eprintln!("skipping: real XLA backend present");
+        return;
+    }
+    let mut rc = native_rc(Mode::Sequential, 2);
+    rc.backend = Backend::Xla;
+    assert!(pipestale::train::run(&rc).is_err());
 }
 
 #[test]

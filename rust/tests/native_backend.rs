@@ -1,0 +1,225 @@
+//! Finite-difference gradient checks for every native kernel.
+//!
+//! Each analytic backward pass (conv2d, dense, batch-norm, max-pool,
+//! activations, global-avg-pool, softmax-CE) is verified against central
+//! finite differences of a random-projection loss `L = sum(proj * y)`,
+//! seeded via `util::rng::Pcg32` so every run draws the same inputs.
+//! Kink-prone inputs (relu preactivations, pooling window ties) are kept
+//! away from their nondifferentiable points *by construction*, not by
+//! luck, so the checks are deterministic.
+
+use pipestale::backend::{ActKind, NativeOp};
+use pipestale::backend::kernels;
+use pipestale::tensor::Tensor;
+use pipestale::util::rng::Pcg32;
+
+const EPS: f32 = 1e-2;
+
+fn randn(rng: &mut Pcg32, shape: &[usize], scale: f32) -> Tensor {
+    let data = (0..shape.iter().product::<usize>()).map(|_| rng.normal() * scale).collect();
+    Tensor::from_vec(shape, data).unwrap()
+}
+
+/// Uniform values bounded away from zero: |v| in [lo, lo+span).
+fn rand_off_zero(rng: &mut Pcg32, shape: &[usize], lo: f32, span: f32) -> Tensor {
+    let data = (0..shape.iter().product::<usize>())
+        .map(|_| {
+            let mag = lo + rng.next_f32() * span;
+            if rng.next_f32() < 0.5 {
+                -mag
+            } else {
+                mag
+            }
+        })
+        .collect();
+    Tensor::from_vec(shape, data).unwrap()
+}
+
+/// Distinct values with pairwise gaps >= 0.1 (a shuffled ramp), so a
+/// +-EPS perturbation can never flip a max-pool argmax.
+fn rand_distinct(rng: &mut Pcg32, shape: &[usize]) -> Tensor {
+    let n = shape.iter().product::<usize>();
+    let mut vals: Vec<f32> = (0..n).map(|i| i as f32 * 0.1).collect();
+    rng.shuffle(&mut vals);
+    Tensor::from_vec(shape, vals).unwrap()
+}
+
+/// `sum(proj * y)` in f64, with y from a training-mode forward.
+fn proj_loss(op: &NativeOp, params: &[Tensor], state: &[Tensor], x: &Tensor, proj: &[f32]) -> f64 {
+    let (y, _, _) = op.train_forward(params, state, x).unwrap();
+    y.data().iter().zip(proj).map(|(&a, &b)| a as f64 * b as f64).sum()
+}
+
+fn assert_close(what: &str, idx: usize, fd: f64, analytic: f32) {
+    let an = analytic as f64;
+    let tol = 1e-2 + 2e-2 * an.abs().max(fd.abs());
+    assert!(
+        (fd - an).abs() <= tol,
+        "{what}[{idx}]: finite-diff {fd:.6} vs analytic {an:.6}"
+    );
+}
+
+/// Check d(proj·y)/dx and d(proj·y)/dparam against finite differences.
+fn fd_check_op(op: &NativeOp, params: &[Tensor], state: &[Tensor], x: &Tensor, seed: u64) {
+    let (y, cache, _) = op.train_forward(params, state, x).unwrap();
+    let mut rng = Pcg32::seeded(seed ^ 0x9d2c_5680);
+    let proj: Vec<f32> = (0..y.numel()).map(|_| rng.normal()).collect();
+    let proj_t = Tensor::from_vec(y.shape.as_slice(), proj.clone()).unwrap();
+    let (dx, dparams) = op.backward(params, &cache, &proj_t).unwrap();
+    assert_eq!(dparams.len(), params.len(), "{}: grad arity", op.name);
+
+    for i in 0..x.numel() {
+        let mut xp = x.clone();
+        xp.data_mut()[i] += EPS;
+        let mut xm = x.clone();
+        xm.data_mut()[i] -= EPS;
+        let fd = (proj_loss(op, params, state, &xp, &proj)
+            - proj_loss(op, params, state, &xm, &proj))
+            / (2.0 * EPS as f64);
+        assert_close(&format!("{}/dx", op.name), i, fd, dx.data()[i]);
+    }
+    for (pi, dp) in dparams.iter().enumerate() {
+        for i in 0..params[pi].numel() {
+            let mut pp: Vec<Tensor> = params.to_vec();
+            pp[pi].data_mut()[i] += EPS;
+            let mut pm: Vec<Tensor> = params.to_vec();
+            pm[pi].data_mut()[i] -= EPS;
+            let fd = (proj_loss(op, &pp, state, x, &proj)
+                - proj_loss(op, &pm, state, x, &proj))
+                / (2.0 * EPS as f64);
+            assert_close(&format!("{}/dparam{pi}", op.name), i, fd, dp.data()[i]);
+        }
+    }
+}
+
+#[test]
+fn fd_conv2d_same_stride1() {
+    let mut rng = Pcg32::seeded(101);
+    let op = NativeOp::conv("c", 2, 3, 3, 1, true, true);
+    let x = randn(&mut rng, &[2, 5, 5, 2], 1.0);
+    let params = vec![randn(&mut rng, &[3, 3, 2, 3], 0.5), randn(&mut rng, &[3], 0.5)];
+    fd_check_op(&op, &params, &[], &x, 101);
+}
+
+#[test]
+fn fd_conv2d_same_stride2() {
+    let mut rng = Pcg32::seeded(102);
+    let op = NativeOp::conv("c", 1, 2, 3, 2, true, true);
+    let x = randn(&mut rng, &[1, 6, 6, 1], 1.0);
+    let params = vec![randn(&mut rng, &[3, 3, 1, 2], 0.5), randn(&mut rng, &[2], 0.5)];
+    fd_check_op(&op, &params, &[], &x, 102);
+}
+
+#[test]
+fn fd_conv2d_valid_no_bias() {
+    let mut rng = Pcg32::seeded(103);
+    let op = NativeOp::conv("c", 2, 2, 3, 1, false, false);
+    let x = randn(&mut rng, &[2, 5, 5, 2], 1.0);
+    let params = vec![randn(&mut rng, &[3, 3, 2, 2], 0.5)];
+    fd_check_op(&op, &params, &[], &x, 103);
+}
+
+#[test]
+fn fd_dense_linear_and_tanh() {
+    for (seed, act) in [(201u64, ActKind::None), (202, ActKind::Tanh)] {
+        let mut rng = Pcg32::seeded(seed);
+        let op = NativeOp::dense("d", 6, 5, act);
+        let x = randn(&mut rng, &[4, 6], 0.8);
+        let params = vec![randn(&mut rng, &[6, 5], 0.5), randn(&mut rng, &[5], 0.5)];
+        fd_check_op(&op, &params, &[], &x, seed);
+    }
+}
+
+#[test]
+fn fd_dense_relu_away_from_kink() {
+    // |x| <= 0.2, |w| <= 0.3 bounds |x.w| by 6*0.2*0.3 = 0.36 < 0.5, and
+    // biases of +-1 then keep every preactivation at least 0.5 from the
+    // relu kink — an EPS perturbation cannot cross it.
+    let mut rng = Pcg32::seeded(203);
+    let op = NativeOp::dense("d", 6, 4, ActKind::Relu);
+    let x = {
+        let data = (0..4 * 6).map(|_| rng.uniform(-0.2, 0.2)).collect();
+        Tensor::from_vec(&[4, 6], data).unwrap()
+    };
+    let w = {
+        let data = (0..6 * 4).map(|_| rng.uniform(-0.3, 0.3)).collect();
+        Tensor::from_vec(&[6, 4], data).unwrap()
+    };
+    let b = Tensor::from_vec(&[4], vec![1.0, -1.0, 1.0, -1.0]).unwrap();
+    fd_check_op(&op, &[w, b], &[], &x, 203);
+}
+
+#[test]
+fn fd_batchnorm_through_batch_stats() {
+    let mut rng = Pcg32::seeded(301);
+    let op = NativeOp::batch_norm("bn", 3);
+    // NHWC: rows = 2*2*2 = 8 per channel
+    let x = randn(&mut rng, &[2, 2, 2, 3], 1.0);
+    let params = vec![randn(&mut rng, &[3], 0.5), randn(&mut rng, &[3], 0.5)];
+    let state = vec![Tensor::zeros(&[3]), Tensor::ones(&[3])];
+    fd_check_op(&op, &params, &state, &x, 301);
+}
+
+#[test]
+fn fd_maxpool() {
+    let mut rng = Pcg32::seeded(401);
+    let op = NativeOp::max_pool("p", 2);
+    let x = rand_distinct(&mut rng, &[2, 4, 4, 2]);
+    fd_check_op(&op, &[], &[], &x, 401);
+}
+
+#[test]
+fn fd_act_relu_and_tanh() {
+    let mut rng = Pcg32::seeded(501);
+    let x_relu = rand_off_zero(&mut rng, &[3, 7], 0.1, 0.9);
+    fd_check_op(&NativeOp::act("r", ActKind::Relu), &[], &[], &x_relu, 501);
+    let x_tanh = randn(&mut rng, &[3, 7], 1.0);
+    fd_check_op(&NativeOp::act("t", ActKind::Tanh), &[], &[], &x_tanh, 502);
+}
+
+#[test]
+fn fd_global_avg_pool() {
+    let mut rng = Pcg32::seeded(601);
+    let x = randn(&mut rng, &[2, 3, 3, 4], 1.0);
+    fd_check_op(&NativeOp::global_avg_pool("g"), &[], &[], &x, 601);
+}
+
+#[test]
+fn fd_softmax_cross_entropy() {
+    let (n, classes) = (5usize, 7usize);
+    let mut rng = Pcg32::seeded(701);
+    let logits: Vec<f32> = (0..n * classes).map(|_| rng.normal()).collect();
+    let labels: Vec<i32> = (0..n).map(|_| rng.below(classes as u32) as i32).collect();
+    let (_, _, dlogits) = kernels::softmax_xent(&logits, n, classes, &labels);
+    for i in 0..logits.len() {
+        let mut lp = logits.clone();
+        lp[i] += EPS;
+        let mut lm = logits.clone();
+        lm[i] -= EPS;
+        let (loss_p, _, _) = kernels::softmax_xent(&lp, n, classes, &labels);
+        let (loss_m, _, _) = kernels::softmax_xent(&lm, n, classes, &labels);
+        let fd = (loss_p as f64 - loss_m as f64) / (2.0 * EPS as f64);
+        assert_close("softmax_xent/dlogits", i, fd, dlogits[i]);
+    }
+}
+
+#[test]
+fn conv_gradients_are_translation_consistent() {
+    // A conv is linear in x: doubling x must double dw exactly.
+    let mut rng = Pcg32::seeded(801);
+    let op = NativeOp::conv("c", 1, 2, 3, 1, true, true);
+    let x = randn(&mut rng, &[1, 4, 4, 1], 1.0);
+    let params = vec![randn(&mut rng, &[3, 3, 1, 2], 0.5), Tensor::zeros(&[2])];
+    let (y, cache, _) = op.train_forward(&params, &[], &x).unwrap();
+    let dy = Tensor::ones(y.shape.as_slice());
+    let (_, g1) = op.backward(&params, &cache, &dy).unwrap();
+    let mut x2 = x.clone();
+    for v in x2.data_mut() {
+        *v *= 2.0;
+    }
+    let (_, cache2, _) = op.train_forward(&params, &[], &x2).unwrap();
+    let (_, g2) = op.backward(&params, &cache2, &dy).unwrap();
+    for (a, b) in g1[0].data().iter().zip(g2[0].data()) {
+        assert!((2.0 * a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+}

@@ -1,5 +1,10 @@
 //! Cross-config invariants tying the artifact set to the paper's tables.
+//!
+//! The `native_*` tests run the same accounting against the in-crate
+//! native config manifest, so the paper's §3 staleness/memory math is
+//! exercised even when no artifacts are built.
 
+use pipestale::backend::native_config;
 use pipestale::memory::MemoryReport;
 use pipestale::meta::ConfigMeta;
 use pipestale::pipeline::perfsim::{
@@ -126,6 +131,59 @@ fn staleness_reports_consistent_across_all_configs() {
         let by_layer: usize = m.layers.iter().map(|l| l.param_count).sum();
         assert_eq!(by_part, by_layer, "{}", m.config);
     }
+}
+
+#[test]
+fn native_table1_lenet_row_matches_paper() {
+    // Table 1's LeNet-5 row (PPVs for 4/6/8/10 stages), artifact-free.
+    let grid: &[(&str, usize, &[usize])] = &[
+        ("lenet5_4s", 4, &[1]),
+        ("lenet5_6s", 6, &[1, 2]),
+        ("lenet5_8s", 8, &[1, 2, 3]),
+        ("lenet5_10s", 10, &[1, 2, 3, 4]),
+    ];
+    let mut prev_stale = 0.0;
+    for (name, stages, ppv) in grid {
+        let m = native_config(name).unwrap();
+        assert_eq!(m.paper_stages(), *stages, "{name}");
+        assert_eq!(m.ppv, ppv.to_vec(), "{name}");
+        // more registers in the prefix -> strictly more stale weights
+        let f = m.stale_weight_fraction();
+        assert!(f > prev_stale, "{name}: {f} <= {prev_stale}");
+        prev_stale = f;
+    }
+}
+
+#[test]
+fn native_staleness_reports_consistent() {
+    for name in pipestale::backend::native_config_names() {
+        let m = native_config(name).unwrap();
+        let r = StalenessReport::from_meta(&m);
+        // degrees strictly decrease by 2 to zero (paper §3)
+        for (i, p) in r.partitions.iter().enumerate() {
+            assert_eq!(p.degree, 2 * (m.ppv.len() - i), "{name}");
+        }
+        assert!(r.stale_weight_fraction >= 0.0 && r.stale_weight_fraction < 1.0);
+        // param accounting: partition sums == layer sums
+        let by_part: usize = m.partitions.iter().map(|p| p.param_count).sum();
+        let by_layer: usize = m.layers.iter().map(|l| l.param_count).sum();
+        assert_eq!(by_part, by_layer, "{name}");
+    }
+}
+
+#[test]
+fn native_memory_and_perfsim_models_accept_native_meta() {
+    // The Table-6 memory model and the DES cost model consume ConfigMeta
+    // only — the native manifest must satisfy both.
+    let m = native_config("lenet5_8s").unwrap();
+    let r = MemoryReport::from_meta(&m);
+    assert!(r.weight_bytes > 0.0 && r.activations_per_sample > 0.0);
+    assert!(r.increase_paper_style_per_sample > 0.0);
+    let costs = analytic_costs(&m, 50e9);
+    let comm = CommModel::free();
+    let s = simulate_nonpipelined(&costs, 100)
+        / simulate_pipelined(&costs, &comm, Mapping::Paired, 100);
+    assert!(s > 1.0 && s <= m.partitions.len() as f64 + 1e-9, "{s}");
 }
 
 #[test]

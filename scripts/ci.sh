@@ -1,15 +1,37 @@
 #!/usr/bin/env bash
-# Tier-1 verification: build, tests, formatting.
+# Tier-1 verification: build, tests, coverage floor, formatting.
 #
 # Everything runs offline against the bundled stub backend (see
 # rust/DESIGN.md §Backends); artifact/XLA-dependent tests skip
-# themselves. Pass --bench to also run the hot-path microbench and
-# refresh results/BENCH_micro.json.
+# themselves, while the native-backend suite executes everywhere.
+# The coverage floor (scripts/test_floor.txt) counts *executed*
+# (non-skipped) tests: a regression that turns native coverage back
+# into skips fails CI even though every remaining test still passes.
+# Pass --bench to also run the hot-path microbench and refresh
+# results/BENCH_micro.json.
 set -euo pipefail
-cd "$(dirname "$0")/../rust"
+SCRIPT_DIR="$(cd "$(dirname "$0")" && pwd)"
+cd "$SCRIPT_DIR/../rust"
 
 cargo build --release --workspace
-cargo test -q --workspace
+
+# --nocapture so the per-test "skipping:" markers reach the log.
+TEST_LOG="$(mktemp)"
+trap 'rm -f "$TEST_LOG"' EXIT
+cargo test -q --workspace -- --nocapture 2>&1 | tee "$TEST_LOG"
+
+passed=$({ grep -Eo '[0-9]+ passed' "$TEST_LOG" || true; } | awk '{s+=$1} END {print s+0}')
+skipped=$(grep -c 'skipping:' "$TEST_LOG" || true)
+executed=$((passed - skipped))
+floor=$(cat "$SCRIPT_DIR/test_floor.txt")
+echo "[ci] tests: $passed passed, $skipped skipped -> $executed executed (floor $floor)"
+if [ "$executed" -lt "$floor" ]; then
+    echo "[ci] FAIL: executed test count $executed fell below the recorded floor $floor." >&2
+    echo "[ci] If tests were intentionally removed, lower scripts/test_floor.txt;" >&2
+    echo "[ci] otherwise something is skipping coverage that used to execute." >&2
+    exit 1
+fi
+
 cargo fmt --all --check
 
 if [[ "${1:-}" == "--bench" ]]; then
