@@ -1,6 +1,8 @@
 //! Threaded pipeline demo: the paper's §5 "actual" deployment shape —
 //! one OS thread per accelerator, channels as pipeline registers, each
-//! worker owning its partition's weights and PJRT client.
+//! worker owning its partition's weights (and, on the XLA backend, its
+//! own PJRT client). Runs offline on the native backend when no
+//! artifacts/XLA are present.
 //!
 //! On this 1-core container the threads time-slice, so wall-clock
 //! speedup is not observable here (DESIGN.md §4); the example verifies
@@ -10,9 +12,9 @@
 //!
 //! Run: cargo run --release --example pipeline_server [--iters N]
 
+use pipestale::backend::NativeExecutor;
 use pipestale::config::RunConfig;
 use pipestale::data::{load_or_synthesize, Batcher, SyntheticSpec};
-use pipestale::meta::ConfigMeta;
 use pipestale::model::ModelParams;
 use pipestale::optim::Sgd;
 use pipestale::pipeline::threaded::ThreadedPipeline;
@@ -23,8 +25,10 @@ use pipestale::util::cli::Command;
 fn main() -> anyhow::Result<()> {
     pipestale::util::logging::init();
     let argv: Vec<String> = std::env::args().skip(1).collect();
+    let use_xla = pipestale::xla_ready();
+    let default_config = if use_xla { "resnet20_4s" } else { "native_lenet_small_4s" };
     let m = Command::new("pipeline_server", "thread-per-accelerator pipelined training")
-        .opt("config", "resnet20_4s", "artifact config")
+        .opt("config", default_config, "artifact or native built-in config")
         .opt("iters", "120", "training iterations")
         .opt("noise", "2.0", "synthetic dataset noise")
         .parse(&argv)
@@ -32,8 +36,9 @@ fn main() -> anyhow::Result<()> {
     let iters = m.get_u64("iters").map_err(anyhow::Error::msg)?;
     let noise = m.get_f64("noise").map_err(anyhow::Error::msg)? as f32;
 
-    let root = pipestale::artifacts_root();
-    let meta = ConfigMeta::load_named(&root, m.get("config"))?;
+    // Despite the name, this prefers a built artifact meta.json (the
+    // XLA contract) and only falls back to the native manifest.
+    let meta = pipestale::train::load_native_meta(m.get("config"))?;
     let spec = SyntheticSpec { train: 1024, test: 256, noise, seed: 7 };
     let (train_ds, test_ds) = load_or_synthesize(&meta.dataset, None, &spec)?;
 
@@ -41,12 +46,17 @@ fn main() -> anyhow::Result<()> {
     let optims: Vec<Sgd> = pipestale::train::build_optims(&meta, iters, 1.0);
 
     println!(
-        "launching {} accelerator threads (P={} partitions, PPV {:?})...",
+        "launching {} accelerator threads (P={} partitions, PPV {:?}, {} workers)...",
         meta.partitions.len(),
         meta.partitions.len(),
-        meta.ppv
+        meta.ppv,
+        if use_xla { "XLA" } else { "native" }
     );
-    let mut pipe = ThreadedPipeline::launch(&meta, params, optims)?;
+    let mut pipe = if use_xla {
+        ThreadedPipeline::launch(&meta, params, optims)?
+    } else {
+        ThreadedPipeline::launch_native(&meta, params, optims)?
+    };
     let mut batcher = Batcher::new(train_ds.len(), meta.batch, 99);
     let (events, wall) = pipe.train(iters, 42, |_b| {
         let idxs = batcher.next_indices().to_vec();
@@ -61,12 +71,18 @@ fn main() -> anyhow::Result<()> {
         events.last().map(|e| e.loss).unwrap_or(f32::NAN)
     );
 
-    // Reassemble the model on a single runtime and evaluate.
-    let runtime = Runtime::cpu()?;
+    // Reassemble the model on a single-threaded pipeline and evaluate.
     let optims = pipestale::train::build_optims(&meta, iters, 1.0);
-    let exec = XlaExecutor::new(&runtime, meta.clone(), trained, optims)?;
-    let mut single = Pipeline::new(exec, meta.batch);
-    let acc = pipestale::train::evaluate(&mut single, &test_ds, meta.batch)?;
+    let acc = if use_xla {
+        let runtime = Runtime::cpu()?;
+        let exec = XlaExecutor::new(&runtime, meta.clone(), trained, optims)?;
+        let mut single = Pipeline::new(exec, meta.batch);
+        pipestale::train::evaluate(&mut single, &test_ds, meta.batch)?
+    } else {
+        let exec = NativeExecutor::new(meta.clone(), trained, optims)?;
+        let mut single = Pipeline::new(exec, meta.batch);
+        pipestale::train::evaluate(&mut single, &test_ds, meta.batch)?
+    };
     println!("eval on reassembled weights: {:.2}% top-1", 100.0 * acc);
 
     // Sanity: sequential training of the same budget for comparison.

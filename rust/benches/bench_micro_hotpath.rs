@@ -177,6 +177,53 @@ fn main() {
         rep.push(st);
     }
 
+    // ---- threaded vs scheduler runtime (native, wall-clock) -------------
+    // Both runtimes execute the identical schedule (bitwise — see
+    // tests/threaded_native.rs), so this pair isolates pure runtime
+    // overhead/benefit. On this 1-core container the workers
+    // time-slice: expect a ratio near 1.0; multi-core hardware is
+    // where the threaded runtime parallelizes (DESIGN.md §4).
+    {
+        let meta = pipestale::backend::native_config("native_lenet_small").unwrap();
+        let spec = pipestale::data::SyntheticSpec { train: 128, test: 32, noise: 1.0, seed: 9 };
+        let (ds, _) = pipestale::data::load_or_synthesize(&meta.dataset, None, &spec).unwrap();
+        let mut batcher = pipestale::data::Batcher::new(ds.len(), meta.batch, 3);
+        let n = if common::fast() { 10 } else { 40 };
+        let batches: Vec<(Tensor, IntTensor)> = (0..n)
+            .map(|_| {
+                let idxs = batcher.next_indices().to_vec();
+                ds.gather(&idxs)
+            })
+            .collect();
+        let before = bench_n(&format!("train {n} iters scheduler (native lenet-small)"), 1, 3, || {
+            let params = ModelParams::init(&meta.partitions, 1).unwrap();
+            let optims = pipestale::train::build_optims(&meta, n as u64, 1.0);
+            let exec =
+                pipestale::backend::NativeExecutor::new(meta.clone(), params, optims).unwrap();
+            let mut pipe = Pipeline::new(exec, meta.batch);
+            for (b, (x, labels)) in batches.iter().enumerate() {
+                pipe.cycle(Some(Feed {
+                    batch_id: b as u64,
+                    seed: batch_seed(1, b as u64),
+                    x: x.clone(),
+                    labels: labels.clone(),
+                }))
+                .unwrap();
+            }
+            pipe.drain().unwrap();
+        });
+        let after = bench_n(&format!("train {n} iters threaded (native lenet-small)"), 1, 3, || {
+            let params = ModelParams::init(&meta.partitions, 1).unwrap();
+            let optims = pipestale::train::build_optims(&meta, n as u64, 1.0);
+            let mut pipe =
+                pipestale::pipeline::ThreadedPipeline::launch_native(&meta, params, optims)
+                    .unwrap();
+            pipe.train(n as u64, 1, |b| batches[b as usize].clone()).unwrap();
+            pipe.shutdown().unwrap();
+        });
+        rep.pair("threaded_vs_scheduler_native", before, after);
+    }
+
     // ---- artifact-dependent sections ------------------------------------
     if pipestale::artifacts_present() {
         let st = bench("meta.json parse (resnet110_4s)", 2, 0.5, || {

@@ -30,7 +30,7 @@ use anyhow::{anyhow, ensure, Result};
 use crate::meta::{ConfigMeta, PartitionMeta};
 use crate::model::{ModelParams, PartitionParams};
 use crate::optim::Sgd;
-use crate::pipeline::executor::{LastResult, StageExecutor};
+use crate::pipeline::executor::{LastResult, StageExecutor, WorkerStage};
 use crate::tensor::{IntTensor, Tensor};
 
 pub use kernels::ActKind;
@@ -49,6 +49,26 @@ pub struct NativePartition {
 }
 
 impl NativePartition {
+    /// Build the native compute for partition `idx` of a config — the
+    /// partition-splittable constructor the threaded runtime uses so
+    /// each worker thread owns exactly one partition's weights. All
+    /// fields are plain data (`Send`), so a partition can be built on
+    /// the coordinator and moved to a worker, or built on the worker
+    /// directly.
+    pub fn for_partition(
+        meta: &ConfigMeta,
+        idx: usize,
+        params: PartitionParams,
+        optim: Sgd,
+    ) -> Result<Self> {
+        let pm = meta
+            .partitions
+            .get(idx)
+            .ok_or_else(|| anyhow!("config {} has no partition {idx}", meta.config))?;
+        let ops = models::partition_ops(meta, pm)?;
+        NativePartition::new(pm.clone(), ops, params, optim)
+    }
+
     fn new(
         meta: PartitionMeta,
         ops: Vec<NativeOp>,
@@ -140,6 +160,96 @@ impl NativePartition {
         self.params.version += 1;
         Ok(())
     }
+
+    fn single<'a>(carry: &'a [Tensor], what: &str) -> Result<&'a Tensor> {
+        ensure!(carry.len() == 1, "native {what}: expected 1 carry tensor, got {}", carry.len());
+        Ok(&carry[0])
+    }
+
+    /// Training forward of a non-last partition: commits BN-state
+    /// updates, never touches weights.
+    pub fn stage_forward(&mut self, carry: &[Tensor]) -> Result<Vec<Tensor>> {
+        ensure!(!self.meta.is_last(), "forward called on the last partition");
+        let x = Self::single(carry, "forward")?.clone();
+        let (y, _caches, updates) = self.forward_train(&x)?;
+        self.commit_state(updates);
+        Ok(vec![y])
+    }
+
+    /// Fused last stage: forward + softmax-CE + backward + update in
+    /// one call (staleness 0 for the final partition).
+    pub fn stage_last(&mut self, carry: &[Tensor], labels: &IntTensor) -> Result<LastResult> {
+        ensure!(self.meta.is_last(), "stage_last called on a non-last partition");
+        let x = Self::single(carry, "last")?.clone();
+        let (logits, caches, updates) = self.forward_train(&x)?;
+        let n = logits.shape[0];
+        let classes = logits.numel() / n;
+        ensure!(
+            labels.data.len() == n,
+            "last: {} labels for batch of {n}",
+            labels.data.len()
+        );
+        let (loss, correct, dlogits) =
+            kernels::softmax_xent(logits.data(), n, classes, &labels.data);
+        let dl = Tensor::from_vec(&[n, classes], dlogits)?;
+        let (gcarry, grads) = self.backward_walk(&caches, dl)?;
+        self.commit_state(updates);
+        self.apply_update(&grads)?;
+        Ok(LastResult { loss, correct, gcarry_in: vec![gcarry] })
+    }
+
+    /// Backward of a non-last partition: recomputes the forward from
+    /// the saved carry_in with the *current* (stale-by-schedule)
+    /// weights per jax.vjp semantics — the recompute's BN-state
+    /// updates are discarded — then applies the weight update.
+    pub fn stage_backward(
+        &mut self,
+        carry_in: &[Tensor],
+        gcarry_out: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        let x = Self::single(carry_in, "backward")?.clone();
+        let g = Self::single(gcarry_out, "backward grad")?.clone();
+        let (_y, caches, _updates) = self.forward_train(&x)?;
+        let (gcarry_in, grads) = self.backward_walk(&caches, g)?;
+        self.apply_update(&grads)?;
+        Ok(vec![gcarry_in])
+    }
+
+    /// Eval-mode forward (running BN statistics; pure).
+    pub fn stage_eval_forward(&self, carry: &[Tensor]) -> Result<Vec<Tensor>> {
+        let x = Self::single(carry, "eval_forward")?;
+        let mut cur = x.clone();
+        for i in 0..self.ops.len() {
+            cur = self.ops[i].eval_forward(self.op_params(i), self.op_state(i), &cur)?;
+        }
+        Ok(vec![cur])
+    }
+}
+
+/// The native backend's stage compute plugs directly into the threaded
+/// runtime: one `NativePartition` per worker thread. Seeds are unused
+/// (the native kernels have no dropout).
+impl WorkerStage for NativePartition {
+    fn forward(&mut self, _seed: i32, carry: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.stage_forward(carry)
+    }
+
+    fn last(&mut self, _seed: i32, carry: &[Tensor], labels: &IntTensor) -> Result<LastResult> {
+        self.stage_last(carry, labels)
+    }
+
+    fn backward(
+        &mut self,
+        _seed: i32,
+        carry_in: &[Tensor],
+        gcarry_out: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        self.stage_backward(carry_in, gcarry_out)
+    }
+
+    fn into_params(self) -> PartitionParams {
+        self.params
+    }
 }
 
 /// Artifact-free executor: the whole pipeline on in-crate kernels.
@@ -158,17 +268,20 @@ impl NativeExecutor {
             params.partitions.len() == meta.partitions.len(),
             "params/partitions arity mismatch"
         );
-        let parts = meta
+        let parts = params
             .partitions
-            .iter()
-            .zip(params.partitions)
+            .into_iter()
             .zip(optims)
-            .map(|((pm, pp), opt)| {
-                let ops = models::partition_ops(&meta, pm)?;
-                NativePartition::new(pm.clone(), ops, pp, opt)
-            })
+            .enumerate()
+            .map(|(i, (pp, opt))| NativePartition::for_partition(&meta, i, pp, opt))
             .collect::<Result<Vec<_>>>()?;
         Ok(NativeExecutor { meta, parts })
+    }
+
+    /// Split the executor into its per-partition compute units (e.g. to
+    /// hand each to a worker thread; every piece is `Send`).
+    pub fn into_partitions(self) -> Vec<NativePartition> {
+        self.parts
     }
 
     /// Snapshot the current weights (eval / checkpointing), like
@@ -180,11 +293,6 @@ impl NativeExecutor {
     pub fn update_counts(&self) -> Vec<usize> {
         self.parts.iter().map(|p| p.update_count).collect()
     }
-
-    fn single_carry<'a>(&self, carry: &'a [Tensor], what: &str) -> Result<&'a Tensor> {
-        ensure!(carry.len() == 1, "native {what}: expected 1 carry tensor, got {}", carry.len());
-        Ok(&carry[0])
-    }
 }
 
 impl StageExecutor for NativeExecutor {
@@ -193,33 +301,12 @@ impl StageExecutor for NativeExecutor {
     }
 
     fn forward(&mut self, p: usize, _seed: i32, carry: &[Tensor]) -> Result<Vec<Tensor>> {
-        let x = self.single_carry(carry, "forward")?.clone();
-        let part = &mut self.parts[p];
-        ensure!(!part.meta.is_last(), "forward called on the last partition");
-        let (y, _caches, updates) = part.forward_train(&x)?;
-        part.commit_state(updates);
-        Ok(vec![y])
+        self.parts[p].stage_forward(carry)
     }
 
     fn last(&mut self, _seed: i32, carry: &[Tensor], labels: &IntTensor) -> Result<LastResult> {
-        let x = self.single_carry(carry, "last")?.clone();
         let p = self.parts.len() - 1;
-        let part = &mut self.parts[p];
-        let (logits, caches, updates) = part.forward_train(&x)?;
-        let n = logits.shape[0];
-        let classes = logits.numel() / n;
-        ensure!(
-            labels.data.len() == n,
-            "last: {} labels for batch of {n}",
-            labels.data.len()
-        );
-        let (loss, correct, dlogits) =
-            kernels::softmax_xent(logits.data(), n, classes, &labels.data);
-        let dl = Tensor::from_vec(&[n, classes], dlogits)?;
-        let (gcarry, grads) = part.backward_walk(&caches, dl)?;
-        part.commit_state(updates);
-        part.apply_update(&grads)?;
-        Ok(LastResult { loss, correct, gcarry_in: vec![gcarry] })
+        self.parts[p].stage_last(carry, labels)
     }
 
     fn backward(
@@ -229,26 +316,11 @@ impl StageExecutor for NativeExecutor {
         carry_in: &[Tensor],
         gcarry_out: &[Tensor],
     ) -> Result<Vec<Tensor>> {
-        let x = self.single_carry(carry_in, "backward")?.clone();
-        let g = self.single_carry(gcarry_out, "backward grad")?.clone();
-        let part = &mut self.parts[p];
-        // jax.vjp semantics: recompute the forward from the saved
-        // carry_in with the *current* (stale-by-schedule) weights; the
-        // recompute's BN-state updates are discarded.
-        let (_y, caches, _updates) = part.forward_train(&x)?;
-        let (gcarry_in, grads) = part.backward_walk(&caches, g)?;
-        part.apply_update(&grads)?;
-        Ok(vec![gcarry_in])
+        self.parts[p].stage_backward(carry_in, gcarry_out)
     }
 
     fn eval_forward(&mut self, p: usize, carry: &[Tensor]) -> Result<Vec<Tensor>> {
-        let x = self.single_carry(carry, "eval_forward")?;
-        let part = &self.parts[p];
-        let mut cur = x.clone();
-        for i in 0..part.ops.len() {
-            cur = part.ops[i].eval_forward(part.op_params(i), part.op_state(i), &cur)?;
-        }
-        Ok(vec![cur])
+        self.parts[p].stage_eval_forward(carry)
     }
 
     fn params_snapshot(&self) -> ModelParams {
@@ -324,6 +396,40 @@ mod tests {
                 assert_eq!(t.data(), u.data(), "eval must not touch state");
             }
         }
+    }
+
+    #[test]
+    fn native_compute_is_send() {
+        // The threaded runtime moves partitions (or the inputs to build
+        // them) across worker threads; regression-guard the auto-traits.
+        fn assert_send<T: Send>() {}
+        assert_send::<NativeExecutor>();
+        assert_send::<NativePartition>();
+        assert_send::<crate::tensor::Tensor>();
+        assert_send::<crate::tensor::IntTensor>();
+        assert_send::<ModelParams>();
+        assert_send::<PartitionParams>();
+        assert_send::<Sgd>();
+        assert_send::<ConfigMeta>();
+    }
+
+    #[test]
+    fn executor_splits_into_partitions_that_compute_on_other_threads() {
+        let exec = mk_exec(11);
+        let meta = exec.meta.clone();
+        let mut parts = exec.into_partitions();
+        assert_eq!(parts.len(), 2);
+        let mut p0 = parts.remove(0);
+        let x = Tensor::zeros(
+            &std::iter::once(meta.batch)
+                .chain(meta.input_shape.iter().copied())
+                .collect::<Vec<_>>(),
+        );
+        let out = std::thread::spawn(move || p0.stage_forward(&[x]).unwrap())
+            .join()
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape, meta.partitions[0].carry_out[0]);
     }
 
     #[test]

@@ -149,7 +149,9 @@ impl NativeModel {
 /// with `python/compile/experiments.py` use the same
 /// (model, width, PPV, batch), so a run is configured identically
 /// whichever backend serves it. `native_lenet_small` is a narrow,
-/// small-batch variant for fast native CI runs.
+/// small-batch variant for fast native CI runs; `native_lenet_small_4s`
+/// is its 4-partition split (PPV (1,2,3)), the P=4 fixture for the
+/// threaded-runtime equivalence and stress suites.
 const NATIVE_MANIFEST: &[(&str, &str, f64, &[usize], usize)] = &[
     ("quickstart_lenet", "lenet5", 1.0, &[2], 32),
     ("lenet5_4s", "lenet5", 1.0, &[1], 64),
@@ -157,6 +159,7 @@ const NATIVE_MANIFEST: &[(&str, &str, f64, &[usize], usize)] = &[
     ("lenet5_8s", "lenet5", 1.0, &[1, 2, 3], 64),
     ("lenet5_10s", "lenet5", 1.0, &[1, 2, 3, 4], 64),
     ("native_lenet_small", "lenet5", 0.5, &[2], 16),
+    ("native_lenet_small_4s", "lenet5", 0.5, &[1, 2, 3], 16),
 ];
 
 /// Returns `(model, width_mult, ppv, batch)` for a built-in config.
@@ -400,6 +403,21 @@ mod tests {
             assert_eq!(m.ppv, ppv, "{name}");
             let f = m.stale_weight_fraction();
             assert!(f > 0.0 && f < 1.0, "{name}: {f}");
+        }
+    }
+
+    #[test]
+    fn native_small_4s_is_a_four_partition_split() {
+        let m = native_config("native_lenet_small_4s").unwrap();
+        assert_eq!(m.partitions.len(), 4);
+        assert_eq!(m.batch, 16);
+        assert!(m.partitions[3].is_last());
+        // same model/width as native_lenet_small: identical weights from
+        // the same seed (ModelParams::init walks one RNG stream)
+        let small = native_config("native_lenet_small").unwrap();
+        assert_eq!(m.total_params(), small.total_params());
+        for (a, b) in m.partitions.iter().zip(m.partitions.iter().skip(1)) {
+            assert_eq!(a.carry_out, b.carry_in);
         }
     }
 

@@ -67,6 +67,35 @@ impl Backend {
     }
 }
 
+/// Which runtime executes the schedule — orthogonal to `Backend`
+/// (which compute substrate serves each stage).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RuntimeKind {
+    /// Single-thread cycle-accurate register scheduler (staleness
+    /// simulated by the schedule).
+    Scheduler,
+    /// One OS thread per partition with mpsc channel registers
+    /// (staleness emergent from real concurrency).
+    Threaded,
+}
+
+impl RuntimeKind {
+    pub fn parse(s: &str) -> Result<RuntimeKind> {
+        match s {
+            "scheduler" => Ok(RuntimeKind::Scheduler),
+            "threaded" => Ok(RuntimeKind::Threaded),
+            _ => Err(anyhow!("unknown runtime {s:?} (scheduler|threaded)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RuntimeKind::Scheduler => "scheduler",
+            RuntimeKind::Threaded => "threaded",
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct RunConfig {
     /// Artifact config name under artifacts/ (e.g. "resnet20_4s") or a
@@ -75,6 +104,9 @@ pub struct RunConfig {
     pub mode: Mode,
     /// Compute backend (default Auto: XLA when ready, else native).
     pub backend: Backend,
+    /// Runtime executing the schedule (default: cycle-accurate
+    /// scheduler; `threaded` = thread-per-partition).
+    pub runtime: RuntimeKind,
     pub iters: u64,
     /// Hybrid only: iterations of the pipelined phase.
     pub pipelined_iters: u64,
@@ -104,6 +136,7 @@ impl RunConfig {
             config: config.to_string(),
             mode: Mode::Pipelined,
             backend: Backend::Auto,
+            runtime: RuntimeKind::Scheduler,
             iters: 300,
             pipelined_iters: 0,
             seed: 42,
@@ -123,6 +156,7 @@ impl RunConfig {
             ("config", json::s(&self.config)),
             ("mode", json::s(self.mode.name())),
             ("backend", json::s(self.backend.name())),
+            ("runtime", json::s(self.runtime.name())),
             ("iters", json::num(self.iters as f64)),
             ("pipelined_iters", json::num(self.pipelined_iters as f64)),
             ("seed", json::num(self.seed as f64)),
@@ -152,6 +186,9 @@ impl RunConfig {
         }
         if let Some(b) = j.get("backend").and_then(Json::as_str) {
             rc.backend = Backend::parse(b)?;
+        }
+        if let Some(r) = j.get("runtime").and_then(Json::as_str) {
+            rc.runtime = RuntimeKind::parse(r)?;
         }
         let getn = |k: &str, d: f64| j.get(k).and_then(Json::as_f64).unwrap_or(d);
         rc.iters = getn("iters", rc.iters as f64) as u64;
@@ -217,6 +254,21 @@ mod tests {
         rc.backend = Backend::Native;
         let back = RunConfig::from_json(&rc.to_json()).unwrap();
         assert_eq!(back.backend, Backend::Native);
+    }
+
+    #[test]
+    fn runtime_parsing_and_roundtrip() {
+        assert_eq!(RuntimeKind::parse("scheduler").unwrap(), RuntimeKind::Scheduler);
+        assert_eq!(RuntimeKind::parse("threaded").unwrap(), RuntimeKind::Threaded);
+        assert!(RuntimeKind::parse("gpu").is_err());
+        let mut rc = RunConfig::new("native_lenet_small");
+        assert_eq!(rc.runtime, RuntimeKind::Scheduler); // default
+        rc.runtime = RuntimeKind::Threaded;
+        let back = RunConfig::from_json(&rc.to_json()).unwrap();
+        assert_eq!(back.runtime, RuntimeKind::Threaded);
+        // configs without the key (older files) keep the default
+        let legacy = Json::parse("{\"config\": \"x\"}").unwrap();
+        assert_eq!(RunConfig::from_json(&legacy).unwrap().runtime, RuntimeKind::Scheduler);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 
 use anyhow::{anyhow, Result};
 
-use pipestale::config::{Backend, Mode, RunConfig};
+use pipestale::config::{Backend, Mode, RunConfig, RuntimeKind};
 use pipestale::memory::{pipedream_stash_bytes, MemoryReport};
 use pipestale::meta::ConfigMeta;
 use pipestale::pipeline::perfsim::{
@@ -66,6 +66,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
             .req("config", "artifact config name (see list-configs)")
             .opt("mode", "pipelined", "pipelined | sequential | hybrid")
             .opt("backend", "auto", "auto | native | xla (native needs no artifacts)")
+            .opt("runtime", "scheduler", "scheduler | threaded (thread-per-partition)")
             .opt("iters", "300", "training iterations (mini-batches)")
             .opt("pipelined-iters", "0", "hybrid: pipelined prefix length")
             .opt("seed", "42", "global seed")
@@ -83,6 +84,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
     let mut rc = RunConfig::new(m.get("config"));
     rc.mode = Mode::parse(m.get("mode"))?;
     rc.backend = Backend::parse(m.get("backend"))?;
+    rc.runtime = RuntimeKind::parse(m.get("runtime"))?;
     rc.iters = m.get_u64("iters").map_err(|e| anyhow!(e))?;
     rc.pipelined_iters = m.get_u64("pipelined-iters").map_err(|e| anyhow!(e))?;
     rc.seed = m.get_u64("seed").map_err(|e| anyhow!(e))?;
@@ -103,9 +105,10 @@ fn cmd_train(args: &[String]) -> Result<()> {
 
     let res = pipestale::train::run(&rc)?;
     println!(
-        "{} [{}] {} iters: final test acc {:.2}%, train loss {:.4}, wall {:.1}s",
+        "{} [{}/{}] {} iters: final test acc {:.2}%, train loss {:.4}, wall {:.1}s",
         res.config,
         res.mode,
+        res.runtime,
         res.iters,
         100.0 * res.final_accuracy,
         res.final_train_loss,

@@ -135,6 +135,16 @@ impl PartitionEngine {
         Ok(out)
     }
 
+    /// True for the fused-last partition.
+    pub fn is_last(&self) -> bool {
+        self.meta.is_last()
+    }
+
+    /// Hand the weights back (threaded worker shutdown).
+    pub fn into_params(self) -> PartitionParams {
+        self.params
+    }
+
     pub fn eval_forward(&mut self, carry: &[Tensor]) -> Result<Vec<Tensor>> {
         let prog = if self.meta.is_last() {
             self.programs.last_eval.as_ref()

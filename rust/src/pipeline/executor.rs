@@ -16,7 +16,7 @@
 use anyhow::Result;
 
 use crate::meta::ConfigMeta;
-use crate::model::ModelParams;
+use crate::model::{ModelParams, PartitionParams};
 use crate::optim::Sgd;
 use crate::runtime::Runtime;
 use crate::tensor::{IntTensor, Tensor};
@@ -62,6 +62,41 @@ pub trait StageExecutor {
     fn params_snapshot(&self) -> ModelParams {
         ModelParams { partitions: Vec::new() }
     }
+}
+
+/// One partition's stage compute, owned by a single worker thread of
+/// the threaded runtime (`pipeline::threaded`). The per-partition
+/// counterpart of `StageExecutor`: same forward/last/backward semantics
+/// and update-visibility contract, minus the partition index — each
+/// worker holds exactly one partition's weights (the paper's one-copy
+/// discipline; no stashing).
+///
+/// Implementations are constructed *on the worker thread* by a
+/// `threaded::WorkerBackend` (PJRT handles are not `Send`), so the
+/// stage type itself needs no `Send` bound: only the factory and the
+/// tensors crossing the channel registers do.
+pub trait WorkerStage {
+    /// Forward of a non-last partition; applies BN-state updates
+    /// internally, never touches weights.
+    fn forward(&mut self, seed: i32, carry: &[Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Fused last stage: forward + loss + backward + weight update.
+    fn last(&mut self, seed: i32, carry: &[Tensor], labels: &IntTensor) -> Result<LastResult>;
+
+    /// Backward on the saved carry_in of the same mini-batch; applies
+    /// the weight update; returns gcarry_in.
+    fn backward(
+        &mut self,
+        seed: i32,
+        carry_in: &[Tensor],
+        gcarry_out: &[Tensor],
+    ) -> Result<Vec<Tensor>>;
+
+    /// Hand the partition's weights back at shutdown (the worker owns
+    /// the only copy during training).
+    fn into_params(self) -> PartitionParams
+    where
+        Self: Sized;
 }
 
 /// Production executor: PJRT programs + host-owned weights.

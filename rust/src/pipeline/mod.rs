@@ -7,7 +7,8 @@
 //!   owned weights (and the mock used by property tests);
 //! * `staleness` — paper §3 accounting (degree, % stale weights);
 //! * `hybrid` — paper §4 schedule switching;
-//! * `threaded` — thread-per-accelerator runtime with channel registers;
+//! * `threaded` — executor-generic thread-per-accelerator runtime with
+//!   channel registers (native or XLA workers, real concurrency);
 //! * `perfsim` — discrete-event timing model for Table 5 speedups.
 
 pub mod engine;
@@ -20,7 +21,11 @@ pub mod staleness;
 pub mod threaded;
 
 pub use crate::backend::NativeExecutor;
-pub use executor::{LastResult, StageExecutor, XlaExecutor};
+pub use executor::{LastResult, StageExecutor, WorkerStage, XlaExecutor};
 pub use hybrid::{HybridSchedule, Phase};
-pub use scheduler::{Feed, Pipeline, TrainEvent};
+pub use scheduler::{EventLedger, Feed, FlowControl, Pipeline, TrainEvent};
 pub use staleness::StalenessReport;
+pub use threaded::{
+    NativeWorkerBackend, Occupancy, ThreadedOptions, ThreadedPipeline, WorkerBackend,
+    XlaWorkerBackend,
+};

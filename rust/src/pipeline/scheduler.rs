@@ -73,8 +73,126 @@ pub struct TrainEvent {
     pub loss: f32,
     pub correct: f32,
     pub batch_size: usize,
-    /// Cycle at which the fused last stage processed this batch.
+    /// Cycle at which the fused last stage processed this batch (the
+    /// threaded runtime, which has no global cycles, records batch_id).
     pub cycle: u64,
+}
+
+/// Fill/drain accounting shared by both runtimes: how many batches
+/// entered the pipe, how many fully retired (backward complete on
+/// every partition), and an optional in-flight occupancy cap. The
+/// cycle-accurate scheduler uses it uncapped (occupancy is bounded
+/// structurally by its registers); the threaded runtime caps feeding
+/// to bound activation memory across its channel registers.
+#[derive(Debug, Clone)]
+pub struct FlowControl {
+    cap: Option<u64>,
+    fed: u64,
+    retired: u64,
+}
+
+impl FlowControl {
+    pub fn new(cap: Option<u64>) -> Self {
+        FlowControl { cap, fed: 0, retired: 0 }
+    }
+
+    pub fn fed(&self) -> u64 {
+        self.fed
+    }
+
+    pub fn retired(&self) -> u64 {
+        self.retired
+    }
+
+    /// Batches currently somewhere in the pipe.
+    pub fn in_flight(&self) -> u64 {
+        self.fed - self.retired
+    }
+
+    /// True when the occupancy cap (if any) admits another feed.
+    pub fn can_feed(&self) -> bool {
+        self.cap.map_or(true, |c| self.in_flight() < c)
+    }
+
+    pub fn record_fed(&mut self) {
+        self.fed += 1;
+    }
+
+    pub fn record_retired(&mut self) {
+        debug_assert!(self.retired < self.fed, "retire without a matching feed");
+        self.retired += 1;
+    }
+}
+
+/// Event accounting shared by both runtimes: every fed batch must
+/// produce exactly one `TrainEvent`, in batch order, and retires must
+/// be monotone and never precede the batch's train event. Catches
+/// lost/duplicated/reordered events in the concurrent runtime and
+/// schedule bugs in the cycle-accurate one.
+#[derive(Debug, Default)]
+pub struct EventLedger {
+    events: Vec<TrainEvent>,
+    keep: bool,
+    recorded: u64,
+    retired: u64,
+}
+
+impl EventLedger {
+    /// Validate-only ledger (events are counted, not stored).
+    pub fn new() -> Self {
+        EventLedger::default()
+    }
+
+    /// Ledger that also keeps the events for the caller.
+    pub fn keeping() -> Self {
+        EventLedger { keep: true, ..EventLedger::default() }
+    }
+
+    pub fn record(&mut self, e: TrainEvent) -> Result<()> {
+        if e.batch_id != self.recorded {
+            bail!(
+                "train event out of order or duplicated: got batch {}, expected {}",
+                e.batch_id,
+                self.recorded
+            );
+        }
+        self.recorded += 1;
+        if self.keep {
+            self.events.push(e);
+        }
+        Ok(())
+    }
+
+    pub fn retire(&mut self, batch_id: u64) -> Result<()> {
+        if batch_id != self.retired {
+            bail!("retire order violated: got batch {batch_id}, expected {}", self.retired);
+        }
+        if batch_id >= self.recorded {
+            bail!("batch {batch_id} retired before its train event");
+        }
+        self.retired += 1;
+        Ok(())
+    }
+
+    pub fn recorded(&self) -> u64 {
+        self.recorded
+    }
+
+    pub fn retired(&self) -> u64 {
+        self.retired
+    }
+
+    /// All `feeds` events were recorded (none lost).
+    pub fn expect_complete(&self, feeds: u64) -> Result<()> {
+        if self.recorded != feeds {
+            bail!("lost train events: {} of {feeds} recorded", self.recorded);
+        }
+        Ok(())
+    }
+
+    pub fn into_events(self) -> Vec<TrainEvent> {
+        self.events
+    }
 }
 
 /// Input for one fed mini-batch.
@@ -100,10 +218,9 @@ pub struct Pipeline<E: StageExecutor> {
     labels_q: VecDeque<(u64, IntTensor)>,
     cycle: u64,
     batch_size: usize,
-    /// Gradients-for-input of completed batches are discarded; count them
-    /// for the drain logic.
-    completed_backward: u64,
-    fed: u64,
+    /// Feed/retire accounting (uncapped: the registers bound occupancy
+    /// structurally). Shared with the threaded runtime's coordinator.
+    flow: FlowControl,
 }
 
 impl<E: StageExecutor> Pipeline<E> {
@@ -121,8 +238,7 @@ impl<E: StageExecutor> Pipeline<E> {
             labels_q: VecDeque::new(),
             cycle: 0,
             batch_size,
-            completed_backward: 0,
-            fed: 0,
+            flow: FlowControl::new(None),
         }
     }
 
@@ -132,6 +248,11 @@ impl<E: StageExecutor> Pipeline<E> {
 
     pub fn cycles_run(&self) -> u64 {
         self.cycle
+    }
+
+    /// Feed/retire accounting for this pipeline.
+    pub fn flow(&self) -> &FlowControl {
+        &self.flow
     }
 
     /// Number of register pairs K.
@@ -172,7 +293,7 @@ impl<E: StageExecutor> Pipeline<E> {
 
         let mut feed_inflight = feed.map(|f| {
             self.labels_q.push_back((f.batch_id, f.labels));
-            self.fed += 1;
+            self.flow.record_fed();
             InFlight { batch_id: f.batch_id, seed: f.seed, carry: vec![f.x] }
         });
 
@@ -206,7 +327,7 @@ impl<E: StageExecutor> Pipeline<E> {
                 self.bwd_reg[self.p - 2] =
                     Some(GradMsg { batch_id: inf.batch_id, gcarry: res.gcarry_in });
             } else {
-                self.completed_backward += 1;
+                self.flow.record_retired();
             }
             event = Some(TrainEvent {
                 batch_id: inf.batch_id,
@@ -225,7 +346,7 @@ impl<E: StageExecutor> Pipeline<E> {
                 if p > 0 {
                     self.bwd_reg[p - 1] = Some(GradMsg { batch_id: g.batch_id, gcarry: gcarry_in });
                 } else {
-                    self.completed_backward += 1;
+                    self.flow.record_retired();
                 }
             }
         }
@@ -272,7 +393,8 @@ impl<E: StageExecutor> Pipeline<E> {
             gcarry = self.exec.backward(p, feed.seed, &saved[p], &gcarry)?;
         }
         self.cycle += 1;
-        self.completed_backward += 1;
+        self.flow.record_fed();
+        self.flow.record_retired();
         Ok(TrainEvent {
             batch_id: feed.batch_id,
             loss: res.loss,
@@ -421,6 +543,76 @@ mod tests {
         let mut pipe = Pipeline::new(MockExecutor::new(3), 1);
         pipe.cycle(Some(feed(0))).unwrap();
         assert!(pipe.sequential_step(feed(1)).is_err());
+    }
+
+    #[test]
+    fn flow_control_caps_and_counts() {
+        let mut f = FlowControl::new(Some(2));
+        assert!(f.can_feed());
+        f.record_fed();
+        f.record_fed();
+        assert!(!f.can_feed(), "cap of 2 must block the third feed");
+        assert_eq!(f.in_flight(), 2);
+        f.record_retired();
+        assert!(f.can_feed());
+        assert_eq!((f.fed(), f.retired(), f.in_flight()), (2, 1, 1));
+        // uncapped never blocks
+        let mut u = FlowControl::new(None);
+        for _ in 0..100 {
+            assert!(u.can_feed());
+            u.record_fed();
+        }
+    }
+
+    #[test]
+    fn pipeline_flow_accounting_matches_schedule() {
+        let mut pipe = Pipeline::new(MockExecutor::new(3), 1);
+        for b in 0..6u64 {
+            pipe.cycle(Some(feed(b))).unwrap();
+        }
+        assert_eq!(pipe.flow().fed(), 6);
+        assert!(pipe.flow().in_flight() > 0, "batches must be mid-pipe before drain");
+        pipe.drain().unwrap();
+        assert_eq!(pipe.flow().retired(), 6);
+        assert_eq!(pipe.flow().in_flight(), 0);
+        // sequential steps feed and retire atomically
+        pipe.sequential_step(feed(6)).unwrap();
+        assert_eq!((pipe.flow().fed(), pipe.flow().retired()), (7, 7));
+    }
+
+    #[test]
+    fn event_ledger_catches_loss_duplication_and_reorder() {
+        let ev = |b: u64| TrainEvent {
+            batch_id: b,
+            loss: 0.0,
+            correct: 0.0,
+            batch_size: 1,
+            cycle: b,
+        };
+        let mut l = EventLedger::keeping();
+        l.record(ev(0)).unwrap();
+        l.record(ev(1)).unwrap();
+        assert!(l.record(ev(1)).is_err(), "duplicate event must be rejected");
+        let mut l = EventLedger::new();
+        l.record(ev(0)).unwrap();
+        assert!(l.record(ev(2)).is_err(), "skipped event must be rejected");
+        assert!(l.expect_complete(2).is_err(), "missing events must fail completion");
+        let mut l = EventLedger::keeping();
+        l.record(ev(0)).unwrap();
+        l.retire(0).unwrap();
+        assert!(l.retire(0).is_err(), "duplicate retire must be rejected");
+        assert!(l.retire(2).is_err(), "out-of-order retire must be rejected");
+        l.record(ev(1)).unwrap();
+        l.retire(1).unwrap();
+        l.expect_complete(2).unwrap();
+        assert_eq!(l.retired(), 2);
+        assert_eq!(l.into_events().len(), 2);
+    }
+
+    #[test]
+    fn event_ledger_rejects_retire_before_event() {
+        let mut l = EventLedger::new();
+        assert!(l.retire(0).is_err(), "retire without a train event must fail");
     }
 
     #[test]

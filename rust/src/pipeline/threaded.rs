@@ -1,22 +1,45 @@
 //! Threaded pipeline runtime: one OS thread per accelerator, mpsc
-//! channels as pipeline registers (the paper's §5 "actual" PyTorch
+//! channels as pipeline registers (the paper's §5 "actual"
 //! implementation, adapted: each worker owns its partition's weights —
-//! one copy, no stashing — and runs both its forward and backward stage,
-//! the paper's 2-GPU pairing).
+//! one copy, no stashing — and runs both its forward and backward
+//! stage, the paper's 2-GPU pairing).
 //!
-//! PJRT handles are not Send, so every worker creates its own CPU client
-//! and compiles its own partition programs — faithfully "one device per
-//! worker". Tensors cross threads as host buffers. On this 1-core
-//! container the threads time-slice (no wall-clock speedup is possible —
-//! DESIGN.md §4); the runtime demonstrates the architecture and feeds the
-//! Table-5 cross-check, while speedups come from the calibrated DES
-//! (perfsim).
+//! The runtime is **executor-generic**: a `WorkerBackend` factory
+//! builds each worker's `WorkerStage` *on the worker thread* (PJRT
+//! handles are not `Send`; the native backend's `NativePartition` is
+//! plain `Send` data and could be built anywhere). Only host tensors
+//! cross threads, and each worker leases buffers from a private
+//! `PoolScope` — a tensor dropped by a neighbour returns to the pool
+//! that issued it, so the steady-state cycle stays allocation-free.
+//!
+//! Determinism: staleness here is *emergent* from real concurrency,
+//! yet reproducible. Each worker follows the static 1F1B alternation
+//! the cycle-accurate scheduler induces — a warmup of `d_eff + 1`
+//! forwards, then strictly alternating forward/backward (forward
+//! first, like the register scheduler's in-cycle order), with
+//! `d_eff = 2(P-1-p)` at full occupancy and `0` single-in-flight.
+//! A worker's weights are touched only by its own backward, so the
+//! entire computation is bitwise identical to the scheduler runtime
+//! on the same seed — property-tested in `tests/threaded_native.rs`.
+//! Liveness: the full-occupancy schedule needs at most `2P-1` batches
+//! in flight, below the coordinator's `2P+2` feed cap.
+//!
+//! Failure handling: a worker that errors sets the shared shutdown
+//! flag *before* its channels drop and reports the original error;
+//! peers parked on their inboxes poll the flag, hand their weights
+//! back, and exit — no thread is left parked (regression-tested by
+//! fault injection).
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
+use crate::backend::NativePartition;
 use crate::data::batch_seed;
 use crate::meta::ConfigMeta;
 use crate::model::{ModelParams, PartitionParams};
@@ -25,15 +48,164 @@ use crate::runtime::Runtime;
 use crate::tensor::{IntTensor, Tensor};
 
 use super::engine::PartitionEngine;
-use super::scheduler::TrainEvent;
+use super::executor::WorkerStage;
+use super::scheduler::{EventLedger, FlowControl, TrainEvent};
 
-enum ToWorker {
-    /// Forward payload: carries labels through to the last worker.
-    Fwd { batch_id: u64, seed: i32, carry: Vec<Tensor>, labels: IntTensor },
-    /// Backward payload.
-    Bwd { batch_id: u64, gcarry: Vec<Tensor> },
-    /// Return the partition params and stop.
+/// How often a parked worker re-checks the shutdown flag.
+const WORKER_POLL: Duration = Duration::from_millis(10);
+
+/// Builds one worker thread's stage compute. Called on the worker
+/// thread itself, so backends whose handles are not `Send` (PJRT)
+/// work unchanged; the factory is what crosses the spawn boundary.
+pub trait WorkerBackend: Clone + Send + 'static {
+    type Stage: WorkerStage;
+
+    fn make_stage(
+        &self,
+        meta: &ConfigMeta,
+        idx: usize,
+        params: PartitionParams,
+        optim: Sgd,
+    ) -> Result<Self::Stage>;
+}
+
+/// Native pure-Rust worker compute: each worker owns a
+/// `NativePartition` (in-crate kernels, no artifacts, no Python).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeWorkerBackend;
+
+impl WorkerBackend for NativeWorkerBackend {
+    type Stage = NativePartition;
+
+    fn make_stage(
+        &self,
+        meta: &ConfigMeta,
+        idx: usize,
+        params: PartitionParams,
+        optim: Sgd,
+    ) -> Result<NativePartition> {
+        NativePartition::for_partition(meta, idx, params, optim)
+    }
+}
+
+/// XLA worker compute: each worker is its own accelerator — own PJRT
+/// client, own compiled partition programs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct XlaWorkerBackend;
+
+pub struct XlaWorkerStage {
+    /// Keeps the PJRT client alive for the engine's executables.
+    _runtime: Runtime,
+    engine: PartitionEngine,
+}
+
+impl WorkerBackend for XlaWorkerBackend {
+    type Stage = XlaWorkerStage;
+
+    fn make_stage(
+        &self,
+        meta: &ConfigMeta,
+        idx: usize,
+        params: PartitionParams,
+        optim: Sgd,
+    ) -> Result<XlaWorkerStage> {
+        let runtime = Runtime::cpu()?;
+        let pm = meta.partitions[idx].clone();
+        let programs = runtime.load_partition(meta, &pm)?;
+        let engine = PartitionEngine::new(pm, programs, params, optim);
+        Ok(XlaWorkerStage { _runtime: runtime, engine })
+    }
+}
+
+impl WorkerStage for XlaWorkerStage {
+    fn forward(&mut self, seed: i32, carry: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.engine.forward(seed, carry)
+    }
+
+    fn last(
+        &mut self,
+        seed: i32,
+        carry: &[Tensor],
+        labels: &IntTensor,
+    ) -> Result<super::executor::LastResult> {
+        self.engine.last(seed, carry, labels)
+    }
+
+    fn backward(
+        &mut self,
+        seed: i32,
+        carry_in: &[Tensor],
+        gcarry_out: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        self.engine.backward(seed, carry_in, gcarry_out)
+    }
+
+    fn into_params(self) -> PartitionParams {
+        self.engine.into_params()
+    }
+}
+
+/// In-flight occupancy of the threaded pipe, fixed at launch (each
+/// worker derives its deterministic schedule from it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Occupancy {
+    /// One batch in flight: every worker strictly alternates
+    /// forward/backward — bitwise-equal to sequential training.
+    Single,
+    /// The paper's full pipe: feed cap 2P+2, per-worker warmup depth
+    /// 2(P-1-p) — bitwise-equal to the scheduler's pipelined schedule.
+    Full,
+}
+
+impl Occupancy {
+    fn cap(&self, p: usize) -> u64 {
+        match self {
+            Occupancy::Single => 1,
+            Occupancy::Full => (2 * p + 2) as u64,
+        }
+    }
+
+    /// Forwards worker `idx` runs ahead of its backwards (d_eff).
+    fn warmup(&self, p: usize, idx: usize) -> u64 {
+        match self {
+            Occupancy::Single => 0,
+            Occupancy::Full => 2 * (p - 1 - idx) as u64,
+        }
+    }
+}
+
+/// Launch-time knobs for the threaded runtime.
+#[derive(Debug, Clone, Copy)]
+pub struct ThreadedOptions {
+    pub occupancy: Occupancy,
+    /// Coordinator-side liveness guard: if no worker event arrives
+    /// within this window, the run is declared stalled and shut down
+    /// (turns a would-be deadlock into an error).
+    pub stall_timeout: Duration,
+}
+
+impl Default for ThreadedOptions {
+    fn default() -> Self {
+        ThreadedOptions { occupancy: Occupancy::Full, stall_timeout: Duration::from_secs(60) }
+    }
+}
+
+/// Forward-path messages (coordinator -> worker 0 -> ... -> last).
+enum FwdMsg {
+    /// A mini-batch travelling forward; labels ride through to the
+    /// last worker.
+    Batch { batch_id: u64, seed: i32, carry: Vec<Tensor>, labels: IntTensor },
+    /// No further batches will arrive (drain marker, forwarded down
+    /// the pipe once a worker has run all its forwards).
+    Flush,
+    /// Return the partition params and exit.
     Stop,
+}
+
+/// Backward-path message (worker p+1 -> worker p).
+struct BwdMsg {
+    batch_id: u64,
+    gcarry: Vec<Tensor>,
 }
 
 enum FromWorker {
@@ -45,196 +217,428 @@ enum FromWorker {
 
 struct Worker {
     handle: JoinHandle<()>,
-    inbox: Sender<ToWorker>,
+    inbox: Sender<FwdMsg>,
 }
 
 /// Orchestrates P worker threads and feeds mini-batches.
 pub struct ThreadedPipeline {
     workers: Vec<Worker>,
     events: Receiver<FromWorker>,
+    shutdown: Arc<AtomicBool>,
     p: usize,
     batch_size: usize,
+    cap: u64,
+    stall_timeout: Duration,
+    trained: bool,
 }
 
 impl ThreadedPipeline {
+    /// XLA workers at full occupancy (the original API).
     pub fn launch(meta: &ConfigMeta, params: ModelParams, optims: Vec<Sgd>) -> Result<Self> {
-        let p = meta.partitions.len();
-        anyhow::ensure!(optims.len() == p && params.partitions.len() == p);
-        let (ev_tx, ev_rx) = channel::<FromWorker>();
+        Self::launch_with(XlaWorkerBackend, meta, params, optims, ThreadedOptions::default())
+    }
 
-        // Build inboxes first so each worker can hold its neighbours'.
-        let channels: Vec<(Sender<ToWorker>, Receiver<ToWorker>)> =
-            (0..p).map(|_| channel()).collect();
-        let senders: Vec<Sender<ToWorker>> = channels.iter().map(|(s, _)| s.clone()).collect();
-        let mut receivers: Vec<Option<Receiver<ToWorker>>> =
-            channels.into_iter().map(|(_, r)| Some(r)).collect();
+    /// Native pure-Rust workers at full occupancy: true concurrent
+    /// stale-weight training with no artifacts and no Python.
+    pub fn launch_native(meta: &ConfigMeta, params: ModelParams, optims: Vec<Sgd>) -> Result<Self> {
+        Self::launch_with(NativeWorkerBackend, meta, params, optims, ThreadedOptions::default())
+    }
+
+    /// Generic launch: any `WorkerBackend`, any options.
+    pub fn launch_with<B: WorkerBackend>(
+        backend: B,
+        meta: &ConfigMeta,
+        params: ModelParams,
+        optims: Vec<Sgd>,
+        opts: ThreadedOptions,
+    ) -> Result<Self> {
+        let p = meta.partitions.len();
+        ensure!(p >= 1, "config {} has no partitions", meta.config);
+        ensure!(
+            optims.len() == p && params.partitions.len() == p,
+            "params/optims/partitions arity mismatch"
+        );
+        let (ev_tx, ev_rx) = channel::<FromWorker>();
+        let shutdown = Arc::new(AtomicBool::new(false));
+
+        // Channel registers: a forward channel into every worker and a
+        // backward channel into every non-last worker.
+        let mut fwd_txs: Vec<Sender<FwdMsg>> = Vec::with_capacity(p);
+        let mut fwd_rxs: Vec<Option<Receiver<FwdMsg>>> = Vec::with_capacity(p);
+        for _ in 0..p {
+            let (tx, rx) = channel::<FwdMsg>();
+            fwd_txs.push(tx);
+            fwd_rxs.push(Some(rx));
+        }
+        let mut bwd_txs: Vec<Sender<BwdMsg>> = Vec::with_capacity(p.saturating_sub(1));
+        let mut bwd_rxs: Vec<Option<Receiver<BwdMsg>>> = Vec::with_capacity(p.saturating_sub(1));
+        for _ in 0..p.saturating_sub(1) {
+            let (tx, rx) = channel::<BwdMsg>();
+            bwd_txs.push(tx);
+            bwd_rxs.push(Some(rx));
+        }
 
         let mut workers = Vec::with_capacity(p);
-        for (idx, pp) in params.partitions.into_iter().enumerate() {
-            let rx = receivers[idx].take().unwrap();
-            let next = if idx + 1 < p { Some(senders[idx + 1].clone()) } else { None };
-            let prev = if idx > 0 { Some(senders[idx - 1].clone()) } else { None };
+        for (idx, (pp, optim)) in params.partitions.into_iter().zip(optims).enumerate() {
+            let fwd_rx = fwd_rxs[idx].take().expect("fwd receiver taken once");
+            let bwd_rx = if idx + 1 < p { bwd_rxs[idx].take() } else { None };
+            let next_fwd = fwd_txs.get(idx + 1).cloned();
+            let prev_bwd = if idx > 0 { Some(bwd_txs[idx - 1].clone()) } else { None };
             let meta = meta.clone();
-            let optim = optims[idx].clone();
             let events = ev_tx.clone();
+            let flag = Arc::clone(&shutdown);
+            let backend = backend.clone();
+            let d_eff = opts.occupancy.warmup(p, idx);
             let batch = meta.batch;
             let handle = std::thread::Builder::new()
                 .name(format!("accel-{idx}"))
                 .spawn(move || {
-                    if let Err(e) =
-                        worker_main(idx, meta, pp, optim, rx, next, prev, events.clone(), batch)
-                    {
+                    // Private per-worker pool: steady-state acquires
+                    // never contend on the global pool's lock, and a
+                    // buffer dropped by a neighbour returns here.
+                    let _pool = crate::pool::PoolScope::new();
+                    let result = backend.make_stage(&meta, idx, pp, optim).and_then(|stage| {
+                        run_worker(
+                            idx,
+                            p,
+                            stage,
+                            &fwd_rx,
+                            bwd_rx.as_ref(),
+                            next_fwd.as_ref(),
+                            prev_bwd.as_ref(),
+                            &events,
+                            &flag,
+                            d_eff,
+                            batch,
+                        )
+                    });
+                    if let Err(e) = result {
+                        // Flag first, then report: peers parked on a
+                        // channel of ours must observe the shutdown
+                        // before (or instead of) the disconnect, so
+                        // the *original* error is what surfaces.
+                        flag.store(true, Ordering::SeqCst);
                         let _ = events.send(FromWorker::Fatal(format!("worker {idx}: {e:#}")));
                     }
+                    // (fwd_rx/bwd_rx/next_fwd/prev_bwd drop here, after
+                    // the flag is set on the error path)
                 })
                 .context("spawning worker")?;
-            workers.push(Worker { handle, inbox: senders[idx].clone() });
+            workers.push(Worker { handle, inbox: fwd_txs[idx].clone() });
         }
-        Ok(ThreadedPipeline { workers, events: ev_rx, p, batch_size: meta.batch })
+        Ok(ThreadedPipeline {
+            workers,
+            events: ev_rx,
+            shutdown,
+            p,
+            batch_size: meta.batch,
+            cap: opts.occupancy.cap(p),
+            stall_timeout: opts.stall_timeout,
+            trained: false,
+        })
     }
 
     /// Train for `feeds` mini-batches; returns (events, wall_seconds).
-    /// In-flight batches are capped at 2P+2 (the pipeline's natural
-    /// occupancy) to bound activation memory, as the register-file does
-    /// in the synchronous scheduler.
-    pub fn train<F>(&mut self, feeds: u64, global_seed: u64, mut next_batch: F) -> Result<(Vec<TrainEvent>, f64)>
+    /// Feeding is capped at the launch occupancy to bound activation
+    /// memory, mirroring the synchronous scheduler's register file.
+    /// One-shot: the drain marker ends the forward stream, so a second
+    /// call is an error — relaunch for a new run.
+    pub fn train<F>(
+        &mut self,
+        feeds: u64,
+        global_seed: u64,
+        mut next_batch: F,
+    ) -> Result<(Vec<TrainEvent>, f64)>
     where
         F: FnMut(u64) -> (Tensor, IntTensor),
     {
-        let start = std::time::Instant::now();
-        let cap = (2 * self.p + 2) as u64;
-        let mut fed = 0u64;
-        let mut retired = 0u64;
-        let mut events = Vec::new();
-        while retired < feeds {
-            while fed < feeds && fed - retired < cap {
-                let (x, labels) = next_batch(fed);
-                self.workers[0]
-                    .inbox
-                    .send(ToWorker::Fwd {
-                        batch_id: fed,
-                        seed: batch_seed(global_seed, fed),
-                        carry: vec![x],
-                        labels,
-                    })
-                    .map_err(|_| anyhow!("worker 0 hung up"))?;
-                fed += 1;
+        ensure!(!self.trained, "ThreadedPipeline::train may only run once per launch");
+        self.trained = true;
+        let start = Instant::now();
+        let mut flow = FlowControl::new(Some(self.cap));
+        let mut ledger = EventLedger::keeping();
+        // A failed send means worker 0 exited — on its own error (its
+        // Fatal is already queued) or another worker's (whose Fatal
+        // is). Stop feeding and drain the event queue so the original
+        // error is what surfaces, not a generic "hung up".
+        let mut feeding = true;
+        let mut flushed = false;
+        loop {
+            while feeding && flow.fed() < feeds && flow.can_feed() {
+                let b = flow.fed();
+                let (x, labels) = next_batch(b);
+                let msg = FwdMsg::Batch {
+                    batch_id: b,
+                    seed: batch_seed(global_seed, b),
+                    carry: vec![x],
+                    labels,
+                };
+                if self.workers[0].inbox.send(msg).is_err() {
+                    feeding = false;
+                } else {
+                    flow.record_fed();
+                }
             }
-            match self.events.recv().map_err(|_| anyhow!("all workers hung up"))? {
-                FromWorker::Trained(e) => events.push(e),
-                FromWorker::Retired(_) => retired += 1,
-                FromWorker::Fatal(msg) => return Err(anyhow!(msg)),
-                FromWorker::Params(..) => unreachable!("params before stop"),
+            if feeding && flow.fed() == feeds && !flushed {
+                let _ = self.send_worker0(FwdMsg::Flush);
+                flushed = true;
+            }
+            if flow.retired() >= feeds {
+                break;
+            }
+            match self.recv_event()? {
+                FromWorker::Trained(e) => ledger.record(e)?,
+                FromWorker::Retired(b) => {
+                    ledger.retire(b)?;
+                    flow.record_retired();
+                }
+                FromWorker::Fatal(msg) => {
+                    self.shutdown.store(true, Ordering::SeqCst);
+                    return Err(anyhow!(msg));
+                }
+                // Param returns only happen on shutdown paths; seeing
+                // one here means a peer is already unwinding — keep
+                // draining until its Fatal (or a stall) surfaces.
+                FromWorker::Params(..) => {}
             }
         }
-        Ok((events, start.elapsed().as_secs_f64()))
+        ledger.expect_complete(feeds)?;
+        Ok((ledger.into_events(), start.elapsed().as_secs_f64()))
+    }
+
+    fn send_worker0(&self, msg: FwdMsg) -> Result<()> {
+        self.workers[0].inbox.send(msg).map_err(|_| anyhow!("worker 0 hung up"))
+    }
+
+    fn recv_event(&self) -> Result<FromWorker> {
+        match self.events.recv_timeout(self.stall_timeout) {
+            Ok(m) => Ok(m),
+            Err(RecvTimeoutError::Timeout) => {
+                self.shutdown.store(true, Ordering::SeqCst);
+                Err(anyhow!(
+                    "threaded pipeline stalled: no worker event within {:?}",
+                    self.stall_timeout
+                ))
+            }
+            Err(RecvTimeoutError::Disconnected) => Err(anyhow!("all workers hung up")),
+        }
     }
 
     /// Stop workers and collect the trained weights.
-    pub fn shutdown(self) -> Result<ModelParams> {
+    pub fn shutdown(mut self) -> Result<ModelParams> {
+        // The flag makes shutdown unconditional (a worker mid-wait on
+        // its backward inbox still exits); after a clean train() all
+        // work is already done, so nothing is lost.
+        self.shutdown.store(true, Ordering::SeqCst);
         for w in &self.workers {
-            let _ = w.inbox.send(ToWorker::Stop);
+            let _ = w.inbox.send(FwdMsg::Stop);
         }
         let mut parts: Vec<Option<PartitionParams>> = (0..self.p).map(|_| None).collect();
         let mut got = 0;
         while got < self.p {
-            match self.events.recv().map_err(|_| anyhow!("workers died before params"))? {
-                FromWorker::Params(idx, pp) => {
-                    parts[idx] = Some(*pp);
-                    got += 1;
+            match self.events.recv_timeout(self.stall_timeout) {
+                Ok(FromWorker::Params(idx, pp)) => {
+                    if parts[idx].is_none() {
+                        parts[idx] = Some(*pp);
+                        got += 1;
+                    }
                 }
-                FromWorker::Fatal(msg) => return Err(anyhow!(msg)),
-                _ => {}
+                Ok(FromWorker::Fatal(msg)) => {
+                    self.join_all();
+                    return Err(anyhow!(msg));
+                }
+                Ok(_) => {}
+                Err(_) => {
+                    self.join_all();
+                    return Err(anyhow!("workers did not return params (stalled or died)"));
+                }
             }
         }
-        for w in self.workers {
+        self.join_all();
+        Ok(ModelParams { partitions: parts.into_iter().map(Option::unwrap).collect() })
+    }
+
+    fn join_all(&mut self) {
+        for w in self.workers.drain(..) {
             let _ = w.handle.join();
         }
-        Ok(ModelParams { partitions: parts.into_iter().map(Option::unwrap).collect() })
     }
 
     pub fn batch_size(&self) -> usize {
         self.batch_size
     }
+
+    pub fn num_partitions(&self) -> usize {
+        self.p
+    }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn worker_main(
-    idx: usize,
-    meta: ConfigMeta,
-    params: PartitionParams,
-    optim: Sgd,
-    rx: Receiver<ToWorker>,
-    next: Option<Sender<ToWorker>>,
-    prev: Option<Sender<ToWorker>>,
-    events: Sender<FromWorker>,
-    batch_size: usize,
-) -> Result<()> {
-    // Each worker leases tensor buffers from a private pool, so the
-    // steady-state acquire path never contends on the global pool's
-    // lock (buffers acquired here but dropped by a neighbour return to
-    // this pool — contention is at worst pairwise along pipe edges).
-    let _pool = crate::pool::PoolScope::new();
-    // Each worker is its own accelerator: own PJRT client + programs.
-    let runtime = Runtime::cpu()?;
-    let pm = meta.partitions[idx].clone();
-    let programs = runtime.load_partition(&meta, &pm)?;
-    let mut engine = PartitionEngine::new(pm, programs, params, optim);
-    let is_last = engine.meta.is_last();
+impl Drop for ThreadedPipeline {
+    fn drop(&mut self) {
+        if self.workers.is_empty() {
+            return; // shutdown() already joined
+        }
+        self.shutdown.store(true, Ordering::SeqCst);
+        for w in &self.workers {
+            let _ = w.inbox.send(FwdMsg::Stop);
+        }
+        self.join_all();
+    }
+}
 
-    // Saved activations + label store (FIFO, like the register scheduler).
-    let mut fifo: std::collections::VecDeque<(u64, i32, Vec<Tensor>)> = Default::default();
+/// Outcome of a flag-aware channel operation.
+enum Step<T> {
+    Got(T),
+    Shutdown,
+}
 
-    while let Ok(msg) = rx.recv() {
-        match msg {
-            ToWorker::Fwd { batch_id, seed, carry, labels } => {
-                if is_last {
-                    let res = engine.last(seed, &carry, &labels)?;
-                    let _ = events.send(FromWorker::Trained(TrainEvent {
-                        batch_id,
-                        loss: res.loss,
-                        correct: res.correct,
-                        batch_size,
-                        cycle: batch_id,
-                    }));
-                    match &prev {
-                        Some(tx) => {
-                            let _ = tx.send(ToWorker::Bwd { batch_id, gcarry: res.gcarry_in });
-                        }
-                        None => {
-                            let _ = events.send(FromWorker::Retired(batch_id));
-                        }
-                    }
-                } else {
-                    let out = engine.forward(seed, &carry)?;
-                    fifo.push_back((batch_id, seed, carry));
-                    let _ = next
-                        .as_ref()
-                        .expect("non-last worker has next")
-                        .send(ToWorker::Fwd { batch_id, seed, carry: out, labels });
+/// Blocking receive that polls the shutdown flag. A disconnect with
+/// the flag raised is an orderly shutdown, not an error — the flag is
+/// always set before a failing worker's channels drop.
+fn recv_msg<T>(rx: &Receiver<T>, shutdown: &AtomicBool, what: &str) -> Result<Step<T>> {
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return Ok(Step::Shutdown);
+        }
+        match rx.recv_timeout(WORKER_POLL) {
+            Ok(m) => return Ok(Step::Got(m)),
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    return Ok(Step::Shutdown);
                 }
+                bail!("{what} channel disconnected");
             }
-            ToWorker::Bwd { batch_id, gcarry } => {
-                let (saved_id, seed, saved) = fifo
-                    .pop_front()
-                    .ok_or_else(|| anyhow!("worker {idx}: FIFO empty for batch {batch_id}"))?;
-                anyhow::ensure!(
-                    saved_id == batch_id,
-                    "worker {idx}: FIFO order violated ({saved_id} vs {batch_id})"
-                );
-                let gin = engine.backward(seed, &saved, &gcarry)?;
-                match &prev {
-                    Some(tx) => {
-                        let _ = tx.send(ToWorker::Bwd { batch_id, gcarry: gin });
-                    }
-                    None => {
-                        let _ = events.send(FromWorker::Retired(batch_id));
-                    }
-                }
-            }
-            ToWorker::Stop => break,
         }
     }
-    let _ = events.send(FromWorker::Params(idx, Box::new(engine.params.clone())));
+}
+
+/// Flag-aware send (a receiver that hung up under a raised flag is an
+/// orderly shutdown).
+fn send_to<T>(tx: &Sender<T>, msg: T, shutdown: &AtomicBool, what: &str) -> Result<Step<()>> {
+    match tx.send(msg) {
+        Ok(()) => Ok(Step::Got(())),
+        Err(_) if shutdown.load(Ordering::SeqCst) => Ok(Step::Shutdown),
+        Err(_) => bail!("{what} receiver hung up"),
+    }
+}
+
+/// One worker thread: follows the deterministic 1F1B schedule (see the
+/// module docs) until the drain marker and Stop arrive, then hands its
+/// weights back.
+#[allow(clippy::too_many_arguments)]
+fn run_worker<S: WorkerStage>(
+    idx: usize,
+    p_total: usize,
+    mut stage: S,
+    fwd_rx: &Receiver<FwdMsg>,
+    bwd_rx: Option<&Receiver<BwdMsg>>,
+    next_fwd: Option<&Sender<FwdMsg>>,
+    prev_bwd: Option<&Sender<BwdMsg>>,
+    events: &Sender<FromWorker>,
+    shutdown: &AtomicBool,
+    d_eff: u64,
+    batch_size: usize,
+) -> Result<()> {
+    let is_last = idx + 1 == p_total;
+    // Saved carry_in (+ seed) of in-flight batches, FIFO like the
+    // register scheduler's activation store.
+    let mut fifo: VecDeque<(u64, i32, Vec<Tensor>)> = VecDeque::new();
+    let mut fwd_done = 0u64;
+    let mut bwd_done = 0u64;
+    let mut fwd_open = true;
+
+    'run: loop {
+        // Deterministic next-op choice (never arrival order): forwards
+        // until the warmup depth, then alternate forward-then-backward;
+        // after the drain marker, finish the remaining backwards; when
+        // idle, park on the forward channel awaiting Stop.
+        let take_fwd = is_last
+            || (fwd_open && fwd_done < bwd_done + d_eff + 1)
+            || (!fwd_open && bwd_done == fwd_done);
+        if take_fwd {
+            match recv_msg(fwd_rx, shutdown, "forward")? {
+                Step::Shutdown => break 'run,
+                Step::Got(FwdMsg::Stop) => break 'run,
+                Step::Got(FwdMsg::Flush) => {
+                    fwd_open = false;
+                    if let Some(tx) = next_fwd {
+                        if let Step::Shutdown = send_to(tx, FwdMsg::Flush, shutdown, "forward")? {
+                            break 'run;
+                        }
+                    }
+                }
+                Step::Got(FwdMsg::Batch { batch_id, seed, carry, labels }) => {
+                    ensure!(fwd_open, "worker {idx}: batch {batch_id} after drain marker");
+                    if is_last {
+                        let res = stage.last(seed, &carry, &labels)?;
+                        let ev = TrainEvent {
+                            batch_id,
+                            loss: res.loss,
+                            correct: res.correct,
+                            batch_size,
+                            cycle: batch_id,
+                        };
+                        if let Step::Shutdown =
+                            send_to(events, FromWorker::Trained(ev), shutdown, "event")?
+                        {
+                            break 'run;
+                        }
+                        let done = match prev_bwd {
+                            Some(tx) => send_to(
+                                tx,
+                                BwdMsg { batch_id, gcarry: res.gcarry_in },
+                                shutdown,
+                                "backward",
+                            )?,
+                            None => {
+                                send_to(events, FromWorker::Retired(batch_id), shutdown, "event")?
+                            }
+                        };
+                        if let Step::Shutdown = done {
+                            break 'run;
+                        }
+                    } else {
+                        let out = stage.forward(seed, &carry)?;
+                        fifo.push_back((batch_id, seed, carry));
+                        let tx = next_fwd.expect("non-last worker has a next stage");
+                        let msg = FwdMsg::Batch { batch_id, seed, carry: out, labels };
+                        if let Step::Shutdown = send_to(tx, msg, shutdown, "forward")? {
+                            break 'run;
+                        }
+                        fwd_done += 1;
+                    }
+                }
+            }
+        } else {
+            let rx = bwd_rx.expect("non-last worker has a backward inbox");
+            match recv_msg(rx, shutdown, "backward")? {
+                Step::Shutdown => break 'run,
+                Step::Got(BwdMsg { batch_id, gcarry }) => {
+                    let (saved_id, seed, saved) = fifo.pop_front().ok_or_else(|| {
+                        anyhow!("worker {idx}: activation FIFO empty for batch {batch_id}")
+                    })?;
+                    ensure!(
+                        saved_id == batch_id,
+                        "worker {idx}: FIFO order violated ({saved_id} vs {batch_id})"
+                    );
+                    let gin = stage.backward(seed, &saved, &gcarry)?;
+                    let done = match prev_bwd {
+                        Some(tx) => {
+                            send_to(tx, BwdMsg { batch_id, gcarry: gin }, shutdown, "backward")?
+                        }
+                        None => send_to(events, FromWorker::Retired(batch_id), shutdown, "event")?,
+                    };
+                    if let Step::Shutdown = done {
+                        break 'run;
+                    }
+                    bwd_done += 1;
+                }
+            }
+        }
+    }
+    // One-copy discipline: hand the only copy of this partition's
+    // weights back on every orderly exit (Stop or shutdown flag).
+    let _ = events.send(FromWorker::Params(idx, Box::new(stage.into_params())));
     Ok(())
 }

@@ -2,23 +2,28 @@
 //! three schedules the paper evaluates (pipelined / non-pipelined /
 //! hybrid), plus the eval loop.
 //!
-//! The driver is generic over the compute backend: `run` dispatches on
-//! `RunConfig::backend` between the XLA executor (AOT artifacts + PJRT)
-//! and the native pure-Rust executor (no artifacts, no Python step);
-//! `Backend::Auto` picks XLA when `xla_ready()` and native otherwise,
-//! so the same code path trains end-to-end on any machine.
+//! The driver is generic over the compute backend AND the runtime:
+//! `run` dispatches on `RunConfig::backend` between the XLA executor
+//! (AOT artifacts + PJRT) and the native pure-Rust executor (no
+//! artifacts, no Python step) — `Backend::Auto` picks XLA when
+//! `xla_ready()` and native otherwise — and on `RunConfig::runtime`
+//! between the cycle-accurate scheduler and the thread-per-partition
+//! runtime, orthogonally (DESIGN.md §4 matrix).
 
 pub mod metrics;
 
 use anyhow::{Context, Result};
 
 use crate::backend::NativeExecutor;
-use crate::config::{Backend, Mode, RunConfig};
+use crate::config::{Backend, Mode, RunConfig, RuntimeKind};
 use crate::data::{batch_seed, load_or_synthesize, Batcher, Dataset, SyntheticSpec};
 use crate::meta::ConfigMeta;
 use crate::model::ModelParams;
 use crate::optim::{paper_schedule, Sgd};
-use crate::pipeline::{Feed, HybridSchedule, Phase, Pipeline, StageExecutor, XlaExecutor};
+use crate::pipeline::{
+    EventLedger, Feed, HybridSchedule, NativeWorkerBackend, Occupancy, Phase, Pipeline,
+    StageExecutor, ThreadedOptions, ThreadedPipeline, XlaExecutor, XlaWorkerBackend,
+};
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 
@@ -28,6 +33,7 @@ pub use metrics::{EvalPoint, Recorder};
 pub struct TrainResult {
     pub config: String,
     pub mode: String,
+    pub runtime: String,
     pub iters: u64,
     pub final_accuracy: f64,
     pub final_train_loss: f64,
@@ -117,17 +123,29 @@ pub fn load_native_meta(name: &str) -> Result<ConfigMeta> {
     crate::backend::native_config(name)
 }
 
-/// Run a full training experiment per the RunConfig, on whichever
-/// backend it selects. `Auto` picks XLA only when the runtime is ready
-/// AND this config's artifacts exist; native-only built-ins (e.g.
+/// Resolve `Backend::Auto`: XLA only when the runtime is ready AND
+/// this config's artifacts exist; native-only built-ins (e.g.
 /// `native_lenet_small`) therefore run everywhere under the default.
-pub fn run(rc: &RunConfig) -> Result<TrainResult> {
-    let use_xla = match rc.backend {
+fn resolve_xla(rc: &RunConfig) -> bool {
+    match rc.backend {
         Backend::Xla => true,
         Backend::Native => false,
         Backend::Auto => crate::xla_ready() && artifact_meta_exists(&rc.config),
-    };
-    if use_xla {
+    }
+}
+
+/// Run a full training experiment per the RunConfig, on whichever
+/// backend and runtime it selects (the two axes are orthogonal).
+pub fn run(rc: &RunConfig) -> Result<TrainResult> {
+    match rc.runtime {
+        RuntimeKind::Scheduler => run_scheduler(rc),
+        RuntimeKind::Threaded => run_threaded(rc),
+    }
+}
+
+/// Scheduler-runtime dispatch over the backend axis.
+fn run_scheduler(rc: &RunConfig) -> Result<TrainResult> {
+    if resolve_xla(rc) {
         let meta = ConfigMeta::load_named(&crate::artifacts_root(), &rc.config)
             .with_context(|| format!("loading config {}", rc.config))?;
         let runtime = Runtime::cpu()?;
@@ -135,6 +153,90 @@ pub fn run(rc: &RunConfig) -> Result<TrainResult> {
     } else {
         run_native(rc)
     }
+}
+
+/// Threaded-runtime driver: one worker thread per partition over
+/// whichever backend the config resolves to. Pipelined mode runs the
+/// paper's full-occupancy concurrent schedule; sequential mode runs
+/// single-in-flight (bitwise-equal to the scheduler runtime's
+/// sequential training). Evaluation happens once, at the end, on a
+/// scheduler pipeline rebuilt from the returned weights.
+pub fn run_threaded(rc: &RunConfig) -> Result<TrainResult> {
+    let occupancy = match rc.mode {
+        Mode::Pipelined => Occupancy::Full,
+        Mode::Sequential => Occupancy::Single,
+        Mode::Hybrid => {
+            anyhow::bail!("hybrid schedule needs a mid-run drain: use --runtime scheduler")
+        }
+    };
+    anyhow::ensure!(
+        rc.eval_every == 0,
+        "threaded runtime evaluates at the end only; rerun with --eval-every 0"
+    );
+    let use_xla = resolve_xla(rc);
+    let meta = if use_xla {
+        ConfigMeta::load_named(&crate::artifacts_root(), &rc.config)
+            .with_context(|| format!("loading config {}", rc.config))?
+    } else {
+        load_native_meta(&rc.config)
+            .with_context(|| format!("resolving native config {}", rc.config))?
+    };
+    let (train_ds, test_ds) = build_datasets(rc, &meta)?;
+    let params = initial_params(rc, &meta)?;
+    let optims = build_optims(&meta, rc.iters, rc.stale_lr_scale);
+    let opts = ThreadedOptions { occupancy, ..ThreadedOptions::default() };
+    let mut pipe = if use_xla {
+        ThreadedPipeline::launch_with(XlaWorkerBackend, &meta, params, optims, opts)?
+    } else {
+        ThreadedPipeline::launch_with(NativeWorkerBackend, &meta, params, optims, opts)?
+    };
+
+    log::info!(
+        "train {} [threaded]: mode={} iters={} batch={} P={} workers={}",
+        meta.config,
+        rc.mode.name(),
+        rc.iters,
+        meta.batch,
+        meta.partitions.len(),
+        meta.partitions.len()
+    );
+    let mut batcher = Batcher::new(train_ds.len(), meta.batch, rc.seed ^ 0xba7c4);
+    let (events, wall) = pipe.train(rc.iters, rc.seed, |_| {
+        let idxs = batcher.next_indices().to_vec();
+        train_ds.gather(&idxs)
+    })?;
+    let trained = pipe.shutdown()?;
+
+    let mut rec = Recorder::new();
+    for e in &events {
+        rec.train_event(e);
+    }
+    if let Some(path) = &rc.save_to {
+        crate::model::checkpoint::save(path, &trained, rc.iters)?;
+        log::info!("saved checkpoint to {}", path.display());
+    }
+    // Final eval on a scheduler pipeline over the same backend.
+    let optims = build_optims(&meta, rc.iters, rc.stale_lr_scale);
+    let final_accuracy = if use_xla {
+        let runtime = Runtime::cpu()?;
+        let exec = XlaExecutor::new(&runtime, meta.clone(), trained, optims)?;
+        evaluate(&mut Pipeline::new(exec, meta.batch), &test_ds, meta.batch)?
+    } else {
+        let exec = NativeExecutor::new(meta.clone(), trained, optims)?;
+        evaluate(&mut Pipeline::new(exec, meta.batch), &test_ds, meta.batch)?
+    };
+    rec.eval_point(rc.iters, final_accuracy);
+
+    Ok(TrainResult {
+        config: meta.config.clone(),
+        mode: rc.mode.name().to_string(),
+        runtime: rc.runtime.name().to_string(),
+        iters: rc.iters,
+        final_accuracy,
+        final_train_loss: rec.recent_loss(50),
+        wall_seconds: wall,
+        recorder: rec,
+    })
 }
 
 /// XLA-backend variant that reuses an existing runtime/artifacts
@@ -210,6 +312,9 @@ fn train_loop<E: StageExecutor>(
     };
 
     let mut rec = Recorder::new();
+    // Same event accounting the threaded coordinator enforces: every
+    // fed batch produces exactly one event, in batch order.
+    let mut ledger = EventLedger::new();
     let start = std::time::Instant::now();
     let mut fed = 0u64;
 
@@ -228,6 +333,7 @@ fn train_loop<E: StageExecutor>(
         let phase = schedule.phase(fed);
         if phase == Phase::DrainThenSequential {
             for e in pipe.drain()? {
+                ledger.record(e.clone())?;
                 rec.train_event(&e);
             }
             log::info!("hybrid switch at iter {fed}: pipeline drained");
@@ -238,11 +344,13 @@ fn train_loop<E: StageExecutor>(
         match phase {
             Phase::Pipelined => {
                 if let Some(e) = pipe.cycle(Some(feed))? {
+                    ledger.record(e.clone())?;
                     rec.train_event(&e);
                 }
             }
             _ => {
                 let e = pipe.sequential_step(feed)?;
+                ledger.record(e.clone())?;
                 rec.train_event(&e);
             }
         }
@@ -257,8 +365,10 @@ fn train_loop<E: StageExecutor>(
         }
     }
     for e in pipe.drain()? {
+        ledger.record(e.clone())?;
         rec.train_event(&e);
     }
+    ledger.expect_complete(rc.iters)?;
     let final_accuracy = evaluate(&mut pipe, test_ds, meta.batch)?;
     rec.eval_point(rc.iters, final_accuracy);
     if let Some(path) = &rc.save_to {
@@ -270,6 +380,7 @@ fn train_loop<E: StageExecutor>(
     Ok(TrainResult {
         config: meta.config.clone(),
         mode: rc.mode.name().to_string(),
+        runtime: rc.runtime.name().to_string(),
         iters: rc.iters,
         final_accuracy,
         final_train_loss: rec.recent_loss(50),

@@ -1,0 +1,537 @@
+//! Threaded-runtime test suite over the native backend: real
+//! concurrent stale-weight training, executed unconditionally (no
+//! artifacts, no Python, no XLA).
+//!
+//! The core claim under test: because every worker follows the
+//! deterministic 1F1B alternation, the threaded runtime's *emergent*
+//! staleness is event-for-event identical to the cycle-accurate
+//! scheduler's *simulated* staleness — bitwise, including the final
+//! weights. Plus soak/fault coverage for the concurrency machinery
+//! itself: no deadlock, no lost or duplicated events, monotone retire
+//! order, shutdown propagation from a failing worker, and
+//! allocation-free steady-state tensor pooling under cross-thread
+//! buffer migration.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use pipestale::backend::{native_config, NativeExecutor, NativePartition};
+use pipestale::config::{Backend, Mode, RunConfig, RuntimeKind};
+use pipestale::data::{batch_seed, load_or_synthesize, Batcher, Dataset, SyntheticSpec};
+use pipestale::meta::ConfigMeta;
+use pipestale::model::{ModelParams, PartitionParams};
+use pipestale::optim::Sgd;
+use pipestale::pipeline::{
+    Feed, LastResult, NativeWorkerBackend, Occupancy, Pipeline, ThreadedOptions, ThreadedPipeline,
+    TrainEvent, WorkerBackend, WorkerStage,
+};
+use pipestale::pool::{PoolStats, TensorPool};
+use pipestale::tensor::{IntTensor, Tensor};
+use pipestale::util::rng::Pcg32;
+
+/// Pre-gather n mini-batches so scheduler and threaded runs consume
+/// byte-identical feeds.
+fn make_batches(meta: &ConfigMeta, n: usize) -> (Vec<(Tensor, IntTensor)>, Dataset) {
+    let spec = SyntheticSpec { train: 256, test: 64, noise: 0.8, seed: 7 };
+    let (train, test) = load_or_synthesize(&meta.dataset, None, &spec).unwrap();
+    let mut batcher = Batcher::new(train.len(), meta.batch, 5);
+    let batches = (0..n)
+        .map(|_| {
+            let idxs = batcher.next_indices().to_vec();
+            train.gather(&idxs)
+        })
+        .collect();
+    (batches, test)
+}
+
+/// The scheduler-runtime reference: continuous feed (+ drain) for the
+/// pipelined schedule, or cycle+drain per batch for single-in-flight.
+fn scheduler_run(
+    meta: &ConfigMeta,
+    batches: &[(Tensor, IntTensor)],
+    seed: u64,
+    single: bool,
+) -> (Vec<TrainEvent>, ModelParams) {
+    let params = ModelParams::init(&meta.partitions, seed).unwrap();
+    let optims = pipestale::train::build_optims(meta, batches.len() as u64, 1.0);
+    let exec = NativeExecutor::new(meta.clone(), params, optims).unwrap();
+    let mut pipe = Pipeline::new(exec, meta.batch);
+    let mut events = Vec::new();
+    for (b, (x, labels)) in batches.iter().enumerate() {
+        let feed = Feed {
+            batch_id: b as u64,
+            seed: batch_seed(seed, b as u64),
+            x: x.clone(),
+            labels: labels.clone(),
+        };
+        if let Some(e) = pipe.cycle(Some(feed)).unwrap() {
+            events.push(e);
+        }
+        if single {
+            events.extend(pipe.drain().unwrap());
+        }
+    }
+    events.extend(pipe.drain().unwrap());
+    (events, pipe.exec.params_snapshot())
+}
+
+fn threaded_run_with<B: WorkerBackend>(
+    backend: B,
+    meta: &ConfigMeta,
+    batches: &[(Tensor, IntTensor)],
+    seed: u64,
+    occupancy: Occupancy,
+) -> Result<(Vec<TrainEvent>, ModelParams)> {
+    let params = ModelParams::init(&meta.partitions, seed)?;
+    let optims = pipestale::train::build_optims(meta, batches.len() as u64, 1.0);
+    let opts = ThreadedOptions { occupancy, stall_timeout: Duration::from_secs(30) };
+    let mut pipe = ThreadedPipeline::launch_with(backend, meta, params, optims, opts)?;
+    let (events, _wall) = pipe.train(batches.len() as u64, seed, |b| batches[b as usize].clone())?;
+    let trained = pipe.shutdown()?;
+    Ok((events, trained))
+}
+
+fn assert_params_eq(a: &ModelParams, b: &ModelParams) {
+    assert_eq!(a.partitions.len(), b.partitions.len());
+    for (i, (x, y)) in a.partitions.iter().zip(&b.partitions).enumerate() {
+        assert_eq!(x.version, y.version, "partition {i}: update count must match");
+        assert_eq!(x.params.len(), y.params.len(), "partition {i}");
+        for (j, (t, u)) in x.params.iter().zip(&y.params).enumerate() {
+            assert_eq!(t.data(), u.data(), "partition {i} param {j} must be bitwise equal");
+        }
+        for (j, (t, u)) in x.state.iter().zip(&y.state).enumerate() {
+            assert_eq!(t.data(), u.data(), "partition {i} state {j} must be bitwise equal");
+        }
+    }
+}
+
+fn params_differ(a: &ModelParams, b: &ModelParams) -> bool {
+    a.partitions
+        .iter()
+        .zip(&b.partitions)
+        .any(|(x, y)| x.params.iter().zip(&y.params).any(|(t, u)| t.data() != u.data()))
+}
+
+/// Event-for-event comparison; `cycle` is runtime-relative (the
+/// scheduler counts global cycles, the threaded runtime has none and
+/// records the batch id), so it is deliberately excluded.
+fn assert_events_eq(a: &[TrainEvent], b: &[TrainEvent]) {
+    assert_eq!(a.len(), b.len(), "event counts must match");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.batch_id, y.batch_id, "batch id order must match");
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "batch {}: loss bits", x.batch_id);
+        assert_eq!(x.correct.to_bits(), y.correct.to_bits(), "batch {}: correct", x.batch_id);
+        assert_eq!(x.batch_size, y.batch_size);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Equivalence: emergent staleness == simulated staleness, bitwise.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn single_inflight_threaded_is_bitwise_equal_to_scheduler() {
+    for name in ["native_lenet_small", "native_lenet_small_4s"] {
+        let meta = native_config(name).unwrap();
+        let (batches, _) = make_batches(&meta, 8);
+        let (se, sp) = scheduler_run(&meta, &batches, 21, true);
+        let (te, tp) =
+            threaded_run_with(NativeWorkerBackend, &meta, &batches, 21, Occupancy::Single)
+                .unwrap();
+        assert_eq!(te.len(), 8, "{name}");
+        assert_events_eq(&te, &se);
+        assert_params_eq(&tp, &sp);
+    }
+}
+
+#[test]
+fn full_occupancy_threaded_reproduces_scheduler_schedule() {
+    // K batches genuinely in flight across P concurrent workers: the
+    // emergent schedule must replay the scheduler's staleness pattern
+    // event-for-event, down to the final weight bits.
+    for name in ["native_lenet_small", "native_lenet_small_4s"] {
+        let meta = native_config(name).unwrap();
+        let (batches, _) = make_batches(&meta, 24);
+        let (se, sp) = scheduler_run(&meta, &batches, 33, false);
+        let (te, tp) =
+            threaded_run_with(NativeWorkerBackend, &meta, &batches, 33, Occupancy::Full).unwrap();
+        assert_eq!(te.len(), 24, "{name}");
+        assert_events_eq(&te, &se);
+        assert_params_eq(&tp, &sp);
+        // ...and the staleness is real: the concurrent run must NOT
+        // match the zero-staleness (sequential) trajectory.
+        let (_, seq) = scheduler_run(&meta, &batches, 33, true);
+        assert!(params_differ(&tp, &seq), "{name}: stale schedule must diverge from sequential");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end through the train driver (--runtime threaded --backend native).
+// ---------------------------------------------------------------------------
+
+fn native_rc(mode: Mode, iters: u64) -> RunConfig {
+    let mut rc = RunConfig::new("native_lenet_small");
+    rc.backend = Backend::Native;
+    rc.runtime = RuntimeKind::Threaded;
+    rc.mode = mode;
+    rc.iters = iters;
+    rc.train_size = 512;
+    rc.test_size = 96;
+    rc.noise = 0.8;
+    rc
+}
+
+#[test]
+fn train_run_threaded_native_trains_lenet_end_to_end() {
+    let res = pipestale::train::run(&native_rc(Mode::Pipelined, 60)).unwrap();
+    assert_eq!(res.runtime, "threaded");
+    assert_eq!(res.recorder.train.len(), 60, "every fed batch retires exactly once");
+    let early: f64 =
+        res.recorder.train[..10].iter().map(|(_, l, _)| *l as f64).sum::<f64>() / 10.0;
+    assert!(res.final_train_loss < early, "loss did not fall: {} vs {early}", res.final_train_loss);
+    assert!(res.final_accuracy > 0.2, "acc {} (chance 0.1)", res.final_accuracy);
+}
+
+#[test]
+fn train_run_threaded_sequential_matches_scheduler_run_bitwise() {
+    // Same RunConfig, only the runtime differs: single-in-flight
+    // threaded training must be indistinguishable from the scheduler
+    // runtime — identical loss curve, identical final accuracy.
+    let mut sched = native_rc(Mode::Sequential, 12);
+    sched.runtime = RuntimeKind::Scheduler;
+    let a = pipestale::train::run(&sched).unwrap();
+    let b = pipestale::train::run(&native_rc(Mode::Sequential, 12)).unwrap();
+    assert_eq!(a.recorder.train, b.recorder.train, "loss curves must be bitwise identical");
+    assert_eq!(a.final_accuracy, b.final_accuracy);
+}
+
+#[test]
+fn threaded_runtime_rejects_unsupported_shapes() {
+    // Hybrid needs a mid-run drain only the scheduler performs.
+    let mut rc = native_rc(Mode::Hybrid, 10);
+    rc.pipelined_iters = 5;
+    assert!(pipestale::train::run(&rc).is_err());
+    // Mid-run eval is a scheduler-runtime feature.
+    let mut rc = native_rc(Mode::Pipelined, 10);
+    rc.eval_every = 2;
+    assert!(pipestale::train::run(&rc).is_err());
+    // train() is one-shot per launch (the drain marker ends the feed).
+    let meta = native_config("native_lenet_small").unwrap();
+    let (batches, _) = make_batches(&meta, 2);
+    let params = ModelParams::init(&meta.partitions, 1).unwrap();
+    let optims = pipestale::train::build_optims(&meta, 2, 1.0);
+    let mut pipe = ThreadedPipeline::launch_native(&meta, params, optims).unwrap();
+    pipe.train(2, 1, |b| batches[b as usize].clone()).unwrap();
+    let err = pipe.train(1, 1, |b| batches[b as usize].clone()).unwrap_err();
+    assert!(err.to_string().contains("once per launch"), "{err}");
+    let trained = pipe.shutdown().unwrap();
+    assert!(trained.all_finite());
+}
+
+// ---------------------------------------------------------------------------
+// Stress/soak: jittered workers, long run, strict accounting.
+// ---------------------------------------------------------------------------
+
+/// Native stage with randomized per-op sleep, de-synchronizing worker
+/// threads so message arrival order varies wildly across runs while
+/// the schedule-driven op order must not.
+#[derive(Clone)]
+struct JitterBackend {
+    seed: u64,
+}
+
+struct JitterStage {
+    inner: NativePartition,
+    rng: Pcg32,
+}
+
+impl JitterStage {
+    fn nap(&mut self) {
+        std::thread::sleep(Duration::from_micros(self.rng.below(400) as u64));
+    }
+}
+
+impl WorkerBackend for JitterBackend {
+    type Stage = JitterStage;
+
+    fn make_stage(
+        &self,
+        meta: &ConfigMeta,
+        idx: usize,
+        params: PartitionParams,
+        optim: Sgd,
+    ) -> Result<JitterStage> {
+        let inner = NativeWorkerBackend.make_stage(meta, idx, params, optim)?;
+        Ok(JitterStage { inner, rng: Pcg32::new(self.seed, idx as u64) })
+    }
+}
+
+impl WorkerStage for JitterStage {
+    fn forward(&mut self, _seed: i32, carry: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.nap();
+        self.inner.stage_forward(carry)
+    }
+
+    fn last(&mut self, _seed: i32, carry: &[Tensor], labels: &IntTensor) -> Result<LastResult> {
+        self.nap();
+        self.inner.stage_last(carry, labels)
+    }
+
+    fn backward(&mut self, _seed: i32, ci: &[Tensor], go: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.nap();
+        self.inner.stage_backward(ci, go)
+    }
+
+    fn into_params(self) -> PartitionParams {
+        WorkerStage::into_params(self.inner)
+    }
+}
+
+#[test]
+fn stress_soak_p4_with_jitter_keeps_strict_accounting() {
+    // 200+ iterations at P=4 with per-worker sleep jitter. The
+    // coordinator's ledger enforces no lost/duplicated TrainEvent and
+    // monotone retire order (train() errors otherwise); the stall
+    // guard turns any deadlock into an error instead of a hang; and
+    // the run must still be bitwise-deterministic despite the jitter.
+    let meta = native_config("native_lenet_small_4s").unwrap();
+    let (batches, _) = make_batches(&meta, 210);
+    let (events, trained) =
+        threaded_run_with(JitterBackend { seed: 0x717 }, &meta, &batches, 9, Occupancy::Full)
+            .unwrap();
+    assert_eq!(events.len(), 210);
+    for (i, e) in events.iter().enumerate() {
+        assert_eq!(e.batch_id, i as u64);
+    }
+    assert!(trained.all_finite());
+    for part in &trained.partitions {
+        assert_eq!(part.version, 210, "every partition updates once per batch");
+    }
+    // jitter changes timing, never results: replay matches the clean run
+    let (_, reference) = scheduler_run(&meta, &batches, 9, false);
+    assert_params_eq(&trained, &reference);
+}
+
+// ---------------------------------------------------------------------------
+// Fault injection: a failing worker must not strand its peers.
+// ---------------------------------------------------------------------------
+
+/// Fails a chosen worker's backward after `fail_after` calls.
+#[derive(Clone)]
+struct FailingBackend {
+    fail_worker: usize,
+    fail_after: u32,
+}
+
+struct FailingStage {
+    inner: NativePartition,
+    armed: bool,
+    fail_after: u32,
+    calls: u32,
+}
+
+impl WorkerBackend for FailingBackend {
+    type Stage = FailingStage;
+
+    fn make_stage(
+        &self,
+        meta: &ConfigMeta,
+        idx: usize,
+        params: PartitionParams,
+        optim: Sgd,
+    ) -> Result<FailingStage> {
+        let inner = NativeWorkerBackend.make_stage(meta, idx, params, optim)?;
+        Ok(FailingStage {
+            inner,
+            armed: idx == self.fail_worker,
+            fail_after: self.fail_after,
+            calls: 0,
+        })
+    }
+}
+
+impl WorkerStage for FailingStage {
+    fn forward(&mut self, _seed: i32, carry: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.inner.stage_forward(carry)
+    }
+
+    fn last(&mut self, _seed: i32, carry: &[Tensor], labels: &IntTensor) -> Result<LastResult> {
+        self.inner.stage_last(carry, labels)
+    }
+
+    fn backward(&mut self, _seed: i32, ci: &[Tensor], go: &[Tensor]) -> Result<Vec<Tensor>> {
+        if self.armed {
+            self.calls += 1;
+            if self.calls > self.fail_after {
+                anyhow::bail!("injected fault after {} backwards", self.fail_after);
+            }
+        }
+        self.inner.stage_backward(ci, go)
+    }
+
+    fn into_params(self) -> PartitionParams {
+        WorkerStage::into_params(self.inner)
+    }
+}
+
+#[test]
+fn worker_fatal_propagates_shutdown_and_surfaces_original_error() {
+    // Regression: a worker Fatal used to leave peers parked forever on
+    // their inboxes. Now the failing worker raises the shared shutdown
+    // flag, every peer unparks, and the original error surfaces.
+    let meta = native_config("native_lenet_small_4s").unwrap();
+    let (batches, _) = make_batches(&meta, 40);
+    let t0 = Instant::now();
+    let err = threaded_run_with(
+        FailingBackend { fail_worker: 1, fail_after: 3 },
+        &meta,
+        &batches,
+        5,
+        Occupancy::Full,
+    )
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("injected fault"), "original error must surface: {msg}");
+    assert!(msg.contains("worker 1"), "failing worker must be identified: {msg}");
+    // No stranded threads: everything (including joins on drop) is
+    // fast — nowhere near the 30s stall guard, let alone a hang.
+    assert!(t0.elapsed() < Duration::from_secs(25), "shutdown must not stall");
+}
+
+#[test]
+fn stage_construction_failure_surfaces_at_first_train() {
+    /// Backend that cannot build one partition at all.
+    #[derive(Clone)]
+    struct BrokenBackend;
+    impl WorkerBackend for BrokenBackend {
+        type Stage = NativePartition;
+        fn make_stage(
+            &self,
+            meta: &ConfigMeta,
+            idx: usize,
+            params: PartitionParams,
+            optim: Sgd,
+        ) -> Result<NativePartition> {
+            if idx == 2 {
+                anyhow::bail!("no accelerator for partition {idx}");
+            }
+            NativeWorkerBackend.make_stage(meta, idx, params, optim)
+        }
+    }
+    let meta = native_config("native_lenet_small_4s").unwrap();
+    let (batches, _) = make_batches(&meta, 4);
+    let err = threaded_run_with(BrokenBackend, &meta, &batches, 5, Occupancy::Full).unwrap_err();
+    assert!(format!("{err:#}").contains("no accelerator"), "{err:#}");
+}
+
+// ---------------------------------------------------------------------------
+// TensorPool under real cross-thread traffic.
+// ---------------------------------------------------------------------------
+
+/// Probes each worker's scoped pool: a mid-run snapshot (after warmup)
+/// and a final one, published for the test to compare.
+#[derive(Clone)]
+struct PoolProbeBackend {
+    snap_at: u32,
+    out: Arc<Mutex<Vec<(usize, PoolStats, PoolStats)>>>,
+}
+
+struct PoolProbeStage {
+    inner: NativePartition,
+    idx: usize,
+    ops: u32,
+    snap_at: u32,
+    mid: Option<PoolStats>,
+    out: Arc<Mutex<Vec<(usize, PoolStats, PoolStats)>>>,
+}
+
+impl PoolProbeStage {
+    fn tick(&mut self) {
+        self.ops += 1;
+        if self.ops == self.snap_at {
+            self.mid = Some(TensorPool::current().stats());
+        }
+    }
+}
+
+impl WorkerBackend for PoolProbeBackend {
+    type Stage = PoolProbeStage;
+
+    fn make_stage(
+        &self,
+        meta: &ConfigMeta,
+        idx: usize,
+        params: PartitionParams,
+        optim: Sgd,
+    ) -> Result<PoolProbeStage> {
+        let inner = NativeWorkerBackend.make_stage(meta, idx, params, optim)?;
+        Ok(PoolProbeStage {
+            inner,
+            idx,
+            ops: 0,
+            snap_at: self.snap_at,
+            mid: None,
+            out: Arc::clone(&self.out),
+        })
+    }
+}
+
+impl WorkerStage for PoolProbeStage {
+    fn forward(&mut self, _seed: i32, carry: &[Tensor]) -> Result<Vec<Tensor>> {
+        let r = self.inner.stage_forward(carry)?;
+        self.tick();
+        Ok(r)
+    }
+
+    fn last(&mut self, _seed: i32, carry: &[Tensor], labels: &IntTensor) -> Result<LastResult> {
+        let r = self.inner.stage_last(carry, labels)?;
+        self.tick();
+        Ok(r)
+    }
+
+    fn backward(&mut self, _seed: i32, ci: &[Tensor], go: &[Tensor]) -> Result<Vec<Tensor>> {
+        let r = self.inner.stage_backward(ci, go)?;
+        self.tick();
+        Ok(r)
+    }
+
+    fn into_params(self) -> PartitionParams {
+        let end = TensorPool::current().stats();
+        let mid = self.mid.expect("snap_at must be below the worker's total op count");
+        self.out.lock().unwrap().push((self.idx, mid, end));
+        WorkerStage::into_params(self.inner)
+    }
+}
+
+#[test]
+fn tensor_pool_steady_state_is_allocation_free_across_threads() {
+    // Tensors produced in one worker's scoped pool migrate to
+    // neighbours over the channel registers and are dropped there;
+    // each buffer must return to its issuing ("home") pool so that,
+    // after warmup, no worker performs a single fresh backing-store
+    // allocation — the zero-copy data plane's contract, now under
+    // genuine cross-thread traffic.
+    let meta = native_config("native_lenet_small").unwrap();
+    let (batches, _) = make_batches(&meta, 120);
+    let out = Arc::new(Mutex::new(Vec::new()));
+    let backend = PoolProbeBackend { snap_at: 80, out: Arc::clone(&out) };
+    let (events, trained) =
+        threaded_run_with(backend, &meta, &batches, 13, Occupancy::Full).unwrap();
+    assert_eq!(events.len(), 120);
+    assert!(trained.all_finite());
+
+    let probes = out.lock().unwrap();
+    assert_eq!(probes.len(), meta.partitions.len(), "every worker must report");
+    for (idx, mid, end) in probes.iter() {
+        assert_eq!(
+            end.fresh_allocs, mid.fresh_allocs,
+            "worker {idx}: fresh pool allocations after warmup (mid {mid:?} -> end {end:?})"
+        );
+        assert!(
+            end.reuses > mid.reuses,
+            "worker {idx}: steady state must be served from the shelf ({mid:?} -> {end:?})"
+        );
+    }
+}

@@ -32,6 +32,14 @@ if [ "$executed" -lt "$floor" ]; then
     exit 1
 fi
 
+# Thread-count sensitivity: the threaded-native suite must pass both
+# under the default parallel test harness (the run above) and fully
+# serialized — concurrency bugs often hide at one thread count. This
+# rerun is deliberately outside TEST_LOG so the executed-test floor
+# counts each test once.
+echo "[ci] rerunning threaded-native suite under RUST_TEST_THREADS=1"
+RUST_TEST_THREADS=1 cargo test -q --test threaded_native
+
 cargo fmt --all --check
 
 if [[ "${1:-}" == "--bench" ]]; then
