@@ -2,6 +2,11 @@
 //! §6.4 scenario: deep pipelining hurts accuracy; a non-pipelined tail
 //! recovers it (Table 4 / Figure 7 shape).
 //!
+//! Runs offline out of the box: without artifacts the demo picks the
+//! native block-IR ResNet fixture (`native_resnet20_4s`, the same
+//! Table-4 cut snapped to block edges) instead of the XLA
+//! `resnet20_hybrid` artifacts.
+//!
 //! Run: cargo run --release --example hybrid_resnet [--iters N]
 
 use pipestale::config::{Mode, RunConfig};
@@ -11,15 +16,30 @@ use pipestale::util::cli::Command;
 fn main() -> anyhow::Result<()> {
     pipestale::util::logging::init();
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let m = Command::new("hybrid_resnet", "paper §6.4 hybrid-training demo (ResNet-20, 8 stages)")
+    let m = Command::new("hybrid_resnet", "paper §6.4 hybrid-training demo (ResNet, 8 stages)")
+        .opt("config", "auto", "config (auto: resnet20_hybrid w/ artifacts, else native_resnet20_4s)")
         .opt("iters", "240", "total training iterations")
         .opt("noise", "2.2", "synthetic dataset noise")
         .parse(&argv)
         .map_err(|u| anyhow::anyhow!("{u}"))?;
     let iters: u64 = m.get_u64("iters").map_err(anyhow::Error::msg)?;
     let noise = m.get_f64("noise").map_err(anyhow::Error::msg)?;
+    let config: String = match m.get("config") {
+        "auto" => {
+            // mirror Backend::Auto's resolution rule exactly
+            if pipestale::xla_ready() && pipestale::train::artifact_meta_exists("resnet20_hybrid")
+            {
+                "resnet20_hybrid".to_string() // PPV (5,12,17)
+            } else {
+                // same cut snapped to block edges, no artifacts needed
+                "native_resnet20_4s".to_string()
+            }
+        }
+        other => other.to_string(),
+    };
+    println!("config: {config}");
 
-    let mut base = RunConfig::new("resnet20_hybrid"); // PPV (5,12,17)
+    let mut base = RunConfig::new(&config);
     base.iters = iters;
     base.eval_every = (iters / 6).max(1);
     base.train_size = 1024;

@@ -18,13 +18,75 @@ use pipestale::config::Mode;
 use pipestale::meta::ConfigMeta;
 use pipestale::pipeline::StalenessReport;
 use pipestale::util::bench::Table;
+use pipestale::util::json;
+
+/// Artifact-free staleness sweep over the native block-IR ResNets:
+/// sequential baseline, then pipelined runs of growing %-stale-weights
+/// (early split -> deep split -> P=4 -> paper-depth P=4). Runs on any
+/// machine and records results/table3_native_resnet.json.
+fn native_resnet_section() {
+    let iters = common::bench_iters(120);
+    println!("=== Native-ResNet staleness (artifact-free, block IR; {iters} iters) ===");
+    let mut t = Table::new(&["Config", "Stages", "% stale", "mean degree", "Accuracy"]);
+    let baseline = common::run("native_resnet_small_4s", Mode::Sequential, iters, 0);
+    t.row(&[
+        "non-pipelined".into(),
+        "1".into(),
+        "0%".into(),
+        "0".into(),
+        common::pct(baseline.final_accuracy),
+    ]);
+    let mut rows = vec![json::obj(vec![
+        ("config", json::s("native_resnet_small_4s")),
+        ("schedule", json::s("sequential")),
+        ("stages", json::num(1.0)),
+        ("pct_stale", json::num(0.0)),
+        ("mean_degree", json::num(0.0)),
+        ("accuracy", json::num(baseline.final_accuracy)),
+    ])];
+    for cfg in [
+        "native_resnet_small",
+        "native_resnet_small_deep",
+        "native_resnet_small_4s",
+        "native_resnet20_4s",
+    ] {
+        let meta = pipestale::backend::native_config(cfg).unwrap();
+        let rep = StalenessReport::from_meta(&meta);
+        let r = common::run(cfg, Mode::Pipelined, iters, 0);
+        println!(
+            "{cfg}: stages={} %stale={:.1} acc={}",
+            meta.paper_stages(),
+            100.0 * rep.stale_weight_fraction,
+            common::pct(r.final_accuracy)
+        );
+        t.row(&[
+            cfg.into(),
+            meta.paper_stages().to_string(),
+            format!("{:.1}%", 100.0 * rep.stale_weight_fraction),
+            format!("{:.1}", rep.mean_degree()),
+            common::pct(r.final_accuracy),
+        ]);
+        rows.push(json::obj(vec![
+            ("config", json::s(cfg)),
+            ("schedule", json::s("pipelined")),
+            ("stages", json::num(meta.paper_stages() as f64)),
+            ("pct_stale", json::num(rep.stale_weight_fraction)),
+            ("mean_degree", json::num(rep.mean_degree())),
+            ("accuracy", json::num(r.final_accuracy)),
+        ]));
+    }
+    println!("\n{}", t.render());
+    let doc = json::obj(vec![("iters", json::num(iters as f64)), ("rows", json::arr(rows))]);
+    common::write_results("table3_native_resnet.json", &doc.to_string_pretty());
+}
 
 fn main() {
+    pipestale::util::logging::init();
+    native_resnet_section();
     if !pipestale::xla_ready() {
-        eprintln!("skipping {}: needs artifacts + real XLA backend", file!());
+        eprintln!("skipping XLA sections of {}: needs artifacts + real XLA backend", file!());
         return;
     }
-    pipestale::util::logging::init();
     let iters = common::bench_iters(240);
     let root = pipestale::artifacts_root();
 

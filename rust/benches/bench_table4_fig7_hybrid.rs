@@ -14,13 +14,60 @@ mod common;
 
 use pipestale::config::Mode;
 use pipestale::util::bench::Table;
+use pipestale::util::json;
+
+/// Artifact-free Table-4 shape on the native block-IR ResNet fixture
+/// (P=4, block-edge cuts): baseline / pipelined / two hybrid splits,
+/// recorded to results/table4_native_resnet.json.
+fn native_resnet_section() {
+    let n = common::bench_iters(120);
+    let p = 2 * n / 3;
+    let cfg = "native_resnet_small_4s";
+    println!("=== Native-ResNet hybrid (artifact-free, block IR; n={n}) ===");
+    let runs = [
+        ("baseline".to_string(), Mode::Sequential, n, 0),
+        ("pipelined".to_string(), Mode::Pipelined, n, 0),
+        (format!("{p}+{} hybrid", n - p), Mode::Hybrid, n, p),
+        (format!("{p}+{p} hybrid"), Mode::Hybrid, p + p, p),
+    ];
+    let mut t = Table::new(&["Schedule", "Accuracy"]);
+    let mut rows = Vec::new();
+    for (label, mode, total, np) in runs {
+        let r = common::run(cfg, mode, total, np);
+        println!("{label}: {}", common::pct(r.final_accuracy));
+        t.row(&[label.clone(), common::pct(r.final_accuracy)]);
+        rows.push(json::obj(vec![
+            ("schedule", json::s(&label)),
+            ("iters", json::num(total as f64)),
+            ("pipelined_iters", json::num(np as f64)),
+            ("accuracy", json::num(r.final_accuracy)),
+            (
+                "evals",
+                json::arr(r.recorder.evals.iter().map(|e| {
+                    json::obj(vec![
+                        ("iter", json::num(e.iter as f64)),
+                        ("accuracy", json::num(e.accuracy)),
+                    ])
+                })),
+            ),
+        ]));
+    }
+    println!("\n{}", t.render());
+    let doc = json::obj(vec![
+        ("config", json::s(cfg)),
+        ("iters", json::num(n as f64)),
+        ("rows", json::arr(rows)),
+    ]);
+    common::write_results("table4_native_resnet.json", &doc.to_string_pretty());
+}
 
 fn main() {
+    pipestale::util::logging::init();
+    native_resnet_section();
     if !pipestale::xla_ready() {
-        eprintln!("skipping {}: needs artifacts + real XLA backend", file!());
+        eprintln!("skipping XLA sections of {}: needs artifacts + real XLA backend", file!());
         return;
     }
-    pipestale::util::logging::init();
     let n = common::bench_iters(300); // "30k" analog
     let p = 2 * n / 3; // "20k"
     let cfg = "resnet20_hybrid";

@@ -12,6 +12,8 @@
 //! tensor plumbing (shapes, caches, parameter slicing) lives in
 //! `backend::ops`.
 
+use anyhow::{ensure, Result};
+
 /// Elementwise activation fused into `Dense` or standing alone (`Act`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ActKind {
@@ -69,7 +71,31 @@ impl ActKind {
 
 /// Output spatial dims + top/left padding for a square-kernel conv.
 /// SAME matches XLA: `out = ceil(in/stride)`, `pad_before = total // 2`.
+///
+/// Checked: `stride == 0` and a VALID-padding input smaller than the
+/// kernel are errors. The latter used to wrap (`(h - k) / stride + 1`
+/// underflows in release builds) and yield garbage output shapes.
 pub fn conv_out_dims(
+    h: usize,
+    w: usize,
+    k: usize,
+    stride: usize,
+    same: bool,
+) -> Result<(usize, usize, usize, usize)> {
+    ensure!(stride >= 1, "conv: stride must be >= 1");
+    ensure!(k >= 1 && h >= 1 && w >= 1, "conv: degenerate dims {h}x{w} kernel {k}");
+    if !same {
+        ensure!(
+            h >= k && w >= k,
+            "conv VALID: input {h}x{w} smaller than kernel {k}x{k}"
+        );
+    }
+    Ok(conv_out_dims_unchecked(h, w, k, stride, same))
+}
+
+/// Unchecked variant for the inner kernels, which only ever see
+/// dimensions already validated by `backend::ops`.
+pub(crate) fn conv_out_dims_unchecked(
     h: usize,
     w: usize,
     k: usize,
@@ -85,6 +111,24 @@ pub fn conv_out_dims(
     } else {
         ((h - k) / stride + 1, (w - k) / stride + 1, 0, 0)
     }
+}
+
+/// Residual merge forward: `out = main + shortcut`, elementwise.
+pub fn residual_add_forward(main: &[f32], shortcut: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(main.len(), shortcut.len());
+    debug_assert_eq!(main.len(), out.len());
+    for ((o, &a), &b) in out.iter_mut().zip(main).zip(shortcut) {
+        *o = a + b;
+    }
+}
+
+/// Residual merge backward: the add fans the incoming gradient out to
+/// both branches unchanged (`d_main = d_shortcut = dy`).
+pub fn residual_add_backward(dy: &[f32], d_main: &mut [f32], d_shortcut: &mut [f32]) {
+    debug_assert_eq!(dy.len(), d_main.len());
+    debug_assert_eq!(dy.len(), d_shortcut.len());
+    d_main.copy_from_slice(dy);
+    d_shortcut.copy_from_slice(dy);
 }
 
 /// 2-D convolution forward: x `[n,h,w,cin]`, wgt `[k,k,cin,cout]` (HWIO),
@@ -104,7 +148,7 @@ pub fn conv2d_forward(
     bias: Option<&[f32]>,
     out: &mut [f32],
 ) {
-    let (oh, ow, pt, pl) = conv_out_dims(h, w, k, stride, same);
+    let (oh, ow, pt, pl) = conv_out_dims_unchecked(h, w, k, stride, same);
     debug_assert_eq!(out.len(), n * oh * ow * cout);
     match bias {
         Some(b) => {
@@ -164,7 +208,7 @@ pub fn conv2d_backward(
     dw: &mut [f32],
     mut db: Option<&mut [f32]>,
 ) {
-    let (oh, ow, pt, pl) = conv_out_dims(h, w, k, stride, same);
+    let (oh, ow, pt, pl) = conv_out_dims_unchecked(h, w, k, stride, same);
     debug_assert_eq!(dy.len(), n * oh * ow * cout);
     debug_assert_eq!(dx.len(), x.len());
     debug_assert_eq!(dw.len(), wgt.len());
@@ -528,11 +572,42 @@ mod tests {
     #[test]
     fn conv_out_dims_match_xla_conventions() {
         // SAME stride 1: shape preserved, pad (k-1)/2 on the before side.
-        assert_eq!(conv_out_dims(28, 28, 5, 1, true), (28, 28, 2, 2));
+        assert_eq!(conv_out_dims(28, 28, 5, 1, true).unwrap(), (28, 28, 2, 2));
         // SAME stride 2 on even input: ceil(32/2)=16.
-        assert_eq!(conv_out_dims(32, 32, 3, 2, true), (16, 16, 0, 0));
+        assert_eq!(conv_out_dims(32, 32, 3, 2, true).unwrap(), (16, 16, 0, 0));
         // VALID: (h-k)/s+1.
-        assert_eq!(conv_out_dims(14, 14, 5, 1, false), (10, 10, 0, 0));
+        assert_eq!(conv_out_dims(14, 14, 5, 1, false).unwrap(), (10, 10, 0, 0));
+    }
+
+    #[test]
+    fn conv_out_dims_reject_underflow_and_zero_stride() {
+        // Regression: VALID with h < k used to wrap ((h-k)/s+1 on usize)
+        // in release builds and produce garbage shapes.
+        let err = conv_out_dims(3, 3, 5, 1, false).unwrap_err().to_string();
+        assert!(err.contains("smaller than kernel"), "{err}");
+        assert!(conv_out_dims(5, 3, 5, 1, false).is_err(), "w < k must error too");
+        // k == h is the smallest legal VALID input.
+        assert_eq!(conv_out_dims(5, 5, 5, 1, false).unwrap(), (1, 1, 0, 0));
+        // SAME tolerates small inputs (padding covers them)...
+        assert_eq!(conv_out_dims(2, 2, 5, 1, true).unwrap().0, 2);
+        // ...but nothing tolerates a zero stride or empty dims.
+        assert!(conv_out_dims(8, 8, 3, 0, true).is_err());
+        assert!(conv_out_dims(0, 8, 3, 1, true).is_err());
+    }
+
+    #[test]
+    fn residual_add_roundtrip() {
+        let main = [1.0f32, -2.0, 3.0];
+        let shortcut = [0.5f32, 0.25, -1.0];
+        let mut out = [0.0f32; 3];
+        residual_add_forward(&main, &shortcut, &mut out);
+        assert_eq!(out, [1.5, -1.75, 2.0]);
+        let dy = [0.1f32, 0.2, 0.3];
+        let mut dm = [0.0f32; 3];
+        let mut ds = [9.0f32; 3];
+        residual_add_backward(&dy, &mut dm, &mut ds);
+        assert_eq!(dm, dy);
+        assert_eq!(ds, dy);
     }
 
     #[test]

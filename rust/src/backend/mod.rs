@@ -8,7 +8,9 @@
 //! loop and checkpointing all run unchanged on either backend; only the
 //! compute substrate differs. This is what lets the full pipelined-
 //! training suite (convergence, single-in-flight equivalence, staleness
-//! divergence) execute on any machine, offline, with no artifacts.
+//! divergence) execute on any machine, offline, with no artifacts —
+//! for the LeNet family and, via the block-structured IR
+//! (`ops::NativeNode`), the paper's CIFAR-10 ResNets.
 //!
 //! Semantics mirrored from the stage programs (`python/compile/stages.py`):
 //! * `forward` applies BN-state updates internally and never touches
@@ -34,14 +36,19 @@ use crate::pipeline::executor::{LastResult, StageExecutor, WorkerStage};
 use crate::tensor::{IntTensor, Tensor};
 
 pub use kernels::ActKind;
-pub use models::{build_model, native_config, native_config_names, partition_ops};
-pub use ops::{NativeOp, OpCache};
+pub use models::{
+    build_model, native_config, native_config_names, partition_nodes, supported_models,
+};
+pub use ops::{NativeNode, NativeOp, OpCache, ResBlock, Shortcut};
 
-/// One partition's native compute: op stack + weights + optimizer.
+/// One partition's native compute: node stack (plain ops and whole
+/// residual blocks) + weights + optimizer. Because blocks are atomic
+/// nodes, a partition always holds complete blocks — the block IR's
+/// partition-boundary rule.
 pub struct NativePartition {
     pub meta: PartitionMeta,
-    ops: Vec<NativeOp>,
-    /// Per-op (param, state) offsets into the flat partition vectors.
+    nodes: Vec<NativeNode>,
+    /// Per-node (param, state) offsets into the flat partition vectors.
     offsets: Vec<(usize, usize)>,
     pub params: PartitionParams,
     pub optim: Sgd,
@@ -65,57 +72,59 @@ impl NativePartition {
             .partitions
             .get(idx)
             .ok_or_else(|| anyhow!("config {} has no partition {idx}", meta.config))?;
-        let ops = models::partition_ops(meta, pm)?;
-        NativePartition::new(pm.clone(), ops, params, optim)
+        let nodes = models::partition_nodes(meta, pm)?;
+        NativePartition::new(pm.clone(), nodes, params, optim)
     }
 
     fn new(
         meta: PartitionMeta,
-        ops: Vec<NativeOp>,
+        nodes: Vec<NativeNode>,
         params: PartitionParams,
         optim: Sgd,
     ) -> Result<Self> {
         let mut po = 0usize;
         let mut so = 0usize;
-        let mut offsets = Vec::with_capacity(ops.len());
-        for op in &ops {
+        let mut offsets = Vec::with_capacity(nodes.len());
+        for node in &nodes {
             offsets.push((po, so));
-            po += op.n_params();
-            so += op.n_state();
+            po += node.n_params();
+            so += node.n_state();
         }
         ensure!(
             po == params.params.len() && so == params.state.len(),
-            "partition {}: op stack wants {po} params / {so} state, got {} / {}",
+            "partition {}: node stack wants {po} params / {so} state, got {} / {}",
             meta.index,
             params.params.len(),
             params.state.len()
         );
-        Ok(NativePartition { meta, ops, offsets, params, optim, update_count: 0 })
+        Ok(NativePartition { meta, nodes, offsets, params, optim, update_count: 0 })
     }
 
-    fn op_params(&self, i: usize) -> &[Tensor] {
+    fn node_params(&self, i: usize) -> &[Tensor] {
         let (po, _) = self.offsets[i];
-        &self.params.params[po..po + self.ops[i].n_params()]
+        &self.params.params[po..po + self.nodes[i].n_params()]
     }
 
-    fn op_state(&self, i: usize) -> &[Tensor] {
+    fn node_state(&self, i: usize) -> &[Tensor] {
         let (_, so) = self.offsets[i];
-        &self.params.state[so..so + self.ops[i].n_state()]
+        &self.params.state[so..so + self.nodes[i].n_state()]
     }
 
     /// Training forward walk: `(output, caches, state_updates)` where
-    /// state_updates pairs a state offset with the op's new state values.
+    /// state_updates pairs a state offset with the node's new state
+    /// values (for a block, all its BN states concatenated in spec
+    /// order).
     #[allow(clippy::type_complexity)]
     fn forward_train(
         &self,
         x: &Tensor,
     ) -> Result<(Tensor, Vec<OpCache>, Vec<(usize, Vec<Tensor>)>)> {
         let mut cur = x.clone();
-        let mut caches = Vec::with_capacity(self.ops.len());
+        let mut caches = Vec::with_capacity(self.nodes.len());
         let mut updates = Vec::new();
-        for i in 0..self.ops.len() {
+        for i in 0..self.nodes.len() {
             let (y, cache, new_state) =
-                self.ops[i].train_forward(self.op_params(i), self.op_state(i), &cur)?;
+                self.nodes[i].train_forward(self.node_params(i), self.node_state(i), &cur)?;
             caches.push(cache);
             if !new_state.is_empty() {
                 updates.push((self.offsets[i].1, new_state));
@@ -138,8 +147,8 @@ impl NativePartition {
     fn backward_walk(&self, caches: &[OpCache], dy: Tensor) -> Result<(Tensor, Vec<Tensor>)> {
         let mut grads: Vec<Option<Tensor>> = vec![None; self.params.params.len()];
         let mut g = dy;
-        for i in (0..self.ops.len()).rev() {
-            let (dx, dparams) = self.ops[i].backward(self.op_params(i), &caches[i], &g)?;
+        for i in (0..self.nodes.len()).rev() {
+            let (dx, dparams) = self.nodes[i].backward(self.node_params(i), &caches[i], &g)?;
             let (po, _) = self.offsets[i];
             for (j, dp) in dparams.into_iter().enumerate() {
                 grads[po + j] = Some(dp);
@@ -219,8 +228,8 @@ impl NativePartition {
     pub fn stage_eval_forward(&self, carry: &[Tensor]) -> Result<Vec<Tensor>> {
         let x = Self::single(carry, "eval_forward")?;
         let mut cur = x.clone();
-        for i in 0..self.ops.len() {
-            cur = self.ops[i].eval_forward(self.op_params(i), self.op_state(i), &cur)?;
+        for i in 0..self.nodes.len() {
+            cur = self.nodes[i].eval_forward(self.node_params(i), self.node_state(i), &cur)?;
         }
         Ok(vec![cur])
     }
@@ -430,6 +439,35 @@ mod tests {
             .unwrap();
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].shape, meta.partitions[0].carry_out[0]);
+    }
+
+    #[test]
+    fn native_resnet_sequential_step_updates_every_partition() {
+        // The block IR end to end: a P=4 residual-network pipeline where
+        // three partition boundaries sit on block edges.
+        let meta = native_config("native_resnet_small_4s").unwrap();
+        let params = ModelParams::init(&meta.partitions, 13).unwrap();
+        let optims = crate::train::build_optims(&meta, 10, 1.0);
+        let exec = NativeExecutor::new(meta.clone(), params, optims).unwrap();
+        let mut pipe = Pipeline::new(exec, meta.batch);
+        let spec = crate::data::SyntheticSpec { train: 32, test: 16, noise: 0.8, seed: 7 };
+        let (ds, _) = crate::data::load_or_synthesize(&meta.dataset, None, &spec).unwrap();
+        let idxs: Vec<usize> = (0..meta.batch).collect();
+        let (x, labels) = ds.gather(&idxs);
+        let before = NativeExecutor::params_snapshot(&pipe.exec);
+        let e = pipe
+            .sequential_step(Feed { batch_id: 0, seed: crate::data::batch_seed(1, 0), x, labels })
+            .unwrap();
+        assert!(e.loss.is_finite() && e.loss > 0.0);
+        assert_eq!(pipe.exec.update_counts(), vec![1, 1, 1, 1]);
+        let after = NativeExecutor::params_snapshot(&pipe.exec);
+        assert!(after.all_finite());
+        for (i, (a, b)) in before.partitions.iter().zip(&after.partitions).enumerate() {
+            assert!(
+                a.params.iter().zip(&b.params).any(|(t, u)| t.data() != u.data()),
+                "partition {i} weights must move"
+            );
+        }
     }
 
     #[test]

@@ -1,17 +1,27 @@
 //! Native model zoo + artifact-free config generation.
 //!
-//! `build_model` mirrors `python/compile/models.py` for the LeNet family
-//! (including the `_w` width-scaling rule with Python's banker's
+//! `build_model` mirrors `python/compile/models.py` for the LeNet
+//! family (including the `_w` width-scaling rule with Python's banker's
 //! rounding), so a native op stack produces the same parameter/state
-//! specs and carry shapes the AOT pipeline records in `meta.json`.
+//! specs and carry shapes the AOT pipeline records in `meta.json`, and
+//! adds the paper's CIFAR-10 ResNet on the block-structured IR: one
+//! `NativeNode::Block` per residual basic block, so the skip tensor
+//! never crosses a pipeline register and every PPV falls on a block
+//! edge by construction (the XLA side instead threads the skip through
+//! the register via `ResStart`/`ResEnd` — a documented divergence).
+//!
+//! The zoo itself is `MODEL_ZOO`, the single source of truth for what
+//! the native backend can build: `build_model`'s unsupported-model
+//! error and the `NATIVE_MANIFEST` config table both derive from it,
+//! so the supported list cannot go stale.
 //!
 //! `native_config` synthesizes a full `ConfigMeta` in memory — layer
 //! metadata, partition specs, carry chains — for a built-in manifest of
-//! LeNet configs, so training, evaluation, checkpointing and the paper's
-//! staleness accounting all run with **no Python step and no artifacts
-//! directory**. `partition_ops` then cross-validates the generated (or
-//! artifact-loaded) meta against the native op stack: any drift between
-//! the two worlds is an error, not silent divergence.
+//! LeNet and ResNet configs, so training, evaluation, checkpointing and
+//! the paper's staleness accounting all run with **no Python step and
+//! no artifacts directory**. `partition_nodes` then cross-validates the
+//! generated (or artifact-loaded) meta against the native node stack:
+//! any drift between the two worlds is an error, not silent divergence.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -22,13 +32,15 @@ use crate::meta::{ConfigMeta, LayerMeta, PartitionMeta};
 use crate::tensor::numel;
 
 use super::kernels::ActKind;
-use super::ops::NativeOp;
+use super::ops::{NativeNode, NativeOp, Shortcut};
 
-/// One paper-numbered layer: a pipeline register may follow it.
+/// One paper-numbered layer: a pipeline register may follow it. Nodes
+/// are plain ops or whole residual blocks — a partition boundary can
+/// only fall *between* layers, hence only on block edges.
 #[derive(Debug, Clone)]
 pub struct NativeLayer {
     pub name: String,
-    pub ops: Vec<NativeOp>,
+    pub nodes: Vec<NativeNode>,
 }
 
 /// A whole model as a flat layer list (the paper's PPV numbering).
@@ -74,7 +86,10 @@ fn lenet5(width_mult: f64, num_classes: usize) -> NativeModel {
     let f1 = w_scale(120, width_mult);
     let f2 = w_scale(84, width_mult);
     let flat = 5 * 5 * c2;
-    let layer = |name: &str, ops: Vec<NativeOp>| NativeLayer { name: name.to_string(), ops };
+    let layer = |name: &str, ops: Vec<NativeOp>| NativeLayer {
+        name: name.to_string(),
+        nodes: ops.into_iter().map(NativeNode::Op).collect(),
+    };
     NativeModel {
         name: "lenet5".to_string(),
         layers: vec![
@@ -110,14 +125,103 @@ fn lenet5(width_mult: f64, num_classes: usize) -> NativeModel {
     }
 }
 
+/// The paper's CIFAR-10 ResNet (He et al. 2016 basic blocks): a stem
+/// conv + BN + relu, three stages of `mblocks` residual blocks (widths
+/// 16/32/64 scaled by `width_mult`, stride-2 transitions with 1×1
+/// projection shortcuts, option B), then a global-avg-pool + linear
+/// head. Native paper-layer numbering: layer 1 = stem, one layer per
+/// block (the post-add relu rides in the block's layer), final layer =
+/// head — so a `resnet` model has `2 + 3*mblocks` pipeline layers.
+fn resnet(name: &str, mblocks: usize, width_mult: f64, num_classes: usize) -> NativeModel {
+    let widths = [w_scale(16, width_mult), w_scale(32, width_mult), w_scale(64, width_mult)];
+    let mut layers = Vec::with_capacity(2 + 3 * mblocks);
+    layers.push(NativeLayer {
+        name: "l1".to_string(),
+        nodes: vec![
+            NativeNode::op(NativeOp::conv("conv0", 3, widths[0], 3, 1, true, false)),
+            NativeNode::op(NativeOp::batch_norm("bn0", widths[0])),
+            NativeNode::op(NativeOp::act("a0", ActKind::Relu)),
+        ],
+    });
+    let mut cin = widths[0];
+    let mut lnum = 2;
+    for (g, &c) in widths.iter().enumerate() {
+        for j in 0..mblocks {
+            let stride = if g > 0 && j == 0 { 2 } else { 1 };
+            let tag = format!("g{g}b{j}");
+            let main = vec![
+                NativeOp::conv(&format!("{tag}/conv1"), cin, c, 3, stride, true, false),
+                NativeOp::batch_norm(&format!("{tag}/bn1"), c),
+                NativeOp::act(&format!("{tag}/a1"), ActKind::Relu),
+                NativeOp::conv(&format!("{tag}/conv2"), c, c, 3, 1, true, false),
+                NativeOp::batch_norm(&format!("{tag}/bn2"), c),
+            ];
+            let shortcut = if stride != 1 || cin != c {
+                Shortcut::projection(&tag, cin, c, stride)
+            } else {
+                Shortcut::Identity
+            };
+            layers.push(NativeLayer {
+                name: format!("l{lnum}"),
+                nodes: vec![
+                    NativeNode::block(&tag, main, shortcut),
+                    NativeNode::op(NativeOp::act(&format!("{tag}/a2"), ActKind::Relu)),
+                ],
+            });
+            lnum += 1;
+            cin = c;
+        }
+    }
+    layers.push(NativeLayer {
+        name: format!("l{lnum}"),
+        nodes: vec![
+            NativeNode::op(NativeOp::global_avg_pool("gap")),
+            NativeNode::op(NativeOp::dense("fc", cin, num_classes, ActKind::None)),
+        ],
+    });
+    NativeModel {
+        name: name.to_string(),
+        layers,
+        input_shape: vec![32, 32, 3],
+        num_classes,
+        dataset: "cifar10".to_string(),
+    }
+}
+
+/// `resnet`: the paper's ResNet-20 topology (3 blocks per stage).
+fn paper_resnet(width_mult: f64, num_classes: usize) -> NativeModel {
+    resnet("resnet", 3, width_mult, num_classes)
+}
+
+/// `resnet8`: one block per stage — the shallow CI/fixture variant.
+fn resnet8(width_mult: f64, num_classes: usize) -> NativeModel {
+    resnet("resnet8", 1, width_mult, num_classes)
+}
+
+/// The native model zoo — the ONE place a buildable model is declared.
+/// `build_model`'s error message and `NATIVE_MANIFEST` validation both
+/// derive from this table, so the "supported" list cannot go stale.
+const MODEL_ZOO: &[(&str, fn(f64, usize) -> NativeModel)] = &[
+    ("lenet5", lenet5),
+    ("resnet", paper_resnet),
+    ("resnet8", resnet8),
+];
+
+/// Model names the native backend can build.
+pub fn supported_models() -> Vec<&'static str> {
+    MODEL_ZOO.iter().map(|e| e.0).collect()
+}
+
 /// Build a native model by name. Models whose ops the native backend
-/// does not implement (residual blocks, dropout) are rejected here.
+/// does not implement (e.g. dropout) are rejected here, listing the
+/// supported set straight from `MODEL_ZOO`.
 pub fn build_model(name: &str, width_mult: f64, num_classes: usize) -> Result<NativeModel> {
-    match name {
-        "lenet5" => Ok(lenet5(width_mult, num_classes)),
-        other => bail!(
-            "native backend has no model {other:?} (supported: lenet5); \
-             use the XLA backend with AOT artifacts for the full zoo"
+    match MODEL_ZOO.iter().find(|e| e.0 == name) {
+        Some((_, builder)) => Ok(builder(width_mult, num_classes)),
+        None => bail!(
+            "native backend has no model {name:?} (supported: {}); \
+             use the XLA backend with AOT artifacts for the full zoo",
+            supported_models().join(", ")
         ),
     }
 }
@@ -135,8 +239,8 @@ impl NativeModel {
             .collect();
         let mut out = Vec::with_capacity(self.layers.len());
         for layer in &self.layers {
-            for op in &layer.ops {
-                shape = op.out_shape(&shape)?;
+            for node in &layer.nodes {
+                shape = node.out_shape(&shape)?;
             }
             out.push(shape.clone());
         }
@@ -144,14 +248,25 @@ impl NativeModel {
     }
 }
 
-/// The built-in native manifest: LeNet configs runnable with no
-/// artifacts, as `(name, model, width_mult, ppv, batch)`. Names shared
-/// with `python/compile/experiments.py` use the same
+/// The built-in native manifest: configs runnable with no artifacts,
+/// as `(name, model, width_mult, ppv, batch)`. Names shared with
+/// `python/compile/experiments.py` use the same
 /// (model, width, PPV, batch), so a run is configured identically
 /// whichever backend serves it. `native_lenet_small` is a narrow,
 /// small-batch variant for fast native CI runs; `native_lenet_small_4s`
 /// is its 4-partition split (PPV (1,2,3)), the P=4 fixture for the
 /// threaded-runtime equivalence and stress suites.
+///
+/// The `native_resnet_*` entries are the paper's ResNet partitionings
+/// on synthetic CIFAR-shaped (32,32,3) inputs, over the block IR
+/// (blocks atomic, so every PPV cut is a block edge): an early-layer
+/// split (`_small`, register after the stem), a deep split (`_deep`,
+/// register after the first stride-2 block, so the second transition
+/// block g2b0 opens partition 2), the P=4 hybrid fixture
+/// (`_small_4s`), and the paper-depth ResNet-20 topology with Table
+/// 4's deep-pipelining cut — PPV (5,12,17) in the paper's 20-layer
+/// numbering, snapped to the nearest block edges in native numbering —
+/// (`native_resnet20_4s`, narrow width for the 1-core testbed).
 const NATIVE_MANIFEST: &[(&str, &str, f64, &[usize], usize)] = &[
     ("quickstart_lenet", "lenet5", 1.0, &[2], 32),
     ("lenet5_4s", "lenet5", 1.0, &[1], 64),
@@ -160,6 +275,10 @@ const NATIVE_MANIFEST: &[(&str, &str, f64, &[usize], usize)] = &[
     ("lenet5_10s", "lenet5", 1.0, &[1, 2, 3, 4], 64),
     ("native_lenet_small", "lenet5", 0.5, &[2], 16),
     ("native_lenet_small_4s", "lenet5", 0.5, &[1, 2, 3], 16),
+    ("native_resnet_small", "resnet8", 0.25, &[1], 8),
+    ("native_resnet_small_deep", "resnet8", 0.25, &[3], 8),
+    ("native_resnet_small_4s", "resnet8", 0.25, &[1, 2, 3], 8),
+    ("native_resnet20_4s", "resnet", 0.25, &[3, 6, 9], 8),
 ];
 
 /// Returns `(model, width_mult, ppv, batch)` for a built-in config.
@@ -200,10 +319,10 @@ pub fn native_config(name: &str) -> Result<ConfigMeta> {
     for (layer, out_shape) in model.layers.iter().zip(&after) {
         let mut flops = 0u64;
         let mut param_count = 0usize;
-        for op in &layer.ops {
-            flops += op.flops_per_sample(&shape)?;
-            param_count += op.param_specs().iter().map(|s| numel(&s.shape)).sum::<usize>();
-            shape = op.out_shape(&shape)?;
+        for node in &layer.nodes {
+            flops += node.flops_per_sample(&shape)?;
+            param_count += node.param_specs().iter().map(|s| numel(&s.shape)).sum::<usize>();
+            shape = node.out_shape(&shape)?;
         }
         layers_meta.push(LayerMeta {
             name: layer.name.clone(),
@@ -224,9 +343,9 @@ pub fn native_config(name: &str) -> Result<ConfigMeta> {
         let is_last = i == n_parts - 1;
         let layers = &model.layers[lo - 1..hi];
         let params: Vec<_> =
-            layers.iter().flat_map(|l| l.ops.iter().flat_map(|o| o.param_specs())).collect();
+            layers.iter().flat_map(|l| l.nodes.iter().flat_map(|n| n.param_specs())).collect();
         let state: Vec<_> =
-            layers.iter().flat_map(|l| l.ops.iter().flat_map(|o| o.state_specs())).collect();
+            layers.iter().flat_map(|l| l.nodes.iter().flat_map(|n| n.state_specs())).collect();
         let param_count = params.iter().map(|s| numel(&s.shape)).sum();
         let carry_in = if i == 0 {
             vec![std::iter::once(batch).chain(model.input_shape.iter().copied()).collect()]
@@ -274,10 +393,13 @@ pub fn native_config(name: &str) -> Result<ConfigMeta> {
     })
 }
 
-/// Build the native op stack for one partition of a config, validating
-/// the generated ops against the partition's recorded specs. Works for
-/// both artifact-loaded and natively generated `ConfigMeta`.
-pub fn partition_ops(meta: &ConfigMeta, part: &PartitionMeta) -> Result<Vec<NativeOp>> {
+/// Build the native node stack for one partition of a config,
+/// validating the generated nodes against the partition's recorded
+/// specs. Works for both artifact-loaded and natively generated
+/// `ConfigMeta`. Because residual blocks are whole nodes inside a
+/// layer and a partition is a contiguous layer range, the cut is on a
+/// block edge by construction — a block can never straddle partitions.
+pub fn partition_nodes(meta: &ConfigMeta, part: &PartitionMeta) -> Result<Vec<NativeNode>> {
     let model = build_model(&meta.model, meta.width_mult, meta.num_classes)?;
     ensure!(
         part.layer_lo >= 1 && part.layer_hi <= model.num_layers() && part.layer_lo <= part.layer_hi,
@@ -293,13 +415,13 @@ pub fn partition_ops(meta: &ConfigMeta, part: &PartitionMeta) -> Result<Vec<Nati
         part.carry_in.len(),
         part.carry_out.len()
     );
-    let ops: Vec<NativeOp> = model.layers[part.layer_lo - 1..part.layer_hi]
+    let nodes: Vec<NativeNode> = model.layers[part.layer_lo - 1..part.layer_hi]
         .iter()
-        .flat_map(|l| l.ops.iter().cloned())
+        .flat_map(|l| l.nodes.iter().cloned())
         .collect();
 
     // Cross-check against the recorded contract: same params, same state.
-    let specs: Vec<_> = ops.iter().flat_map(|o| o.param_specs()).collect();
+    let specs: Vec<_> = nodes.iter().flat_map(|n| n.param_specs()).collect();
     ensure!(
         specs.len() == part.params.len(),
         "partition {}: native stack has {} params, meta records {}",
@@ -318,7 +440,7 @@ pub fn partition_ops(meta: &ConfigMeta, part: &PartitionMeta) -> Result<Vec<Nati
             b.shape
         );
     }
-    let sspecs: Vec<_> = ops.iter().flat_map(|o| o.state_specs()).collect();
+    let sspecs: Vec<_> = nodes.iter().flat_map(|n| n.state_specs()).collect();
     ensure!(
         sspecs.len() == part.state.len(),
         "partition {}: native stack has {} state tensors, meta records {}",
@@ -335,7 +457,7 @@ pub fn partition_ops(meta: &ConfigMeta, part: &PartitionMeta) -> Result<Vec<Nati
             b.name
         );
     }
-    Ok(ops)
+    Ok(nodes)
 }
 
 #[cfg(test)]
@@ -422,22 +544,99 @@ mod tests {
     }
 
     #[test]
-    fn partition_ops_validate_against_meta() {
+    fn partition_nodes_validate_against_meta() {
         let m = native_config("quickstart_lenet").unwrap();
-        let ops0 = partition_ops(&m, &m.partitions[0]).unwrap();
-        let ops1 = partition_ops(&m, &m.partitions[1]).unwrap();
-        assert_eq!(ops0.len(), 6); // conv,act,pool x2
-        assert_eq!(ops1.len(), 4); // flatten,fc1,fc2,fc3
+        let nodes0 = partition_nodes(&m, &m.partitions[0]).unwrap();
+        let nodes1 = partition_nodes(&m, &m.partitions[1]).unwrap();
+        assert_eq!(nodes0.len(), 6); // conv,act,pool x2
+        assert_eq!(nodes1.len(), 4); // flatten,fc1,fc2,fc3
         // tampering with a recorded spec is caught
         let mut bad = m.partitions[0].clone();
         bad.params[0].shape = vec![3, 3, 1, 6];
-        assert!(partition_ops(&m, &bad).is_err());
+        assert!(partition_nodes(&m, &bad).is_err());
     }
 
     #[test]
     fn unknown_configs_and_models_error_clearly() {
         let err = native_config("resnet20_4s").unwrap_err().to_string();
         assert!(err.contains("unknown native config"), "{err}");
-        assert!(build_model("resnet20", 1.0, 10).is_err());
+        // the unsupported-model error derives its list from MODEL_ZOO
+        let err = build_model("resnet362", 1.0, 10).unwrap_err().to_string();
+        assert!(err.contains(&supported_models().join(", ")), "{err}");
+    }
+
+    #[test]
+    fn model_zoo_is_the_single_source_of_truth() {
+        // Every manifest entry must name a buildable zoo model, and
+        // every zoo model must build + produce a consistent carry chain.
+        for (cfg, model, width, _, batch) in NATIVE_MANIFEST {
+            assert!(
+                supported_models().contains(model),
+                "config {cfg} references model {model} missing from MODEL_ZOO"
+            );
+            build_model(model, *width, 10).unwrap().carry_shapes_after(*batch).unwrap();
+        }
+        for (name, _) in MODEL_ZOO {
+            let m = build_model(name, 1.0, 10).unwrap();
+            assert_eq!(&m.name, name);
+            assert_eq!(*m.carry_shapes_after(4).unwrap().last().unwrap(), vec![4, 10]);
+        }
+    }
+
+    #[test]
+    fn resnet_carry_chain_and_block_structure() {
+        // resnet8 at width 0.25: stage widths 4/8/16, stride-2
+        // transitions at g1/g2 with projection shortcuts.
+        let m = build_model("resnet8", 0.25, 10).unwrap();
+        assert_eq!(m.num_layers(), 5);
+        assert_eq!(m.input_shape, vec![32, 32, 3]);
+        assert_eq!(m.dataset, "cifar10");
+        let after = m.carry_shapes_after(8).unwrap();
+        assert_eq!(after[0], vec![8, 32, 32, 4]); // stem
+        assert_eq!(after[1], vec![8, 32, 32, 4]); // g0b0 (identity shortcut)
+        assert_eq!(after[2], vec![8, 16, 16, 8]); // g1b0 (stride 2, projection)
+        assert_eq!(after[3], vec![8, 8, 8, 16]); // g2b0 (stride 2, projection)
+        assert_eq!(after[4], vec![8, 10]); // gap + fc head
+        // block layers are [Block, post-add relu]
+        assert!(matches!(m.layers[1].nodes[0], NativeNode::Block(_)));
+        assert!(matches!(m.layers[1].nodes[1], NativeNode::Op(_)));
+        // paper-depth variant: 2 + 3*3 = 11 pipeline layers
+        assert_eq!(build_model("resnet", 0.25, 10).unwrap().num_layers(), 11);
+    }
+
+    #[test]
+    fn native_resnet_configs_synthesize_full_meta() {
+        // Early split / deep split / P=4 hybrid fixture, all on
+        // CIFAR-shaped inputs with consistent carry chains.
+        for (name, parts) in [
+            ("native_resnet_small", 2usize),
+            ("native_resnet_small_deep", 2),
+            ("native_resnet_small_4s", 4),
+            ("native_resnet20_4s", 4),
+        ] {
+            let m = native_config(name).unwrap();
+            assert_eq!(m.partitions.len(), parts, "{name}");
+            assert_eq!(m.input_shape, vec![32, 32, 3], "{name}");
+            assert_eq!(m.dataset, "cifar10", "{name}");
+            assert!(m.partitions.last().unwrap().is_last(), "{name}");
+            for (a, b) in m.partitions.iter().zip(m.partitions.iter().skip(1)) {
+                assert_eq!(a.carry_out, b.carry_in, "{name}");
+                assert_eq!(a.layer_hi + 1, b.layer_lo, "{name}");
+            }
+            let by_layer: usize = m.layers.iter().map(|l| l.param_count).sum();
+            assert_eq!(by_layer, m.total_params(), "{name}");
+            let f = m.stale_weight_fraction();
+            assert!(f > 0.0 && f < 1.0, "{name}: {f}");
+            // every partition's node stack validates against the meta
+            for p in &m.partitions {
+                partition_nodes(&m, p).unwrap();
+            }
+        }
+        // exact parameter count of the narrow resnet8 fixture:
+        // stem 116 + g0b0 304 + g1b0 944 + g2b0 3680 + head 170
+        let m = native_config("native_resnet_small").unwrap();
+        assert_eq!(m.total_params(), 5214);
+        // the paper-topology fixture pipelines 8 stages (K=3)
+        assert_eq!(native_config("native_resnet20_4s").unwrap().paper_stages(), 8);
     }
 }

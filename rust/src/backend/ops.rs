@@ -1,18 +1,24 @@
-//! Native op zoo: the Rust twin of `python/compile/layers.py`.
+//! Native op zoo: the Rust twin of `python/compile/layers.py`, lifted
+//! to a block-structured IR.
 //!
-//! A partition's compute is a flat `Vec<NativeOp>`; each op transforms
-//! the carry tensor and (for batch-norm) produces functional state
-//! updates that the executor commits exactly where the XLA engine's
-//! `take_state` would. `train_forward` records an `OpCache` so the
-//! backward walk is analytic; `backward` consumes it and returns
-//! `(dx, dparams)` with dparams positionally aligned to the op's
-//! `param_specs` — the same ordering `meta.json` records and `Sgd::step`
-//! zips against.
+//! A partition's compute is a `Vec<NativeNode>`. A node is either a
+//! plain atomic `NativeOp` (conv / batch-norm / activation / max-pool /
+//! global-avg-pool / flatten / dense) or a residual `ResBlock`: a main
+//! op sequence plus a `Shortcut` (identity, or a strided 1×1 projection
+//! conv + BN) merged by an elementwise add. Blocks are *atomic* with
+//! respect to partitioning — the skip tensor never crosses a pipeline
+//! register, so carries stay single-tensor (contrast the XLA side's
+//! `ResStart`/`ResEnd`, which thread the skip through the register).
 //!
-//! Scope: the ops the LeNet-style configs need (conv / batch-norm /
-//! activation / max-pool / global-avg-pool / flatten / dense). Residual
-//! markers and dropout are XLA-only for now; `backend::models` refuses
-//! to build models that use them.
+//! Each node transforms the carry tensor and (for batch-norm) produces
+//! functional state updates that the executor commits exactly where the
+//! XLA engine's `take_state` would. `train_forward` records an
+//! `OpCache` so the backward walk is analytic; `backward` consumes it
+//! and returns `(dx, dparams)` with dparams positionally aligned to the
+//! node's `param_specs` (a block's order is main ops, then shortcut
+//! ops) — the same ordering `meta.json` records and `Sgd::step` zips
+//! against. Dropout remains XLA-only; `backend::models` refuses to
+//! build models that use it.
 
 use anyhow::{bail, ensure, Result};
 
@@ -39,7 +45,7 @@ pub enum OpKind {
     Dense { din: usize, dout: usize, act: ActKind },
 }
 
-/// Saved forward intermediates for one op's backward pass.
+/// Saved forward intermediates for one node's backward pass.
 #[derive(Debug, Clone)]
 pub enum OpCache {
     Conv { x: Tensor },
@@ -49,6 +55,9 @@ pub enum OpCache {
     BatchNorm { xhat: Tensor, inv_std: Vec<f32> },
     Gap { in_shape: Vec<usize> },
     Flatten { in_shape: Vec<usize> },
+    /// Residual block: per-op caches of both branches (shortcut empty
+    /// for identity).
+    Block { main: Vec<OpCache>, shortcut: Vec<OpCache> },
 }
 
 fn dims4(t: &Tensor) -> Result<(usize, usize, usize, usize)> {
@@ -174,7 +183,8 @@ impl NativeOp {
         match &self.kind {
             OpKind::Conv { cin, cout, k, stride, same, .. } => {
                 ensure!(s.len() == 4 && s[3] == *cin, "{}: bad input shape {:?}", self.name, s);
-                let (oh, ow, _, _) = kernels::conv_out_dims(s[1], s[2], *k, *stride, *same);
+                let (oh, ow, _, _) = kernels::conv_out_dims(s[1], s[2], *k, *stride, *same)
+                    .map_err(|e| e.context(format!("{}: bad conv geometry", self.name)))?;
                 Ok(vec![s[0], oh, ow, *cout])
             }
             OpKind::BatchNorm { c, .. } => {
@@ -184,6 +194,12 @@ impl NativeOp {
             OpKind::Act { .. } => Ok(s.to_vec()),
             OpKind::MaxPool { k, stride } => {
                 ensure!(s.len() == 4, "{}: bad input shape {:?}", self.name, s);
+                ensure!(
+                    s[1] >= *k && s[2] >= *k && *stride >= 1,
+                    "{}: pool window {k} does not fit input {:?}",
+                    self.name,
+                    s
+                );
                 Ok(vec![s[0], (s[1] - k) / stride + 1, (s[2] - k) / stride + 1, s[3]])
             }
             OpKind::GlobalAvgPool => {
@@ -232,7 +248,8 @@ impl NativeOp {
             OpKind::Conv { cin, cout, k, stride, same, bias } => {
                 let (n, h, w, ci) = dims4(x)?;
                 ensure!(ci == *cin, "{}: input has {} channels, want {}", self.name, ci, cin);
-                let (oh, ow, _, _) = kernels::conv_out_dims(h, w, *k, *stride, *same);
+                let (oh, ow, _, _) = kernels::conv_out_dims(h, w, *k, *stride, *same)
+                    .map_err(|e| e.context(format!("{}: bad conv geometry", self.name)))?;
                 let mut y = Tensor::zeros(&[n, oh, ow, *cout]);
                 let b = if *bias { Some(params[1].data()) } else { None };
                 kernels::conv2d_forward(
@@ -285,6 +302,12 @@ impl NativeOp {
             }
             OpKind::MaxPool { k, stride } => {
                 let (n, h, w, c) = dims4(x)?;
+                ensure!(
+                    h >= *k && w >= *k && *stride >= 1,
+                    "{}: pool window {k} does not fit input {:?}",
+                    self.name,
+                    x.shape
+                );
                 let (oh, ow) = ((h - k) / stride + 1, (w - k) / stride + 1);
                 let mut y = Tensor::zeros(&[n, oh, ow, c]);
                 let mut argmax = vec![0u32; n * oh * ow * c];
@@ -464,6 +487,346 @@ impl NativeOp {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Block-structured IR: plain ops and residual blocks as one node kind.
+// ---------------------------------------------------------------------------
+
+/// Shortcut branch of a residual block.
+#[derive(Debug, Clone)]
+pub enum Shortcut {
+    /// `y = main(x) + x` — requires the main branch to preserve shape.
+    Identity,
+    /// Shape-aligning projection (He et al. option B): by convention a
+    /// strided 1×1 conv + BN, but any op chain mapping the block input
+    /// to the main branch's output shape is accepted.
+    Projection(Vec<NativeOp>),
+}
+
+impl Shortcut {
+    /// The standard projection shortcut: 1×1 conv (stride `stride`,
+    /// no bias) + batch-norm, aligning `cin -> cout` across a
+    /// (possibly strided) block transition.
+    pub fn projection(tag: &str, cin: usize, cout: usize, stride: usize) -> Shortcut {
+        Shortcut::Projection(vec![
+            NativeOp::conv(&format!("{tag}/proj"), cin, cout, 1, stride, true, false),
+            NativeOp::batch_norm(&format!("{tag}/projbn"), cout),
+        ])
+    }
+
+    fn ops(&self) -> &[NativeOp] {
+        match self {
+            Shortcut::Identity => &[],
+            Shortcut::Projection(ops) => ops,
+        }
+    }
+}
+
+/// A residual basic block: `y = main(x) + shortcut(x)`, merged by an
+/// elementwise add. The whole block is one IR node, so a pipeline
+/// partition boundary can never split it — carries stay single-tensor.
+#[derive(Debug, Clone)]
+pub struct ResBlock {
+    pub name: String,
+    pub main: Vec<NativeOp>,
+    pub shortcut: Shortcut,
+}
+
+impl ResBlock {
+    fn main_params(&self) -> usize {
+        self.main.iter().map(NativeOp::n_params).sum()
+    }
+
+    fn main_state(&self) -> usize {
+        self.main.iter().map(NativeOp::n_state).sum()
+    }
+}
+
+/// One node of a partition's compute: a plain op or a residual block.
+#[derive(Debug, Clone)]
+pub enum NativeNode {
+    Op(NativeOp),
+    Block(ResBlock),
+}
+
+/// Training forward over an op chain, slicing `params`/`state`
+/// positionally per op: `(y, caches, new_state)` with new_state
+/// concatenated in `state_specs` order.
+fn chain_train_forward(
+    ops: &[NativeOp],
+    params: &[Tensor],
+    state: &[Tensor],
+    x: &Tensor,
+) -> Result<(Tensor, Vec<OpCache>, Vec<Tensor>)> {
+    let (mut po, mut so) = (0usize, 0usize);
+    let mut cur = x.clone();
+    let mut caches = Vec::with_capacity(ops.len());
+    let mut new_state = Vec::new();
+    for op in ops {
+        let (y, cache, ns) =
+            op.train_forward(&params[po..po + op.n_params()], &state[so..so + op.n_state()], &cur)?;
+        po += op.n_params();
+        so += op.n_state();
+        caches.push(cache);
+        new_state.extend(ns);
+        cur = y;
+    }
+    Ok((cur, caches, new_state))
+}
+
+/// Inference forward over an op chain (running BN statistics).
+fn chain_eval_forward(
+    ops: &[NativeOp],
+    params: &[Tensor],
+    state: &[Tensor],
+    x: &Tensor,
+) -> Result<Tensor> {
+    let (mut po, mut so) = (0usize, 0usize);
+    let mut cur = x.clone();
+    for op in ops {
+        cur =
+            op.eval_forward(&params[po..po + op.n_params()], &state[so..so + op.n_state()], &cur)?;
+        po += op.n_params();
+        so += op.n_state();
+    }
+    Ok(cur)
+}
+
+/// Merge two branch outputs (or branch input-gradients) by elementwise
+/// add, enforcing shape agreement — the block's single merge point for
+/// forward, eval and backward.
+fn merge_branches(name: &str, ym: &Tensor, ys: &Tensor) -> Result<Tensor> {
+    ensure!(
+        ym.shape == ys.shape,
+        "{name}: residual add shape mismatch: main {:?} vs shortcut {:?}",
+        ym.shape,
+        ys.shape
+    );
+    let mut y = Tensor::zeros(ym.shape.as_slice());
+    kernels::residual_add_forward(ym.data(), ys.data(), y.data_mut());
+    Ok(y)
+}
+
+/// Backward over an op chain from its recorded caches: `(dx, grads)`
+/// with grads concatenated in `param_specs` (forward) order.
+fn chain_backward(
+    ops: &[NativeOp],
+    params: &[Tensor],
+    caches: &[OpCache],
+    dy: &Tensor,
+) -> Result<(Tensor, Vec<Tensor>)> {
+    ensure!(caches.len() == ops.len(), "chain backward: cache arity mismatch");
+    let mut offsets = Vec::with_capacity(ops.len());
+    let mut po = 0usize;
+    for op in ops {
+        offsets.push(po);
+        po += op.n_params();
+    }
+    let mut per_op: Vec<Vec<Tensor>> = vec![Vec::new(); ops.len()];
+    let mut g = dy.clone();
+    for i in (0..ops.len()).rev() {
+        let (dx, dparams) =
+            ops[i].backward(&params[offsets[i]..offsets[i] + ops[i].n_params()], &caches[i], &g)?;
+        per_op[i] = dparams;
+        g = dx;
+    }
+    Ok((g, per_op.into_iter().flatten().collect()))
+}
+
+impl NativeNode {
+    /// Wrap a plain op as a node.
+    pub fn op(op: NativeOp) -> NativeNode {
+        NativeNode::Op(op)
+    }
+
+    /// Build a residual block node.
+    pub fn block(name: &str, main: Vec<NativeOp>, shortcut: Shortcut) -> NativeNode {
+        NativeNode::Block(ResBlock { name: name.to_string(), main, shortcut })
+    }
+
+    pub fn name(&self) -> &str {
+        match self {
+            NativeNode::Op(op) => &op.name,
+            NativeNode::Block(b) => &b.name,
+        }
+    }
+
+    /// Parameter specs; a block's ordering is main ops then shortcut ops.
+    pub fn param_specs(&self) -> Vec<ParamSpec> {
+        match self {
+            NativeNode::Op(op) => op.param_specs(),
+            NativeNode::Block(b) => b
+                .main
+                .iter()
+                .chain(b.shortcut.ops())
+                .flat_map(NativeOp::param_specs)
+                .collect(),
+        }
+    }
+
+    pub fn state_specs(&self) -> Vec<StateSpec> {
+        match self {
+            NativeNode::Op(op) => op.state_specs(),
+            NativeNode::Block(b) => b
+                .main
+                .iter()
+                .chain(b.shortcut.ops())
+                .flat_map(NativeOp::state_specs)
+                .collect(),
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        match self {
+            NativeNode::Op(op) => op.n_params(),
+            NativeNode::Block(b) => {
+                b.main.iter().chain(b.shortcut.ops()).map(NativeOp::n_params).sum()
+            }
+        }
+    }
+
+    pub fn n_state(&self) -> usize {
+        match self {
+            NativeNode::Op(op) => op.n_state(),
+            NativeNode::Block(b) => {
+                b.main.iter().chain(b.shortcut.ops()).map(NativeOp::n_state).sum()
+            }
+        }
+    }
+
+    /// Carry shape out given the (batch-inclusive) carry shape in. For
+    /// a block, both branches are walked and must agree — a shape
+    /// mismatch at the residual add is a build-time error here, not a
+    /// runtime panic.
+    pub fn out_shape(&self, s: &[usize]) -> Result<Vec<usize>> {
+        match self {
+            NativeNode::Op(op) => op.out_shape(s),
+            NativeNode::Block(b) => {
+                let mut main = s.to_vec();
+                for op in &b.main {
+                    main = op.out_shape(&main)?;
+                }
+                let mut sc = s.to_vec();
+                for op in b.shortcut.ops() {
+                    sc = op.out_shape(&sc)?;
+                }
+                ensure!(
+                    main == sc,
+                    "{}: residual add shape mismatch: main {:?} vs shortcut {:?} \
+                     (identity shortcuts need a shape-preserving main branch)",
+                    b.name,
+                    main,
+                    sc
+                );
+                Ok(main)
+            }
+        }
+    }
+
+    /// Forward-pass FLOPs for one sample; a block adds both branches
+    /// plus one elementwise add over the output.
+    pub fn flops_per_sample(&self, s: &[usize]) -> Result<u64> {
+        match self {
+            NativeNode::Op(op) => op.flops_per_sample(s),
+            NativeNode::Block(b) => {
+                let mut flops = 0u64;
+                let mut main = s.to_vec();
+                for op in &b.main {
+                    flops += op.flops_per_sample(&main)?;
+                    main = op.out_shape(&main)?;
+                }
+                let mut sc = s.to_vec();
+                for op in b.shortcut.ops() {
+                    flops += op.flops_per_sample(&sc)?;
+                    sc = op.out_shape(&sc)?;
+                }
+                Ok(flops + main[1..].iter().product::<usize>() as u64)
+            }
+        }
+    }
+
+    /// Training-mode forward: `(y, cache, new_state)`, same contract as
+    /// `NativeOp::train_forward` (new_state aligned to `state_specs`).
+    pub fn train_forward(
+        &self,
+        params: &[Tensor],
+        state: &[Tensor],
+        x: &Tensor,
+    ) -> Result<(Tensor, OpCache, Vec<Tensor>)> {
+        match self {
+            NativeNode::Op(op) => op.train_forward(params, state, x),
+            NativeNode::Block(b) => {
+                let (mp, ms) = (b.main_params(), b.main_state());
+                let (ym, mcaches, mut new_state) =
+                    chain_train_forward(&b.main, &params[..mp], &state[..ms], x)?;
+                let sops = b.shortcut.ops();
+                let (ys, scaches) = if sops.is_empty() {
+                    (x.clone(), Vec::new())
+                } else {
+                    let (ys, sc, ss) =
+                        chain_train_forward(sops, &params[mp..], &state[ms..], x)?;
+                    new_state.extend(ss);
+                    (ys, sc)
+                };
+                let y = merge_branches(&b.name, &ym, &ys)?;
+                Ok((y, OpCache::Block { main: mcaches, shortcut: scaches }, new_state))
+            }
+        }
+    }
+
+    /// Inference-mode forward (running BN statistics; pure).
+    pub fn eval_forward(&self, params: &[Tensor], state: &[Tensor], x: &Tensor) -> Result<Tensor> {
+        match self {
+            NativeNode::Op(op) => op.eval_forward(params, state, x),
+            NativeNode::Block(b) => {
+                let (mp, ms) = (b.main_params(), b.main_state());
+                let ym = chain_eval_forward(&b.main, &params[..mp], &state[..ms], x)?;
+                let sops = b.shortcut.ops();
+                let ys = if sops.is_empty() {
+                    x.clone()
+                } else {
+                    chain_eval_forward(sops, &params[mp..], &state[ms..], x)?
+                };
+                merge_branches(&b.name, &ym, &ys)
+            }
+        }
+    }
+
+    /// Backward: `(dx, dparams)` with dparams aligned to `param_specs`.
+    /// The residual add fans `dy` into both branches; the block input
+    /// gradient is the elementwise sum of the branch input gradients.
+    pub fn backward(
+        &self,
+        params: &[Tensor],
+        cache: &OpCache,
+        dy: &Tensor,
+    ) -> Result<(Tensor, Vec<Tensor>)> {
+        match (self, cache) {
+            (NativeNode::Op(op), cache) => op.backward(params, cache, dy),
+            (NativeNode::Block(b), OpCache::Block { main, shortcut }) => {
+                // The add's backward fans dy into both branch seeds.
+                let mut d_main = Tensor::zeros(dy.shape.as_slice());
+                let mut d_sc = Tensor::zeros(dy.shape.as_slice());
+                kernels::residual_add_backward(dy.data(), d_main.data_mut(), d_sc.data_mut());
+                let mp = b.main_params();
+                let (dxm, mut grads) = chain_backward(&b.main, &params[..mp], main, &d_main)?;
+                let sops = b.shortcut.ops();
+                let dxs = if sops.is_empty() {
+                    d_sc
+                } else {
+                    let (dxs, gs) = chain_backward(sops, &params[mp..], shortcut, &d_sc)?;
+                    grads.extend(gs);
+                    dxs
+                };
+                let dx = merge_branches(&b.name, &dxm, &dxs)?;
+                Ok((dx, grads))
+            }
+            (NativeNode::Block(b), _) => {
+                bail!("{}: cache/node kind mismatch in backward", b.name)
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -535,6 +898,80 @@ mod tests {
         let e_old = op.eval_forward(&params, &state, &x).unwrap();
         let e_new = op.eval_forward(&params, &new_state, &x).unwrap();
         assert_ne!(e_old.data(), e_new.data());
+    }
+
+    #[test]
+    fn block_param_specs_order_main_then_shortcut() {
+        let node = NativeNode::block(
+            "g1b0",
+            vec![
+                NativeOp::conv("g1b0/conv1", 4, 8, 3, 2, true, false),
+                NativeOp::batch_norm("g1b0/bn1", 8),
+                NativeOp::act("g1b0/a1", ActKind::Relu),
+                NativeOp::conv("g1b0/conv2", 8, 8, 3, 1, true, false),
+                NativeOp::batch_norm("g1b0/bn2", 8),
+            ],
+            Shortcut::projection("g1b0", 4, 8, 2),
+        );
+        let names: Vec<String> = node.param_specs().iter().map(|s| s.name.clone()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "g1b0/conv1/w",
+                "g1b0/bn1/gamma",
+                "g1b0/bn1/beta",
+                "g1b0/conv2/w",
+                "g1b0/bn2/gamma",
+                "g1b0/bn2/beta",
+                "g1b0/proj/w",
+                "g1b0/projbn/gamma",
+                "g1b0/projbn/beta",
+            ]
+        );
+        assert_eq!(node.n_params(), 9);
+        assert_eq!(node.n_state(), 6);
+        // strided transition halves spatial dims, widens channels; both
+        // branches agree on the output shape
+        assert_eq!(node.out_shape(&[2, 8, 8, 4]).unwrap(), vec![2, 4, 4, 8]);
+        assert!(node.flops_per_sample(&[1, 8, 8, 4]).unwrap() > 0);
+    }
+
+    #[test]
+    fn identity_block_shape_mismatch_is_a_build_error() {
+        // main branch strides but the shortcut is identity: the
+        // residual add cannot merge the branches.
+        let node = NativeNode::block(
+            "b",
+            vec![NativeOp::conv("b/conv1", 4, 4, 3, 2, true, false)],
+            Shortcut::Identity,
+        );
+        let err = node.out_shape(&[1, 8, 8, 4]).unwrap_err().to_string();
+        assert!(err.contains("residual add shape mismatch"), "{err}");
+    }
+
+    #[test]
+    fn residual_add_passes_identity_through_zero_main() {
+        // Zeroed 1x1-conv main branch: y = 0 + x, and backward fans the
+        // incoming gradient to both branches (dx = W^T dy + dy = dy).
+        let node = NativeNode::block(
+            "b",
+            vec![NativeOp::conv("b/c", 2, 2, 1, 1, true, false)],
+            Shortcut::Identity,
+        );
+        let x = Tensor::from_vec(&[1, 2, 2, 2], (0..8).map(|i| i as f32).collect()).unwrap();
+        let params = vec![Tensor::zeros(&[1, 1, 2, 2])];
+        let (y, cache, ns) = node.train_forward(&params, &[], &x).unwrap();
+        assert_eq!(y.data(), x.data());
+        assert!(ns.is_empty());
+        let dy = Tensor::ones(&[1, 2, 2, 2]);
+        let (dx, grads) = node.backward(&params, &cache, &dy).unwrap();
+        assert_eq!(dx.data(), dy.data());
+        assert_eq!(grads.len(), 1);
+        // the conv weight still receives dW = dy * x from its branch
+        assert!(grads[0].data().iter().any(|&g| g != 0.0));
+        // eval path agrees (no BN in this block)
+        let ye = node.eval_forward(&params, &[], &x).unwrap();
+        assert_eq!(ye.data(), y.data());
     }
 
     #[test]

@@ -106,8 +106,10 @@ pub fn count_correct(logits: &Tensor, labels: &[i32], batch: usize) -> usize {
     count_correct_rows(logits, labels, batch, batch)
 }
 
-/// True when this specific config has a recorded artifact contract.
-fn artifact_meta_exists(name: &str) -> bool {
+/// True when this specific config has a recorded artifact contract —
+/// the per-config half of the `Backend::Auto` resolution rule (shared
+/// with examples that pick a config before building a RunConfig).
+pub fn artifact_meta_exists(name: &str) -> bool {
     crate::artifacts_root().join(name).join("meta.json").exists()
 }
 

@@ -418,6 +418,141 @@ fn native_cross_process_hybrid_via_checkpoint() {
     std::fs::remove_file(&ckpt).ok();
 }
 
+// ---------------------------------------------------------------------------
+// Native ResNet ports: the paper's residual-network scenarios on the
+// block-structured IR — no artifacts, no Python, synthetic CIFAR.
+// ---------------------------------------------------------------------------
+
+/// Narrow ResNet fixture (resnet8 at width 0.25, batch 8).
+fn native_resnet_rc(config: &str, mode: Mode, iters: u64) -> RunConfig {
+    let mut rc = RunConfig::new(config);
+    rc.backend = Backend::Native;
+    rc.mode = mode;
+    rc.iters = iters;
+    rc.train_size = 160;
+    rc.test_size = 40;
+    rc.noise = 0.6;
+    rc
+}
+
+#[test]
+fn native_resnet_pipelined_training_learns() {
+    // Deep pipelining (P=4, three block-edge cuts) over residual
+    // blocks: training must make progress and retire every batch once.
+    let res = pipestale::train::run(&native_resnet_rc(
+        "native_resnet_small_4s",
+        Mode::Pipelined,
+        40,
+    ))
+    .unwrap();
+    assert_eq!(res.recorder.train.len(), 40);
+    let mut ids: Vec<u64> = res.recorder.train.iter().map(|(b, _, _)| *b).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..40).collect::<Vec<_>>());
+    let early: f64 =
+        res.recorder.train[..10].iter().map(|(_, l, _)| *l as f64).sum::<f64>() / 10.0;
+    let late: f64 = res.recorder.train.iter().rev().take(10).map(|(_, l, _)| *l as f64).sum::<f64>()
+        / 10.0;
+    assert!(late.is_finite() && late < early, "loss did not fall: {late} vs {early}");
+    assert!(res.final_accuracy.is_finite());
+}
+
+#[test]
+fn single_inflight_pipelined_equals_sequential_on_native_resnet() {
+    // Zero staleness must be bit-exact on residual blocks too: the
+    // projection shortcut and per-block BN state make this a much
+    // sharper equivalence than LeNet's plain op chain.
+    let meta = native_config("native_resnet_small").unwrap();
+    let spec = SyntheticSpec { train: 32, test: 16, noise: 1.0, seed: 5 };
+    let (ds, _) = load_or_synthesize(&meta.dataset, None, &spec).unwrap();
+    let mut batcher = Batcher::new(ds.len(), meta.batch, 1);
+    let idxs = batcher.next_indices().to_vec();
+    let (x, labels) = ds.gather(&idxs);
+
+    let mk_pipe = || {
+        let params = ModelParams::init(&meta.partitions, 7).unwrap();
+        let optims = pipestale::train::build_optims(&meta, 10, 1.0);
+        let exec = NativeExecutor::new(meta.clone(), params, optims).unwrap();
+        Pipeline::new(exec, meta.batch)
+    };
+    let feed =
+        || Feed { batch_id: 0, seed: batch_seed(3, 0), x: x.clone(), labels: labels.clone() };
+
+    let mut a = mk_pipe();
+    a.sequential_step(feed()).unwrap();
+    let mut b = mk_pipe();
+    b.cycle(Some(feed())).unwrap();
+    b.drain().unwrap();
+
+    let pa = a.exec.params_snapshot();
+    let pb = b.exec.params_snapshot();
+    for (x, y) in pa.partitions.iter().zip(pb.partitions.iter()) {
+        for (t, u) in x.params.iter().zip(y.params.iter()) {
+            assert_eq!(t.data(), u.data(), "weights must be bit-identical");
+        }
+        for (t, u) in x.state.iter().zip(y.state.iter()) {
+            assert_eq!(t.data(), u.data(), "BN state must be bit-identical");
+        }
+    }
+}
+
+#[test]
+fn stale_pipelined_diverges_from_sequential_weights_native_resnet() {
+    let a = pipestale::train::run(&native_resnet_rc(
+        "native_resnet_small_4s",
+        Mode::Pipelined,
+        12,
+    ))
+    .unwrap();
+    let b = pipestale::train::run(&native_resnet_rc(
+        "native_resnet_small_4s",
+        Mode::Sequential,
+        12,
+    ))
+    .unwrap();
+    let la: Vec<f32> = a.recorder.train.iter().rev().take(5).map(|(_, l, _)| *l).collect();
+    let lb: Vec<f32> = b.recorder.train.iter().rev().take(5).map(|(_, l, _)| *l).collect();
+    assert_ne!(la, lb, "stale weights should alter the resnet trajectory");
+}
+
+#[test]
+fn native_resnet_hybrid_switches_and_trains() {
+    let mut rc = native_resnet_rc("native_resnet_small_4s", Mode::Hybrid, 16);
+    rc.pipelined_iters = 8;
+    let res = pipestale::train::run(&rc).unwrap();
+    assert_eq!(res.recorder.train.len(), 16);
+    assert!(res.final_train_loss.is_finite());
+}
+
+#[test]
+fn native_resnet_hybrid_checkpoint_crosses_block_boundary() {
+    // Cross-process hybrid on the deep split: the partition boundary
+    // sits right after the first stride-2 block, so partition 2 opens
+    // with the g2b0 transition block — the checkpoint must carry that
+    // block's conv/BN params AND its projection-shortcut params in the
+    // second partition intact.
+    let ckpt =
+        std::env::temp_dir().join(format!("native_resnet_hybrid_{}.ckpt", std::process::id()));
+    let mut prefix = native_resnet_rc("native_resnet_small_deep", Mode::Pipelined, 10);
+    prefix.save_to = Some(ckpt.clone());
+    pipestale::train::run(&prefix).unwrap();
+
+    // the checkpoint round-trips and validates against the synthesized
+    // block-structured meta
+    let meta = native_config("native_resnet_small_deep").unwrap();
+    let (params, at) = pipestale::model::checkpoint::load(&ckpt).unwrap();
+    assert_eq!(at, 10);
+    pipestale::model::checkpoint::validate(&params, &meta).unwrap();
+    assert!(params.all_finite());
+
+    let mut tail = native_resnet_rc("native_resnet_small_deep", Mode::Sequential, 6);
+    tail.resume_from = Some(ckpt.clone());
+    let b = pipestale::train::run(&tail).unwrap();
+    assert_eq!(b.recorder.train.len(), 6);
+    assert!(b.final_train_loss.is_finite());
+    std::fs::remove_file(&ckpt).ok();
+}
+
 #[test]
 fn native_checkpoint_rejects_wrong_config() {
     let ckpt = std::env::temp_dir().join(format!("native_wrongcfg_{}.ckpt", std::process::id()));

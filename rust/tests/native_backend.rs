@@ -1,14 +1,17 @@
-//! Finite-difference gradient checks for every native kernel.
+//! Finite-difference gradient checks for every native kernel and node.
 //!
-//! Each analytic backward pass (conv2d, dense, batch-norm, max-pool,
-//! activations, global-avg-pool, softmax-CE) is verified against central
-//! finite differences of a random-projection loss `L = sum(proj * y)`,
-//! seeded via `util::rng::Pcg32` so every run draws the same inputs.
-//! Kink-prone inputs (relu preactivations, pooling window ties) are kept
-//! away from their nondifferentiable points *by construction*, not by
-//! luck, so the checks are deterministic.
+//! Each analytic backward pass (conv2d incl. strided, dense,
+//! batch-norm, max-pool, activations, global-avg-pool, softmax-CE, and
+//! the block IR's residual add / projection shortcut) is verified
+//! against central finite differences of a random-projection loss
+//! `L = sum(proj * y)`, seeded via `util::rng::Pcg32` so every run
+//! draws the same inputs. Kink-prone inputs (relu preactivations,
+//! pooling window ties) are kept away from their nondifferentiable
+//! points *by construction*, not by luck — residual-block checks use
+//! tanh activations inside the block for the same reason — so the
+//! checks are deterministic.
 
-use pipestale::backend::{ActKind, NativeOp};
+use pipestale::backend::{ActKind, NativeNode, NativeOp, Shortcut};
 use pipestale::backend::kernels;
 use pipestale::tensor::Tensor;
 use pipestale::util::rng::Pcg32;
@@ -45,8 +48,14 @@ fn rand_distinct(rng: &mut Pcg32, shape: &[usize]) -> Tensor {
 }
 
 /// `sum(proj * y)` in f64, with y from a training-mode forward.
-fn proj_loss(op: &NativeOp, params: &[Tensor], state: &[Tensor], x: &Tensor, proj: &[f32]) -> f64 {
-    let (y, _, _) = op.train_forward(params, state, x).unwrap();
+fn proj_loss(
+    node: &NativeNode,
+    params: &[Tensor],
+    state: &[Tensor],
+    x: &Tensor,
+    proj: &[f32],
+) -> f64 {
+    let (y, _, _) = node.train_forward(params, state, x).unwrap();
     y.data().iter().zip(proj).map(|(&a, &b)| a as f64 * b as f64).sum()
 }
 
@@ -59,24 +68,25 @@ fn assert_close(what: &str, idx: usize, fd: f64, analytic: f32) {
     );
 }
 
-/// Check d(proj·y)/dx and d(proj·y)/dparam against finite differences.
-fn fd_check_op(op: &NativeOp, params: &[Tensor], state: &[Tensor], x: &Tensor, seed: u64) {
-    let (y, cache, _) = op.train_forward(params, state, x).unwrap();
+/// Check d(proj·y)/dx and d(proj·y)/dparam against finite differences,
+/// for any IR node (a plain op or a whole residual block).
+fn fd_check_node(node: &NativeNode, params: &[Tensor], state: &[Tensor], x: &Tensor, seed: u64) {
+    let (y, cache, _) = node.train_forward(params, state, x).unwrap();
     let mut rng = Pcg32::seeded(seed ^ 0x9d2c_5680);
     let proj: Vec<f32> = (0..y.numel()).map(|_| rng.normal()).collect();
     let proj_t = Tensor::from_vec(y.shape.as_slice(), proj.clone()).unwrap();
-    let (dx, dparams) = op.backward(params, &cache, &proj_t).unwrap();
-    assert_eq!(dparams.len(), params.len(), "{}: grad arity", op.name);
+    let (dx, dparams) = node.backward(params, &cache, &proj_t).unwrap();
+    assert_eq!(dparams.len(), params.len(), "{}: grad arity", node.name());
 
     for i in 0..x.numel() {
         let mut xp = x.clone();
         xp.data_mut()[i] += EPS;
         let mut xm = x.clone();
         xm.data_mut()[i] -= EPS;
-        let fd = (proj_loss(op, params, state, &xp, &proj)
-            - proj_loss(op, params, state, &xm, &proj))
+        let fd = (proj_loss(node, params, state, &xp, &proj)
+            - proj_loss(node, params, state, &xm, &proj))
             / (2.0 * EPS as f64);
-        assert_close(&format!("{}/dx", op.name), i, fd, dx.data()[i]);
+        assert_close(&format!("{}/dx", node.name()), i, fd, dx.data()[i]);
     }
     for (pi, dp) in dparams.iter().enumerate() {
         for i in 0..params[pi].numel() {
@@ -84,12 +94,17 @@ fn fd_check_op(op: &NativeOp, params: &[Tensor], state: &[Tensor], x: &Tensor, s
             pp[pi].data_mut()[i] += EPS;
             let mut pm: Vec<Tensor> = params.to_vec();
             pm[pi].data_mut()[i] -= EPS;
-            let fd = (proj_loss(op, &pp, state, x, &proj)
-                - proj_loss(op, &pm, state, x, &proj))
+            let fd = (proj_loss(node, &pp, state, x, &proj)
+                - proj_loss(node, &pm, state, x, &proj))
                 / (2.0 * EPS as f64);
-            assert_close(&format!("{}/dparam{pi}", op.name), i, fd, dp.data()[i]);
+            assert_close(&format!("{}/dparam{pi}", node.name()), i, fd, dp.data()[i]);
         }
     }
+}
+
+/// Plain-op convenience wrapper over `fd_check_node`.
+fn fd_check_op(op: &NativeOp, params: &[Tensor], state: &[Tensor], x: &Tensor, seed: u64) {
+    fd_check_node(&NativeNode::Op(op.clone()), params, state, x, seed);
 }
 
 #[test]
@@ -117,6 +132,29 @@ fn fd_conv2d_valid_no_bias() {
     let x = randn(&mut rng, &[2, 5, 5, 2], 1.0);
     let params = vec![randn(&mut rng, &[3, 3, 2, 2], 0.5)];
     fd_check_op(&op, &params, &[], &x, 103);
+}
+
+#[test]
+fn fd_conv2d_valid_stride2() {
+    // Strided conv backward over VALID padding: (7-3)/2+1 = 3 output
+    // rows, so windows overlap-free — a distinct indexing path from the
+    // SAME-padded stride-2 case above.
+    let mut rng = Pcg32::seeded(104);
+    let op = NativeOp::conv("c", 2, 2, 3, 2, false, true);
+    let x = randn(&mut rng, &[1, 7, 7, 2], 1.0);
+    let params = vec![randn(&mut rng, &[3, 3, 2, 2], 0.5), randn(&mut rng, &[2], 0.5)];
+    fd_check_op(&op, &params, &[], &x, 104);
+}
+
+#[test]
+fn fd_conv2d_projection_1x1_stride2() {
+    // The projection-shortcut geometry: 1x1 kernel, stride 2, SAME (no
+    // padding needed), channel widening, no bias.
+    let mut rng = Pcg32::seeded(105);
+    let op = NativeOp::conv("proj", 2, 4, 1, 2, true, false);
+    let x = randn(&mut rng, &[2, 6, 6, 2], 1.0);
+    let params = vec![randn(&mut rng, &[1, 1, 2, 4], 0.5)];
+    fd_check_op(&op, &params, &[], &x, 105);
 }
 
 #[test]
@@ -201,6 +239,81 @@ fn fd_softmax_cross_entropy() {
         let fd = (loss_p as f64 - loss_m as f64) / (2.0 * EPS as f64);
         assert_close("softmax_xent/dlogits", i, fd, dlogits[i]);
     }
+}
+
+#[test]
+fn fd_resblock_identity_shortcut() {
+    // A full basic block with identity shortcut: the residual add must
+    // fan the gradient into both the conv/BN main branch and the skip.
+    // tanh (not relu) inside the block keeps the check kink-free.
+    let mut rng = Pcg32::seeded(901);
+    let node = NativeNode::block(
+        "b",
+        vec![
+            NativeOp::conv("b/conv1", 3, 3, 3, 1, true, false),
+            NativeOp::batch_norm("b/bn1", 3),
+            NativeOp::act("b/a1", ActKind::Tanh),
+            NativeOp::conv("b/conv2", 3, 3, 3, 1, true, false),
+            NativeOp::batch_norm("b/bn2", 3),
+        ],
+        Shortcut::Identity,
+    );
+    let x = randn(&mut rng, &[2, 4, 4, 3], 1.0);
+    let params = vec![
+        randn(&mut rng, &[3, 3, 3, 3], 0.4),
+        randn(&mut rng, &[3], 0.5), // bn1 gamma
+        randn(&mut rng, &[3], 0.5), // bn1 beta
+        randn(&mut rng, &[3, 3, 3, 3], 0.4),
+        randn(&mut rng, &[3], 0.5), // bn2 gamma
+        randn(&mut rng, &[3], 0.5), // bn2 beta
+    ];
+    let state = vec![
+        Tensor::zeros(&[3]),
+        Tensor::ones(&[3]),
+        Tensor::zeros(&[3]),
+        Tensor::ones(&[3]),
+    ];
+    fd_check_node(&node, &params, &state, &x, 901);
+}
+
+#[test]
+fn fd_resblock_projection_shortcut_stride2() {
+    // A strided transition block: main branch downsamples 6x6 -> 3x3
+    // and widens 3 -> 4 channels; the 1x1 stride-2 projection conv + BN
+    // must receive its own gradients through the residual add.
+    let mut rng = Pcg32::seeded(902);
+    let node = NativeNode::block(
+        "t",
+        vec![
+            NativeOp::conv("t/conv1", 3, 4, 3, 2, true, false),
+            NativeOp::batch_norm("t/bn1", 4),
+            NativeOp::act("t/a1", ActKind::Tanh),
+            NativeOp::conv("t/conv2", 4, 4, 3, 1, true, false),
+            NativeOp::batch_norm("t/bn2", 4),
+        ],
+        Shortcut::projection("t", 3, 4, 2),
+    );
+    let x = randn(&mut rng, &[1, 6, 6, 3], 1.0);
+    let params = vec![
+        randn(&mut rng, &[3, 3, 3, 4], 0.4),
+        randn(&mut rng, &[4], 0.5),
+        randn(&mut rng, &[4], 0.5),
+        randn(&mut rng, &[3, 3, 4, 4], 0.4),
+        randn(&mut rng, &[4], 0.5),
+        randn(&mut rng, &[4], 0.5),
+        randn(&mut rng, &[1, 1, 3, 4], 0.5), // projection conv
+        randn(&mut rng, &[4], 0.5),          // projection BN gamma
+        randn(&mut rng, &[4], 0.5),          // projection BN beta
+    ];
+    let state = vec![
+        Tensor::zeros(&[4]),
+        Tensor::ones(&[4]),
+        Tensor::zeros(&[4]),
+        Tensor::ones(&[4]),
+        Tensor::zeros(&[4]),
+        Tensor::ones(&[4]),
+    ];
+    fd_check_node(&node, &params, &state, &x, 902);
 }
 
 #[test]

@@ -167,6 +167,31 @@ fn full_occupancy_threaded_reproduces_scheduler_schedule() {
     }
 }
 
+#[test]
+fn threaded_native_resnet_matches_scheduler_bitwise() {
+    // The block IR under real concurrency: a P=4 residual network
+    // (stride-2 transitions, projection shortcuts, per-block BN state)
+    // must stay bitwise-equivalent between runtimes, single- AND
+    // K-in-flight — BN state handoff across block-edge partition
+    // boundaries included.
+    let meta = native_config("native_resnet_small_4s").unwrap();
+    let (batches, _) = make_batches(&meta, 6);
+    let (se, sp) = scheduler_run(&meta, &batches, 31, true);
+    let (te, tp) =
+        threaded_run_with(NativeWorkerBackend, &meta, &batches, 31, Occupancy::Single).unwrap();
+    assert_eq!(te.len(), 6);
+    assert_events_eq(&te, &se);
+    assert_params_eq(&tp, &sp);
+
+    let (fe, fp) = scheduler_run(&meta, &batches, 31, false);
+    let (tfe, tfp) =
+        threaded_run_with(NativeWorkerBackend, &meta, &batches, 31, Occupancy::Full).unwrap();
+    assert_events_eq(&tfe, &fe);
+    assert_params_eq(&tfp, &fp);
+    // and the stale schedule genuinely diverges from sequential
+    assert!(params_differ(&fp, &sp), "resnet stale schedule must diverge from sequential");
+}
+
 // ---------------------------------------------------------------------------
 // End-to-end through the train driver (--runtime threaded --backend native).
 // ---------------------------------------------------------------------------
