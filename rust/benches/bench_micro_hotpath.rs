@@ -9,6 +9,9 @@
 //!     (two copies + fresh allocs) vs single-copy pooled conversion
 //!   * SGD update (1M params): pre-fusion reference loops vs the fused
 //!     kernel behind `Sgd::step`
+//!   * conv2d / dense kernels: pre-lowering nested loops
+//!     (`reference_*`) vs the im2col+GEMM core (`backend::gemm`),
+//!     forward and backward — the native backend's compute hot path
 //!   * scheduler cycle (mock executor, P=4): pool disabled (every
 //!     backing store freshly allocated, as in the seed) vs pool enabled
 //!   * meta.json parse, DES throughput, XLA stage execution (unchanged
@@ -21,6 +24,7 @@
 #[path = "common/mod.rs"]
 mod common;
 
+use pipestale::backend::{kernels, ActKind};
 use pipestale::data::batch_seed;
 use pipestale::meta::ConfigMeta;
 use pipestale::model::ModelParams;
@@ -111,6 +115,100 @@ fn main() {
     });
     rep.pair("sgd_step_1m", before, after);
 
+    // ---- conv/dense kernels: reference loops vs the GEMM lowering -------
+    // LeNet-middle-layer geometry: big enough that cache behavior
+    // matters, small enough that the reference loops stay benchable.
+    {
+        let mut rng = Pcg32::seeded(7);
+        let (n, h, w, cin, cout, k) = (16usize, 14usize, 14usize, 8usize, 16usize, 5usize);
+        let x: Vec<f32> = (0..n * h * w * cin).map(|_| rng.normal()).collect();
+        let wgt: Vec<f32> = (0..k * k * cin * cout).map(|_| rng.normal()).collect();
+        let bias: Vec<f32> = (0..cout).map(|_| rng.normal()).collect();
+        let mut y = vec![0.0f32; n * h * w * cout]; // SAME stride 1
+        let before = bench("conv2d fwd reference loops (16x14x14x8 -> 16, k5)", 3, 0.4, || {
+            kernels::reference_conv2d_forward(
+                &x,
+                n,
+                h,
+                w,
+                cin,
+                &wgt,
+                k,
+                cout,
+                1,
+                true,
+                Some(&bias),
+                &mut y,
+            );
+        });
+        let after = bench("conv2d fwd im2col+GEMM (16x14x14x8 -> 16, k5)", 3, 0.4, || {
+            kernels::conv2d_forward(&x, n, h, w, cin, &wgt, k, cout, 1, true, Some(&bias), &mut y);
+        });
+        rep.pair("conv_fwd_gemm", before, after);
+
+        let dy: Vec<f32> = (0..y.len()).map(|_| rng.normal()).collect();
+        let mut dx = vec![0.0f32; x.len()];
+        let mut dw = vec![0.0f32; wgt.len()];
+        let mut db = vec![0.0f32; cout];
+        let before = bench("conv2d bwd reference loops (16x14x14x8 -> 16, k5)", 3, 0.4, || {
+            dx.fill(0.0);
+            dw.fill(0.0);
+            db.fill(0.0);
+            kernels::reference_conv2d_backward(
+                &x,
+                n,
+                h,
+                w,
+                cin,
+                &wgt,
+                k,
+                cout,
+                1,
+                true,
+                &dy,
+                &mut dx,
+                &mut dw,
+                Some(&mut db),
+            );
+        });
+        let after = bench("conv2d bwd im2col+GEMM (16x14x14x8 -> 16, k5)", 3, 0.4, || {
+            dx.fill(0.0);
+            dw.fill(0.0);
+            db.fill(0.0);
+            kernels::conv2d_backward(
+                &x,
+                n,
+                h,
+                w,
+                cin,
+                &wgt,
+                k,
+                cout,
+                1,
+                true,
+                &dy,
+                &mut dx,
+                &mut dw,
+                Some(&mut db),
+            );
+        });
+        rep.pair("conv_bwd_gemm", before, after);
+
+        // dense: the LeNet fc1 shape (400 -> 120) at batch 64.
+        let (dn, din, dout) = (64usize, 400usize, 120usize);
+        let fx: Vec<f32> = (0..dn * din).map(|_| rng.normal()).collect();
+        let fw: Vec<f32> = (0..din * dout).map(|_| rng.normal()).collect();
+        let fb: Vec<f32> = (0..dout).map(|_| rng.normal()).collect();
+        let mut fy = vec![0.0f32; dn * dout];
+        let before = bench("dense fwd reference loops (64x400 -> 120, tanh)", 3, 0.4, || {
+            kernels::reference_dense_forward(&fx, dn, din, &fw, &fb, dout, ActKind::Tanh, &mut fy);
+        });
+        let after = bench("dense fwd GEMM (64x400 -> 120, tanh)", 3, 0.4, || {
+            kernels::dense_forward(&fx, dn, din, &fw, &fb, dout, ActKind::Tanh, &mut fy);
+        });
+        rep.pair("dense_fwd_gemm", before, after);
+    }
+
     // ---- scheduler overhead with mock executor, pool off vs on ----------
     let cycle_bench = |name: &str| -> BenchStats {
         let mut pipe = Pipeline::new(MockExecutor::new(4), 1);
@@ -135,14 +233,7 @@ fn main() {
     let base = pool.stats();
     let after = cycle_bench("scheduler cycle (mock, P=4, pool on)");
     rep.pair("scheduler_cycle_mock_p4", before, after);
-    let now = pool.stats();
-    let pool_stats = pipestale::pool::PoolStats {
-        fresh_allocs: now.fresh_allocs - base.fresh_allocs,
-        reuses: now.reuses - base.reuses,
-        recycled: now.recycled - base.recycled,
-        discarded: now.discarded - base.discarded,
-        retained_scalars: now.retained_scalars,
-    };
+    let pool_stats = pool.stats().delta(&base);
     println!(
         "[pool] steady-state: fresh={} reuses={} hit_rate={:.3}",
         pool_stats.fresh_allocs,

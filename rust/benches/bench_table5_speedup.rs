@@ -10,7 +10,11 @@
 //! GPUs):
 //!  (0) measured threaded-native wall-clock vs the scheduler runtime —
 //!      the only section needing no artifacts/XLA, so it runs (and is
-//!      recorded) everywhere;
+//!      recorded) everywhere. Both runtimes execute the GEMM-lowered
+//!      native kernels (backend::gemm), so this wall-clock reflects
+//!      the im2col+GEMM hot path, not the old nested loops — compare
+//!      against results/BENCH_micro.json's conv/dense pairs when
+//!      tracking the kernel trajectory;
 //!  (a) GTX1060-roofline DES: analytic per-stage costs on the paper's
 //!      hardware model + host-staged blocking communication;
 //!  (b) measured-XLA DES: per-stage costs measured on the real compiled

@@ -1,0 +1,497 @@
+//! Shared GEMM compute core: cache-blocked, register-tiled `sgemm`
+//! with packed panels, plus the im2col/col2im lowering that turns
+//! convolution into matrix multiplication.
+//!
+//! This is the hot path of every native training step. `kernels.rs`
+//! routes conv2d forward (im2col + GEMM), conv2d backward (weight
+//! gradient as a GEMM over the im2col buffer, input gradient as a GEMM
+//! followed by col2im) and dense forward/backward through this one
+//! core, so there is exactly one inner loop to optimize and one
+//! floating-point summation order to reason about.
+//!
+//! # Blocking scheme (BLIS-style)
+//!
+//! The classic five-loop decomposition: C is computed in `MC x NC`
+//! macro-tiles; for each `KC`-deep slice of the inner dimension, a
+//! `KC x NC` panel of B and an `MC x KC` panel of A are *packed* into
+//! contiguous scratch so the micro-kernel streams cache-resident,
+//! unit-stride data. The micro-kernel itself computes an `MR x NR`
+//! register tile with a single accumulator per output element.
+//!
+//! # Scratch lifecycle
+//!
+//! The two packing panels are leased from the thread's [`TensorPool`]
+//! (`crate::pool`) at fixed sizes `MC*KC` and `KC*NC`, and im2col
+//! buffers are leased at the (finite, per-model) conv geometry sizes —
+//! so after warmup a training step performs **zero heap allocations**
+//! for GEMM scratch, verified by the pool-stats probe in
+//! `tests/pool_and_kernel.rs`. Recycled buffers return with arbitrary
+//! contents; every packing routine fully overwrites the region it
+//! reads back (zero-filling edge strips), so no stale data can leak
+//! into a product.
+//!
+//! # Determinism
+//!
+//! The loop nest is fixed: for each output element the `k` products
+//! are accumulated in ascending-`k` order within each `KC` block, and
+//! the per-block partial sums are added to C in ascending block order.
+//! The summation order therefore depends only on the problem shape
+//! `(m, n, k)` — never on timing, threads, or data — so a given model
+//! step is bitwise reproducible run-to-run, which is what keeps the
+//! pipeline-schedule equivalence invariants (single-in-flight ==
+//! sequential, threaded == scheduler) exact under the GEMM lowering.
+//! For `k <= KC` the result is additionally bitwise identical to a
+//! naive single-accumulator k-ordered loop.
+//!
+//! [`TensorPool`]: crate::pool::TensorPool
+
+use crate::pool;
+
+/// Micro-kernel register-tile rows (accumulator tile is `MR x NR`).
+pub const MR: usize = 4;
+/// Micro-kernel register-tile columns.
+pub const NR: usize = 8;
+/// Macro-tile rows of A packed per panel (multiple of `MR`).
+pub const MC: usize = 64;
+/// Macro-tile columns of B packed per panel (multiple of `NR`).
+pub const NC: usize = 128;
+/// Inner-dimension depth of one packed panel pair.
+pub const KC: usize = 256;
+
+/// Scalars of pooled packing scratch one `sgemm` call leases
+/// (`MC*KC` for the A panel + `KC*NC` for the B panel), independent of
+/// the problem size. Exposed so the op-level scratch accounting in
+/// `backend::ops` can report a training step's pool footprint.
+pub const fn pack_scratch_floats() -> usize {
+    MC * KC + KC * NC
+}
+
+/// Scalars of the im2col (or col2im) buffer for a conv lowering:
+/// `n*oh*ow` rows of `k*k*cin` patch columns.
+pub fn conv_cols_floats(n: usize, oh: usize, ow: usize, k: usize, cin: usize) -> usize {
+    n * oh * ow * k * k * cin
+}
+
+#[inline(always)]
+fn at(x: &[f32], trans: bool, rows: usize, cols: usize, r: usize, c: usize) -> f32 {
+    // Logical (r, c) of a `rows x cols` matrix; `trans` means the
+    // slice is stored as the transpose (`cols x rows`, row-major).
+    debug_assert!(r < rows && c < cols);
+    if trans {
+        x[c * rows + r]
+    } else {
+        x[r * cols + c]
+    }
+}
+
+/// Pack an `mc x kc` block of op(A) (rows `ic..`, cols `pc..`) into
+/// MR-row strips: `ap[(strip*kc + l)*MR + r]`, zero-filling rows past
+/// `mc` so edge strips multiply as zeros.
+#[allow(clippy::too_many_arguments)]
+fn pack_a(
+    a: &[f32],
+    ta: bool,
+    m: usize,
+    k: usize,
+    ic: usize,
+    pc: usize,
+    mc: usize,
+    kc: usize,
+    ap: &mut [f32],
+) {
+    let strips = (mc + MR - 1) / MR;
+    for s in 0..strips {
+        let row0 = ic + s * MR;
+        let dst = &mut ap[s * kc * MR..(s * kc * MR) + kc * MR];
+        for l in 0..kc {
+            let cell = &mut dst[l * MR..l * MR + MR];
+            for (r, out) in cell.iter_mut().enumerate() {
+                let row = row0 + r;
+                *out = if row < ic + mc { at(a, ta, m, k, row, pc + l) } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// Pack a `kc x nc` block of op(B) (rows `pc..`, cols `jc..`) into
+/// NR-column strips: `bp[(strip*kc + l)*NR + c]`, zero-filling columns
+/// past `nc`.
+#[allow(clippy::too_many_arguments)]
+fn pack_b(
+    b: &[f32],
+    tb: bool,
+    k: usize,
+    n: usize,
+    pc: usize,
+    jc: usize,
+    kc: usize,
+    nc: usize,
+    bp: &mut [f32],
+) {
+    let strips = (nc + NR - 1) / NR;
+    for s in 0..strips {
+        let col0 = jc + s * NR;
+        let dst = &mut bp[s * kc * NR..(s * kc * NR) + kc * NR];
+        for l in 0..kc {
+            let cell = &mut dst[l * NR..l * NR + NR];
+            for (c, out) in cell.iter_mut().enumerate() {
+                let col = col0 + c;
+                *out = if col < jc + nc { at(b, tb, k, n, pc + l, col) } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// `MR x NR` register-tile micro-kernel over one packed panel pair:
+/// `acc[r][c] += sum_l a_panel[l*MR+r] * b_panel[l*NR+c]` with a single
+/// accumulator per element (ascending-`l` order), then `C += acc` on
+/// the valid sub-tile.
+#[allow(clippy::too_many_arguments)]
+fn macro_kernel(
+    ap: &[f32],
+    bp: &[f32],
+    mc: usize,
+    nc: usize,
+    kc: usize,
+    c: &mut [f32],
+    ic: usize,
+    jc: usize,
+    n: usize,
+) {
+    let row_strips = (mc + MR - 1) / MR;
+    let col_strips = (nc + NR - 1) / NR;
+    for js in 0..col_strips {
+        let b_panel = &bp[js * kc * NR..(js * kc * NR) + kc * NR];
+        let col0 = jc + js * NR;
+        let cols = NR.min(jc + nc - col0);
+        for is in 0..row_strips {
+            let a_panel = &ap[is * kc * MR..(is * kc * MR) + kc * MR];
+            let row0 = ic + is * MR;
+            let rows = MR.min(ic + mc - row0);
+            let mut acc = [[0.0f32; NR]; MR];
+            for l in 0..kc {
+                let ar = &a_panel[l * MR..l * MR + MR];
+                let br = &b_panel[l * NR..l * NR + NR];
+                for r in 0..MR {
+                    let av = ar[r];
+                    for (dst, &bv) in acc[r].iter_mut().zip(br) {
+                        *dst += av * bv;
+                    }
+                }
+            }
+            for r in 0..rows {
+                let crow = &mut c[(row0 + r) * n + col0..(row0 + r) * n + col0 + cols];
+                for (dst, &v) in crow.iter_mut().zip(&acc[r][..cols]) {
+                    *dst += v;
+                }
+            }
+        }
+    }
+}
+
+/// Single-precision GEMM: `C (+)= op(A) · op(B)` with row-major
+/// operands.
+///
+/// * `op(A)` is the logical `m x k` left operand; with `ta == true`
+///   the slice `a` is stored as its transpose (`k x m`, row-major).
+/// * `op(B)` is the logical `k x n` right operand; `tb` likewise.
+/// * `accumulate == false` overwrites `C` (`C = op(A)op(B)`);
+///   `accumulate == true` adds into the caller's `C` — the path conv
+///   bias init and gradient accumulation use.
+///
+/// Packing scratch is leased from the current thread's tensor pool and
+/// returned on exit; steady-state calls allocate nothing. The
+/// summation order is fixed by `(m, n, k)` alone (see the module docs),
+/// so results are bitwise reproducible.
+///
+/// ```
+/// use pipestale::backend::gemm::sgemm;
+/// // C = A (2x3) · B (3x2)
+/// let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+/// let b = [1.0f32, 0.0, 0.0, 1.0, 1.0, 1.0];
+/// let mut c = [0.0f32; 4];
+/// sgemm(false, false, 2, 2, 3, &a, &b, false, &mut c);
+/// assert_eq!(c, [4.0, 5.0, 10.0, 11.0]);
+/// ```
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm(
+    ta: bool,
+    tb: bool,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    accumulate: bool,
+    c: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k, "sgemm: op(A) must hold m*k scalars");
+    assert_eq!(b.len(), k * n, "sgemm: op(B) must hold k*n scalars");
+    assert_eq!(c.len(), m * n, "sgemm: C must hold m*n scalars");
+    if !accumulate {
+        c.fill(0.0);
+    }
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let mut ap = pool::acquire(MC * KC);
+    let mut bp = pool::acquire(KC * NC);
+    let mut jc = 0;
+    while jc < n {
+        let nc = NC.min(n - jc);
+        let mut pc = 0;
+        while pc < k {
+            let kc = KC.min(k - pc);
+            pack_b(b, tb, k, n, pc, jc, kc, nc, &mut bp);
+            let mut ic = 0;
+            while ic < m {
+                let mc = MC.min(m - ic);
+                pack_a(a, ta, m, k, ic, pc, mc, kc, &mut ap);
+                macro_kernel(&ap, &bp, mc, nc, kc, c, ic, jc, n);
+                ic += MC;
+            }
+            pc += KC;
+        }
+        jc += NC;
+    }
+}
+
+/// Lower an NHWC activation tensor to the im2col patch matrix:
+/// row `(ni*oh + oy)*ow + ox` holds the `k*k*cin` input patch under
+/// output pixel `(oy, ox)`, column-ordered `(ky*k + kx)*cin + ci` —
+/// exactly the row-major flattening of an HWIO weight tensor, so
+/// `conv(x, w) = im2col(x) · w` as a plain `[M, K] x [K, cout]` GEMM.
+/// Padding cells are written as zeros; `cols` is fully overwritten.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    k: usize,
+    stride: usize,
+    oh: usize,
+    ow: usize,
+    pt: usize,
+    pl: usize,
+    cols: &mut [f32],
+) {
+    let patch = k * k * cin;
+    debug_assert_eq!(cols.len(), n * oh * ow * patch);
+    for ni in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = &mut cols[((ni * oh + oy) * ow + ox) * patch..][..patch];
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - pt as isize;
+                    for kx in 0..k {
+                        let dst = &mut row[(ky * k + kx) * cin..(ky * k + kx) * cin + cin];
+                        let ix = (ox * stride + kx) as isize - pl as isize;
+                        if iy < 0 || iy >= h as isize || ix < 0 || ix >= w as isize {
+                            dst.fill(0.0);
+                        } else {
+                            let src = ((ni * h + iy as usize) * w + ix as usize) * cin;
+                            dst.copy_from_slice(&x[src..src + cin]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Adjoint of [`im2col`]: scatter-add the patch-matrix gradient back
+/// onto the input layout (`dx += col2im(cols)`); entries that fell on
+/// padding are dropped. `dx` is accumulated into, not overwritten —
+/// callers zero it first, matching the conv-backward contract.
+#[allow(clippy::too_many_arguments)]
+pub fn col2im(
+    cols: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    k: usize,
+    stride: usize,
+    oh: usize,
+    ow: usize,
+    pt: usize,
+    pl: usize,
+    dx: &mut [f32],
+) {
+    let patch = k * k * cin;
+    debug_assert_eq!(cols.len(), n * oh * ow * patch);
+    debug_assert_eq!(dx.len(), n * h * w * cin);
+    for ni in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = &cols[((ni * oh + oy) * ow + ox) * patch..][..patch];
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - pt as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * stride + kx) as isize - pl as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = &row[(ky * k + kx) * cin..(ky * k + kx) * cin + cin];
+                        let base = ((ni * h + iy as usize) * w + ix as usize) * cin;
+                        let dst = &mut dx[base..base + cin];
+                        for (d, &v) in dst.iter_mut().zip(src) {
+                            *d += v;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pool::PoolScope;
+    use crate::util::rng::Pcg32;
+
+    /// Naive k-ordered reference: one f32 accumulator per element.
+    fn naive(ta: bool, tb: bool, m: usize, n: usize, k: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for l in 0..k {
+                    acc += at(a, ta, m, k, i, l) * at(b, tb, k, n, l, j);
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    fn randv(rng: &mut Pcg32, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn small_k_is_bitwise_equal_to_naive_k_order() {
+        // k <= KC: a single packed panel pair, so the per-element
+        // summation is exactly the naive ascending-k order.
+        let mut rng = Pcg32::seeded(11);
+        for &(m, n, k) in &[(1usize, 1usize, 1usize), (5, 9, 7), (70, 140, 37), (65, 129, 256)] {
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, k * n);
+            let mut c = vec![0.0f32; m * n];
+            sgemm(false, false, m, n, k, &a, &b, false, &mut c);
+            let want = naive(false, false, m, n, k, &a, &b);
+            for (i, (x, y)) in c.iter().zip(&want).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "({m},{n},{k}) elem {i}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn large_k_crosses_panel_boundary_within_tolerance() {
+        // k > KC: partial sums per KC block; tolerance, not bitwise.
+        let mut rng = Pcg32::seeded(12);
+        let (m, n, k) = (17, 23, 2 * KC + 19);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let mut c = vec![0.0f32; m * n];
+        sgemm(false, false, m, n, k, &a, &b, false, &mut c);
+        let want = naive(false, false, m, n, k, &a, &b);
+        for (i, (x, y)) in c.iter().zip(&want).enumerate() {
+            let tol = 1e-4 * (1.0 + y.abs());
+            assert!((x - y).abs() <= tol, "elem {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn transposed_operands_match_naive() {
+        let mut rng = Pcg32::seeded(13);
+        let (m, n, k) = (13, 21, 30);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        for &(ta, tb) in &[(true, false), (false, true), (true, true)] {
+            let mut c = vec![0.0f32; m * n];
+            sgemm(ta, tb, m, n, k, &a, &b, false, &mut c);
+            let want = naive(ta, tb, m, n, k, &a, &b);
+            for (i, (x, y)) in c.iter().zip(&want).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "ta={ta} tb={tb} elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn accumulate_adds_onto_existing_c() {
+        let mut rng = Pcg32::seeded(14);
+        let (m, n, k) = (6, 10, 8);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let bias = 0.5f32;
+        let mut c = vec![bias; m * n];
+        sgemm(false, false, m, n, k, &a, &b, true, &mut c);
+        let want = naive(false, false, m, n, k, &a, &b);
+        for (x, y) in c.iter().zip(&want) {
+            assert_eq!(*x, bias + y, "accumulate must add exactly once onto C");
+        }
+        // overwrite mode ignores prior contents
+        let mut c2 = vec![123.0f32; m * n];
+        sgemm(false, false, m, n, k, &a, &b, false, &mut c2);
+        assert_eq!(c2, want);
+    }
+
+    #[test]
+    fn repeated_calls_are_bitwise_deterministic_and_allocation_free() {
+        let scope = PoolScope::new();
+        let pool = scope.pool().clone();
+        let mut rng = Pcg32::seeded(15);
+        let (m, n, k) = (48, 80, 300);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let mut c1 = vec![0.0f32; m * n];
+        sgemm(false, false, m, n, k, &a, &b, false, &mut c1);
+        let warm = pool.stats();
+        let mut c2 = vec![0.0f32; m * n];
+        for _ in 0..5 {
+            sgemm(false, false, m, n, k, &a, &b, false, &mut c2);
+        }
+        let steady = pool.stats();
+        assert_eq!(
+            steady.fresh_allocs, warm.fresh_allocs,
+            "warm sgemm calls must lease all scratch from the pool"
+        );
+        for (x, y) in c1.iter().zip(&c2) {
+            assert_eq!(x.to_bits(), y.to_bits(), "same shape => same summation order");
+        }
+    }
+
+    #[test]
+    fn im2col_col2im_are_adjoint() {
+        // <im2col(x), C> == <x, col2im(C)> for any C: the defining
+        // property that makes col2im the correct conv input-gradient.
+        let mut rng = Pcg32::seeded(16);
+        let (n, h, w, cin, k, stride) = (2usize, 5usize, 4usize, 3usize, 3usize, 2usize);
+        let (oh, ow, pt, pl) = (3, 2, 1, 1); // SAME-ish geometry with padding
+        let x = randv(&mut rng, n * h * w * cin);
+        let patch = k * k * cin;
+        let mut cols = vec![0.0f32; n * oh * ow * patch];
+        im2col(&x, n, h, w, cin, k, stride, oh, ow, pt, pl, &mut cols);
+        let cmat = randv(&mut rng, cols.len());
+        let lhs: f64 = cols.iter().zip(&cmat).map(|(&a, &b)| a as f64 * b as f64).sum();
+        let mut back = vec![0.0f32; x.len()];
+        col2im(&cmat, n, h, w, cin, k, stride, oh, ow, pt, pl, &mut back);
+        let rhs: f64 = x.iter().zip(&back).map(|(&a, &b)| a as f64 * b as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-3 * (1.0 + lhs.abs()), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn scratch_accounting_helpers() {
+        assert_eq!(pack_scratch_floats(), MC * KC + KC * NC);
+        assert_eq!(conv_cols_floats(2, 4, 4, 3, 5), 2 * 16 * 9 * 5);
+        assert_eq!(MC % MR, 0, "A macro-tile must hold whole row strips");
+        assert_eq!(NC % NR, 0, "B macro-tile must hold whole column strips");
+    }
+}

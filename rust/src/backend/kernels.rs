@@ -11,18 +11,44 @@
 //! Kernels operate on flat `&[f32]` buffers with explicit dimensions;
 //! tensor plumbing (shapes, caches, parameter slicing) lives in
 //! `backend::ops`.
+//!
+//! The conv2d and dense hot paths are **GEMM-lowered**: convolution
+//! forward is im2col + one `[M, K] x [K, cout]` matrix product on the
+//! shared [`gemm`](super::gemm) core, conv backward computes the
+//! weight gradient as a GEMM over the im2col buffer and the input
+//! gradient as a GEMM followed by col2im, and dense forward/backward
+//! run through the same core. The pre-lowering nested loops are kept
+//! verbatim as `reference_*` oracles: every GEMM path is differentially
+//! tested against them (`tests/native_backend.rs`) and the micro bench
+//! times the pairs. Because the GEMM summation order is fixed by the
+//! problem shape alone, a training step remains bitwise reproducible —
+//! which is what keeps the pipeline equivalence invariants exact.
 
 use anyhow::{ensure, Result};
+
+use crate::pool;
+
+use super::gemm;
 
 /// Elementwise activation fused into `Dense` or standing alone (`Act`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ActKind {
+    /// Identity (no activation).
     None,
+    /// Rectified linear unit: `max(0, x)`.
     Relu,
+    /// Hyperbolic tangent.
     Tanh,
 }
 
 impl ActKind {
+    /// Parse the layer-spec activation names used in `meta.json`.
+    ///
+    /// ```
+    /// use pipestale::backend::ActKind;
+    /// assert_eq!(ActKind::parse("relu"), Some(ActKind::Relu));
+    /// assert_eq!(ActKind::parse("gelu"), None);
+    /// ```
     pub fn parse(s: &str) -> Option<ActKind> {
         match s {
             "none" => Some(ActKind::None),
@@ -133,8 +159,65 @@ pub fn residual_add_backward(dy: &[f32], d_main: &mut [f32], d_shortcut: &mut [f
 
 /// 2-D convolution forward: x `[n,h,w,cin]`, wgt `[k,k,cin,cout]` (HWIO),
 /// optional bias `[cout]`, out `[n,oh,ow,cout]` (fully overwritten).
+///
+/// GEMM-lowered: the patch matrix (`gemm::im2col`; skipped for 1×1
+/// unpadded stride-1 convs, where the activations already are the
+/// patch matrix) is multiplied against the row-major-flattened HWIO
+/// weights on the blocked core, accumulating onto the bias-initialized
+/// output. Matches [`reference_conv2d_forward`] to float tolerance:
+///
+/// ```
+/// use pipestale::backend::kernels::{conv2d_forward, reference_conv2d_forward};
+/// let x: Vec<f32> = (0..16).map(|i| i as f32 * 0.1).collect(); // [1,4,4,1]
+/// let w: Vec<f32> = (0..9).map(|i| i as f32 * 0.01).collect(); // [3,3,1,1]
+/// let (mut y, mut r) = (vec![0.0; 16], vec![0.0; 16]);
+/// conv2d_forward(&x, 1, 4, 4, 1, &w, 3, 1, 1, true, None, &mut y);
+/// reference_conv2d_forward(&x, 1, 4, 4, 1, &w, 3, 1, 1, true, None, &mut r);
+/// for (a, b) in y.iter().zip(&r) {
+///     assert!((a - b).abs() < 1e-5);
+/// }
+/// ```
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_forward(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    wgt: &[f32],
+    k: usize,
+    cout: usize,
+    stride: usize,
+    same: bool,
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    let (oh, ow, pt, pl) = conv_out_dims_unchecked(h, w, k, stride, same);
+    debug_assert_eq!(out.len(), n * oh * ow * cout);
+    match bias {
+        Some(b) => {
+            for chunk in out.chunks_exact_mut(cout) {
+                chunk.copy_from_slice(b);
+            }
+        }
+        None => out.fill(0.0),
+    }
+    let m = n * oh * ow;
+    let kk = k * k * cin;
+    if k == 1 && stride == 1 && pt == 0 && pl == 0 {
+        gemm::sgemm(false, false, m, cout, kk, x, wgt, true, out);
+    } else {
+        let mut cols = pool::acquire(m * kk);
+        gemm::im2col(x, n, h, w, cin, k, stride, oh, ow, pt, pl, &mut cols);
+        gemm::sgemm(false, false, m, cout, kk, &cols, wgt, true, out);
+    }
+}
+
+/// Pre-lowering conv2d forward loops, kept verbatim as the
+/// differential-test oracle and the "before" side of the micro bench.
+/// Same contract as [`conv2d_forward`].
+#[allow(clippy::too_many_arguments)]
+pub fn reference_conv2d_forward(
     x: &[f32],
     n: usize,
     h: usize,
@@ -191,8 +274,60 @@ pub fn conv2d_forward(
 
 /// Conv backward: given dy `[n,oh,ow,cout]`, accumulate dx (zeroed by
 /// caller), dw (zeroed), and optionally db (zeroed).
+///
+/// GEMM-lowered: `db` is the column sum of dy; `dw += cols^T · dy` is
+/// one GEMM over the (recomputed) im2col buffer; the input gradient is
+/// `dcols = dy · W^T` followed by the `gemm::col2im` scatter-add (for
+/// 1×1 unpadded stride-1 convs both products hit `x`/`dx` directly).
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_backward(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    wgt: &[f32],
+    k: usize,
+    cout: usize,
+    stride: usize,
+    same: bool,
+    dy: &[f32],
+    dx: &mut [f32],
+    dw: &mut [f32],
+    db: Option<&mut [f32]>,
+) {
+    let (oh, ow, pt, pl) = conv_out_dims_unchecked(h, w, k, stride, same);
+    debug_assert_eq!(dy.len(), n * oh * ow * cout);
+    debug_assert_eq!(dx.len(), x.len());
+    debug_assert_eq!(dw.len(), wgt.len());
+    if let Some(db) = db {
+        for row in dy.chunks_exact(cout) {
+            for (d, &g) in db.iter_mut().zip(row) {
+                *d += g;
+            }
+        }
+    }
+    let m = n * oh * ow;
+    let kk = k * k * cin;
+    if k == 1 && stride == 1 && pt == 0 && pl == 0 {
+        gemm::sgemm(true, false, kk, cout, m, x, dy, true, dw);
+        gemm::sgemm(false, true, m, kk, cout, dy, wgt, true, dx);
+    } else {
+        let mut cols = pool::acquire(m * kk);
+        gemm::im2col(x, n, h, w, cin, k, stride, oh, ow, pt, pl, &mut cols);
+        gemm::sgemm(true, false, kk, cout, m, &cols, dy, true, dw);
+        // Reuse the im2col lease for the input-gradient patch matrix:
+        // sgemm with accumulate=false fully overwrites it.
+        gemm::sgemm(false, true, m, kk, cout, dy, wgt, false, &mut cols);
+        gemm::col2im(&cols, n, h, w, cin, k, stride, oh, ow, pt, pl, dx);
+    }
+}
+
+/// Pre-lowering conv2d backward loops, kept verbatim as the
+/// differential-test oracle and the "before" side of the micro bench.
+/// Same contract as [`conv2d_backward`].
+#[allow(clippy::too_many_arguments)]
+pub fn reference_conv2d_backward(
     x: &[f32],
     n: usize,
     h: usize,
@@ -254,7 +389,31 @@ pub fn conv2d_backward(
 
 /// Dense forward: x `[n,din]`, wgt `[din,dout]`, bias `[dout]`,
 /// y `[n,dout]` (fully overwritten, activation applied).
+///
+/// GEMM-lowered: one `[n, din] x [din, dout]` product accumulated onto
+/// the bias-broadcast output, then the fused activation in place.
 pub fn dense_forward(
+    x: &[f32],
+    n: usize,
+    din: usize,
+    wgt: &[f32],
+    bias: &[f32],
+    dout: usize,
+    act: ActKind,
+    y: &mut [f32],
+) {
+    debug_assert_eq!(y.len(), n * dout);
+    for yrow in y.chunks_exact_mut(dout) {
+        yrow.copy_from_slice(bias);
+    }
+    gemm::sgemm(false, false, n, dout, din, x, wgt, true, y);
+    act.apply(y);
+}
+
+/// Pre-lowering dense forward loops, kept verbatim as the
+/// differential-test oracle and the "before" side of the micro bench.
+/// Same contract as [`dense_forward`].
+pub fn reference_dense_forward(
     x: &[f32],
     n: usize,
     din: usize,
@@ -281,8 +440,43 @@ pub fn dense_forward(
 
 /// Dense backward: `y` is the *post-activation* forward output; dx/dw/db
 /// must be zeroed by the caller.
+///
+/// GEMM-lowered: the preactivation gradient `dyp = dy * act'(y)` goes
+/// into a pooled scratch buffer, `db` is its column sum, and the two
+/// matrix gradients are `dw += x^T · dyp` and `dx += dyp · W^T`.
 #[allow(clippy::too_many_arguments)]
 pub fn dense_backward(
+    x: &[f32],
+    n: usize,
+    din: usize,
+    wgt: &[f32],
+    dout: usize,
+    act: ActKind,
+    y: &[f32],
+    dy: &[f32],
+    dx: &mut [f32],
+    dw: &mut [f32],
+    db: &mut [f32],
+) {
+    debug_assert_eq!(dy.len(), n * dout);
+    let mut dyp = pool::acquire(n * dout);
+    for ((p, &g), &yv) in dyp.iter_mut().zip(dy).zip(y) {
+        *p = g * act.grad_from_output(yv);
+    }
+    for row in dyp.chunks_exact(dout) {
+        for (d, &p) in db.iter_mut().zip(row) {
+            *d += p;
+        }
+    }
+    gemm::sgemm(true, false, din, dout, n, x, &dyp, true, dw);
+    gemm::sgemm(false, true, n, din, dout, &dyp, wgt, true, dx);
+}
+
+/// Pre-lowering dense backward loops, kept verbatim as the
+/// differential-test oracle and the "before" side of the micro bench.
+/// Same contract as [`dense_backward`].
+#[allow(clippy::too_many_arguments)]
+pub fn reference_dense_backward(
     x: &[f32],
     n: usize,
     din: usize,
@@ -568,6 +762,113 @@ pub fn softmax_xent(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn randv(rng: &mut Pcg32, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.normal()).collect()
+    }
+
+    fn assert_rel_close(what: &str, got: &[f32], want: &[f32], tol: f32) {
+        assert_eq!(got.len(), want.len(), "{what}: length");
+        for (i, (a, b)) in got.iter().zip(want).enumerate() {
+            let bound = tol * (1.0 + b.abs());
+            assert!((a - b).abs() <= bound, "{what}[{i}]: gemm {a} vs reference {b}");
+        }
+    }
+
+    #[test]
+    fn gemm_conv_1x1_fast_path_matches_reference() {
+        // The projection-shortcut shape class with stride 1: the im2col
+        // copy is skipped and x feeds the GEMM directly.
+        let mut rng = Pcg32::seeded(21);
+        let (n, h, w, cin, cout) = (2, 5, 5, 3, 4);
+        let x = randv(&mut rng, n * h * w * cin);
+        let wgt = randv(&mut rng, cin * cout);
+        let bias = randv(&mut rng, cout);
+        let mut y = vec![0.0; n * h * w * cout];
+        let mut r = vec![0.0; n * h * w * cout];
+        conv2d_forward(&x, n, h, w, cin, &wgt, 1, cout, 1, true, Some(&bias), &mut y);
+        reference_conv2d_forward(&x, n, h, w, cin, &wgt, 1, cout, 1, true, Some(&bias), &mut r);
+        assert_rel_close("conv1x1/fwd", &y, &r, 1e-4);
+
+        let dy = randv(&mut rng, y.len());
+        let (mut dx, mut dxr) = (vec![0.0; x.len()], vec![0.0; x.len()]);
+        let (mut dw, mut dwr) = (vec![0.0; wgt.len()], vec![0.0; wgt.len()]);
+        let (mut db, mut dbr) = (vec![0.0; cout], vec![0.0; cout]);
+        conv2d_backward(
+            &x,
+            n,
+            h,
+            w,
+            cin,
+            &wgt,
+            1,
+            cout,
+            1,
+            true,
+            &dy,
+            &mut dx,
+            &mut dw,
+            Some(&mut db),
+        );
+        reference_conv2d_backward(
+            &x,
+            n,
+            h,
+            w,
+            cin,
+            &wgt,
+            1,
+            cout,
+            1,
+            true,
+            &dy,
+            &mut dxr,
+            &mut dwr,
+            Some(&mut dbr),
+        );
+        assert_rel_close("conv1x1/dx", &dx, &dxr, 1e-4);
+        assert_rel_close("conv1x1/dw", &dw, &dwr, 1e-4);
+        assert_rel_close("conv1x1/db", &db, &dbr, 1e-4);
+    }
+
+    #[test]
+    fn gemm_dense_matches_reference() {
+        let mut rng = Pcg32::seeded(22);
+        let (n, din, dout) = (7, 300, 13); // din > KC exercises panel splits
+        let x = randv(&mut rng, n * din);
+        let wgt = randv(&mut rng, din * dout);
+        let bias = randv(&mut rng, dout);
+        for act in [ActKind::None, ActKind::Tanh] {
+            let mut y = vec![0.0; n * dout];
+            let mut r = vec![0.0; n * dout];
+            dense_forward(&x, n, din, &wgt, &bias, dout, act, &mut y);
+            reference_dense_forward(&x, n, din, &wgt, &bias, dout, act, &mut r);
+            assert_rel_close("dense/fwd", &y, &r, 1e-4);
+
+            let dy = randv(&mut rng, y.len());
+            let (mut dx, mut dxr) = (vec![0.0; x.len()], vec![0.0; x.len()]);
+            let (mut dw, mut dwr) = (vec![0.0; wgt.len()], vec![0.0; wgt.len()]);
+            let (mut db, mut dbr) = (vec![0.0; dout], vec![0.0; dout]);
+            dense_backward(&x, n, din, &wgt, dout, act, &y, &dy, &mut dx, &mut dw, &mut db);
+            reference_dense_backward(
+                &x,
+                n,
+                din,
+                &wgt,
+                dout,
+                act,
+                &r,
+                &dy,
+                &mut dxr,
+                &mut dwr,
+                &mut dbr,
+            );
+            assert_rel_close("dense/dx", &dx, &dxr, 1e-4);
+            assert_rel_close("dense/dw", &dw, &dwr, 1e-4);
+            assert_rel_close("dense/db", &db, &dbr, 1e-4);
+        }
+    }
 
     #[test]
     fn conv_out_dims_match_xla_conventions() {

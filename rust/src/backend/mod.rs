@@ -23,6 +23,7 @@
 //! * `eval_forward` uses running BN statistics and, on the last
 //!   partition, returns logits.
 
+pub mod gemm;
 pub mod kernels;
 pub mod models;
 pub mod ops;
@@ -46,12 +47,18 @@ pub use ops::{NativeNode, NativeOp, OpCache, ResBlock, Shortcut};
 /// nodes, a partition always holds complete blocks — the block IR's
 /// partition-boundary rule.
 pub struct NativePartition {
+    /// The partition's recorded contract (layer range, carry shapes,
+    /// param/state specs).
     pub meta: PartitionMeta,
     nodes: Vec<NativeNode>,
     /// Per-node (param, state) offsets into the flat partition vectors.
     offsets: Vec<(usize, usize)>,
+    /// The partition's weights and functional state (the only copy
+    /// during training — the paper's one-copy discipline).
     pub params: PartitionParams,
+    /// Per-partition SGD optimizer (own LR scale, own velocity).
     pub optim: Sgd,
+    /// Weight updates applied so far (`last`/`backward` calls).
     pub update_count: usize,
 }
 
@@ -263,11 +270,15 @@ impl WorkerStage for NativePartition {
 
 /// Artifact-free executor: the whole pipeline on in-crate kernels.
 pub struct NativeExecutor {
+    /// The full config contract this executor was built from.
     pub meta: ConfigMeta,
+    /// One native compute unit per partition, in pipeline order.
     pub parts: Vec<NativePartition>,
 }
 
 impl NativeExecutor {
+    /// Build the executor: one [`NativePartition`] per config
+    /// partition, cross-validated against the recorded specs.
     pub fn new(meta: ConfigMeta, params: ModelParams, optims: Vec<Sgd>) -> Result<Self> {
         ensure!(
             optims.len() == meta.partitions.len(),
@@ -299,6 +310,7 @@ impl NativeExecutor {
         ModelParams { partitions: self.parts.iter().map(|p| p.params.clone()).collect() }
     }
 
+    /// Per-partition applied-update counts (schedule assertions).
     pub fn update_counts(&self) -> Vec<usize> {
         self.parts.iter().map(|p| p.update_count).collect()
     }

@@ -39,18 +39,24 @@ use super::ops::{NativeNode, NativeOp, Shortcut};
 /// only fall *between* layers, hence only on block edges.
 #[derive(Debug, Clone)]
 pub struct NativeLayer {
+    /// Paper-layer name (`l1`, `l2`, ...).
     pub name: String,
+    /// The layer's compute, in forward order.
     pub nodes: Vec<NativeNode>,
 }
 
 /// A whole model as a flat layer list (the paper's PPV numbering).
 #[derive(Debug, Clone)]
 pub struct NativeModel {
+    /// Zoo model name (`lenet5`, `resnet`, ...).
     pub name: String,
+    /// Paper-numbered layers, forward order.
     pub layers: Vec<NativeLayer>,
-    /// (H, W, C)
+    /// Per-sample input shape (H, W, C).
     pub input_shape: Vec<usize>,
+    /// Output classes of the final dense head.
     pub num_classes: usize,
+    /// Dataset the model trains on (`mnist` / `cifar10`).
     pub dataset: String,
 }
 
@@ -227,6 +233,7 @@ pub fn build_model(name: &str, width_mult: f64, num_classes: usize) -> Result<Na
 }
 
 impl NativeModel {
+    /// Paper-layer count (the PPV numbering runs 1..=num_layers).
     pub fn num_layers(&self) -> usize {
         self.layers.len()
     }
@@ -296,6 +303,13 @@ pub fn native_config_names() -> Vec<&'static str> {
 
 /// Synthesize the full `ConfigMeta` for a built-in native config —
 /// everything `aot.py::config_meta` would record, minus the HLO files.
+///
+/// ```
+/// let meta = pipestale::backend::native_config("quickstart_lenet").unwrap();
+/// assert_eq!(meta.model, "lenet5");
+/// assert_eq!(meta.partitions.len(), 2);
+/// assert_eq!(meta.total_params(), 61_706); // full-width LeNet-5
+/// ```
 pub fn native_config(name: &str) -> Result<ConfigMeta> {
     let Some((model_name, width_mult, ppv, batch)) = manifest(name) else {
         bail!(

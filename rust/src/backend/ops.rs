@@ -25,39 +25,127 @@ use anyhow::{bail, ensure, Result};
 use crate::meta::{ParamSpec, StateSpec};
 use crate::tensor::Tensor;
 
+use super::gemm;
 use super::kernels::{self, ActKind};
 
 /// One atomic native operation.
 #[derive(Debug, Clone)]
 pub struct NativeOp {
+    /// Layer-spec name; parameter/state spec names are derived from it.
     pub name: String,
+    /// What the op computes (and its static geometry).
     pub kind: OpKind,
 }
 
+/// The op zoo: every atomic computation a native node can perform.
 #[derive(Debug, Clone)]
 pub enum OpKind {
-    Conv { cin: usize, cout: usize, k: usize, stride: usize, same: bool, bias: bool },
-    BatchNorm { c: usize, momentum: f32, eps: f32 },
-    Act { kind: ActKind },
-    MaxPool { k: usize, stride: usize },
+    /// 2-D convolution (NHWC activations, HWIO weights).
+    Conv {
+        /// Input channels.
+        cin: usize,
+        /// Output channels.
+        cout: usize,
+        /// Square kernel size.
+        k: usize,
+        /// Spatial stride.
+        stride: usize,
+        /// XLA-style SAME padding when true, VALID when false.
+        same: bool,
+        /// Whether a `[cout]` bias is added.
+        bias: bool,
+    },
+    /// Batch normalization over the trailing channel dimension.
+    BatchNorm {
+        /// Channel count.
+        c: usize,
+        /// Running-statistics momentum (0.9 everywhere in the zoo).
+        momentum: f32,
+        /// Variance epsilon.
+        eps: f32,
+    },
+    /// Standalone elementwise activation.
+    Act {
+        /// Which activation.
+        kind: ActKind,
+    },
+    /// Max pooling, VALID padding, argmax recorded for the backward
+    /// scatter.
+    MaxPool {
+        /// Square window size.
+        k: usize,
+        /// Window stride (== `k` for the zoo's non-overlapping pools).
+        stride: usize,
+    },
+    /// Global average pool `[n,h,w,c] -> [n,c]`.
     GlobalAvgPool,
+    /// Collapse all non-batch dims (zero-copy reshape).
     Flatten,
-    Dense { din: usize, dout: usize, act: ActKind },
+    /// Fully-connected layer with fused activation.
+    Dense {
+        /// Input features.
+        din: usize,
+        /// Output features.
+        dout: usize,
+        /// Fused activation.
+        act: ActKind,
+    },
 }
 
 /// Saved forward intermediates for one node's backward pass.
 #[derive(Debug, Clone)]
 pub enum OpCache {
-    Conv { x: Tensor },
-    Dense { x: Tensor, y: Tensor },
-    Act { y: Tensor },
-    MaxPool { in_shape: Vec<usize>, argmax: Vec<u32> },
-    BatchNorm { xhat: Tensor, inv_std: Vec<f32> },
-    Gap { in_shape: Vec<usize> },
-    Flatten { in_shape: Vec<usize> },
+    /// Conv saves its input (im2col is recomputed on the backward).
+    Conv {
+        /// The forward input.
+        x: Tensor,
+    },
+    /// Dense saves input and post-activation output.
+    Dense {
+        /// The forward input.
+        x: Tensor,
+        /// The post-activation output (activation gradients are
+        /// expressed through it).
+        y: Tensor,
+    },
+    /// Activations save only their output.
+    Act {
+        /// The post-activation output.
+        y: Tensor,
+    },
+    /// Max-pool saves the argmax scatter map.
+    MaxPool {
+        /// Input shape (for the gradient tensor).
+        in_shape: Vec<usize>,
+        /// Flat input index of each window maximum.
+        argmax: Vec<u32>,
+    },
+    /// Batch-norm saves the normalized activations and the inverse
+    /// batch standard deviation.
+    BatchNorm {
+        /// Normalized activations.
+        xhat: Tensor,
+        /// Per-channel `1/sqrt(var + eps)`.
+        inv_std: Vec<f32>,
+    },
+    /// Global-avg-pool needs only the input shape.
+    Gap {
+        /// Input shape (for the gradient tensor).
+        in_shape: Vec<usize>,
+    },
+    /// Flatten needs only the input shape.
+    Flatten {
+        /// Input shape (for the gradient reshape).
+        in_shape: Vec<usize>,
+    },
     /// Residual block: per-op caches of both branches (shortcut empty
     /// for identity).
-    Block { main: Vec<OpCache>, shortcut: Vec<OpCache> },
+    Block {
+        /// Main-branch caches, forward order.
+        main: Vec<OpCache>,
+        /// Shortcut-branch caches (empty for identity).
+        shortcut: Vec<OpCache>,
+    },
 }
 
 fn dims4(t: &Tensor) -> Result<(usize, usize, usize, usize)> {
@@ -73,6 +161,7 @@ fn dims2(t: &Tensor) -> Result<(usize, usize)> {
 }
 
 impl NativeOp {
+    /// Square-kernel 2-D convolution (see [`OpKind::Conv`]).
     pub fn conv(
         name: &str,
         cin: usize,
@@ -88,26 +177,32 @@ impl NativeOp {
         }
     }
 
+    /// Batch norm with the zoo-wide momentum 0.9 and eps 1e-5.
     pub fn batch_norm(name: &str, c: usize) -> Self {
         NativeOp { name: name.to_string(), kind: OpKind::BatchNorm { c, momentum: 0.9, eps: 1e-5 } }
     }
 
+    /// Standalone elementwise activation.
     pub fn act(name: &str, kind: ActKind) -> Self {
         NativeOp { name: name.to_string(), kind: OpKind::Act { kind } }
     }
 
+    /// Non-overlapping max pool (stride == window).
     pub fn max_pool(name: &str, k: usize) -> Self {
         NativeOp { name: name.to_string(), kind: OpKind::MaxPool { k, stride: k } }
     }
 
+    /// Global average pool.
     pub fn global_avg_pool(name: &str) -> Self {
         NativeOp { name: name.to_string(), kind: OpKind::GlobalAvgPool }
     }
 
+    /// Flatten to `[n, features]`.
     pub fn flatten(name: &str) -> Self {
         NativeOp { name: name.to_string(), kind: OpKind::Flatten }
     }
 
+    /// Fully-connected layer with fused activation.
     pub fn dense(name: &str, din: usize, dout: usize, act: ActKind) -> Self {
         NativeOp { name: name.to_string(), kind: OpKind::Dense { din, dout, act } }
     }
@@ -151,6 +246,7 @@ impl NativeOp {
         }
     }
 
+    /// Functional-state specs (batch-norm running statistics).
     pub fn state_specs(&self) -> Vec<StateSpec> {
         let p = |sname: &str| format!("{}/{}", self.name, sname);
         match &self.kind {
@@ -162,6 +258,7 @@ impl NativeOp {
         }
     }
 
+    /// Number of parameter tensors this op consumes.
     pub fn n_params(&self) -> usize {
         match &self.kind {
             OpKind::Conv { bias, .. } => 1 + usize::from(*bias),
@@ -170,6 +267,7 @@ impl NativeOp {
         }
     }
 
+    /// Number of functional-state tensors this op consumes.
     pub fn n_state(&self) -> usize {
         match &self.kind {
             OpKind::BatchNorm { .. } => 2,
@@ -231,6 +329,30 @@ impl NativeOp {
             OpKind::GlobalAvgPool => (s[1] * s[2] * s[3]) as u64,
             OpKind::Flatten => 0,
             OpKind::Dense { din, dout, .. } => (2 * din * dout) as u64,
+        })
+    }
+
+    /// Pooled GEMM scratch (in f32 scalars) one training step of this
+    /// op leases at batch-inclusive input shape `s`: the fixed packing
+    /// panels plus the im2col / preactivation-gradient buffer. The
+    /// companion of [`NativeOp::flops_per_sample`] for the cost model —
+    /// `flops` drives the perfsim timeline, `scratch_floats` bounds the
+    /// pool footprint of the lowering (all of it recycled, so the
+    /// steady-state step still allocates nothing).
+    pub fn scratch_floats(&self, s: &[usize]) -> Result<usize> {
+        Ok(match &self.kind {
+            OpKind::Conv { cin, k, stride, .. } => {
+                let out = self.out_shape(s)?;
+                if *k == 1 && *stride == 1 {
+                    // 1x1 stride-1 convs skip im2col entirely.
+                    gemm::pack_scratch_floats()
+                } else {
+                    gemm::conv_cols_floats(s[0], out[1], out[2], *k, *cin)
+                        + gemm::pack_scratch_floats()
+                }
+            }
+            OpKind::Dense { dout, .. } => s[0] * dout + gemm::pack_scratch_floats(),
+            _ => 0,
         })
     }
 
@@ -526,8 +648,12 @@ impl Shortcut {
 /// partition boundary can never split it — carries stay single-tensor.
 #[derive(Debug, Clone)]
 pub struct ResBlock {
+    /// Block name (spec names of branch ops are prefixed with it by
+    /// the model builders).
     pub name: String,
+    /// Main branch, forward order.
     pub main: Vec<NativeOp>,
+    /// Skip branch.
     pub shortcut: Shortcut,
 }
 
@@ -544,7 +670,9 @@ impl ResBlock {
 /// One node of a partition's compute: a plain op or a residual block.
 #[derive(Debug, Clone)]
 pub enum NativeNode {
+    /// A single atomic op.
     Op(NativeOp),
+    /// A whole residual block (atomic w.r.t. partitioning).
     Block(ResBlock),
 }
 
@@ -643,6 +771,7 @@ impl NativeNode {
         NativeNode::Block(ResBlock { name: name.to_string(), main, shortcut })
     }
 
+    /// The op or block name.
     pub fn name(&self) -> &str {
         match self {
             NativeNode::Op(op) => &op.name,
@@ -663,6 +792,7 @@ impl NativeNode {
         }
     }
 
+    /// Functional-state specs; a block's ordering is main then shortcut.
     pub fn state_specs(&self) -> Vec<StateSpec> {
         match self {
             NativeNode::Op(op) => op.state_specs(),
@@ -675,6 +805,7 @@ impl NativeNode {
         }
     }
 
+    /// Number of parameter tensors this node consumes.
     pub fn n_params(&self) -> usize {
         match self {
             NativeNode::Op(op) => op.n_params(),
@@ -684,6 +815,7 @@ impl NativeNode {
         }
     }
 
+    /// Number of functional-state tensors this node consumes.
     pub fn n_state(&self) -> usize {
         match self {
             NativeNode::Op(op) => op.n_state(),
@@ -740,6 +872,29 @@ impl NativeNode {
                     sc = op.out_shape(&sc)?;
                 }
                 Ok(flops + main[1..].iter().product::<usize>() as u64)
+            }
+        }
+    }
+
+    /// Peak pooled GEMM scratch (f32 scalars) across this node's ops at
+    /// batch-inclusive input shape `s`. Per-op leases drop before the
+    /// next op runs, so a chain's footprint is the max, not the sum.
+    pub fn scratch_floats(&self, s: &[usize]) -> Result<usize> {
+        match self {
+            NativeNode::Op(op) => op.scratch_floats(s),
+            NativeNode::Block(b) => {
+                let mut peak = 0usize;
+                let mut main = s.to_vec();
+                for op in &b.main {
+                    peak = peak.max(op.scratch_floats(&main)?);
+                    main = op.out_shape(&main)?;
+                }
+                let mut sc = s.to_vec();
+                for op in b.shortcut.ops() {
+                    peak = peak.max(op.scratch_floats(&sc)?);
+                    sc = op.out_shape(&sc)?;
+                }
+                Ok(peak)
             }
         }
     }
@@ -934,6 +1089,39 @@ mod tests {
         // branches agree on the output shape
         assert_eq!(node.out_shape(&[2, 8, 8, 4]).unwrap(), vec![2, 4, 4, 8]);
         assert!(node.flops_per_sample(&[1, 8, 8, 4]).unwrap() > 0);
+    }
+
+    #[test]
+    fn scratch_accounting_tracks_the_gemm_lowering() {
+        use crate::backend::gemm;
+        // 3x3 conv: im2col buffer + the fixed packing panels.
+        let conv = NativeOp::conv("c", 4, 8, 3, 1, true, false);
+        let s = [2usize, 8, 8, 4];
+        assert_eq!(
+            conv.scratch_floats(&s).unwrap(),
+            gemm::conv_cols_floats(2, 8, 8, 3, 4) + gemm::pack_scratch_floats()
+        );
+        // 1x1 stride-1 conv skips im2col: panels only.
+        let proj = NativeOp::conv("p", 4, 8, 1, 1, true, false);
+        assert_eq!(proj.scratch_floats(&s).unwrap(), gemm::pack_scratch_floats());
+        // dense: preactivation-gradient buffer + panels.
+        let fc = NativeOp::dense("f", 16, 10, ActKind::None);
+        assert_eq!(fc.scratch_floats(&[2, 16]).unwrap(), 2 * 10 + gemm::pack_scratch_floats());
+        // shape-only ops lease nothing.
+        assert_eq!(NativeOp::flatten("fl").scratch_floats(&s).unwrap(), 0);
+        // a block's footprint is the per-op peak, not the sum.
+        let node = NativeNode::block(
+            "b",
+            vec![
+                NativeOp::conv("b/c1", 4, 4, 3, 1, true, false),
+                NativeOp::conv("b/c2", 4, 4, 3, 1, true, false),
+            ],
+            Shortcut::Identity,
+        );
+        assert_eq!(
+            node.scratch_floats(&s).unwrap(),
+            gemm::conv_cols_floats(2, 8, 8, 3, 4) + gemm::pack_scratch_floats()
+        );
     }
 
     #[test]

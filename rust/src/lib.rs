@@ -8,19 +8,35 @@
 //!
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for the
 //! paper-vs-measured results.
+//!
+//! Public items must carry doc comments (`missing_docs` warns, and CI
+//! builds docs with `RUSTDOCFLAGS="-D warnings"`). Modules not yet
+//! brought up to that bar carry an explicit `#[allow(missing_docs)]`
+//! below — shrink that list, never grow it.
+
+#![warn(missing_docs)]
 
 pub mod backend;
+#[allow(missing_docs)]
 pub mod config;
+#[allow(missing_docs)]
 pub mod data;
+#[allow(missing_docs)]
 pub mod memory;
+#[allow(missing_docs)]
 pub mod meta;
+#[allow(missing_docs)]
 pub mod model;
 pub mod optim;
 pub mod pipeline;
 pub mod pool;
+#[allow(missing_docs)]
 pub mod runtime;
+#[allow(missing_docs)]
 pub mod tensor;
+#[allow(missing_docs)]
 pub mod train;
+#[allow(missing_docs)]
 pub mod util;
 
 use std::path::PathBuf;

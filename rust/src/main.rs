@@ -1,11 +1,14 @@
 //! pipestale CLI — leader entrypoint.
 //!
 //! Subcommands:
-//!   train        train one config (pipelined | sequential | hybrid)
+//!   train        train one config: --mode pipelined|sequential|hybrid,
+//!                orthogonally --backend auto|native|xla (compute) and
+//!                --runtime scheduler|threaded (how the schedule executes)
 //!   inspect      staleness report for a config (paper §3 accounting)
 //!   memory       Table-6-style memory model for a config
-//!   perfsim      discrete-event speedup estimate (Table 5 machinery)
-//!   list-configs enumerate available artifact configs
+//!   perfsim      discrete-event speedup estimate (Table 5 machinery):
+//!                --iters, --gflops, --mapping paired|full
+//!   list-configs enumerate artifact configs + native built-ins
 
 use anyhow::{anyhow, Result};
 
@@ -45,9 +48,12 @@ fn dispatch(args: &[String]) -> Result<()> {
         "help" | "--help" | "-h" => {
             println!(
                 "pipestale — pipelined training with stale weights\n\n\
-                 SUBCOMMANDS:\n  train --config <name> [--mode pipelined|sequential|hybrid] ...\n  \
+                 SUBCOMMANDS:\n  \
+                 train --config <name> [--mode pipelined|sequential|hybrid]\n        \
+                 [--backend auto|native|xla] [--runtime scheduler|threaded] ...\n  \
                  inspect --config <name>\n  memory --config <name> [--batch N]\n  \
-                 perfsim --config <name> [--iters N]\n  list-configs\n\n\
+                 perfsim --config <name> [--iters N] [--gflops G] [--mapping paired|full]\n  \
+                 list-configs\n\n\
                  Run a subcommand with --help for its options."
             );
             Ok(())

@@ -15,7 +15,9 @@ use crate::tensor::Tensor;
 
 /// Learning-rate schedule, evaluated per iteration.
 #[derive(Debug, Clone)]
+#[allow(missing_docs)] // variant fields are the formula inputs documented per variant
 pub enum Schedule {
+    /// Constant `base`.
     Const { base: f64 },
     /// base * gamma^(iter / every)  (Caffe "step")
     Step { base: f64, gamma: f64, every: usize },
@@ -28,6 +30,15 @@ pub enum Schedule {
 }
 
 impl Schedule {
+    /// The learning rate at (0-based) iteration `iter`.
+    ///
+    /// ```
+    /// use pipestale::optim::Schedule;
+    /// let s = Schedule::MultiStep { base: 1.0, gamma: 0.1, milestones: vec![10, 20] };
+    /// assert_eq!(s.lr(5), 1.0);
+    /// assert!((s.lr(15) - 0.1).abs() < 1e-12);
+    /// assert!((s.lr(25) - 0.01).abs() < 1e-12);
+    /// ```
     pub fn lr(&self, iter: usize) -> f64 {
         match self {
             Schedule::Const { base } => *base,
@@ -53,9 +64,13 @@ impl Schedule {
 /// the tensor pool, so they recycle across partitions and runs.
 #[derive(Debug, Clone)]
 pub struct Sgd {
+    /// Learning-rate schedule.
     pub schedule: Schedule,
+    /// Momentum coefficient (0.0 = vanilla SGD, no velocity buffers).
     pub momentum: f32,
+    /// Nesterov look-ahead (AlexNet/VGG presets).
     pub nesterov: bool,
+    /// L2 weight decay folded into the gradient.
     pub weight_decay: f32,
     /// Per-partition multiplier on the scheduled LR (Table 7).
     pub lr_scale: f32,
@@ -63,10 +78,12 @@ pub struct Sgd {
 }
 
 impl Sgd {
+    /// New optimizer with LR scale 1.0 and empty velocity.
     pub fn new(schedule: Schedule, momentum: f32, nesterov: bool, weight_decay: f32) -> Self {
         Sgd { schedule, momentum, nesterov, weight_decay, lr_scale: 1.0, velocity: Vec::new() }
     }
 
+    /// Set the per-partition LR multiplier (builder style).
     pub fn with_lr_scale(mut self, scale: f32) -> Self {
         self.lr_scale = scale;
         self

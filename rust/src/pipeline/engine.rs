@@ -19,16 +19,24 @@ use crate::tensor::{IntTensor, Tensor};
 
 use super::executor::LastResult;
 
+/// One partition's XLA-backed compute: compiled stage programs, the
+/// partition's weights/state, and its SGD optimizer.
 pub struct PartitionEngine {
+    /// The partition's recorded contract (layouts, carry shapes).
     pub meta: PartitionMeta,
+    /// Compiled stage programs (`fwd`/`bwd`/`last`/`*_eval`).
     pub programs: StagePrograms,
+    /// The partition's weights and functional state.
     pub params: PartitionParams,
+    /// Per-partition SGD optimizer.
     pub optim: Sgd,
+    /// Weight updates applied so far.
     pub update_count: usize,
     scratch: InputScratch,
 }
 
 impl PartitionEngine {
+    /// Wire programs + weights + optimizer into an engine.
     pub fn new(
         meta: PartitionMeta,
         programs: StagePrograms,
@@ -60,6 +68,8 @@ impl PartitionEngine {
         Ok(())
     }
 
+    /// Training forward: commits BN-state updates, never touches
+    /// weights; returns the carry_out.
     pub fn forward(&mut self, seed: i32, carry: &[Tensor]) -> Result<Vec<Tensor>> {
         let prog = self
             .programs
@@ -77,6 +87,7 @@ impl PartitionEngine {
         Ok(out)
     }
 
+    /// Fused last stage: forward + loss + backward + weight update.
     pub fn last(&mut self, seed: i32, carry: &[Tensor], labels: &IntTensor) -> Result<LastResult> {
         let prog = self
             .programs
@@ -111,6 +122,8 @@ impl PartitionEngine {
         Ok(LastResult { loss, correct, gcarry_in: gcarry })
     }
 
+    /// Backward on the saved carry_in of the same mini-batch; applies
+    /// the weight update; returns gcarry_in.
     pub fn backward(
         &mut self,
         seed: i32,
@@ -145,6 +158,8 @@ impl PartitionEngine {
         self.params
     }
 
+    /// Eval-mode forward (running BN statistics; logits on the last
+    /// partition).
     pub fn eval_forward(&mut self, carry: &[Tensor]) -> Result<Vec<Tensor>> {
         let prog = if self.meta.is_last() {
             self.programs.last_eval.as_ref()

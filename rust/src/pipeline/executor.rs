@@ -26,11 +26,19 @@ use super::engine::PartitionEngine;
 /// Result of the fused last stage (FS_{K+1} + BKS_1).
 #[derive(Debug, Clone)]
 pub struct LastResult {
+    /// Mean softmax-cross-entropy loss over the mini-batch.
     pub loss: f32,
+    /// Correct predictions in the mini-batch (a count, as f32).
     pub correct: f32,
+    /// Gradient w.r.t. the last partition's carry_in, to feed BKS_2.
     pub gcarry_in: Vec<Tensor>,
 }
 
+/// The compute behind every pipeline stage: the scheduler drives any
+/// implementor (XLA programs, native kernels, or the deterministic
+/// mock) through the same forward / fused-last / backward /
+/// eval-forward contract, with coordinator-owned weights mutated only
+/// by a partition's own `last`/`backward`.
 pub trait StageExecutor {
     /// Number of partitions P = K+1.
     fn num_partitions(&self) -> usize;
@@ -101,11 +109,15 @@ pub trait WorkerStage {
 
 /// Production executor: PJRT programs + host-owned weights.
 pub struct XlaExecutor {
+    /// The config contract the stage programs were compiled against.
     pub meta: ConfigMeta,
+    /// One engine (programs + weights + SGD) per partition.
     pub engines: Vec<PartitionEngine>,
 }
 
 impl XlaExecutor {
+    /// Load and wire the config's compiled stage programs: one
+    /// [`PartitionEngine`] per partition.
     pub fn new(
         runtime: &Runtime,
         meta: ConfigMeta,
@@ -141,6 +153,7 @@ impl XlaExecutor {
         }
     }
 
+    /// Per-partition applied-update counts (schedule assertions).
     pub fn update_counts(&self) -> Vec<usize> {
         self.engines.iter().map(|e| e.update_count).collect()
     }

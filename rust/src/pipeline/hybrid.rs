@@ -8,19 +8,34 @@
 /// Which schedule a given iteration should use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
+    /// Stale-weight pipelined training (full utilization).
     Pipelined,
     /// Drain must happen exactly once, between the phases.
     DrainThenSequential,
+    /// Non-pipelined training (fresh weights every step).
     Sequential,
 }
 
+/// The §4 schedule: `pipelined_iters` stale-weight iterations, a
+/// drain, then non-pipelined training to the end.
+///
+/// ```
+/// use pipestale::pipeline::{HybridSchedule, Phase};
+/// let h = HybridSchedule::new(3, 6);
+/// assert_eq!(h.phase(0), Phase::Pipelined);
+/// assert_eq!(h.phase(3), Phase::DrainThenSequential);
+/// assert_eq!(h.phase(5), Phase::Sequential);
+/// ```
 #[derive(Debug, Clone)]
 pub struct HybridSchedule {
+    /// Iterations trained pipelined before the switch.
     pub pipelined_iters: u64,
+    /// Total training iterations.
     pub total_iters: u64,
 }
 
 impl HybridSchedule {
+    /// New schedule (`pipelined_iters` is clamped to `total_iters`).
     pub fn new(pipelined_iters: u64, total_iters: u64) -> Self {
         HybridSchedule { pipelined_iters: pipelined_iters.min(total_iters), total_iters }
     }
@@ -30,10 +45,12 @@ impl HybridSchedule {
         Self::new(total, total)
     }
 
+    /// The all-sequential degenerate schedule.
     pub fn all_sequential(total: u64) -> Self {
         Self::new(0, total)
     }
 
+    /// The phase iteration `iter` (0-based) should run under.
     pub fn phase(&self, iter: u64) -> Phase {
         if iter < self.pipelined_iters {
             Phase::Pipelined

@@ -13,6 +13,8 @@ use crate::tensor::{IntTensor, Tensor};
 
 use super::executor::{LastResult, StageExecutor};
 
+/// The deterministic mock: batch-tagged tensors, versioned "weights",
+/// a flat call trace (see the module docs).
 pub struct MockExecutor {
     p: usize,
     /// Per-partition applied-update count (the "weight version").
@@ -39,6 +41,7 @@ fn tagged(b: u64) -> Vec<Tensor> {
 }
 
 impl MockExecutor {
+    /// Mock over `p` partitions, all counters zeroed.
     pub fn new(p: usize) -> Self {
         MockExecutor {
             p,

@@ -22,7 +22,9 @@ use std::collections::BinaryHeap;
 /// Per-partition compute costs in seconds.
 #[derive(Debug, Clone)]
 pub struct StageCosts {
+    /// Forward time per partition, seconds.
     pub fwd: Vec<f64>,
+    /// Backward time per partition, seconds.
     pub bwd: Vec<f64>,
     /// Bytes of activations crossing register e (one direction);
     /// gradients are assumed symmetric.
@@ -30,6 +32,7 @@ pub struct StageCosts {
 }
 
 impl StageCosts {
+    /// Number of partitions the cost vectors describe.
     pub fn num_partitions(&self) -> usize {
         self.fwd.len()
     }
@@ -64,6 +67,7 @@ impl Default for CommModel {
 }
 
 impl CommModel {
+    /// Register-crossing delay for a message of `bytes`.
     pub fn delay(&self, bytes: f64) -> f64 {
         self.hops * (self.latency + bytes / self.bandwidth)
     }
@@ -74,9 +78,12 @@ impl CommModel {
     }
 }
 
+/// Stage-to-accelerator mapping (see the module docs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Mapping {
+    /// K+1 workers: worker p runs both FS_p and BKS_p.
     Paired,
+    /// 2K+1 workers: separate forward/backward accelerators.
     Full,
 }
 
@@ -115,6 +122,20 @@ impl Ord for Event {
 }
 
 /// Simulate `n_batches` of pipelined training; returns makespan seconds.
+///
+/// With the analytic FLOPs cost model this runs entirely offline from
+/// a built-in native config:
+///
+/// ```
+/// use pipestale::pipeline::perfsim::{
+///     analytic_costs, simulate_nonpipelined, simulate_pipelined, CommModel, Mapping,
+/// };
+/// let meta = pipestale::backend::native_config("lenet5_4s").unwrap();
+/// let costs = analytic_costs(&meta, 50e9); // 50 GFLOP/s accelerators
+/// let tp = simulate_pipelined(&costs, &CommModel::free(), Mapping::Paired, 100);
+/// let tn = simulate_nonpipelined(&costs, 100);
+/// assert!(tn / tp > 1.0, "pipelining must beat the 1-accelerator baseline");
+/// ```
 pub fn simulate_pipelined(
     costs: &StageCosts,
     comm: &CommModel,

@@ -69,9 +69,13 @@ impl ActivationFifo {
 /// Per-completed-batch training record.
 #[derive(Debug, Clone)]
 pub struct TrainEvent {
+    /// The mini-batch this event belongs to (feed order).
     pub batch_id: u64,
+    /// Mean training loss of the batch.
     pub loss: f32,
+    /// Correct predictions in the batch (a count, as f32).
     pub correct: f32,
+    /// Samples in the batch.
     pub batch_size: usize,
     /// Cycle at which the fused last stage processed this batch (the
     /// threaded runtime, which has no global cycles, records batch_id).
@@ -92,14 +96,17 @@ pub struct FlowControl {
 }
 
 impl FlowControl {
+    /// New accounting with an optional in-flight occupancy cap.
     pub fn new(cap: Option<u64>) -> Self {
         FlowControl { cap, fed: 0, retired: 0 }
     }
 
+    /// Batches fed into the pipe so far.
     pub fn fed(&self) -> u64 {
         self.fed
     }
 
+    /// Batches fully retired (backward complete on every partition).
     pub fn retired(&self) -> u64 {
         self.retired
     }
@@ -114,10 +121,12 @@ impl FlowControl {
         self.cap.map_or(true, |c| self.in_flight() < c)
     }
 
+    /// Count one batch entering the pipe.
     pub fn record_fed(&mut self) {
         self.fed += 1;
     }
 
+    /// Count one batch fully retiring from the pipe.
     pub fn record_retired(&mut self) {
         debug_assert!(self.retired < self.fed, "retire without a matching feed");
         self.retired += 1;
@@ -148,6 +157,7 @@ impl EventLedger {
         EventLedger { keep: true, ..EventLedger::default() }
     }
 
+    /// Record the next train event; events must arrive in batch order.
     pub fn record(&mut self, e: TrainEvent) -> Result<()> {
         if e.batch_id != self.recorded {
             bail!(
@@ -163,6 +173,8 @@ impl EventLedger {
         Ok(())
     }
 
+    /// Record a batch's full retirement; retires must be monotone and
+    /// never precede the batch's train event.
     pub fn retire(&mut self, batch_id: u64) -> Result<()> {
         if batch_id != self.retired {
             bail!("retire order violated: got batch {batch_id}, expected {}", self.retired);
@@ -174,10 +186,12 @@ impl EventLedger {
         Ok(())
     }
 
+    /// Train events recorded so far.
     pub fn recorded(&self) -> u64 {
         self.recorded
     }
 
+    /// Retirements recorded so far.
     pub fn retired(&self) -> u64 {
         self.retired
     }
@@ -190,6 +204,7 @@ impl EventLedger {
         Ok(())
     }
 
+    /// Hand back the kept events (empty for a validate-only ledger).
     pub fn into_events(self) -> Vec<TrainEvent> {
         self.events
     }
@@ -198,13 +213,20 @@ impl EventLedger {
 /// Input for one fed mini-batch.
 #[derive(Debug, Clone)]
 pub struct Feed {
+    /// Monotone batch identifier (feed order).
     pub batch_id: u64,
+    /// Per-batch dropout/shuffle seed threaded to every stage.
     pub seed: i32,
+    /// The input mini-batch.
     pub x: Tensor,
+    /// Integer class labels, one per sample.
     pub labels: IntTensor,
 }
 
+/// The cycle-accurate register pipeline of Figure 4 (plus the
+/// non-pipelined `sequential_step` over the same executables).
 pub struct Pipeline<E: StageExecutor> {
+    /// The stage compute this pipeline drives.
     pub exec: E,
     p: usize,
     fwd_reg: Vec<Option<InFlight>>,
@@ -224,6 +246,7 @@ pub struct Pipeline<E: StageExecutor> {
 }
 
 impl<E: StageExecutor> Pipeline<E> {
+    /// Build an empty (drained) pipeline over an executor.
     pub fn new(exec: E, batch_size: usize) -> Self {
         let p = exec.num_partitions();
         assert!(p >= 1);
@@ -242,10 +265,12 @@ impl<E: StageExecutor> Pipeline<E> {
         }
     }
 
+    /// Number of partitions P = K+1.
     pub fn num_partitions(&self) -> usize {
         self.p
     }
 
+    /// Cycles executed so far (sequential steps count one cycle).
     pub fn cycles_run(&self) -> u64 {
         self.cycle
     }

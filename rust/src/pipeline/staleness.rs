@@ -5,8 +5,11 @@ use crate::meta::ConfigMeta;
 /// Per-partition staleness report.
 #[derive(Debug, Clone)]
 pub struct PartitionStaleness {
+    /// Partition index (1-based, matching `meta.json`).
     pub partition: usize,
+    /// Inclusive paper-layer range `[lo, hi]` the partition spans.
     pub layer_range: (usize, usize),
+    /// Trainable scalars in the partition.
     pub param_count: usize,
     /// Paper's "degree of staleness": 2(K - i + 1) for stage i (1-based).
     pub degree: usize,
@@ -15,15 +18,21 @@ pub struct PartitionStaleness {
     pub extra_activation_copies: usize,
 }
 
+/// Whole-config staleness accounting (the `inspect` subcommand).
 #[derive(Debug, Clone)]
 pub struct StalenessReport {
+    /// Config name.
     pub config: String,
+    /// Paper-style stage count 2K+1 (K register pairs).
     pub paper_stages: usize,
+    /// Fraction of trainable weights trained with stale gradients.
     pub stale_weight_fraction: f64,
+    /// Per-partition breakdown, pipeline order.
     pub partitions: Vec<PartitionStaleness>,
 }
 
 impl StalenessReport {
+    /// Compute the §3 accounting from a config's metadata.
     pub fn from_meta(meta: &ConfigMeta) -> Self {
         let partitions = meta
             .partitions

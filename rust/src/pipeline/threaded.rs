@@ -58,8 +58,11 @@ const WORKER_POLL: Duration = Duration::from_millis(10);
 /// thread itself, so backends whose handles are not `Send` (PJRT)
 /// work unchanged; the factory is what crosses the spawn boundary.
 pub trait WorkerBackend: Clone + Send + 'static {
+    /// The per-worker stage compute this backend constructs.
     type Stage: WorkerStage;
 
+    /// Build partition `idx`'s stage compute (called on the worker
+    /// thread itself).
     fn make_stage(
         &self,
         meta: &ConfigMeta,
@@ -93,6 +96,8 @@ impl WorkerBackend for NativeWorkerBackend {
 #[derive(Clone, Copy, Debug, Default)]
 pub struct XlaWorkerBackend;
 
+/// One XLA worker's stage compute: a private PJRT client plus the
+/// partition's compiled programs and weights.
 pub struct XlaWorkerStage {
     /// Keeps the PJRT client alive for the engine's executables.
     _runtime: Runtime,
@@ -177,6 +182,7 @@ impl Occupancy {
 /// Launch-time knobs for the threaded runtime.
 #[derive(Debug, Clone, Copy)]
 pub struct ThreadedOptions {
+    /// In-flight occupancy (fixes every worker's 1F1B schedule).
     pub occupancy: Occupancy,
     /// Coordinator-side liveness guard: if no worker event arrives
     /// within this window, the run is declared stalled and shut down
@@ -464,10 +470,12 @@ impl ThreadedPipeline {
         }
     }
 
+    /// The config's mini-batch size.
     pub fn batch_size(&self) -> usize {
         self.batch_size
     }
 
+    /// Number of partitions (== worker threads).
     pub fn num_partitions(&self) -> usize {
         self.p
     }

@@ -96,6 +96,20 @@ impl PoolStats {
             self.reuses as f64 / total as f64
         }
     }
+
+    /// Counter deltas since an earlier snapshot (`retained_scalars` is
+    /// a level, not a counter, and is carried over as-is). The standard
+    /// probe shape for zero-allocation assertions: snapshot, run the
+    /// steady-state loop, assert `delta(..).fresh_allocs == 0`.
+    pub fn delta(&self, since: &PoolStats) -> PoolStats {
+        PoolStats {
+            fresh_allocs: self.fresh_allocs - since.fresh_allocs,
+            reuses: self.reuses - since.reuses,
+            recycled: self.recycled - since.recycled,
+            discarded: self.discarded - since.discarded,
+            retained_scalars: self.retained_scalars,
+        }
+    }
 }
 
 struct PoolInner {
@@ -217,6 +231,7 @@ impl TensorPool {
         PoolVec { data, home: Arc::clone(&self.inner) }
     }
 
+    /// Snapshot the pool's counters.
     pub fn stats(&self) -> PoolStats {
         self.inner.stats()
     }
@@ -252,11 +267,21 @@ pub fn adopt(data: Vec<f32>) -> PoolVec {
 /// Installs a fresh private pool for the current thread; restores the
 /// previous pool on drop. Lets tests assert on counters without
 /// interference from parallel test threads.
+///
+/// ```
+/// use pipestale::pool::PoolScope;
+/// let scope = PoolScope::new();
+/// let pool = scope.pool().clone();
+/// drop(pool.acquire(64));
+/// let _again = pool.acquire(64); // served from the shelf
+/// assert_eq!(pool.stats().reuses, 1);
+/// ```
 pub struct PoolScope {
     pool: TensorPool,
 }
 
 impl PoolScope {
+    /// Install a fresh private pool for the current thread.
     #[allow(clippy::new_without_default)]
     pub fn new() -> PoolScope {
         let inner = Arc::new(PoolInner::new());
@@ -264,6 +289,7 @@ impl PoolScope {
         PoolScope { pool: TensorPool { inner } }
     }
 
+    /// The scope's pool handle (clone it to outlive the scope).
     pub fn pool(&self) -> &TensorPool {
         &self.pool
     }
@@ -284,18 +310,22 @@ pub struct PoolVec {
 }
 
 impl PoolVec {
+    /// Read-only view of the buffer.
     pub fn as_slice(&self) -> &[f32] {
         &self.data
     }
 
+    /// Mutable view of the buffer.
     pub fn as_mut_slice(&mut self) -> &mut [f32] {
         &mut self.data
     }
 
+    /// Number of scalars in the buffer.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// True for a zero-length lease.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
@@ -343,18 +373,22 @@ pub struct Storage {
 }
 
 impl Storage {
+    /// Wrap a pool lease as shared storage.
     pub fn from_pool_vec(buf: PoolVec) -> Storage {
         Storage { buf: Arc::new(buf) }
     }
 
+    /// Read-only view of the elements.
     pub fn as_slice(&self) -> &[f32] {
         &self.buf
     }
 
+    /// Number of scalars stored.
     pub fn len(&self) -> usize {
         self.buf.len()
     }
 
+    /// True for zero-length storage.
     pub fn is_empty(&self) -> bool {
         self.buf.is_empty()
     }

@@ -5,6 +5,7 @@
 //! private pool for the current thread — parallel test threads cannot
 //! perturb the counters.
 
+use pipestale::backend::kernels::{self, ActKind};
 use pipestale::optim::{kernel, Schedule, Sgd};
 use pipestale::pipeline::mock::MockExecutor;
 use pipestale::pipeline::{Feed, Pipeline};
@@ -188,6 +189,82 @@ fn steady_state_cycle_allocates_no_backing_stores() {
     let events = pipe.drain().unwrap();
     assert!(!events.is_empty());
     assert!(pipe.is_drained());
+}
+
+#[test]
+fn gemm_kernel_scratch_reaches_zero_alloc_steady_state() {
+    // The GEMM lowering leases all its scratch (packing panels, im2col
+    // buffers, preactivation gradients) from the pool at a fixed set of
+    // sizes per model, so a warm training step must perform zero fresh
+    // backing-store allocations — the same acceptance criterion the
+    // scheduler cycle meets, now extended to the compute kernels.
+    let scope = PoolScope::new();
+    let pool = scope.pool().clone();
+    let mut rng = Pcg32::seeded(0x6E77);
+    let (n, h, w, cin, cout, k) = (2usize, 8usize, 8usize, 3usize, 4usize, 3usize);
+    let x: Vec<f32> = (0..n * h * w * cin).map(|_| rng.normal()).collect();
+    let wgt: Vec<f32> = (0..k * k * cin * cout).map(|_| rng.normal()).collect();
+    let (din, dout) = (n * h * w * cin / n, 10);
+    let dwgt: Vec<f32> = (0..din * dout).map(|_| rng.normal()).collect();
+    let dbias: Vec<f32> = (0..dout).map(|_| rng.normal()).collect();
+
+    let mut conv_y = vec![0.0; n * h * w * cout];
+    let mut conv_dx = vec![0.0; x.len()];
+    let mut conv_dw = vec![0.0; wgt.len()];
+    let mut fc_y = vec![0.0; n * dout];
+    let mut fc_dx = vec![0.0; n * din];
+    let mut fc_dw = vec![0.0; din * dout];
+    let mut fc_db = vec![0.0; dout];
+    let mut step = || {
+        kernels::conv2d_forward(&x, n, h, w, cin, &wgt, k, cout, 1, true, None, &mut conv_y);
+        conv_dx.fill(0.0);
+        conv_dw.fill(0.0);
+        kernels::conv2d_backward(
+            &x,
+            n,
+            h,
+            w,
+            cin,
+            &wgt,
+            k,
+            cout,
+            1,
+            true,
+            &conv_y,
+            &mut conv_dx,
+            &mut conv_dw,
+            None,
+        );
+        kernels::dense_forward(&x, n, din, &dwgt, &dbias, dout, ActKind::Tanh, &mut fc_y);
+        fc_dx.fill(0.0);
+        fc_dw.fill(0.0);
+        fc_db.fill(0.0);
+        kernels::dense_backward(
+            &x,
+            n,
+            din,
+            &dwgt,
+            dout,
+            ActKind::Tanh,
+            &fc_y,
+            &fc_y,
+            &mut fc_dx,
+            &mut fc_dw,
+            &mut fc_db,
+        );
+    };
+
+    step(); // warmup primes every scratch size class
+    let warm = pool.stats();
+    for _ in 0..20 {
+        step();
+    }
+    let delta = pool.stats().delta(&warm);
+    assert_eq!(
+        delta.fresh_allocs, 0,
+        "warm GEMM kernels must lease all scratch from the pool: {delta:?}"
+    );
+    assert!(delta.reuses > 0, "steady-state kernels must hit the pool: {delta:?}");
 }
 
 #[test]

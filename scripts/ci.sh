@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# Tier-1 verification: build, tests, coverage floor, formatting.
+# Tier-1 verification: build, tests (incl. doctests), docs, coverage
+# floor, formatting.
 #
 # Everything runs offline against the bundled stub backend (see
 # rust/DESIGN.md §Backends); artifact/XLA-dependent tests skip
@@ -7,6 +8,9 @@
 # The coverage floor (scripts/test_floor.txt) counts *executed*
 # (non-skipped) tests: a regression that turns native coverage back
 # into skips fails CI even though every remaining test still passes.
+# Doctests are folded into the same floor: they run as a separate,
+# explicitly-counted pass (the main pass excludes them via
+# --lib/--bins/--tests so nothing is counted twice).
 # Pass --bench to also run the hot-path microbench and refresh
 # results/BENCH_micro.json.
 set -euo pipefail
@@ -18,7 +22,12 @@ cargo build --release --workspace
 # --nocapture so the per-test "skipping:" markers reach the log.
 TEST_LOG="$(mktemp)"
 trap 'rm -f "$TEST_LOG"' EXIT
-cargo test -q --workspace -- --nocapture 2>&1 | tee "$TEST_LOG"
+# --examples keeps the example binaries compiling (they hold no tests,
+# so they add nothing to the counted totals).
+cargo test -q --workspace --lib --bins --tests --examples -- --nocapture 2>&1 | tee "$TEST_LOG"
+
+# Doctests: a separate pass appended to the same counted log.
+cargo test -q --doc -p pipestale 2>&1 | tee -a "$TEST_LOG"
 
 passed=$({ grep -Eo '[0-9]+ passed' "$TEST_LOG" || true; } | awk '{s+=$1} END {print s+0}')
 skipped=$(grep -c 'skipping:' "$TEST_LOG" || true)
@@ -39,6 +48,12 @@ fi
 # counts each test once.
 echo "[ci] rerunning threaded-native suite under RUST_TEST_THREADS=1"
 RUST_TEST_THREADS=1 cargo test -q --test threaded_native
+
+# Docs build warning-free: #![warn(missing_docs)] is enabled in
+# src/lib.rs, so -D warnings turns an undocumented public item (or a
+# broken intra-doc link) into a CI failure.
+echo "[ci] building docs with -D warnings"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps -p pipestale
 
 cargo fmt --all --check
 
