@@ -315,6 +315,29 @@ fn main() {
         rep.pair("threaded_vs_scheduler_native", before, after);
     }
 
+    // ---- checkpoint store (fault-tolerance storage path) ----------------
+    // What one supervisor segment boundary costs: an atomic rotating
+    // save (tmp + fsync + rename + prune), and a newest-valid restore
+    // (checksum + structural scan). DESIGN.md §8.
+    {
+        let meta = pipestale::backend::native_config("native_lenet_small").unwrap();
+        let params = ModelParams::init(&meta.partitions, 5).unwrap();
+        let dir = std::env::temp_dir().join(format!("bench_ckpts_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let store = pipestale::model::checkpoint::CheckpointStore::open(&dir, 3).unwrap();
+        let mut iter = 0u64;
+        let st = bench("checkpoint store save+rotate (lenet-small)", 2, 0.5, || {
+            iter += 10;
+            std::hint::black_box(store.save(&params, iter).unwrap());
+        });
+        rep.push(st);
+        let st = bench("checkpoint store newest-valid restore", 2, 0.5, || {
+            std::hint::black_box(store.newest_valid(Some(&meta)).unwrap());
+        });
+        rep.push(st);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
     // ---- artifact-dependent sections ------------------------------------
     if pipestale::artifacts_present() {
         let st = bench("meta.json parse (resnet110_4s)", 2, 0.5, || {

@@ -58,7 +58,10 @@ pub struct NativePartition {
     pub params: PartitionParams,
     /// Per-partition SGD optimizer (own LR scale, own velocity).
     pub optim: Sgd,
-    /// Weight updates applied so far (`last`/`backward` calls).
+    /// Weight updates applied so far (`last`/`backward` calls) — the
+    /// LR-schedule position. Seeded from `params.version` so a
+    /// partition rebuilt from a checkpoint (or relaunched at a segment
+    /// boundary) continues the schedule where it left off.
     pub update_count: usize,
 }
 
@@ -104,7 +107,8 @@ impl NativePartition {
             params.params.len(),
             params.state.len()
         );
-        Ok(NativePartition { meta, nodes, offsets, params, optim, update_count: 0 })
+        let update_count = params.version as usize;
+        Ok(NativePartition { meta, nodes, offsets, params, optim, update_count })
     }
 
     fn node_params(&self, i: usize) -> &[Tensor] {

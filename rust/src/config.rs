@@ -96,6 +96,40 @@ impl RuntimeKind {
     }
 }
 
+/// What the threaded supervisor does when a worker fails (panic, hang,
+/// or fatal error) mid-run. See DESIGN.md §8.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OnFailure {
+    /// Propagate the first failure (default; matches pre-supervisor
+    /// behavior).
+    Fail,
+    /// Tear down, restore the newest valid checkpoint, replay the data
+    /// stream, and relaunch — up to `max_restarts` per segment.
+    Restart,
+    /// Like `Restart`, but when the retry budget is exhausted fall back
+    /// to single-occupancy scheduling and finish degraded.
+    Degrade,
+}
+
+impl OnFailure {
+    pub fn parse(s: &str) -> Result<OnFailure> {
+        match s {
+            "fail" => Ok(OnFailure::Fail),
+            "restart" => Ok(OnFailure::Restart),
+            "degrade" => Ok(OnFailure::Degrade),
+            _ => Err(anyhow!("unknown on-failure policy {s:?} (fail|restart|degrade)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OnFailure::Fail => "fail",
+            OnFailure::Restart => "restart",
+            OnFailure::Degrade => "degrade",
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct RunConfig {
     /// Artifact config name under artifacts/ (e.g. "resnet20_4s") or a
@@ -128,6 +162,28 @@ pub struct RunConfig {
     pub resume_from: Option<PathBuf>,
     /// Write a checkpoint of the final weights here.
     pub save_to: Option<PathBuf>,
+    /// Failure policy for the threaded runtime (fail|restart|degrade).
+    pub on_failure: OnFailure,
+    /// Restart budget per training segment before giving up (Restart)
+    /// or degrading (Degrade).
+    pub max_restarts: u32,
+    /// Base of the capped exponential relaunch backoff, in ms.
+    pub restart_backoff_ms: u64,
+    /// Save a rotating checkpoint every N retired iterations
+    /// (0 = no periodic checkpoints; requires `ckpt_dir` when set).
+    pub ckpt_every: u64,
+    /// Directory for rotating periodic checkpoints. Passing it as
+    /// `resume_from` resumes from the newest valid file inside.
+    pub ckpt_dir: Option<PathBuf>,
+    /// How many rotating checkpoints to keep in `ckpt_dir`.
+    pub ckpt_keep: usize,
+    /// Watchdog timeout: a stage with no heartbeat for this long is
+    /// declared hung; responsive workers with no batch progress for
+    /// this long are declared deadlocked.
+    pub stall_timeout_ms: u64,
+    /// Deterministic fault plan for soak tests (see pipeline::faults
+    /// for the grammar); threaded runtime only.
+    pub fault_plan: Option<String>,
 }
 
 impl RunConfig {
@@ -148,6 +204,14 @@ impl RunConfig {
             stale_lr_scale: 1.0,
             resume_from: None,
             save_to: None,
+            on_failure: OnFailure::Fail,
+            max_restarts: 3,
+            restart_backoff_ms: 250,
+            ckpt_every: 0,
+            ckpt_dir: None,
+            ckpt_keep: 3,
+            stall_timeout_ms: 60_000,
+            fault_plan: None,
         }
     }
 
@@ -172,6 +236,23 @@ impl RunConfig {
                     .unwrap_or(Json::Null),
             ),
             ("stale_lr_scale", json::num(self.stale_lr_scale)),
+            ("on_failure", json::s(self.on_failure.name())),
+            ("max_restarts", json::num(self.max_restarts as f64)),
+            ("restart_backoff_ms", json::num(self.restart_backoff_ms as f64)),
+            ("ckpt_every", json::num(self.ckpt_every as f64)),
+            (
+                "ckpt_dir",
+                self.ckpt_dir
+                    .as_ref()
+                    .map(|p| json::s(&p.display().to_string()))
+                    .unwrap_or(Json::Null),
+            ),
+            ("ckpt_keep", json::num(self.ckpt_keep as f64)),
+            ("stall_timeout_ms", json::num(self.stall_timeout_ms as f64)),
+            (
+                "fault_plan",
+                self.fault_plan.as_ref().map(|p| json::s(p)).unwrap_or(Json::Null),
+            ),
         ])
     }
 
@@ -201,6 +282,20 @@ impl RunConfig {
         rc.stale_lr_scale = getn("stale_lr_scale", 1.0);
         if let Some(d) = j.get("data_dir").and_then(Json::as_str) {
             rc.data_dir = Some(PathBuf::from(d));
+        }
+        if let Some(p) = j.get("on_failure").and_then(Json::as_str) {
+            rc.on_failure = OnFailure::parse(p)?;
+        }
+        rc.max_restarts = getn("max_restarts", rc.max_restarts as f64) as u32;
+        rc.restart_backoff_ms = getn("restart_backoff_ms", rc.restart_backoff_ms as f64) as u64;
+        rc.ckpt_every = getn("ckpt_every", 0.0) as u64;
+        if let Some(d) = j.get("ckpt_dir").and_then(Json::as_str) {
+            rc.ckpt_dir = Some(PathBuf::from(d));
+        }
+        rc.ckpt_keep = getn("ckpt_keep", rc.ckpt_keep as f64) as usize;
+        rc.stall_timeout_ms = getn("stall_timeout_ms", rc.stall_timeout_ms as f64) as u64;
+        if let Some(p) = j.get("fault_plan").and_then(Json::as_str) {
+            rc.fault_plan = Some(p.to_string());
         }
         Ok(rc)
     }
@@ -269,6 +364,48 @@ mod tests {
         // configs without the key (older files) keep the default
         let legacy = Json::parse("{\"config\": \"x\"}").unwrap();
         assert_eq!(RunConfig::from_json(&legacy).unwrap().runtime, RuntimeKind::Scheduler);
+    }
+
+    #[test]
+    fn on_failure_parsing() {
+        assert_eq!(OnFailure::parse("fail").unwrap(), OnFailure::Fail);
+        assert_eq!(OnFailure::parse("restart").unwrap(), OnFailure::Restart);
+        assert_eq!(OnFailure::parse("degrade").unwrap(), OnFailure::Degrade);
+        assert!(OnFailure::parse("retry").is_err());
+        for p in [OnFailure::Fail, OnFailure::Restart, OnFailure::Degrade] {
+            assert_eq!(OnFailure::parse(p.name()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn fault_tolerance_fields_roundtrip() {
+        let mut rc = RunConfig::new("native_lenet_small_4s");
+        rc.on_failure = OnFailure::Degrade;
+        rc.max_restarts = 5;
+        rc.restart_backoff_ms = 40;
+        rc.ckpt_every = 10;
+        rc.ckpt_dir = Some(PathBuf::from("/tmp/ckpts"));
+        rc.ckpt_keep = 2;
+        rc.stall_timeout_ms = 1500;
+        rc.fault_plan = Some("panic@1:12;corrupt@0".to_string());
+        let back = RunConfig::from_json(&rc.to_json()).unwrap();
+        assert_eq!(back.on_failure, OnFailure::Degrade);
+        assert_eq!(back.max_restarts, 5);
+        assert_eq!(back.restart_backoff_ms, 40);
+        assert_eq!(back.ckpt_every, 10);
+        assert_eq!(back.ckpt_dir, rc.ckpt_dir);
+        assert_eq!(back.ckpt_keep, 2);
+        assert_eq!(back.stall_timeout_ms, 1500);
+        assert_eq!(back.fault_plan, rc.fault_plan);
+        // legacy configs without the keys keep the defaults
+        let legacy = Json::parse("{\"config\": \"x\"}").unwrap();
+        let d = RunConfig::from_json(&legacy).unwrap();
+        assert_eq!(d.on_failure, OnFailure::Fail);
+        assert_eq!(d.max_restarts, 3);
+        assert_eq!(d.ckpt_every, 0);
+        assert_eq!(d.ckpt_dir, None);
+        assert_eq!(d.stall_timeout_ms, 60_000);
+        assert_eq!(d.fault_plan, None);
     }
 
     #[test]

@@ -103,6 +103,16 @@ impl Batcher {
     pub fn batches_per_epoch(&self) -> usize {
         self.order.len() / self.batch
     }
+
+    /// Burn `n` batches without materializing them. Restart-after-
+    /// checkpoint replay: a fresh `Batcher` with the original seed plus
+    /// `skip(at)` lands on exactly the batch the interrupted run would
+    /// have fed next, including epoch-boundary reshuffles.
+    pub fn skip(&mut self, n: usize) {
+        for _ in 0..n {
+            self.next_indices();
+        }
+    }
 }
 
 /// Build train/test datasets for a config: real files when present under
@@ -189,6 +199,21 @@ mod tests {
         // only 5 left -> reshuffle, epoch++
         b.next_indices();
         assert_eq!(b.epoch, 1);
+    }
+
+    #[test]
+    fn batcher_skip_replays_interrupted_stream() {
+        // Crossing an epoch boundary (len 30, batch 10 -> 3 per epoch)
+        // exercises the reshuffle inside the burned region.
+        let mut full = Batcher::new(30, 10, 7);
+        for _ in 0..5 {
+            full.next_indices();
+        }
+        let want: Vec<usize> = full.next_indices().to_vec();
+        let mut resumed = Batcher::new(30, 10, 7);
+        resumed.skip(5);
+        assert_eq!(resumed.epoch, full.epoch);
+        assert_eq!(resumed.next_indices(), &want[..]);
     }
 
     #[test]

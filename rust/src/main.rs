@@ -12,7 +12,7 @@
 
 use anyhow::{anyhow, Result};
 
-use pipestale::config::{Backend, Mode, RunConfig, RuntimeKind};
+use pipestale::config::{Backend, Mode, OnFailure, RunConfig, RuntimeKind};
 use pipestale::memory::{pipedream_stash_bytes, MemoryReport};
 use pipestale::meta::ConfigMeta;
 use pipestale::pipeline::perfsim::{
@@ -83,8 +83,16 @@ fn cmd_train(args: &[String]) -> Result<()> {
             .opt("stale-lr-scale", "1.0", "LR multiplier for stale partitions (Table 7)")
             .opt("data-dir", "", "directory with real MNIST/CIFAR files")
             .opt("out", "", "write loss/eval CSVs with this prefix")
-            .opt("resume", "", "initialize weights from this checkpoint")
-            .opt("save-checkpoint", "", "write final weights to this path"),
+            .opt("resume", "", "initialize weights from this checkpoint file or dir")
+            .opt("save-checkpoint", "", "write final weights to this path")
+            .opt("on-failure", "fail", "fail | restart | degrade (threaded runtime)")
+            .opt("max-restarts", "3", "restart budget per segment before giving up")
+            .opt("restart-backoff-ms", "250", "base of the capped exponential relaunch backoff")
+            .opt("ckpt-every", "0", "rotating checkpoint every N iters (0 = off; needs --ckpt-dir)")
+            .opt("ckpt-dir", "", "directory for rotating checkpoints")
+            .opt("ckpt-keep", "3", "rotating checkpoints to keep")
+            .opt("stall-timeout-ms", "60000", "watchdog: declare a stage hung after this long")
+            .opt("fault-plan", "", "inject faults, e.g. 'panic@1:12;stall@2:30:4000;corrupt@0'"),
         args,
     )?;
     let mut rc = RunConfig::new(m.get("config"));
@@ -108,17 +116,37 @@ fn cmd_train(args: &[String]) -> Result<()> {
     if !m.get("save-checkpoint").is_empty() {
         rc.save_to = Some(m.get("save-checkpoint").into());
     }
+    rc.on_failure = OnFailure::parse(m.get("on-failure"))?;
+    rc.max_restarts = m.get_u64("max-restarts").map_err(|e| anyhow!(e))? as u32;
+    rc.restart_backoff_ms = m.get_u64("restart-backoff-ms").map_err(|e| anyhow!(e))?;
+    rc.ckpt_every = m.get_u64("ckpt-every").map_err(|e| anyhow!(e))?;
+    if !m.get("ckpt-dir").is_empty() {
+        rc.ckpt_dir = Some(m.get("ckpt-dir").into());
+    }
+    rc.ckpt_keep = m.get_usize("ckpt-keep").map_err(|e| anyhow!(e))?;
+    rc.stall_timeout_ms = m.get_u64("stall-timeout-ms").map_err(|e| anyhow!(e))?;
+    if !m.get("fault-plan").is_empty() {
+        rc.fault_plan = Some(m.get("fault-plan").to_string());
+    }
 
     let res = pipestale::train::run(&rc)?;
+    let recovery = if res.degraded {
+        format!(" ({} restarts, degraded to single occupancy)", res.restarts)
+    } else if res.restarts > 0 {
+        format!(" ({} restarts)", res.restarts)
+    } else {
+        String::new()
+    };
     println!(
-        "{} [{}/{}] {} iters: final test acc {:.2}%, train loss {:.4}, wall {:.1}s",
+        "{} [{}/{}] {} iters: final test acc {:.2}%, train loss {:.4}, wall {:.1}s{}",
         res.config,
         res.mode,
         res.runtime,
         res.iters,
         100.0 * res.final_accuracy,
         res.final_train_loss,
-        res.wall_seconds
+        res.wall_seconds,
+        recovery
     );
     if !m.get("out").is_empty() {
         let prefix = m.get("out");

@@ -30,7 +30,9 @@ pub struct PartitionEngine {
     pub params: PartitionParams,
     /// Per-partition SGD optimizer.
     pub optim: Sgd,
-    /// Weight updates applied so far.
+    /// Weight updates applied so far — the LR-schedule position, seeded
+    /// from `params.version` so checkpoint restores continue the
+    /// schedule where they left off.
     pub update_count: usize,
     scratch: InputScratch,
 }
@@ -43,12 +45,13 @@ impl PartitionEngine {
         params: PartitionParams,
         optim: Sgd,
     ) -> Self {
+        let update_count = params.version as usize;
         PartitionEngine {
             meta,
             programs,
             params,
             optim,
-            update_count: 0,
+            update_count,
             scratch: InputScratch::new(),
         }
     }

@@ -1,0 +1,485 @@
+//! Deterministic fault injection for the threaded runtime.
+//!
+//! A [`FaultPlan`] scripts failures at exact points — worker panics,
+//! hard stalls, sub-watchdog delays, and checkpoint corruption — so
+//! recovery paths can be soak-tested reproducibly (CLI `--fault-plan`,
+//! CI, and the resilience test suite all share this machinery; it is
+//! first-class, not test-only).
+//!
+//! Trigger model: worker faults fire on a stage's *N-th stage call*
+//! (forward / fused-last / backward). The per-stage op counters live in
+//! the shared [`FaultInjector`], so they accumulate across supervisor
+//! relaunches — a trigger addresses a point of *absolute* progress, and
+//! can therefore land in a segment that only runs after earlier
+//! segments were checkpointed (the restore-from-checkpoint path is
+//! reachable). Because every worker follows the deterministic 1F1B
+//! schedule (`pipeline::threaded` module docs), triggers are
+//! deterministic up to the small counter skew surviving workers accrue
+//! while an abort propagates; recovery itself restores bitwise state
+//! regardless of where in a segment a fault lands. Checkpoint faults
+//! fire on the K-th checkpoint *save*, counted across the whole run.
+//!
+//! Every fault is one-shot: the [`FaultInjector`] is shared (via `Arc`)
+//! across supervisor relaunches, so a fired fault stays fired — the
+//! transient-fault model under which checkpoint-restart makes progress.
+//!
+//! Plan grammar (`;` or `,` separated, whitespace ignored):
+//!
+//! ```text
+//! panic@S:N        unwinding panic on stage S's op N
+//! fail@S:N         error return (Fatal path) on stage S's op N
+//! stall@S:N:MS     sleep MS ms on stage S's op N (≥ watchdog: hung)
+//! delay@S:N:MS     sleep MS ms on stage S's op N (< watchdog: slow)
+//! corrupt@K        bit-flip the K-th checkpoint save
+//! truncate@K       truncate the K-th checkpoint save
+//! seeded@SEED:P:N  deterministic soak mix for P stages, ops < N
+//! ```
+
+use std::fmt;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::meta::ConfigMeta;
+use crate::model::PartitionParams;
+use crate::optim::Sgd;
+use crate::tensor::{IntTensor, Tensor};
+use crate::util::rng::Pcg32;
+
+use super::executor::{LastResult, WorkerStage};
+use super::threaded::WorkerBackend;
+
+/// What an injected fault does when its trigger point is reached.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Unwinding panic on the worker thread (caught by the runtime and
+    /// converted into a Fatal event).
+    Panic,
+    /// Error return from the stage call (the ordinary Fatal path).
+    Fail,
+    /// Hard sleep, meant to exceed the watchdog timeout (a hung stage).
+    Stall,
+    /// Soft sleep, meant to stay below the watchdog timeout (a slow
+    /// stage the watchdog must *not* flag).
+    Delay,
+    /// Flip one byte of the just-written checkpoint file (checksum
+    /// mismatch on restore).
+    CorruptCkpt,
+    /// Truncate the just-written checkpoint file (short read on
+    /// restore).
+    TruncateCkpt,
+}
+
+/// One scripted fault: a [`FaultKind`] plus its trigger coordinates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fault {
+    /// What happens at the trigger point.
+    pub kind: FaultKind,
+    /// Worker/stage index for worker faults; unused (zero) for
+    /// checkpoint faults.
+    pub stage: usize,
+    /// Trigger: 0-based stage-op count for worker faults, 0-based
+    /// checkpoint-save count for checkpoint faults.
+    pub at: u64,
+    /// Sleep duration for `Stall`/`Delay`; zero for the other kinds.
+    pub ms: u64,
+}
+
+impl fmt::Display for Fault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.kind {
+            FaultKind::Panic => write!(f, "panic@{}:{}", self.stage, self.at),
+            FaultKind::Fail => write!(f, "fail@{}:{}", self.stage, self.at),
+            FaultKind::Stall => write!(f, "stall@{}:{}:{}", self.stage, self.at, self.ms),
+            FaultKind::Delay => write!(f, "delay@{}:{}:{}", self.stage, self.at, self.ms),
+            FaultKind::CorruptCkpt => write!(f, "corrupt@{}", self.at),
+            FaultKind::TruncateCkpt => write!(f, "truncate@{}", self.at),
+        }
+    }
+}
+
+/// A parsed fault-injection script (see the module docs for the
+/// grammar). The default plan is empty: nothing fires.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// The scripted faults, in plan order.
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    /// Parse the `;`/`,`-separated plan grammar. An empty string is the
+    /// empty plan.
+    pub fn parse(text: &str) -> Result<FaultPlan> {
+        let mut faults = Vec::new();
+        for part in text.split([';', ',']) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (kind, rest) = part
+                .split_once('@')
+                .ok_or_else(|| anyhow!("fault {part:?}: expected kind@args"))?;
+            let nums: Vec<u64> = rest
+                .split(':')
+                .map(|t| {
+                    t.trim()
+                        .parse::<u64>()
+                        .map_err(|_| anyhow!("fault {part:?}: bad number {t:?}"))
+                })
+                .collect::<Result<_>>()?;
+            let args = |n: usize| -> Result<&[u64]> {
+                if nums.len() != n {
+                    bail!("fault {part:?}: expected {n} ':'-separated numbers, got {}", nums.len());
+                }
+                Ok(&nums)
+            };
+            let worker = |kind: FaultKind, n: usize| -> Result<Fault> {
+                let a = args(n)?;
+                Ok(Fault {
+                    kind,
+                    stage: a[0] as usize,
+                    at: a[1],
+                    ms: a.get(2).copied().unwrap_or(0),
+                })
+            };
+            match kind {
+                "panic" => faults.push(worker(FaultKind::Panic, 2)?),
+                "fail" => faults.push(worker(FaultKind::Fail, 2)?),
+                "stall" => faults.push(worker(FaultKind::Stall, 3)?),
+                "delay" => faults.push(worker(FaultKind::Delay, 3)?),
+                "corrupt" => {
+                    let a = args(1)?;
+                    faults.push(Fault { kind: FaultKind::CorruptCkpt, stage: 0, at: a[0], ms: 0 });
+                }
+                "truncate" => {
+                    let a = args(1)?;
+                    faults.push(Fault { kind: FaultKind::TruncateCkpt, stage: 0, at: a[0], ms: 0 });
+                }
+                "seeded" => {
+                    let a = args(3)?;
+                    faults.extend(FaultPlan::seeded(a[0], a[1] as usize, a[2]).faults);
+                }
+                other => bail!(
+                    "unknown fault kind {other:?} (panic|fail|stall|delay|corrupt|truncate|seeded)"
+                ),
+            }
+        }
+        Ok(FaultPlan { faults })
+    }
+
+    /// Deterministic soak mix for a `stages`-worker pipeline whose
+    /// stages each run fewer than `max_op` ops: one panic, one
+    /// sub-watchdog delay, and one corrupted checkpoint, at
+    /// seed-derived points. Same seed, same plan — always.
+    pub fn seeded(seed: u64, stages: usize, max_op: u64) -> FaultPlan {
+        let stages = stages.max(1) as u32;
+        let max_op = max_op.max(1).min(u32::MAX as u64) as u32;
+        let mut rng = Pcg32::seeded(seed ^ 0xfa17_7a61);
+        let faults = vec![
+            Fault {
+                kind: FaultKind::Panic,
+                stage: rng.below(stages) as usize,
+                at: rng.below(max_op) as u64,
+                ms: 0,
+            },
+            Fault {
+                kind: FaultKind::Delay,
+                stage: rng.below(stages) as usize,
+                at: rng.below(max_op) as u64,
+                ms: 1 + rng.below(20) as u64,
+            },
+            Fault { kind: FaultKind::CorruptCkpt, stage: 0, at: rng.below(3) as u64, ms: 0 },
+        ];
+        FaultPlan { faults }
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let parts: Vec<String> = self.faults.iter().map(Fault::to_string).collect();
+        write!(f, "{}", parts.join(";"))
+    }
+}
+
+/// An armed [`FaultPlan`]: checks triggers at runtime and fires each
+/// fault at most once. Shared by `Arc` between the supervisor and every
+/// relaunched worker generation, so a fired fault stays fired across
+/// restarts (transient faults — the model under which restart makes
+/// forward progress).
+#[derive(Debug, Default)]
+pub struct FaultInjector {
+    faults: Vec<Fault>,
+    fired: Vec<AtomicBool>,
+    ckpts_saved: AtomicU64,
+    /// Per-stage op counters, shared across worker generations so that
+    /// trigger points address absolute progress (see the module docs).
+    stage_ops: Vec<AtomicU64>,
+}
+
+/// Upper bound on addressable stages for per-stage op counters; far
+/// above any real pipeline depth here (paper configs use P ≤ 8).
+const MAX_STAGES: usize = 64;
+
+impl FaultInjector {
+    /// Arm a plan.
+    pub fn new(plan: FaultPlan) -> Self {
+        let fired = plan.faults.iter().map(|_| AtomicBool::new(false)).collect();
+        let stage_ops = (0..MAX_STAGES).map(|_| AtomicU64::new(0)).collect();
+        FaultInjector {
+            faults: plan.faults,
+            fired,
+            ckpts_saved: AtomicU64::new(0),
+            stage_ops,
+        }
+    }
+
+    /// Consume and return stage `stage`'s next 0-based op index.
+    /// Out-of-range stages (≥ `MAX_STAGES`) get `u64::MAX`, which no
+    /// plan entry can target.
+    pub fn next_op(&self, stage: usize) -> u64 {
+        self.stage_ops.get(stage).map_or(u64::MAX, |c| c.fetch_add(1, Ordering::SeqCst))
+    }
+
+    /// True when the plan is empty (nothing will ever fire).
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// How many faults have fired so far.
+    pub fn fired_count(&self) -> usize {
+        self.fired.iter().filter(|f| f.load(Ordering::SeqCst)).count()
+    }
+
+    /// Worker-side trigger check, called before stage `stage`'s `op`-th
+    /// stage call: may sleep (stall/delay), return an error (fail), or
+    /// panic (panic). A no-op at non-trigger points.
+    pub fn before_op(&self, stage: usize, op: u64) -> Result<()> {
+        for (f, fired) in self.faults.iter().zip(&self.fired) {
+            if f.stage != stage || f.at != op {
+                continue;
+            }
+            match f.kind {
+                FaultKind::Panic => {
+                    if !fired.swap(true, Ordering::SeqCst) {
+                        log::warn!("fault plan: injecting panic at stage {stage} op {op}");
+                        panic!("fault plan: injected panic at stage {stage} op {op}");
+                    }
+                }
+                FaultKind::Fail => {
+                    if !fired.swap(true, Ordering::SeqCst) {
+                        bail!("fault plan: injected failure at stage {stage} op {op}");
+                    }
+                }
+                FaultKind::Stall | FaultKind::Delay => {
+                    if !fired.swap(true, Ordering::SeqCst) {
+                        log::warn!(
+                            "fault plan: stage {stage} sleeping {}ms at op {op}",
+                            f.ms
+                        );
+                        std::thread::sleep(Duration::from_millis(f.ms));
+                    }
+                }
+                FaultKind::CorruptCkpt | FaultKind::TruncateCkpt => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Checkpoint-side trigger check, called after every checkpoint
+    /// save with the written path: damages the file in place when this
+    /// save's 0-based index matches a `corrupt@K`/`truncate@K` entry.
+    pub fn after_checkpoint(&self, path: &Path) -> Result<()> {
+        let k = self.ckpts_saved.fetch_add(1, Ordering::SeqCst);
+        for (f, fired) in self.faults.iter().zip(&self.fired) {
+            let hit = matches!(f.kind, FaultKind::CorruptCkpt | FaultKind::TruncateCkpt)
+                && f.at == k
+                && !fired.swap(true, Ordering::SeqCst);
+            if !hit {
+                continue;
+            }
+            let bytes = std::fs::read(path)
+                .with_context(|| format!("fault plan: reading {}", path.display()))?;
+            match f.kind {
+                FaultKind::CorruptCkpt => {
+                    let mut b = bytes;
+                    let mid = b.len() / 2;
+                    b[mid] ^= 0xFF;
+                    std::fs::write(path, &b)?;
+                }
+                _ => std::fs::write(path, &bytes[..bytes.len() / 3])?,
+            }
+            log::warn!("fault plan: damaged checkpoint save #{k} at {}", path.display());
+        }
+        Ok(())
+    }
+}
+
+/// [`WorkerBackend`] decorator that wraps every stage it builds in a
+/// [`FaultyStage`], so an armed [`FaultInjector`] sees every stage call
+/// of every worker generation. With an empty plan the overhead is one
+/// counter bump and a scan of an empty list per op.
+#[derive(Clone, Debug)]
+pub struct FaultyWorkerBackend<B: WorkerBackend> {
+    inner: B,
+    injector: Arc<FaultInjector>,
+}
+
+impl<B: WorkerBackend> FaultyWorkerBackend<B> {
+    /// Wrap `inner`, injecting the faults armed in `injector`.
+    pub fn new(inner: B, injector: Arc<FaultInjector>) -> Self {
+        FaultyWorkerBackend { inner, injector }
+    }
+}
+
+impl<B: WorkerBackend> WorkerBackend for FaultyWorkerBackend<B> {
+    type Stage = FaultyStage<B::Stage>;
+
+    fn make_stage(
+        &self,
+        meta: &ConfigMeta,
+        idx: usize,
+        params: PartitionParams,
+        optim: Sgd,
+    ) -> Result<FaultyStage<B::Stage>> {
+        Ok(FaultyStage {
+            inner: self.inner.make_stage(meta, idx, params, optim)?,
+            stage: idx,
+            injector: Arc::clone(&self.injector),
+        })
+    }
+}
+
+/// A [`WorkerStage`] that consults the shared [`FaultInjector`] before
+/// delegating each stage call; op indices come from the injector's
+/// shared per-stage counters, so they keep counting across relaunches.
+pub struct FaultyStage<S: WorkerStage> {
+    inner: S,
+    stage: usize,
+    injector: Arc<FaultInjector>,
+}
+
+impl<S: WorkerStage> FaultyStage<S> {
+    fn hook(&mut self) -> Result<()> {
+        let op = self.injector.next_op(self.stage);
+        self.injector.before_op(self.stage, op)
+    }
+}
+
+impl<S: WorkerStage> WorkerStage for FaultyStage<S> {
+    fn forward(&mut self, seed: i32, carry: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.hook()?;
+        self.inner.forward(seed, carry)
+    }
+
+    fn last(&mut self, seed: i32, carry: &[Tensor], labels: &IntTensor) -> Result<LastResult> {
+        self.hook()?;
+        self.inner.last(seed, carry, labels)
+    }
+
+    fn backward(
+        &mut self,
+        seed: i32,
+        carry_in: &[Tensor],
+        gcarry_out: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        self.hook()?;
+        self.inner.backward(seed, carry_in, gcarry_out)
+    }
+
+    fn into_params(self) -> PartitionParams {
+        self.inner.into_params()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_grammar_roundtrip() {
+        let text = "panic@1:30; stall@2:10:4000, delay@0:3:25;corrupt@1;truncate@0;fail@3:7";
+        let p = FaultPlan::parse(text).unwrap();
+        assert_eq!(p.faults.len(), 6);
+        assert_eq!(p.faults[0], Fault { kind: FaultKind::Panic, stage: 1, at: 30, ms: 0 });
+        assert_eq!(p.faults[1], Fault { kind: FaultKind::Stall, stage: 2, at: 10, ms: 4000 });
+        let back = FaultPlan::parse(&p.to_string()).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn plan_rejects_malformed_entries() {
+        for bad in
+            ["panic", "panic@", "panic@x:1", "panic@1", "stall@1:2", "corrupt@1:2", "frob@1:2"]
+        {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} should be rejected");
+        }
+        assert!(FaultPlan::parse("").unwrap().faults.is_empty());
+        assert!(FaultPlan::parse(" ; ").unwrap().faults.is_empty());
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic() {
+        let a = FaultPlan::parse("seeded@7:4:100").unwrap();
+        let b = FaultPlan::parse("seeded@7:4:100").unwrap();
+        assert_eq!(a, b);
+        assert!(!a.faults.is_empty());
+        assert!(a.faults.iter().any(|f| f.kind == FaultKind::Panic));
+        assert!(a
+            .faults
+            .iter()
+            .all(|f| f.stage < 4 && (f.at < 100 || matches!(f.kind, FaultKind::CorruptCkpt))));
+    }
+
+    #[test]
+    fn injector_fires_each_fault_once() {
+        let inj = FaultInjector::new(FaultPlan::parse("fail@1:3;delay@1:4:1").unwrap());
+        assert!(inj.before_op(1, 2).is_ok());
+        assert!(inj.before_op(0, 3).is_ok());
+        assert!(inj.before_op(1, 3).is_err(), "fail fault must fire");
+        assert!(inj.before_op(1, 3).is_ok(), "one-shot: same trigger is spent");
+        assert!(inj.before_op(1, 4).is_ok(), "delay sleeps, no error");
+        assert_eq!(inj.fired_count(), 2);
+    }
+
+    #[test]
+    fn injected_panic_unwinds_and_is_one_shot() {
+        let inj = FaultInjector::new(FaultPlan::parse("panic@0:0").unwrap());
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| inj.before_op(0, 0)));
+        assert!(r.is_err(), "panic fault must unwind");
+        assert!(inj.before_op(0, 0).is_ok(), "spent after firing");
+        assert_eq!(inj.fired_count(), 1);
+    }
+
+    #[test]
+    fn op_counters_accumulate_across_generations() {
+        let inj = FaultInjector::new(FaultPlan::default());
+        assert_eq!(inj.next_op(2), 0);
+        assert_eq!(inj.next_op(2), 1, "per-stage counter keeps counting");
+        assert_eq!(inj.next_op(3), 0, "counters are per stage");
+        assert_eq!(inj.next_op(MAX_STAGES + 1), u64::MAX, "out-of-range stage never triggers");
+    }
+
+    #[test]
+    fn injector_damages_scheduled_checkpoint_saves() {
+        let dir = std::env::temp_dir().join(format!("faults_ck_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ck.pst");
+        let inj = FaultInjector::new(FaultPlan::parse("corrupt@1;truncate@2").unwrap());
+        let body = vec![7u8; 64];
+        std::fs::write(&path, &body).unwrap();
+        inj.after_checkpoint(&path).unwrap(); // save #0: untouched
+        assert_eq!(std::fs::read(&path).unwrap(), body);
+        inj.after_checkpoint(&path).unwrap(); // save #1: bit-flipped
+        let flipped = std::fs::read(&path).unwrap();
+        assert_eq!(flipped.len(), 64);
+        assert_ne!(flipped, body);
+        std::fs::write(&path, &body).unwrap();
+        inj.after_checkpoint(&path).unwrap(); // save #2: truncated
+        assert!(std::fs::read(&path).unwrap().len() < 64);
+        inj.after_checkpoint(&path).unwrap(); // save #3: plan exhausted
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -9,10 +9,13 @@
 //! * `hybrid` — paper §4 schedule switching;
 //! * `threaded` — executor-generic thread-per-accelerator runtime with
 //!   channel registers (native or XLA workers, real concurrency);
+//! * `faults` — deterministic fault injection (scripted panics, stalls,
+//!   checkpoint corruption) for soak-testing the recovery paths;
 //! * `perfsim` — discrete-event timing model for Table 5 speedups.
 
 pub mod engine;
 pub mod executor;
+pub mod faults;
 pub mod hybrid;
 pub mod mock;
 pub mod perfsim;
@@ -22,10 +25,11 @@ pub mod threaded;
 
 pub use crate::backend::NativeExecutor;
 pub use executor::{LastResult, StageExecutor, WorkerStage, XlaExecutor};
+pub use faults::{Fault, FaultInjector, FaultKind, FaultPlan, FaultyWorkerBackend};
 pub use hybrid::{HybridSchedule, Phase};
 pub use scheduler::{EventLedger, Feed, FlowControl, Pipeline, TrainEvent};
 pub use staleness::StalenessReport;
 pub use threaded::{
-    NativeWorkerBackend, Occupancy, ThreadedOptions, ThreadedPipeline, WorkerBackend,
+    Heartbeat, NativeWorkerBackend, Occupancy, ThreadedOptions, ThreadedPipeline, WorkerBackend,
     XlaWorkerBackend,
 };

@@ -157,6 +157,21 @@ impl EventLedger {
         EventLedger { keep: true, ..EventLedger::default() }
     }
 
+    /// Validate-only ledger resuming after `base` batches are already
+    /// accounted for — checkpoint-restart: batches `0..base` were
+    /// recorded (and retired) by an earlier pipeline generation, so the
+    /// next expected batch id is `base` and `expect_complete` takes the
+    /// *absolute* feed count.
+    pub fn resume_from(base: u64) -> Self {
+        EventLedger { recorded: base, retired: base, ..EventLedger::default() }
+    }
+
+    /// Keeping ledger resuming at `base` (see [`EventLedger::resume_from`]);
+    /// `into_events` returns only the events recorded since `base`.
+    pub fn keeping_from(base: u64) -> Self {
+        EventLedger { keep: true, recorded: base, retired: base, ..EventLedger::default() }
+    }
+
     /// Record the next train event; events must arrive in batch order.
     pub fn record(&mut self, e: TrainEvent) -> Result<()> {
         if e.batch_id != self.recorded {
@@ -638,6 +653,36 @@ mod tests {
     fn event_ledger_rejects_retire_before_event() {
         let mut l = EventLedger::new();
         assert!(l.retire(0).is_err(), "retire without a train event must fail");
+    }
+
+    #[test]
+    fn event_ledger_resumes_at_absolute_batch_ids() {
+        let ev = |b: u64| TrainEvent {
+            batch_id: b,
+            loss: 0.0,
+            correct: 0.0,
+            batch_size: 1,
+            cycle: b,
+        };
+        // A resumed ledger expects the restart batch first, not batch 0.
+        let mut l = EventLedger::keeping_from(5);
+        assert!(l.record(ev(0)).is_err(), "pre-restart ids must be rejected");
+        l.record(ev(5)).unwrap();
+        l.retire(5).unwrap();
+        l.record(ev(6)).unwrap();
+        assert!(l.expect_complete(6).is_err(), "absolute count includes batch 6");
+        l.retire(6).unwrap();
+        l.expect_complete(7).unwrap();
+        assert_eq!((l.recorded(), l.retired()), (7, 7));
+        // Only the post-restart segment is kept.
+        let events: Vec<u64> = l.into_events().iter().map(|e| e.batch_id).collect();
+        assert_eq!(events, vec![5, 6]);
+        // Validate-only variant behaves identically minus storage.
+        let mut l = EventLedger::resume_from(2);
+        l.record(ev(2)).unwrap();
+        assert!(l.retire(1).is_err());
+        l.retire(2).unwrap();
+        assert!(l.into_events().is_empty());
     }
 
     #[test]

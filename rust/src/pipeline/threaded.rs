@@ -24,14 +24,22 @@
 //! Liveness: the full-occupancy schedule needs at most `2P-1` batches
 //! in flight, below the coordinator's `2P+2` feed cap.
 //!
-//! Failure handling: a worker that errors sets the shared shutdown
+//! Failure handling (DESIGN.md §8): a worker that errors — or panics;
+//! the worker body runs under `catch_unwind` — sets the shared shutdown
 //! flag *before* its channels drop and reports the original error;
 //! peers parked on their inboxes poll the flag, hand their weights
 //! back, and exit — no thread is left parked (regression-tested by
-//! fault injection).
+//! fault injection). Each worker additionally publishes [`Heartbeat`]
+//! counters; the coordinator's watchdog reads them to distinguish a
+//! *hung* stage (liveness counter frozen: stuck inside an op) from a
+//! merely *slow* one (still ticking), and a globally *stalled* pipe
+//! (every worker parked, no progress anywhere) — instead of the old
+//! blanket event timeout. Supervised restart on top of this lives in
+//! `train::run_threaded`.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -53,6 +61,11 @@ use super::scheduler::{EventLedger, FlowControl, TrainEvent};
 
 /// How often a parked worker re-checks the shutdown flag.
 const WORKER_POLL: Duration = Duration::from_millis(10);
+
+/// Upper bound on the coordinator's event-wait slice between watchdog
+/// checks (the lower bound is `stall_timeout / 4`, so short test
+/// timeouts are still detected promptly).
+const WATCHDOG_SLICE: Duration = Duration::from_millis(250);
 
 /// Builds one worker thread's stage compute. Called on the worker
 /// thread itself, so backends whose handles are not `Send` (PJRT)
@@ -196,6 +209,91 @@ impl Default for ThreadedOptions {
     }
 }
 
+/// Liveness counters one worker publishes for the coordinator's
+/// watchdog. Two monotone counters separate the failure modes:
+/// `alive` ticks whenever the worker thread is scheduled at all
+/// (inbox polls included), so a frozen `alive` means the thread is
+/// stuck *inside* a stage op (or dead); `progress` ticks only on real
+/// work (message consumed, stage op completed), so `alive` ticking
+/// while every worker's `progress` is frozen means all workers are
+/// parked polling — a logic deadlock. A slow-but-working stage ticks
+/// both and is never flagged.
+#[derive(Debug, Default)]
+pub struct Heartbeat {
+    alive: AtomicU64,
+    progress: AtomicU64,
+}
+
+impl Heartbeat {
+    fn tick_alive(&self) {
+        self.alive.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn tick_progress(&self) {
+        self.alive.fetch_add(1, Ordering::Relaxed);
+        self.progress.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Monotone liveness counter (any scheduling of the worker thread).
+    pub fn alive(&self) -> u64 {
+        self.alive.load(Ordering::Relaxed)
+    }
+
+    /// Monotone progress counter (messages consumed + ops completed).
+    pub fn progress(&self) -> u64 {
+        self.progress.load(Ordering::Relaxed)
+    }
+}
+
+/// Coordinator-side stall detector over the workers' [`Heartbeat`]s:
+/// remembers when each counter last changed and raises a per-stage
+/// "hung" error (frozen `alive`) or a pipeline-wide "stalled" error
+/// (total `progress` frozen) once a counter sits still for the full
+/// timeout window.
+struct Watchdog {
+    timeout: Duration,
+    alive_seen: Vec<(u64, Instant)>,
+    progress_seen: (u64, Instant),
+}
+
+impl Watchdog {
+    fn new(hbs: &[Arc<Heartbeat>], timeout: Duration) -> Self {
+        let now = Instant::now();
+        Watchdog {
+            timeout,
+            alive_seen: hbs.iter().map(|hb| (hb.alive(), now)).collect(),
+            progress_seen: (hbs.iter().map(|hb| hb.progress()).sum(), now),
+        }
+    }
+
+    fn check(&mut self, hbs: &[Arc<Heartbeat>]) -> Result<()> {
+        let now = Instant::now();
+        let mut total = 0u64;
+        for (idx, hb) in hbs.iter().enumerate() {
+            total = total.wrapping_add(hb.progress());
+            let a = hb.alive();
+            let seen = &mut self.alive_seen[idx];
+            if a != seen.0 {
+                *seen = (a, now);
+            } else if now.duration_since(seen.1) > self.timeout {
+                bail!(
+                    "stage {idx} hung: no heartbeat within {:?} (worker stuck inside an op or dead)",
+                    self.timeout
+                );
+            }
+        }
+        if total != self.progress_seen.0 {
+            self.progress_seen = (total, now);
+        } else if now.duration_since(self.progress_seen.1) > self.timeout {
+            bail!(
+                "pipeline stalled: workers responsive but no batch progress within {:?}",
+                self.timeout
+            );
+        }
+        Ok(())
+    }
+}
+
 /// Forward-path messages (coordinator -> worker 0 -> ... -> last).
 enum FwdMsg {
     /// A mini-batch travelling forward; labels ride through to the
@@ -229,6 +327,7 @@ struct Worker {
 /// Orchestrates P worker threads and feeds mini-batches.
 pub struct ThreadedPipeline {
     workers: Vec<Worker>,
+    heartbeats: Vec<Arc<Heartbeat>>,
     events: Receiver<FromWorker>,
     shutdown: Arc<AtomicBool>,
     p: usize,
@@ -285,6 +384,8 @@ impl ThreadedPipeline {
         }
 
         let mut workers = Vec::with_capacity(p);
+        let heartbeats: Vec<Arc<Heartbeat>> =
+            (0..p).map(|_| Arc::new(Heartbeat::default())).collect();
         for (idx, (pp, optim)) in params.partitions.into_iter().zip(optims).enumerate() {
             let fwd_rx = fwd_rxs[idx].take().expect("fwd receiver taken once");
             let bwd_rx = if idx + 1 < p { bwd_rxs[idx].take() } else { None };
@@ -294,6 +395,7 @@ impl ThreadedPipeline {
             let events = ev_tx.clone();
             let flag = Arc::clone(&shutdown);
             let backend = backend.clone();
+            let hb = Arc::clone(&heartbeats[idx]);
             let d_eff = opts.occupancy.warmup(p, idx);
             let batch = meta.batch;
             let handle = std::thread::Builder::new()
@@ -303,20 +405,30 @@ impl ThreadedPipeline {
                     // never contend on the global pool's lock, and a
                     // buffer dropped by a neighbour returns here.
                     let _pool = crate::pool::PoolScope::new();
-                    let result = backend.make_stage(&meta, idx, pp, optim).and_then(|stage| {
-                        run_worker(
-                            idx,
-                            p,
-                            stage,
-                            &fwd_rx,
-                            bwd_rx.as_ref(),
-                            next_fwd.as_ref(),
-                            prev_bwd.as_ref(),
-                            &events,
-                            &flag,
-                            d_eff,
-                            batch,
-                        )
+                    // catch_unwind so a *panicking* stage takes the
+                    // same orderly exit as an erroring one: flag set
+                    // before the channels drop, panic payload surfaced
+                    // as the Fatal message.
+                    let result = catch_unwind(AssertUnwindSafe(|| {
+                        backend.make_stage(&meta, idx, pp, optim).and_then(|stage| {
+                            run_worker(
+                                idx,
+                                p,
+                                stage,
+                                &fwd_rx,
+                                bwd_rx.as_ref(),
+                                next_fwd.as_ref(),
+                                prev_bwd.as_ref(),
+                                &events,
+                                &flag,
+                                &hb,
+                                d_eff,
+                                batch,
+                            )
+                        })
+                    }))
+                    .unwrap_or_else(|payload| {
+                        Err(anyhow!("panicked: {}", panic_message(payload.as_ref())))
                     });
                     if let Err(e) = result {
                         // Flag first, then report: peers parked on a
@@ -334,6 +446,7 @@ impl ThreadedPipeline {
         }
         Ok(ThreadedPipeline {
             workers,
+            heartbeats,
             events: ev_rx,
             shutdown,
             p,
@@ -353,16 +466,37 @@ impl ThreadedPipeline {
         &mut self,
         feeds: u64,
         global_seed: u64,
+        next_batch: F,
+    ) -> Result<(Vec<TrainEvent>, f64)>
+    where
+        F: FnMut(u64) -> (Tensor, IntTensor),
+    {
+        self.train_range(0, feeds, global_seed, next_batch)
+    }
+
+    /// Train batches `start..end` of a longer run (checkpoint-restart:
+    /// a fresh pipeline generation picks up where the checkpointed one
+    /// left off). Batch ids, per-batch seeds, and event accounting all
+    /// use *absolute* ids, so a segment retrained after a restore is
+    /// bitwise the run the failed generation would have produced.
+    pub fn train_range<F>(
+        &mut self,
+        start: u64,
+        end: u64,
+        global_seed: u64,
         mut next_batch: F,
     ) -> Result<(Vec<TrainEvent>, f64)>
     where
         F: FnMut(u64) -> (Tensor, IntTensor),
     {
         ensure!(!self.trained, "ThreadedPipeline::train may only run once per launch");
+        ensure!(start <= end, "train_range: start {start} past end {end}");
         self.trained = true;
-        let start = Instant::now();
+        let feeds = end - start;
+        let start_t = Instant::now();
         let mut flow = FlowControl::new(Some(self.cap));
-        let mut ledger = EventLedger::keeping();
+        let mut ledger = EventLedger::keeping_from(start);
+        let mut dog = Watchdog::new(&self.heartbeats, self.stall_timeout);
         // A failed send means worker 0 exited — on its own error (its
         // Fatal is already queued) or another worker's (whose Fatal
         // is). Stop feeding and drain the event queue so the original
@@ -371,7 +505,7 @@ impl ThreadedPipeline {
         let mut flushed = false;
         loop {
             while feeding && flow.fed() < feeds && flow.can_feed() {
-                let b = flow.fed();
+                let b = start + flow.fed();
                 let (x, labels) = next_batch(b);
                 let msg = FwdMsg::Batch {
                     batch_id: b,
@@ -392,7 +526,7 @@ impl ThreadedPipeline {
             if flow.retired() >= feeds {
                 break;
             }
-            match self.recv_event()? {
+            match self.recv_event(&mut dog)? {
                 FromWorker::Trained(e) => ledger.record(e)?,
                 FromWorker::Retired(b) => {
                     ledger.retire(b)?;
@@ -408,26 +542,38 @@ impl ThreadedPipeline {
                 FromWorker::Params(..) => {}
             }
         }
-        ledger.expect_complete(feeds)?;
-        Ok((ledger.into_events(), start.elapsed().as_secs_f64()))
+        ledger.expect_complete(end)?;
+        Ok((ledger.into_events(), start_t.elapsed().as_secs_f64()))
     }
 
     fn send_worker0(&self, msg: FwdMsg) -> Result<()> {
         self.workers[0].inbox.send(msg).map_err(|_| anyhow!("worker 0 hung up"))
     }
 
-    fn recv_event(&self) -> Result<FromWorker> {
-        match self.events.recv_timeout(self.stall_timeout) {
-            Ok(m) => Ok(m),
-            Err(RecvTimeoutError::Timeout) => {
-                self.shutdown.store(true, Ordering::SeqCst);
-                Err(anyhow!(
-                    "threaded pipeline stalled: no worker event within {:?}",
-                    self.stall_timeout
-                ))
+    /// Wait for the next worker event in short slices, consulting the
+    /// heartbeat watchdog between slices: a hung stage or deadlocked
+    /// pipe is detected within roughly one `stall_timeout` window even
+    /// while other workers keep producing events.
+    fn recv_event(&self, dog: &mut Watchdog) -> Result<FromWorker> {
+        let slice = (self.stall_timeout / 4).clamp(Duration::from_millis(5), WATCHDOG_SLICE);
+        loop {
+            match self.events.recv_timeout(slice) {
+                Ok(m) => return Ok(m),
+                Err(RecvTimeoutError::Timeout) => {
+                    if let Err(e) = dog.check(&self.heartbeats) {
+                        self.shutdown.store(true, Ordering::SeqCst);
+                        return Err(e);
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => return Err(anyhow!("all workers hung up")),
             }
-            Err(RecvTimeoutError::Disconnected) => Err(anyhow!("all workers hung up")),
         }
+    }
+
+    /// The workers' heartbeat counters, indexed by stage (watchdog
+    /// inputs; exposed for supervision and tests).
+    pub fn heartbeats(&self) -> &[Arc<Heartbeat>] {
+        &self.heartbeats
     }
 
     /// Stop workers and collect the trained weights.
@@ -500,16 +646,34 @@ enum Step<T> {
     Shutdown,
 }
 
+/// Extract a printable message from a panic payload (the `&str` /
+/// `String` cases cover `panic!` with a literal or a format string).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Blocking receive that polls the shutdown flag. A disconnect with
 /// the flag raised is an orderly shutdown, not an error — the flag is
-/// always set before a failing worker's channels drop.
-fn recv_msg<T>(rx: &Receiver<T>, shutdown: &AtomicBool, what: &str) -> Result<Step<T>> {
+/// always set before a failing worker's channels drop. Ticks the
+/// worker's `alive` heartbeat every poll (a parked worker is alive,
+/// not hung) and `progress` on every message consumed.
+fn recv_msg<T>(rx: &Receiver<T>, shutdown: &AtomicBool, hb: &Heartbeat, what: &str) -> Result<Step<T>> {
     loop {
+        hb.tick_alive();
         if shutdown.load(Ordering::SeqCst) {
             return Ok(Step::Shutdown);
         }
         match rx.recv_timeout(WORKER_POLL) {
-            Ok(m) => return Ok(Step::Got(m)),
+            Ok(m) => {
+                hb.tick_progress();
+                return Ok(Step::Got(m));
+            }
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => {
                 if shutdown.load(Ordering::SeqCst) {
@@ -545,6 +709,7 @@ fn run_worker<S: WorkerStage>(
     prev_bwd: Option<&Sender<BwdMsg>>,
     events: &Sender<FromWorker>,
     shutdown: &AtomicBool,
+    hb: &Heartbeat,
     d_eff: u64,
     batch_size: usize,
 ) -> Result<()> {
@@ -565,7 +730,7 @@ fn run_worker<S: WorkerStage>(
             || (fwd_open && fwd_done < bwd_done + d_eff + 1)
             || (!fwd_open && bwd_done == fwd_done);
         if take_fwd {
-            match recv_msg(fwd_rx, shutdown, "forward")? {
+            match recv_msg(fwd_rx, shutdown, hb, "forward")? {
                 Step::Shutdown => break 'run,
                 Step::Got(FwdMsg::Stop) => break 'run,
                 Step::Got(FwdMsg::Flush) => {
@@ -580,6 +745,7 @@ fn run_worker<S: WorkerStage>(
                     ensure!(fwd_open, "worker {idx}: batch {batch_id} after drain marker");
                     if is_last {
                         let res = stage.last(seed, &carry, &labels)?;
+                        hb.tick_progress();
                         let ev = TrainEvent {
                             batch_id,
                             loss: res.loss,
@@ -608,6 +774,7 @@ fn run_worker<S: WorkerStage>(
                         }
                     } else {
                         let out = stage.forward(seed, &carry)?;
+                        hb.tick_progress();
                         fifo.push_back((batch_id, seed, carry));
                         let tx = next_fwd.expect("non-last worker has a next stage");
                         let msg = FwdMsg::Batch { batch_id, seed, carry: out, labels };
@@ -620,7 +787,7 @@ fn run_worker<S: WorkerStage>(
             }
         } else {
             let rx = bwd_rx.expect("non-last worker has a backward inbox");
-            match recv_msg(rx, shutdown, "backward")? {
+            match recv_msg(rx, shutdown, hb, "backward")? {
                 Step::Shutdown => break 'run,
                 Step::Got(BwdMsg { batch_id, gcarry }) => {
                     let (saved_id, seed, saved) = fifo.pop_front().ok_or_else(|| {
@@ -631,6 +798,7 @@ fn run_worker<S: WorkerStage>(
                         "worker {idx}: FIFO order violated ({saved_id} vs {batch_id})"
                     );
                     let gin = stage.backward(seed, &saved, &gcarry)?;
+                    hb.tick_progress();
                     let done = match prev_bwd {
                         Some(tx) => {
                             send_to(tx, BwdMsg { batch_id, gcarry: gin }, shutdown, "backward")?

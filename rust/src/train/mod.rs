@@ -12,17 +12,22 @@
 
 pub mod metrics;
 
-use anyhow::{Context, Result};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
 
 use crate::backend::NativeExecutor;
-use crate::config::{Backend, Mode, RunConfig, RuntimeKind};
+use crate::config::{Backend, Mode, OnFailure, RunConfig, RuntimeKind};
 use crate::data::{batch_seed, load_or_synthesize, Batcher, Dataset, SyntheticSpec};
 use crate::meta::ConfigMeta;
+use crate::model::checkpoint::CheckpointStore;
 use crate::model::ModelParams;
 use crate::optim::{paper_schedule, Sgd};
 use crate::pipeline::{
-    EventLedger, Feed, HybridSchedule, NativeWorkerBackend, Occupancy, Phase, Pipeline,
-    StageExecutor, ThreadedOptions, ThreadedPipeline, XlaExecutor, XlaWorkerBackend,
+    EventLedger, FaultInjector, FaultPlan, FaultyWorkerBackend, Feed, HybridSchedule,
+    NativeWorkerBackend, Occupancy, Phase, Pipeline, StageExecutor, ThreadedOptions,
+    ThreadedPipeline, TrainEvent, WorkerBackend, XlaExecutor, XlaWorkerBackend,
 };
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
@@ -38,6 +43,12 @@ pub struct TrainResult {
     pub final_accuracy: f64,
     pub final_train_loss: f64,
     pub wall_seconds: f64,
+    /// Worker failures the threaded supervisor recovered from
+    /// (0 on the scheduler runtime and on clean runs).
+    pub restarts: u32,
+    /// True when the retry budget ran out and the run finished
+    /// single-occupancy under `--on-failure degrade`.
+    pub degraded: bool,
     pub recorder: Recorder,
 }
 
@@ -139,9 +150,32 @@ fn resolve_xla(rc: &RunConfig) -> bool {
 /// Run a full training experiment per the RunConfig, on whichever
 /// backend and runtime it selects (the two axes are orthogonal).
 pub fn run(rc: &RunConfig) -> Result<TrainResult> {
+    if rc.runtime == RuntimeKind::Scheduler {
+        anyhow::ensure!(
+            rc.fault_plan.is_none(),
+            "--fault-plan injects worker faults: use --runtime threaded"
+        );
+        anyhow::ensure!(
+            rc.on_failure == OnFailure::Fail,
+            "--on-failure {} supervises worker threads: use --runtime threaded",
+            rc.on_failure.name()
+        );
+    }
+    anyhow::ensure!(
+        rc.ckpt_every == 0 || rc.ckpt_dir.is_some(),
+        "--ckpt-every needs --ckpt-dir for the rotating checkpoint files"
+    );
     match rc.runtime {
         RuntimeKind::Scheduler => run_scheduler(rc),
         RuntimeKind::Threaded => run_threaded(rc),
+    }
+}
+
+/// Open the rotating checkpoint store when the config asks for one.
+fn checkpoint_store(rc: &RunConfig) -> Result<Option<CheckpointStore>> {
+    match &rc.ckpt_dir {
+        Some(dir) => Ok(Some(CheckpointStore::open(dir, rc.ckpt_keep)?)),
+        None => Ok(None),
     }
 }
 
@@ -161,8 +195,12 @@ fn run_scheduler(rc: &RunConfig) -> Result<TrainResult> {
 /// whichever backend the config resolves to. Pipelined mode runs the
 /// paper's full-occupancy concurrent schedule; sequential mode runs
 /// single-in-flight (bitwise-equal to the scheduler runtime's
-/// sequential training). Evaluation happens once, at the end, on a
-/// scheduler pipeline rebuilt from the returned weights.
+/// sequential training). Training runs under the checkpoint-restart
+/// supervisor (DESIGN.md §8): periodic rotating checkpoints, restart
+/// from the newest valid one on worker failure, optional degradation
+/// to single occupancy when the retry budget runs out. Evaluation
+/// happens once, at the end, on a scheduler pipeline rebuilt from the
+/// returned weights.
 pub fn run_threaded(rc: &RunConfig) -> Result<TrainResult> {
     let occupancy = match rc.mode {
         Mode::Pipelined => Occupancy::Full,
@@ -184,33 +222,42 @@ pub fn run_threaded(rc: &RunConfig) -> Result<TrainResult> {
             .with_context(|| format!("resolving native config {}", rc.config))?
     };
     let (train_ds, test_ds) = build_datasets(rc, &meta)?;
-    let params = initial_params(rc, &meta)?;
-    let optims = build_optims(&meta, rc.iters, rc.stale_lr_scale);
-    let opts = ThreadedOptions { occupancy, ..ThreadedOptions::default() };
-    let mut pipe = if use_xla {
-        ThreadedPipeline::launch_with(XlaWorkerBackend, &meta, params, optims, opts)?
-    } else {
-        ThreadedPipeline::launch_with(NativeWorkerBackend, &meta, params, optims, opts)?
+    let plan = match &rc.fault_plan {
+        Some(text) => FaultPlan::parse(text).context("parsing --fault-plan")?,
+        None => FaultPlan::default(),
     };
+    if !plan.faults.is_empty() {
+        log::warn!("fault plan armed: {plan}");
+    }
+    let injector = Arc::new(FaultInjector::new(plan));
+    let store = checkpoint_store(rc)?;
 
     log::info!(
-        "train {} [threaded]: mode={} iters={} batch={} P={} workers={}",
+        "train {} [threaded]: mode={} iters={} batch={} P={} on_failure={}",
         meta.config,
         rc.mode.name(),
         rc.iters,
         meta.batch,
         meta.partitions.len(),
-        meta.partitions.len()
+        rc.on_failure.name()
     );
-    let mut batcher = Batcher::new(train_ds.len(), meta.batch, rc.seed ^ 0xba7c4);
-    let (events, wall) = pipe.train(rc.iters, rc.seed, |_| {
-        let idxs = batcher.next_indices().to_vec();
-        train_ds.gather(&idxs)
-    })?;
-    let trained = pipe.shutdown()?;
+    let outcome = if use_xla {
+        supervise_threaded(XlaWorkerBackend, rc, &meta, &train_ds, &injector, store.as_ref(), occupancy)?
+    } else {
+        supervise_threaded(
+            NativeWorkerBackend,
+            rc,
+            &meta,
+            &train_ds,
+            &injector,
+            store.as_ref(),
+            occupancy,
+        )?
+    };
+    let trained = outcome.params;
 
     let mut rec = Recorder::new();
-    for e in &events {
+    for e in &outcome.events {
         rec.train_event(e);
     }
     if let Some(path) = &rc.save_to {
@@ -236,9 +283,178 @@ pub fn run_threaded(rc: &RunConfig) -> Result<TrainResult> {
         iters: rc.iters,
         final_accuracy,
         final_train_loss: rec.recent_loss(50),
-        wall_seconds: wall,
+        wall_seconds: outcome.wall,
+        restarts: outcome.restarts,
+        degraded: outcome.degraded,
         recorder: rec,
     })
+}
+
+/// What the threaded supervisor hands back after the run completes.
+struct SuperviseOutcome {
+    events: Vec<TrainEvent>,
+    params: ModelParams,
+    wall: f64,
+    restarts: u32,
+    degraded: bool,
+}
+
+/// First iteration of the segment after `at` (segments are
+/// `ckpt_every`-sized; 0 means one segment spanning the whole run).
+fn segment_end(at: u64, every: u64, iters: u64) -> u64 {
+    if every == 0 {
+        iters
+    } else {
+        (at + every).min(iters)
+    }
+}
+
+/// Where a (re)started generation picks up: the newest valid rotating
+/// checkpoint when one exists, the configured initial weights at batch
+/// 0 otherwise. Corrupt or truncated files in the store are skipped by
+/// `newest_valid`, so a damaged newest checkpoint costs one segment of
+/// recomputation, not the run.
+fn restore_point(
+    rc: &RunConfig,
+    meta: &ConfigMeta,
+    store: Option<&CheckpointStore>,
+) -> Result<(ModelParams, u64)> {
+    if let Some(store) = store {
+        if let Some((params, at)) = store.newest_valid(Some(meta)) {
+            log::info!("restored checkpoint at iter {at} from {}", store.dir().display());
+            return Ok((params, at));
+        }
+    }
+    Ok((initial_params(rc, meta)?, 0))
+}
+
+/// The checkpoint-restart supervisor (DESIGN.md §8). Training runs in
+/// `ckpt_every`-sized segments; each segment is one pipeline
+/// *generation* — launch, `train_range(at..end)` with absolute batch
+/// ids and a replayed data stream, drain, collect weights, checkpoint.
+/// Segment boundaries are drained, so a checkpoint is never torn and a
+/// restarted segment recomputes exactly the batches the failed
+/// generation owed: a run with mid-train failures is bitwise the
+/// segmented run without them.
+///
+/// On failure: tear down, back off (capped exponential), restore the
+/// newest valid checkpoint, rewind the event log to it, relaunch. The
+/// per-segment retry budget `max_restarts` bounds livelock on a
+/// persistent fault; exhausting it fails the run (`Restart`) or — once
+/// — drops to single occupancy for the remainder (`Degrade`), trading
+/// pipeline speedup for the sequential schedule's sturdier footprint.
+#[allow(clippy::too_many_arguments)]
+fn supervise_threaded<B: WorkerBackend>(
+    backend: B,
+    rc: &RunConfig,
+    meta: &ConfigMeta,
+    train_ds: &Dataset,
+    injector: &Arc<FaultInjector>,
+    store: Option<&CheckpointStore>,
+    occupancy: Occupancy,
+) -> Result<SuperviseOutcome> {
+    let mut occupancy = occupancy;
+    let (mut params, mut at) = restore_point(rc, meta, store)?;
+    let mut events: Vec<TrainEvent> = Vec::new();
+    let mut wall = 0.0f64;
+    let mut restarts = 0u32;
+    let mut degraded = false;
+    let mut budget_used = 0u32;
+    let stall_timeout = Duration::from_millis(rc.stall_timeout_ms.max(1));
+
+    while at < rc.iters {
+        let end = segment_end(at, rc.ckpt_every, rc.iters);
+        let attempt = run_segment(
+            &backend, rc, meta, train_ds, injector, &params, at, end, occupancy, stall_timeout,
+        );
+        match attempt {
+            Ok((ev, w, trained)) => {
+                events.extend(ev);
+                wall += w;
+                params = trained;
+                at = end;
+                budget_used = 0;
+                if let Some(store) = store {
+                    if rc.ckpt_every > 0 && at < rc.iters {
+                        let path = store.save(&params, at)?;
+                        injector.after_checkpoint(&path)?;
+                        log::info!("checkpointed iter {at} to {}", path.display());
+                    }
+                }
+            }
+            Err(e) => {
+                if rc.on_failure == OnFailure::Fail {
+                    return Err(e);
+                }
+                budget_used += 1;
+                restarts += 1;
+                if budget_used > rc.max_restarts {
+                    if rc.on_failure == OnFailure::Degrade && !degraded {
+                        degraded = true;
+                        occupancy = Occupancy::Single;
+                        budget_used = 0;
+                        log::warn!(
+                            "retry budget ({}) exhausted; degrading to single occupancy: {e:#}",
+                            rc.max_restarts
+                        );
+                    } else {
+                        return Err(e)
+                            .with_context(|| format!("retry budget ({}) exhausted", rc.max_restarts));
+                    }
+                } else {
+                    log::warn!(
+                        "worker failure (restart {budget_used}/{}): {e:#}",
+                        rc.max_restarts
+                    );
+                }
+                let exp = budget_used.saturating_sub(1).min(6);
+                let backoff = rc.restart_backoff_ms.saturating_mul(1u64 << exp).min(10_000);
+                if backoff > 0 {
+                    std::thread::sleep(Duration::from_millis(backoff));
+                }
+                let (p, a) = restore_point(rc, meta, store)?;
+                params = p;
+                at = a;
+                // The restore may land before segments we already hold
+                // events for (a damaged newer checkpoint was skipped):
+                // drop them — the replayed segments re-produce them.
+                events.retain(|ev| ev.batch_id < at);
+            }
+        }
+    }
+    Ok(SuperviseOutcome { events, params, wall, restarts, degraded })
+}
+
+/// One pipeline generation: launch fresh workers on `params`, replay
+/// the deterministic data stream up to `at`, train `at..end`, drain and
+/// hand the weights back. Everything a restart needs to redo lives in
+/// here; everything it must not redo (event log, checkpoints, fired
+/// faults) lives with the supervisor.
+#[allow(clippy::too_many_arguments)]
+fn run_segment<B: WorkerBackend>(
+    backend: &B,
+    rc: &RunConfig,
+    meta: &ConfigMeta,
+    train_ds: &Dataset,
+    injector: &Arc<FaultInjector>,
+    params: &ModelParams,
+    at: u64,
+    end: u64,
+    occupancy: Occupancy,
+    stall_timeout: Duration,
+) -> Result<(Vec<TrainEvent>, f64, ModelParams)> {
+    let optims = build_optims(meta, rc.iters, rc.stale_lr_scale);
+    let opts = ThreadedOptions { occupancy, stall_timeout };
+    let faulty = FaultyWorkerBackend::new(backend.clone(), Arc::clone(injector));
+    let mut pipe = ThreadedPipeline::launch_with(faulty, meta, params.clone(), optims, opts)?;
+    let mut batcher = Batcher::new(train_ds.len(), meta.batch, rc.seed ^ 0xba7c4);
+    batcher.skip(at as usize);
+    let (ev, w) = pipe.train_range(at, end, rc.seed, |_| {
+        let idxs = batcher.next_indices().to_vec();
+        train_ds.gather(&idxs)
+    })?;
+    let trained = pipe.shutdown()?;
+    Ok((ev, w, trained))
 }
 
 /// XLA-backend variant that reuses an existing runtime/artifacts
@@ -283,8 +499,22 @@ fn build_datasets(rc: &RunConfig, meta: &ConfigMeta) -> Result<(Dataset, Dataset
     Ok((train_ds, test_ds))
 }
 
+/// The run's starting weights: `--resume-from` a checkpoint file, or a
+/// checkpoint *directory* (rotating store: the newest valid file wins
+/// and damaged ones are skipped), or seeded random init.
 fn initial_params(rc: &RunConfig, meta: &ConfigMeta) -> Result<ModelParams> {
     match &rc.resume_from {
+        Some(path) if path.is_dir() => {
+            let store = CheckpointStore::open(path, rc.ckpt_keep)?;
+            let (p, at) = store.newest_valid(Some(meta)).ok_or_else(|| {
+                anyhow!("no valid checkpoint to resume from in {}", path.display())
+            })?;
+            log::info!(
+                "resumed weights from {} (newest valid, saved at iter {at})",
+                path.display()
+            );
+            Ok(p)
+        }
         Some(path) => {
             let (p, at) = crate::model::checkpoint::load(path)?;
             crate::model::checkpoint::validate(&p, meta)?;
@@ -317,6 +547,12 @@ fn train_loop<E: StageExecutor>(
     // Same event accounting the threaded coordinator enforces: every
     // fed batch produces exactly one event, in batch order.
     let mut ledger = EventLedger::new();
+    // Periodic rotating checkpoints (crash-resumable via
+    // `--resume-from <dir>`). NOTE: in pipelined mode each checkpoint
+    // drains the pipe first — a consistent snapshot, at the cost of a
+    // refill and the staleness blip that implies (like the hybrid
+    // switch, and like the threaded runtime's segment boundaries).
+    let store = checkpoint_store(rc)?;
     let start = std::time::Instant::now();
     let mut fed = 0u64;
 
@@ -357,6 +593,16 @@ fn train_loop<E: StageExecutor>(
             }
         }
         fed += 1;
+        if let Some(store) = &store {
+            if rc.ckpt_every > 0 && fed % rc.ckpt_every == 0 && fed < rc.iters {
+                for e in pipe.drain()? {
+                    ledger.record(e.clone())?;
+                    rec.train_event(&e);
+                }
+                let path = store.save(&pipe.exec.params_snapshot(), fed)?;
+                log::info!("checkpointed iter {fed} to {}", path.display());
+            }
+        }
         if rc.eval_every > 0 && fed % rc.eval_every == 0 {
             // NOTE: in pipelined mode some batches are still in flight;
             // eval reflects the weights as of this cycle, like the
@@ -387,6 +633,8 @@ fn train_loop<E: StageExecutor>(
         final_accuracy,
         final_train_loss: rec.recent_loss(50),
         wall_seconds: wall,
+        restarts: 0,
+        degraded: false,
         recorder: rec,
     })
 }

@@ -1,0 +1,396 @@
+//! Fault-tolerance test suite: deterministic fault injection against
+//! the threaded runtime's checkpoint-restart supervisor (DESIGN.md §8).
+//!
+//! The core claims under test, all offline on the native backend:
+//!
+//! * a worker panic mid-run tears the pipeline down, restores the
+//!   newest valid rotating checkpoint, replays the data stream, and
+//!   finishes with weights and a loss curve **bitwise equal** to the
+//!   same run without the fault (same `--ckpt-every` segmentation);
+//! * a hung stage is detected by the heartbeat watchdog and either
+//!   fails fast (`--on-failure fail`) or restarts; a slow-but-ticking
+//!   stage is never flagged;
+//! * exhausting the retry budget under `--on-failure degrade` finishes
+//!   the run single-occupancy, bitwise equal to a sequential run;
+//! * corrupt or truncated checkpoints are detected (trailing checksum)
+//!   and skipped in favor of an older valid one, costing recomputation
+//!   rather than the run.
+
+use std::path::PathBuf;
+
+use pipestale::backend::native_config;
+use pipestale::config::{Backend, Mode, OnFailure, RunConfig, RuntimeKind};
+use pipestale::data::{load_or_synthesize, SyntheticSpec};
+use pipestale::model::checkpoint::{self, CheckpointStore};
+use pipestale::model::ModelParams;
+use pipestale::train::TrainResult;
+
+/// A P=4 threaded-native run config, small enough for CI.
+fn rc4(mode: Mode, iters: u64) -> RunConfig {
+    let mut rc = RunConfig::new("native_lenet_small_4s");
+    rc.backend = Backend::Native;
+    rc.runtime = RuntimeKind::Threaded;
+    rc.mode = mode;
+    rc.iters = iters;
+    rc.train_size = 256;
+    rc.test_size = 48;
+    rc.noise = 0.8;
+    rc.stall_timeout_ms = 30_000;
+    rc.restart_backoff_ms = 1; // keep recovery tests fast
+    rc
+}
+
+/// Fresh per-test scratch path (removed first: earlier aborted runs of
+/// the same pid must not leak checkpoints into this one).
+fn fresh_path(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("resil_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&p).ok();
+    std::fs::remove_file(&p).ok();
+    p
+}
+
+/// Run to completion and read back the final weights via `--save-to`
+/// (the checkpoint file is the bitwise ground truth for comparisons).
+fn run_saving(rc: &mut RunConfig, tag: &str) -> (TrainResult, ModelParams) {
+    let out = fresh_path(&format!("{tag}_final"));
+    rc.save_to = Some(out.clone());
+    let res = pipestale::train::run(rc).unwrap();
+    let (params, at) = checkpoint::load(&out).unwrap();
+    assert_eq!(at, rc.iters);
+    std::fs::remove_file(&out).ok();
+    (res, params)
+}
+
+fn assert_params_eq(a: &ModelParams, b: &ModelParams) {
+    assert_eq!(a.partitions.len(), b.partitions.len());
+    for (i, (x, y)) in a.partitions.iter().zip(&b.partitions).enumerate() {
+        assert_eq!(x.version, y.version, "partition {i}: update count must match");
+        for (j, (t, u)) in x.params.iter().zip(&y.params).enumerate() {
+            assert_eq!(t.data(), u.data(), "partition {i} param {j} must be bitwise equal");
+        }
+        for (j, (t, u)) in x.state.iter().zip(&y.state).enumerate() {
+            assert_eq!(t.data(), u.data(), "partition {i} state {j} must be bitwise equal");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint-restart: recovery is bitwise-invisible in the results.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn panic_mid_run_recovers_from_checkpoint_and_completes() {
+    // Stage 1 runs 12 ops per 6-feed segment, so op 16 lands in the
+    // second segment — after the iter-6 checkpoint exists. The
+    // supervisor must restore it (not restart from scratch) and finish.
+    let mut faulted = rc4(Mode::Pipelined, 18);
+    faulted.ckpt_every = 6;
+    faulted.ckpt_dir = Some(fresh_path("panic_ckpts"));
+    faulted.on_failure = OnFailure::Restart;
+    faulted.fault_plan = Some("panic@1:16".to_string());
+    let (fres, fparams) = run_saving(&mut faulted, "panic_faulted");
+
+    let mut clean = rc4(Mode::Pipelined, 18);
+    clean.ckpt_every = 6;
+    clean.ckpt_dir = Some(fresh_path("panic_ckpts_clean"));
+    let (cres, cparams) = run_saving(&mut clean, "panic_clean");
+
+    assert_eq!(fres.restarts, 1, "exactly one recovery");
+    assert!(!fres.degraded);
+    assert_eq!(fres.recorder.train, cres.recorder.train, "loss curve must be bitwise identical");
+    assert_eq!(fres.final_accuracy, cres.final_accuracy);
+    assert_params_eq(&fparams, &cparams);
+    std::fs::remove_dir_all(faulted.ckpt_dir.unwrap()).ok();
+    std::fs::remove_dir_all(clean.ckpt_dir.unwrap()).ok();
+}
+
+#[test]
+fn sequential_recovery_bitwise_equals_uninterrupted() {
+    // Single-occupancy variant of the same claim: stage 2 runs 8 ops
+    // per 4-feed segment, so op 10 fails the second segment.
+    let mut faulted = rc4(Mode::Sequential, 12);
+    faulted.ckpt_every = 4;
+    faulted.ckpt_dir = Some(fresh_path("seq_ckpts"));
+    faulted.on_failure = OnFailure::Restart;
+    faulted.fault_plan = Some("panic@2:10".to_string());
+    let (fres, fparams) = run_saving(&mut faulted, "seq_faulted");
+
+    let mut clean = rc4(Mode::Sequential, 12);
+    clean.ckpt_every = 4;
+    clean.ckpt_dir = Some(fresh_path("seq_ckpts_clean"));
+    let (cres, cparams) = run_saving(&mut clean, "seq_clean");
+
+    assert_eq!(fres.restarts, 1);
+    assert_eq!(fres.recorder.train, cres.recorder.train);
+    assert_params_eq(&fparams, &cparams);
+    std::fs::remove_dir_all(faulted.ckpt_dir.unwrap()).ok();
+    std::fs::remove_dir_all(clean.ckpt_dir.unwrap()).ok();
+}
+
+#[test]
+fn degrade_finishes_single_occupancy_bitwise_equal_to_sequential() {
+    // Two panics on stage 1 against a budget of one: attempt 1 dies at
+    // op 4, attempt 2 dies at op 5 (counters persist across restarts),
+    // and the supervisor degrades. With no checkpoint store the whole
+    // run then re-runs single-occupancy from scratch — which must be
+    // bitwise the plain sequential run.
+    let mut faulted = rc4(Mode::Pipelined, 10);
+    faulted.on_failure = OnFailure::Degrade;
+    faulted.max_restarts = 1;
+    faulted.fault_plan = Some("panic@1:4;panic@1:5".to_string());
+    let (fres, fparams) = run_saving(&mut faulted, "degrade_faulted");
+
+    let mut seq = rc4(Mode::Sequential, 10);
+    let (sres, sparams) = run_saving(&mut seq, "degrade_seq");
+
+    assert!(fres.degraded, "budget exhaustion must degrade");
+    assert_eq!(fres.restarts, 2);
+    assert_eq!(fres.recorder.train, sres.recorder.train);
+    assert_eq!(fres.final_accuracy, sres.final_accuracy);
+    assert_params_eq(&fparams, &sparams);
+}
+
+#[test]
+fn restart_budget_exhaustion_fails_without_degrade() {
+    // Same double fault, but under `restart` the second budget overrun
+    // must surface as an error, not a degraded completion.
+    let mut rc = rc4(Mode::Pipelined, 10);
+    rc.on_failure = OnFailure::Restart;
+    rc.max_restarts = 1;
+    rc.fault_plan = Some("panic@1:4;panic@1:5".to_string());
+    let err = pipestale::train::run(&rc).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("retry budget"), "unexpected error: {msg}");
+}
+
+// ---------------------------------------------------------------------------
+// Watchdog: hung vs slow stages.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn stall_beyond_watchdog_fails_fast_under_fail_policy() {
+    let mut rc = rc4(Mode::Pipelined, 8);
+    rc.stall_timeout_ms = 300;
+    rc.fault_plan = Some("stall@2:6:3000".to_string());
+    let err = pipestale::train::run(&rc).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("hung"), "watchdog must flag the hung stage: {msg}");
+    assert!(msg.contains("stage 2"), "the stalled stage is named: {msg}");
+}
+
+#[test]
+fn stalled_stage_recovers_under_restart_policy() {
+    // The stall fires once; after the watchdog kills the generation,
+    // the relaunch runs clean from scratch (no checkpoint store).
+    let mut faulted = rc4(Mode::Pipelined, 6);
+    faulted.stall_timeout_ms = 200;
+    faulted.on_failure = OnFailure::Restart;
+    faulted.max_restarts = 2;
+    faulted.fault_plan = Some("stall@0:2:1500".to_string());
+    let (fres, fparams) = run_saving(&mut faulted, "stall_faulted");
+
+    let mut clean = rc4(Mode::Pipelined, 6);
+    let (cres, cparams) = run_saving(&mut clean, "stall_clean");
+
+    assert_eq!(fres.restarts, 1);
+    assert_eq!(fres.recorder.train, cres.recorder.train);
+    assert_params_eq(&fparams, &cparams);
+}
+
+#[test]
+fn delay_below_watchdog_is_tolerated_not_flagged() {
+    // A slow-but-ticking stage: the watchdog must not fire, the run
+    // must not restart, and the delay must not perturb the arithmetic.
+    let mut slow = rc4(Mode::Pipelined, 8);
+    slow.stall_timeout_ms = 5_000;
+    slow.on_failure = OnFailure::Restart;
+    slow.fault_plan = Some("delay@1:3:50".to_string());
+    let (sres, sparams) = run_saving(&mut slow, "delay_slow");
+
+    let mut clean = rc4(Mode::Pipelined, 8);
+    let (cres, cparams) = run_saving(&mut clean, "delay_clean");
+
+    assert_eq!(sres.restarts, 0, "a slow stage is not a failure");
+    assert!(!sres.degraded);
+    assert_eq!(sres.recorder.train, cres.recorder.train);
+    assert_params_eq(&sparams, &cparams);
+}
+
+// ---------------------------------------------------------------------------
+// Corruption: detected, skipped, healed.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn corrupt_newest_checkpoint_skipped_on_dir_restore() {
+    // Run A leaves rotating checkpoints at iters 3 and 6. Damaging the
+    // newest one by hand simulates a torn write that slipped past
+    // rename (e.g. media corruption); a rerun over the same store must
+    // skip it (trailing checksum), restore iter 3, replay 3..9, and
+    // land bitwise where run A did.
+    let dir = fresh_path("skip_ckpts");
+    let mut a = rc4(Mode::Sequential, 9);
+    a.ckpt_every = 3;
+    a.ckpt_dir = Some(dir.clone());
+    let (ares, aparams) = run_saving(&mut a, "skip_a");
+    assert_eq!(ares.recorder.train.len(), 9);
+
+    let store = CheckpointStore::open(&dir, 3).unwrap();
+    let iters: Vec<u64> = store.list().iter().map(|(i, _)| *i).collect();
+    assert_eq!(iters, vec![3, 6]);
+    let newest = store.path_for(6);
+    let mut bytes = std::fs::read(&newest).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&newest, &bytes).unwrap();
+
+    let mut b = rc4(Mode::Sequential, 9);
+    b.ckpt_every = 3;
+    b.ckpt_dir = Some(dir.clone());
+    let (bres, bparams) = run_saving(&mut b, "skip_b");
+
+    // Only iters 3..9 re-ran, and they match run A's tail exactly.
+    assert_eq!(bres.recorder.train.len(), 6);
+    assert_eq!(bres.recorder.train[..], ares.recorder.train[3..]);
+    assert_params_eq(&bparams, &aparams);
+    // The rerun re-saved iter 6 over the damaged file, healing the
+    // store: the newest checkpoint is valid again.
+    let healed = store.newest_valid(None).expect("a valid checkpoint must exist");
+    assert_eq!(healed.1, 6);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn injected_corruption_falls_back_past_damaged_checkpoint() {
+    // `corrupt@0` damages the very first save (iter 3); the later panic
+    // then forces a restore that finds no valid checkpoint at all and
+    // correctly falls back to scratch — completing bitwise equal to the
+    // clean segmented run, with the re-saved iter-3 checkpoint valid.
+    let mut faulted = rc4(Mode::Sequential, 9);
+    faulted.ckpt_every = 3;
+    faulted.ckpt_dir = Some(fresh_path("heal_ckpts"));
+    faulted.on_failure = OnFailure::Restart;
+    faulted.fault_plan = Some("corrupt@0;panic@0:10".to_string());
+    let (fres, fparams) = run_saving(&mut faulted, "heal_faulted");
+
+    let mut clean = rc4(Mode::Sequential, 9);
+    clean.ckpt_every = 3;
+    clean.ckpt_dir = Some(fresh_path("heal_ckpts_clean"));
+    let (cres, cparams) = run_saving(&mut clean, "heal_clean");
+
+    assert_eq!(fres.restarts, 1);
+    assert_eq!(fres.recorder.train, cres.recorder.train);
+    assert_params_eq(&fparams, &cparams);
+    let store = CheckpointStore::open(faulted.ckpt_dir.as_ref().unwrap(), 3).unwrap();
+    assert!(store.newest_valid(None).is_some(), "the store must heal after the rerun");
+    std::fs::remove_dir_all(faulted.ckpt_dir.unwrap()).ok();
+    std::fs::remove_dir_all(clean.ckpt_dir.unwrap()).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler-runtime periodic checkpoints + flag guards.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn scheduler_periodic_checkpoints_rotate_and_dir_resume_skips_truncated() {
+    let dir = fresh_path("sched_ckpts");
+    let mut rc = RunConfig::new("native_lenet_small");
+    rc.backend = Backend::Native;
+    rc.runtime = RuntimeKind::Scheduler;
+    rc.mode = Mode::Sequential;
+    rc.iters = 10;
+    rc.train_size = 256;
+    rc.test_size = 48;
+    rc.noise = 0.8;
+    rc.ckpt_every = 2;
+    rc.ckpt_keep = 2;
+    rc.ckpt_dir = Some(dir.clone());
+    pipestale::train::run(&rc).unwrap();
+
+    // Saves happened at 2,4,6,8; rotation keeps the newest two.
+    let store = CheckpointStore::open(&dir, 2).unwrap();
+    let iters: Vec<u64> = store.list().iter().map(|(i, _)| *i).collect();
+    assert_eq!(iters, vec![6, 8]);
+
+    // Truncate the newest: dir-resume must fall back to iter 6.
+    let newest = store.path_for(8);
+    let bytes = std::fs::read(&newest).unwrap();
+    std::fs::write(&newest, &bytes[..bytes.len() / 3]).unwrap();
+    let (restored, at) = store.newest_valid(None).expect("iter 6 is still valid");
+    assert_eq!(at, 6);
+    let meta = native_config("native_lenet_small").unwrap();
+    checkpoint::validate(&restored, &meta).unwrap();
+
+    // And the train driver takes the same path through --resume-from.
+    let mut resumed = RunConfig::new("native_lenet_small");
+    resumed.backend = Backend::Native;
+    resumed.runtime = RuntimeKind::Scheduler;
+    resumed.mode = Mode::Sequential;
+    resumed.iters = 2;
+    resumed.train_size = 256;
+    resumed.test_size = 48;
+    resumed.noise = 0.8;
+    resumed.resume_from = Some(dir.clone());
+    pipestale::train::run(&resumed).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn fault_tolerance_flags_are_guarded() {
+    // Fault injection and supervision are threaded-runtime features.
+    let mut rc = RunConfig::new("native_lenet_small");
+    rc.backend = Backend::Native;
+    rc.runtime = RuntimeKind::Scheduler;
+    rc.iters = 2;
+    rc.fault_plan = Some("panic@0:0".to_string());
+    let msg = format!("{:#}", pipestale::train::run(&rc).unwrap_err());
+    assert!(msg.contains("threaded"), "{msg}");
+
+    rc.fault_plan = None;
+    rc.on_failure = OnFailure::Restart;
+    let msg = format!("{:#}", pipestale::train::run(&rc).unwrap_err());
+    assert!(msg.contains("threaded"), "{msg}");
+
+    // Periodic checkpoints need somewhere to go.
+    rc.on_failure = OnFailure::Fail;
+    rc.ckpt_every = 5;
+    let msg = format!("{:#}", pipestale::train::run(&rc).unwrap_err());
+    assert!(msg.contains("ckpt-dir"), "{msg}");
+
+    // A malformed plan is rejected up front, not mid-run.
+    let mut rc = rc4(Mode::Pipelined, 2);
+    rc.fault_plan = Some("frobnicate@1:2".to_string());
+    let msg = format!("{:#}", pipestale::train::run(&rc).unwrap_err());
+    assert!(msg.contains("fault"), "{msg}");
+}
+
+// ---------------------------------------------------------------------------
+// train_range: the replay primitive under the supervisor.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn train_range_feeds_absolute_batch_ids() {
+    use pipestale::optim::Sgd;
+    use pipestale::pipeline::ThreadedPipeline;
+
+    let meta = native_config("native_lenet_small").unwrap();
+    let spec = SyntheticSpec { train: 128, test: 32, noise: 0.8, seed: 7 };
+    let (train, _) = load_or_synthesize(&meta.dataset, None, &spec).unwrap();
+    let idxs: Vec<usize> = (0..meta.batch).collect();
+    let batch = train.gather(&idxs);
+
+    let params = ModelParams::init(&meta.partitions, 11).unwrap();
+    let optims: Vec<Sgd> = pipestale::train::build_optims(&meta, 6, 1.0);
+    let mut pipe = ThreadedPipeline::launch_native(&meta, params, optims).unwrap();
+    let mut fed_ids = Vec::new();
+    let (events, _) = pipe
+        .train_range(3, 6, 11, |b| {
+            fed_ids.push(b);
+            batch.clone()
+        })
+        .unwrap();
+    pipe.shutdown().unwrap();
+
+    assert_eq!(fed_ids, vec![3, 4, 5], "the feed closure sees absolute ids");
+    let got: Vec<u64> = events.iter().map(|e| e.batch_id).collect();
+    assert_eq!(got, vec![3, 4, 5], "events carry the absolute ids too");
+}

@@ -49,6 +49,21 @@ fi
 echo "[ci] rerunning threaded-native suite under RUST_TEST_THREADS=1"
 RUST_TEST_THREADS=1 cargo test -q --test threaded_native
 
+# Fault-injection soak: a P=4 native ResNet pipelined run that takes a
+# mid-train worker panic, a hung stage (watchdog kill), and a corrupted
+# checkpoint save, and must still complete under the supervisor
+# (DESIGN.md §8). Exercises the released binary end to end, CLI
+# included — distinct from tests/resilience.rs's in-process coverage.
+echo "[ci] fault-injection soak (panic + stall + corrupt, P=4)"
+SOAK_DIR="$(mktemp -d)"
+trap 'rm -f "$TEST_LOG"; rm -rf "$SOAK_DIR"' EXIT
+./target/release/pipestale train --config native_resnet_small_4s \
+    --backend native --runtime threaded --mode pipelined --iters 40 \
+    --train-size 128 --test-size 32 \
+    --ckpt-every 10 --ckpt-dir "$SOAK_DIR" --ckpt-keep 3 \
+    --stall-timeout-ms 2000 --on-failure degrade --max-restarts 2 \
+    --restart-backoff-ms 50 --fault-plan 'panic@1:12;stall@2:30:4000;corrupt@0'
+
 # Docs build warning-free: #![warn(missing_docs)] is enabled in
 # src/lib.rs, so -D warnings turns an undocumented public item (or a
 # broken intra-doc link) into a CI failure.
