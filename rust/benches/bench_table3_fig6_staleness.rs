@@ -10,13 +10,17 @@
 //! staleness (2). Paper finding to reproduce: the two curves roughly
 //! coincide, i.e. accuracy is governed by the *percentage* of stale
 //! weights, not their *degree*.
+//!
+//! Plus a beyond-the-paper section: the same accuracy-vs-PPV sweep
+//! under every `--staleness-fix` (DESIGN.md §9), measuring how much of
+//! the staleness-induced loss each mitigation buys back.
 
 #[path = "common/mod.rs"]
 mod common;
 
 use pipestale::config::Mode;
 use pipestale::meta::ConfigMeta;
-use pipestale::pipeline::StalenessReport;
+use pipestale::pipeline::{FixKind, StalenessReport};
 use pipestale::util::bench::Table;
 use pipestale::util::json;
 
@@ -80,9 +84,54 @@ fn native_resnet_section() {
     common::write_results("table3_native_resnet.json", &doc.to_string_pretty());
 }
 
+/// Mitigation matrix: accuracy vs %-stale-weights under every
+/// `--staleness-fix`, on the native ResNets (early split, deep split,
+/// P=4) — does weight stashing / prediction / gradient damping buy
+/// back the accuracy the stale schedule loses? Records
+/// results/table3_native_resnet_mitigation.json.
+fn native_resnet_mitigation_section() {
+    let iters = common::bench_iters(120);
+    println!("=== Native-ResNet mitigation matrix (artifact-free; {iters} iters) ===");
+    let mut t = Table::new(&["Config", "Stages", "% stale", "none", "stash", "predict", "correct"]);
+    let mut rows = Vec::new();
+    for cfg in ["native_resnet_small", "native_resnet_small_deep", "native_resnet_small_4s"] {
+        let meta = pipestale::backend::native_config(cfg).unwrap();
+        let rep = StalenessReport::from_meta(&meta);
+        let mut cells = vec![
+            cfg.to_string(),
+            meta.paper_stages().to_string(),
+            format!("{:.1}%", 100.0 * rep.stale_weight_fraction),
+        ];
+        for fix in FixKind::all() {
+            let r = common::run_with_fix(cfg, Mode::Pipelined, iters, fix);
+            println!(
+                "{cfg} [{}]: stages={} %stale={:.1} acc={}",
+                fix.name(),
+                meta.paper_stages(),
+                100.0 * rep.stale_weight_fraction,
+                common::pct(r.final_accuracy)
+            );
+            cells.push(common::pct(r.final_accuracy));
+            rows.push(json::obj(vec![
+                ("config", json::s(cfg)),
+                ("fix", json::s(fix.name())),
+                ("stages", json::num(meta.paper_stages() as f64)),
+                ("pct_stale", json::num(rep.stale_weight_fraction)),
+                ("mean_degree", json::num(rep.mean_degree())),
+                ("accuracy", json::num(r.final_accuracy)),
+            ]));
+        }
+        t.row(&cells);
+    }
+    println!("\n{}", t.render());
+    let doc = json::obj(vec![("iters", json::num(iters as f64)), ("rows", json::arr(rows))]);
+    common::write_results("table3_native_resnet_mitigation.json", &doc.to_string_pretty());
+}
+
 fn main() {
     pipestale::util::logging::init();
     native_resnet_section();
+    native_resnet_mitigation_section();
     if !pipestale::xla_ready() {
         eprintln!("skipping XLA sections of {}: needs artifacts + real XLA backend", file!());
         return;

@@ -7,6 +7,7 @@
 #![allow(dead_code)]
 
 use pipestale::config::{Mode, RunConfig};
+use pipestale::pipeline::FixKind;
 use pipestale::train::TrainResult;
 
 pub fn bench_iters(default: u64) -> u64 {
@@ -38,6 +39,23 @@ pub fn run(config: &str, mode: Mode, iters: u64, pipelined_iters: u64) -> TrainR
     rc.noise = 2.0; // hard enough that schedules separate
     rc.seed = 42;
     pipestale::train::run(&rc).unwrap_or_else(|e| panic!("{config} [{mode:?}]: {e:#}"))
+}
+
+/// Like [`run`] but with a staleness mitigation installed
+/// (`--staleness-fix`, DESIGN.md §9); same seed/data/hyperparameters,
+/// so accuracy differences isolate the fix itself.
+pub fn run_with_fix(config: &str, mode: Mode, iters: u64, fix: FixKind) -> TrainResult {
+    let mut rc = RunConfig::new(config);
+    rc.mode = mode;
+    rc.iters = iters;
+    rc.eval_every = (iters / 6).max(1);
+    rc.train_size = 1024;
+    rc.test_size = 256;
+    rc.noise = 2.0;
+    rc.seed = 42;
+    rc.staleness_fix = fix;
+    pipestale::train::run(&rc)
+        .unwrap_or_else(|e| panic!("{config} [{mode:?}/{}]: {e:#}", fix.name()))
 }
 
 pub fn write_results(name: &str, content: &str) {

@@ -34,6 +34,7 @@ use crate::meta::{ConfigMeta, PartitionMeta};
 use crate::model::{ModelParams, PartitionParams};
 use crate::optim::Sgd;
 use crate::pipeline::executor::{LastResult, StageExecutor, WorkerStage};
+use crate::pipeline::mitigation::{fix_for, FixKind, FixStats, StalenessFix};
 use crate::tensor::{IntTensor, Tensor};
 
 pub use kernels::ActKind;
@@ -63,6 +64,9 @@ pub struct NativePartition {
     /// partition rebuilt from a checkpoint (or relaunched at a segment
     /// boundary) continues the schedule where it left off.
     pub update_count: usize,
+    /// Active staleness mitigation (DESIGN.md §9); `none` by default,
+    /// so plain runs are byte-for-byte the pre-mitigation code path.
+    fix: Box<dyn StalenessFix>,
 }
 
 impl NativePartition {
@@ -108,7 +112,28 @@ impl NativePartition {
             params.state.len()
         );
         let update_count = params.version as usize;
-        Ok(NativePartition { meta, nodes, offsets, params, optim, update_count })
+        Ok(NativePartition {
+            meta,
+            nodes,
+            offsets,
+            params,
+            optim,
+            update_count,
+            fix: fix_for(FixKind::None),
+        })
+    }
+
+    /// Install a staleness fix (DESIGN.md §9). Must be called on a
+    /// drained partition (no batch in flight): the fresh fix starts
+    /// with an empty in-flight ring.
+    pub fn set_staleness_fix(&mut self, kind: FixKind) {
+        self.fix = fix_for(kind);
+    }
+
+    /// The active fix's observable counters (ring occupancy and
+    /// high-water marks; memory-accounting tests).
+    pub fn fix_stats(&self) -> FixStats {
+        self.fix.stats()
     }
 
     fn node_params(&self, i: usize) -> &[Tensor] {
@@ -116,26 +141,39 @@ impl NativePartition {
         &self.params.params[po..po + self.nodes[i].n_params()]
     }
 
+    /// Slice node `i`'s parameters out of an explicit flat vector (the
+    /// live weights, a stashed version, or a predicted one).
+    fn node_params_in<'a>(&self, flat: &'a [Tensor], i: usize) -> &'a [Tensor] {
+        let (po, _) = self.offsets[i];
+        &flat[po..po + self.nodes[i].n_params()]
+    }
+
     fn node_state(&self, i: usize) -> &[Tensor] {
         let (_, so) = self.offsets[i];
         &self.params.state[so..so + self.nodes[i].n_state()]
     }
 
-    /// Training forward walk: `(output, caches, state_updates)` where
-    /// state_updates pairs a state offset with the node's new state
-    /// values (for a block, all its BN states concatenated in spec
-    /// order).
+    /// Training forward walk over an explicit weight vector (`flat` is
+    /// usually `self.params.params`; the mitigation hooks substitute a
+    /// stashed or predicted version): `(output, caches, state_updates)`
+    /// where state_updates pairs a state offset with the node's new
+    /// state values (for a block, all its BN states concatenated in
+    /// spec order).
     #[allow(clippy::type_complexity)]
     fn forward_train(
         &self,
+        flat: &[Tensor],
         x: &Tensor,
     ) -> Result<(Tensor, Vec<OpCache>, Vec<(usize, Vec<Tensor>)>)> {
         let mut cur = x.clone();
         let mut caches = Vec::with_capacity(self.nodes.len());
         let mut updates = Vec::new();
         for i in 0..self.nodes.len() {
-            let (y, cache, new_state) =
-                self.nodes[i].train_forward(self.node_params(i), self.node_state(i), &cur)?;
+            let (y, cache, new_state) = self.nodes[i].train_forward(
+                self.node_params_in(flat, i),
+                self.node_state(i),
+                &cur,
+            )?;
             caches.push(cache);
             if !new_state.is_empty() {
                 updates.push((self.offsets[i].1, new_state));
@@ -153,13 +191,20 @@ impl NativePartition {
         }
     }
 
-    /// Backward walk from `dy` through the recorded caches:
-    /// `(gcarry_in, grads)` with grads aligned to `params.params`.
-    fn backward_walk(&self, caches: &[OpCache], dy: Tensor) -> Result<(Tensor, Vec<Tensor>)> {
+    /// Backward walk from `dy` through the recorded caches, against the
+    /// same explicit weight vector the forward used: `(gcarry_in,
+    /// grads)` with grads aligned to `params.params`.
+    fn backward_walk(
+        &self,
+        flat: &[Tensor],
+        caches: &[OpCache],
+        dy: Tensor,
+    ) -> Result<(Tensor, Vec<Tensor>)> {
         let mut grads: Vec<Option<Tensor>> = vec![None; self.params.params.len()];
         let mut g = dy;
         for i in (0..self.nodes.len()).rev() {
-            let (dx, dparams) = self.nodes[i].backward(self.node_params(i), &caches[i], &g)?;
+            let (dx, dparams) =
+                self.nodes[i].backward(self.node_params_in(flat, i), &caches[i], &g)?;
             let (po, _) = self.offsets[i];
             for (j, dp) in dparams.into_iter().enumerate() {
                 grads[po + j] = Some(dp);
@@ -187,11 +232,34 @@ impl NativePartition {
     }
 
     /// Training forward of a non-last partition: commits BN-state
-    /// updates, never touches weights.
+    /// updates, never touches weights. Engages the active staleness
+    /// fix (stash push / weight prediction).
     pub fn stage_forward(&mut self, carry: &[Tensor]) -> Result<Vec<Tensor>> {
+        let over = self.fix.on_forward(&self.params.params, &self.optim, self.update_count)?;
+        self.stage_forward_with(carry, over.as_deref())
+    }
+
+    /// The raw forward primitive under an explicit weight override
+    /// (`None` = live weights) — the mitigation seam, public so the
+    /// equivalence oracle in `tests/mitigation.rs` can drive it without
+    /// the production ring.
+    pub fn stage_forward_with(
+        &mut self,
+        carry: &[Tensor],
+        over: Option<&[Tensor]>,
+    ) -> Result<Vec<Tensor>> {
         ensure!(!self.meta.is_last(), "forward called on the last partition");
+        if let Some(o) = over {
+            ensure!(
+                o.len() == self.params.params.len(),
+                "weight override arity {} != {}",
+                o.len(),
+                self.params.params.len()
+            );
+        }
         let x = Self::single(carry, "forward")?.clone();
-        let (y, _caches, updates) = self.forward_train(&x)?;
+        let flat = over.unwrap_or(&self.params.params);
+        let (y, _caches, updates) = self.forward_train(flat, &x)?;
         self.commit_state(updates);
         Ok(vec![y])
     }
@@ -201,7 +269,7 @@ impl NativePartition {
     pub fn stage_last(&mut self, carry: &[Tensor], labels: &IntTensor) -> Result<LastResult> {
         ensure!(self.meta.is_last(), "stage_last called on a non-last partition");
         let x = Self::single(carry, "last")?.clone();
-        let (logits, caches, updates) = self.forward_train(&x)?;
+        let (logits, caches, updates) = self.forward_train(&self.params.params, &x)?;
         let n = logits.shape[0];
         let classes = logits.numel() / n;
         ensure!(
@@ -212,7 +280,7 @@ impl NativePartition {
         let (loss, correct, dlogits) =
             kernels::softmax_xent(logits.data(), n, classes, &labels.data);
         let dl = Tensor::from_vec(&[n, classes], dlogits)?;
-        let (gcarry, grads) = self.backward_walk(&caches, dl)?;
+        let (gcarry, grads) = self.backward_walk(&self.params.params, &caches, dl)?;
         self.commit_state(updates);
         self.apply_update(&grads)?;
         Ok(LastResult { loss, correct, gcarry_in: vec![gcarry] })
@@ -221,16 +289,49 @@ impl NativePartition {
     /// Backward of a non-last partition: recomputes the forward from
     /// the saved carry_in with the *current* (stale-by-schedule)
     /// weights per jax.vjp semantics — the recompute's BN-state
-    /// updates are discarded — then applies the weight update.
+    /// updates are discarded — then applies the weight update. Engages
+    /// the active staleness fix (stash pop / gradient damping).
     pub fn stage_backward(
         &mut self,
         carry_in: &[Tensor],
         gcarry_out: &[Tensor],
     ) -> Result<Vec<Tensor>> {
+        let plan = self.fix.on_backward(self.update_count)?;
+        self.stage_backward_with(carry_in, gcarry_out, plan.params.as_deref(), plan.grad_scale)
+    }
+
+    /// The raw backward primitive: recompute under an explicit weight
+    /// override (`None` = live weights), scale the weight gradients by
+    /// `grad_scale` (`1.0` skips the multiply so the no-op is bitwise),
+    /// then apply the update **to the live weights**. Public as the
+    /// mitigation seam for the `tests/mitigation.rs` oracle.
+    pub fn stage_backward_with(
+        &mut self,
+        carry_in: &[Tensor],
+        gcarry_out: &[Tensor],
+        over: Option<&[Tensor]>,
+        grad_scale: f32,
+    ) -> Result<Vec<Tensor>> {
+        if let Some(o) = over {
+            ensure!(
+                o.len() == self.params.params.len(),
+                "weight override arity {} != {}",
+                o.len(),
+                self.params.params.len()
+            );
+        }
         let x = Self::single(carry_in, "backward")?.clone();
         let g = Self::single(gcarry_out, "backward grad")?.clone();
-        let (_y, caches, _updates) = self.forward_train(&x)?;
-        let (gcarry_in, grads) = self.backward_walk(&caches, g)?;
+        let flat = over.unwrap_or(&self.params.params);
+        let (_y, caches, _updates) = self.forward_train(flat, &x)?;
+        let (gcarry_in, mut grads) = self.backward_walk(flat, &caches, g)?;
+        if grad_scale != 1.0 {
+            for gt in &mut grads {
+                for v in gt.data_mut() {
+                    *v *= grad_scale;
+                }
+            }
+        }
         self.apply_update(&grads)?;
         Ok(vec![gcarry_in])
     }
@@ -269,6 +370,11 @@ impl WorkerStage for NativePartition {
 
     fn into_params(self) -> PartitionParams {
         self.params
+    }
+
+    fn set_staleness_fix(&mut self, kind: FixKind) -> Result<()> {
+        NativePartition::set_staleness_fix(self, kind);
+        Ok(())
     }
 }
 
@@ -318,6 +424,13 @@ impl NativeExecutor {
     pub fn update_counts(&self) -> Vec<usize> {
         self.parts.iter().map(|p| p.update_count).collect()
     }
+
+    /// Per-partition mitigation counters (ring occupancy, high-water
+    /// marks) — the observable side of `--staleness-fix`, matched
+    /// against `memory::stash_report` by the accounting tests.
+    pub fn fix_stats(&self) -> Vec<FixStats> {
+        self.parts.iter().map(NativePartition::fix_stats).collect()
+    }
 }
 
 impl StageExecutor for NativeExecutor {
@@ -350,6 +463,13 @@ impl StageExecutor for NativeExecutor {
 
     fn params_snapshot(&self) -> ModelParams {
         NativeExecutor::params_snapshot(self)
+    }
+
+    fn set_staleness_fix(&mut self, kind: FixKind) -> Result<()> {
+        for part in &mut self.parts {
+            part.set_staleness_fix(kind);
+        }
+        Ok(())
     }
 }
 

@@ -7,6 +7,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Result};
 
+use crate::pipeline::mitigation::FixKind;
 use crate::util::json::{self, Json};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -184,6 +185,10 @@ pub struct RunConfig {
     /// Deterministic fault plan for soak tests (see pipeline::faults
     /// for the grammar); threaded runtime only.
     pub fault_plan: Option<String>,
+    /// Stale-weight mitigation applied to the non-last partitions
+    /// (none | stash | predict | correct; DESIGN.md §9). Orthogonal to
+    /// `backend` and `runtime`.
+    pub staleness_fix: FixKind,
 }
 
 impl RunConfig {
@@ -212,6 +217,7 @@ impl RunConfig {
             ckpt_keep: 3,
             stall_timeout_ms: 60_000,
             fault_plan: None,
+            staleness_fix: FixKind::None,
         }
     }
 
@@ -253,6 +259,7 @@ impl RunConfig {
                 "fault_plan",
                 self.fault_plan.as_ref().map(|p| json::s(p)).unwrap_or(Json::Null),
             ),
+            ("staleness_fix", json::s(self.staleness_fix.name())),
         ])
     }
 
@@ -296,6 +303,9 @@ impl RunConfig {
         rc.stall_timeout_ms = getn("stall_timeout_ms", rc.stall_timeout_ms as f64) as u64;
         if let Some(p) = j.get("fault_plan").and_then(Json::as_str) {
             rc.fault_plan = Some(p.to_string());
+        }
+        if let Some(f) = j.get("staleness_fix").and_then(Json::as_str) {
+            rc.staleness_fix = FixKind::parse(f)?;
         }
         Ok(rc)
     }
@@ -406,6 +416,23 @@ mod tests {
         assert_eq!(d.ckpt_dir, None);
         assert_eq!(d.stall_timeout_ms, 60_000);
         assert_eq!(d.fault_plan, None);
+    }
+
+    #[test]
+    fn staleness_fix_roundtrip_and_legacy_default() {
+        let mut rc = RunConfig::new("native_lenet_small_4s");
+        assert_eq!(rc.staleness_fix, FixKind::None); // default
+        for kind in FixKind::all() {
+            rc.staleness_fix = kind;
+            let back = RunConfig::from_json(&rc.to_json()).unwrap();
+            assert_eq!(back.staleness_fix, kind);
+        }
+        // configs without the key (older files) keep the default
+        let legacy = Json::parse("{\"config\": \"x\"}").unwrap();
+        assert_eq!(RunConfig::from_json(&legacy).unwrap().staleness_fix, FixKind::None);
+        // bogus values are an error, not a silent fallback
+        let bogus = Json::parse("{\"config\": \"x\", \"staleness_fix\": \"wormhole\"}").unwrap();
+        assert!(RunConfig::from_json(&bogus).is_err());
     }
 
     #[test]

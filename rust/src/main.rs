@@ -2,8 +2,9 @@
 //!
 //! Subcommands:
 //!   train        train one config: --mode pipelined|sequential|hybrid,
-//!                orthogonally --backend auto|native|xla (compute) and
-//!                --runtime scheduler|threaded (how the schedule executes)
+//!                orthogonally --backend auto|native|xla (compute),
+//!                --runtime scheduler|threaded (how the schedule executes),
+//!                and --staleness-fix none|stash|predict|correct (mitigation)
 //!   inspect      staleness report for a config (paper §3 accounting)
 //!   memory       Table-6-style memory model for a config
 //!   perfsim      discrete-event speedup estimate (Table 5 machinery):
@@ -13,12 +14,12 @@
 use anyhow::{anyhow, Result};
 
 use pipestale::config::{Backend, Mode, OnFailure, RunConfig, RuntimeKind};
-use pipestale::memory::{pipedream_stash_bytes, MemoryReport};
+use pipestale::memory::{pipedream_stash_bytes, stash_extra_bytes_total, MemoryReport};
 use pipestale::meta::ConfigMeta;
 use pipestale::pipeline::perfsim::{
     analytic_costs, simulate_nonpipelined, simulate_pipelined, CommModel, Mapping,
 };
-use pipestale::pipeline::StalenessReport;
+use pipestale::pipeline::{FixKind, StalenessReport};
 use pipestale::util::bench::Table;
 use pipestale::util::cli::Command;
 use pipestale::util::logging;
@@ -50,7 +51,8 @@ fn dispatch(args: &[String]) -> Result<()> {
                 "pipestale — pipelined training with stale weights\n\n\
                  SUBCOMMANDS:\n  \
                  train --config <name> [--mode pipelined|sequential|hybrid]\n        \
-                 [--backend auto|native|xla] [--runtime scheduler|threaded] ...\n  \
+                 [--backend auto|native|xla] [--runtime scheduler|threaded]\n        \
+                 [--staleness-fix none|stash|predict|correct] ...\n  \
                  inspect --config <name>\n  memory --config <name> [--batch N]\n  \
                  perfsim --config <name> [--iters N] [--gflops G] [--mapping paired|full]\n  \
                  list-configs\n\n\
@@ -92,7 +94,12 @@ fn cmd_train(args: &[String]) -> Result<()> {
             .opt("ckpt-dir", "", "directory for rotating checkpoints")
             .opt("ckpt-keep", "3", "rotating checkpoints to keep")
             .opt("stall-timeout-ms", "60000", "watchdog: declare a stage hung after this long")
-            .opt("fault-plan", "", "inject faults, e.g. 'panic@1:12;stall@2:30:4000;corrupt@0'"),
+            .opt("fault-plan", "", "inject faults, e.g. 'panic@1:12;stall@2:30:4000;corrupt@0'")
+            .opt(
+                "staleness-fix",
+                "none",
+                "none | stash | predict | correct (stale-weight mitigation, DESIGN.md §9)",
+            ),
         args,
     )?;
     let mut rc = RunConfig::new(m.get("config"));
@@ -128,6 +135,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
     if !m.get("fault-plan").is_empty() {
         rc.fault_plan = Some(m.get("fault-plan").to_string());
     }
+    rc.staleness_fix = FixKind::parse(m.get("staleness-fix"))?;
 
     let res = pipestale::train::run(&rc)?;
     let recovery = if res.degraded {
@@ -209,8 +217,12 @@ fn cmd_memory(args: &[String]) -> Result<()> {
         r.increase_pct()
     );
     println!(
-        "  PipeDream weight stash would add {:.2} MB (we stash none)",
+        "  PipeDream weight stash would add {:.2} MB (we stash none by default)",
         pipedream_stash_bytes(&meta) / mb
+    );
+    println!(
+        "  --staleness-fix stash ring would add {:.2} MB (deeper in-flight window)",
+        stash_extra_bytes_total(&meta) / mb
     );
     println!("  total (ours, batch {batch}): {:.1} MB", r.total_bytes(batch) / mb);
     Ok(())

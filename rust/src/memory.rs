@@ -15,8 +15,13 @@
 //!   paper's PyTorch autograd stores every internal activation instead,
 //!   which we also report as `increase_paper_style`.
 //!
-//! No weight copies are stashed in either accounting — the paper's core
-//! memory claim vs PipeDream (§6.7), quantified by `pipedream_estimate`.
+//! By default no weight copies are stashed in either accounting — the
+//! paper's core memory claim vs PipeDream (§6.7), quantified by
+//! `pipedream_stash_bytes`. Opting into `--staleness-fix stash`
+//! (DESIGN.md §9) buys back PipeDream's consistency at exactly the
+//! stash cost modeled by [`stash_ring_costs`]: one ring slot per
+//! in-flight mini-batch, of which at most `degree` ever materialize
+//! thanks to copy-on-write tensor clones.
 
 use crate::meta::ConfigMeta;
 
@@ -102,6 +107,59 @@ impl MemoryReport {
     }
 }
 
+/// Weight-stash ring cost of `--staleness-fix stash` for one partition
+/// (DESIGN.md §9).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StashRingCost {
+    /// Partition index as carried by the config metadata.
+    pub partition: usize,
+    /// Degree of staleness: updates applied between a batch's forward
+    /// and its backward at full occupancy.
+    pub degree: usize,
+    /// Peak ring length: one stashed weight version per in-flight
+    /// mini-batch = degree + 1 (matches the activation-FIFO depth; the
+    /// fused last stage never stashes).
+    pub ring_slots: usize,
+    /// Ring bytes if every slot held a distinct copy — this is exactly
+    /// the `stashed_bytes_high_water` a full-occupancy run reports in
+    /// its [`crate::pipeline::FixStats`].
+    pub ring_bytes: f64,
+    /// Extra bytes that can actually materialize: stash clones are
+    /// copy-on-write and alias the live weights until an update lands,
+    /// so at most `degree` slots ever diverge from the live copy.
+    pub extra_bytes: f64,
+}
+
+/// Per-partition cost of the `stash` mitigation ring: the price of
+/// PipeDream-style weight stashing when switched on, zero otherwise.
+/// Note our paired-mapping schedule keeps `2(K-p)` batches in flight —
+/// roughly twice PipeDream's 1F1B depth — so this is larger than
+/// [`pipedream_stash_bytes`] for the same network.
+pub fn stash_ring_costs(meta: &ConfigMeta) -> Vec<StashRingCost> {
+    meta.partitions
+        .iter()
+        .map(|part| {
+            let degree = meta.degree_of_staleness(part.index);
+            let ring_slots = if degree == 0 { 0 } else { degree + 1 };
+            let bytes_per_copy = part.param_count as f64 * 4.0;
+            StashRingCost {
+                partition: part.index,
+                degree,
+                ring_slots,
+                ring_bytes: ring_slots as f64 * bytes_per_copy,
+                extra_bytes: degree as f64 * bytes_per_copy,
+            }
+        })
+        .collect()
+}
+
+/// Total worst-case materialized bytes of the stash rings across all
+/// partitions (the honest "what does `--staleness-fix stash` cost me"
+/// number for `pipestale memory`).
+pub fn stash_extra_bytes_total(meta: &ConfigMeta) -> f64 {
+    stash_ring_costs(meta).iter().map(|c| c.extra_bytes).sum()
+}
+
 /// PipeDream-style weight stashing estimate (§6.7): partition p (1-based
 /// of P) keeps one weight version per in-flight batch = P - p + 1 copies;
 /// extra = Σ_p (P - p) * weight_bytes_p beyond the single live copy.
@@ -179,6 +237,33 @@ mod tests {
         // stash never exceeds (P-1) x full weights
         let p = meta.partitions.len() as f64;
         assert!(stash <= (p - 1.0) * meta.total_params() as f64 * 4.0);
+    }
+
+    #[test]
+    fn stash_ring_costs_match_schedule_depths() {
+        // Native configs need no artifacts: P=4 -> degrees 6,4,2,0 and
+        // ring slots degree+1 everywhere except the fused last stage.
+        let meta = crate::backend::native_config("native_lenet_small_4s").unwrap();
+        let costs = stash_ring_costs(&meta);
+        assert_eq!(costs.len(), 4);
+        assert_eq!(costs.iter().map(|c| c.degree).collect::<Vec<_>>(), vec![6, 4, 2, 0]);
+        assert_eq!(costs.iter().map(|c| c.ring_slots).collect::<Vec<_>>(), vec![7, 5, 3, 0]);
+        for c in &costs {
+            let per_copy = c.ring_bytes / c.ring_slots.max(1) as f64;
+            assert!((c.extra_bytes - c.degree as f64 * per_copy).abs() < 1e-6);
+            assert!(c.extra_bytes <= c.ring_bytes);
+        }
+        // last stage stashes nothing
+        assert_eq!(costs[3].ring_bytes, 0.0);
+        assert_eq!(stash_extra_bytes_total(&meta), costs.iter().map(|c| c.extra_bytes).sum());
+    }
+
+    #[test]
+    fn stash_ring_exceeds_pipedream_estimate() {
+        // Our paired mapping keeps ~2x PipeDream's in-flight depth, so
+        // the stash ring costs at least as much as the §6.7 estimate.
+        let meta = crate::backend::native_config("native_lenet_small_4s").unwrap();
+        assert!(stash_extra_bytes_total(&meta) >= pipedream_stash_bytes(&meta));
     }
 
     #[test]

@@ -89,6 +89,26 @@ impl Sgd {
         self
     }
 
+    /// The scheduled learning rate at `iter` with this optimizer's
+    /// per-partition scale applied — exactly the value `step(iter, ..)`
+    /// would use (weight prediction extrapolates with it).
+    pub fn effective_lr(&self, iter: usize) -> f32 {
+        (self.schedule.lr(iter) as f32) * self.lr_scale
+    }
+
+    /// True once momentum velocity buffers exist (they initialize
+    /// lazily on the first step with momentum ≠ 0).
+    pub fn has_velocity(&self) -> bool {
+        !self.velocity.is_empty()
+    }
+
+    /// Read-only view of parameter `i`'s velocity buffer, if
+    /// initialized. Weight prediction reads these; nothing outside
+    /// `step` may write them.
+    pub fn velocity(&self, i: usize) -> Option<&[f32]> {
+        self.velocity.get(i).map(|v| v.as_slice())
+    }
+
     /// Apply one update: params <- params - lr * (grad + wd*param), via
     /// the fused kernel. This is the L3 hot loop (§Perf).
     ///

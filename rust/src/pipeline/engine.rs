@@ -18,6 +18,7 @@ use crate::runtime::{InputScratch, StagePrograms};
 use crate::tensor::{IntTensor, Tensor};
 
 use super::executor::LastResult;
+use super::mitigation::{fix_for, FixKind, FixStats, StalenessFix};
 
 /// One partition's XLA-backed compute: compiled stage programs, the
 /// partition's weights/state, and its SGD optimizer.
@@ -35,6 +36,8 @@ pub struct PartitionEngine {
     /// schedule where they left off.
     pub update_count: usize,
     scratch: InputScratch,
+    /// Active staleness mitigation (DESIGN.md §9); `none` by default.
+    fix: Box<dyn StalenessFix>,
 }
 
 impl PartitionEngine {
@@ -53,7 +56,19 @@ impl PartitionEngine {
             optim,
             update_count,
             scratch: InputScratch::new(),
+            fix: fix_for(FixKind::None),
         }
+    }
+
+    /// Install a staleness fix (DESIGN.md §9). Must be called on a
+    /// drained engine (no batch in flight).
+    pub fn set_staleness_fix(&mut self, kind: FixKind) {
+        self.fix = fix_for(kind);
+    }
+
+    /// The active fix's observable counters.
+    pub fn fix_stats(&self) -> FixStats {
+        self.fix.stats()
     }
 
     fn take_state(&mut self, outputs: &mut Vec<Tensor>, n_keep: usize) {
@@ -72,15 +87,17 @@ impl PartitionEngine {
     }
 
     /// Training forward: commits BN-state updates, never touches
-    /// weights; returns the carry_out.
+    /// weights; returns the carry_out. Engages the active staleness
+    /// fix (stash push / weight prediction).
     pub fn forward(&mut self, seed: i32, carry: &[Tensor]) -> Result<Vec<Tensor>> {
+        let over = self.fix.on_forward(&self.params.params, &self.optim, self.update_count)?;
         let prog = self
             .programs
             .fwd
             .as_ref()
             .ok_or_else(|| anyhow!("partition {} has no fwd program", self.meta.index))?;
         self.scratch.clear();
-        self.scratch.push_tensors(&self.params.params)?;
+        self.scratch.push_tensors(over.as_deref().unwrap_or(&self.params.params))?;
         self.scratch.push_tensors(&self.params.state)?;
         self.scratch.push_seed(seed);
         self.scratch.push_tensors(carry)?;
@@ -133,20 +150,30 @@ impl PartitionEngine {
         carry_in: &[Tensor],
         gcarry_out: &[Tensor],
     ) -> Result<Vec<Tensor>> {
+        let plan = self.fix.on_backward(self.update_count)?;
         let prog = self
             .programs
             .bwd
             .as_ref()
             .ok_or_else(|| anyhow!("partition {} has no bwd program", self.meta.index))?;
         self.scratch.clear();
-        self.scratch.push_tensors(&self.params.params)?;
+        // Stash: the recompute runs on the weights the forward saw.
+        self.scratch
+            .push_tensors(plan.params.as_deref().unwrap_or(&self.params.params))?;
         self.scratch.push_tensors(&self.params.state)?;
         self.scratch.push_seed(seed);
         self.scratch.push_tensors(carry_in)?;
         self.scratch.push_tensors(gcarry_out)?;
         let mut out = prog.run(self.scratch.literals())?;
         let n_carry_in = self.meta.carry_in.len();
-        let grads: Vec<Tensor> = out.drain(n_carry_in..).collect();
+        let mut grads: Vec<Tensor> = out.drain(n_carry_in..).collect();
+        if plan.grad_scale != 1.0 {
+            for gt in &mut grads {
+                for v in gt.data_mut() {
+                    *v *= plan.grad_scale;
+                }
+            }
+        }
         self.apply_update(&grads)?;
         Ok(out)
     }

@@ -22,6 +22,7 @@ use crate::runtime::Runtime;
 use crate::tensor::{IntTensor, Tensor};
 
 use super::engine::PartitionEngine;
+use super::mitigation::FixKind;
 
 /// Result of the fused last stage (FS_{K+1} + BKS_1).
 #[derive(Debug, Clone)]
@@ -70,6 +71,20 @@ pub trait StageExecutor {
     fn params_snapshot(&self) -> ModelParams {
         ModelParams { partitions: Vec::new() }
     }
+
+    /// Install a staleness fix on every partition (DESIGN.md §9). Must
+    /// be called on a drained executor. The default refuses anything
+    /// but `none`: an executor that silently ignored a requested fix
+    /// would corrupt the equivalence suite, so supporting it is an
+    /// explicit opt-in.
+    fn set_staleness_fix(&mut self, kind: FixKind) -> Result<()> {
+        anyhow::ensure!(
+            kind == FixKind::None,
+            "this executor does not support --staleness-fix {}",
+            kind.name()
+        );
+        Ok(())
+    }
 }
 
 /// One partition's stage compute, owned by a single worker thread of
@@ -105,6 +120,19 @@ pub trait WorkerStage {
     fn into_params(self) -> PartitionParams
     where
         Self: Sized;
+
+    /// Install a staleness fix on this stage (DESIGN.md §9). Same
+    /// opt-in contract as [`StageExecutor::set_staleness_fix`]: the
+    /// default refuses anything but `none` rather than silently
+    /// ignoring the request.
+    fn set_staleness_fix(&mut self, kind: FixKind) -> Result<()> {
+        anyhow::ensure!(
+            kind == FixKind::None,
+            "this stage does not support --staleness-fix {}",
+            kind.name()
+        );
+        Ok(())
+    }
 }
 
 /// Production executor: PJRT programs + host-owned weights.
@@ -157,6 +185,12 @@ impl XlaExecutor {
     pub fn update_counts(&self) -> Vec<usize> {
         self.engines.iter().map(|e| e.update_count).collect()
     }
+
+    /// Per-partition mitigation counters (see
+    /// [`PartitionEngine::fix_stats`]).
+    pub fn fix_stats(&self) -> Vec<super::mitigation::FixStats> {
+        self.engines.iter().map(PartitionEngine::fix_stats).collect()
+    }
 }
 
 impl StageExecutor for XlaExecutor {
@@ -189,5 +223,12 @@ impl StageExecutor for XlaExecutor {
 
     fn params_snapshot(&self) -> ModelParams {
         XlaExecutor::params_snapshot(self)
+    }
+
+    fn set_staleness_fix(&mut self, kind: FixKind) -> Result<()> {
+        for engine in &mut self.engines {
+            engine.set_staleness_fix(kind);
+        }
+        Ok(())
     }
 }

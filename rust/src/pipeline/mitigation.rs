@@ -1,0 +1,437 @@
+//! Staleness mitigation: the `--staleness-fix` axis (DESIGN.md §9).
+//!
+//! The paper answers deep-split accuracy collapse with the hybrid
+//! schedule only; the related work names stronger *per-update* fixes.
+//! This module implements three of them behind one seam so the
+//! cycle-accurate scheduler and the threaded runtime get every fix for
+//! free (the hooks live inside the per-partition stage compute, which
+//! both runtimes share):
+//!
+//! * `stash` — PipeDream-style weight stashing (arXiv 1806.03377): a
+//!   pool-backed FIFO ring of per-stage weight versions, pushed at
+//!   forward time and popped at backward time, so each backward's
+//!   recompute uses exactly the weights its forward saw. Pushing is a
+//!   refcount bump per tensor (copy-on-write storage); a stashed
+//!   version only materializes when the live weights are updated while
+//!   it is still in flight, so the ring's *extra* footprint is at most
+//!   `degree × param_bytes` per stage (accounted in [`crate::memory`]).
+//! * `predict` — momentum-based weight prediction (arXiv 2003.11666):
+//!   the forward runs on `w_hat = w - s·lr·velocity`, where `s` is the
+//!   stage's in-flight staleness at feed time, approximating the
+//!   weights the matching backward will see. Nothing persistent is
+//!   mutated: the predicted tensors are scratch, velocity is read-only.
+//! * `correct` — gradient damping toward the "Diversely Stale
+//!   Parameters" correction (arXiv 1909.02625): the backward's
+//!   gradient is rescaled by `1/(1+s)` with `s` the number of updates
+//!   applied between this batch's forward and backward, shrinking
+//!   exactly the updates whose linearization point is farthest away.
+//!
+//! Every fix measures staleness *at run time* (ring occupancy or
+//! update-count delta, not the structural schedule degree), so all
+//! three degenerate to **bitwise no-ops** at staleness 0 — sequential
+//! mode, single-in-flight occupancy, the hybrid tail, and degraded
+//! (post-failure) runs need no special-casing, which is what keeps the
+//! repo's equivalence ladder (`tests/mitigation.rs`) sharp.
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::optim::Sgd;
+use crate::pool;
+use crate::tensor::Tensor;
+
+/// Which staleness fix a run applies (`--staleness-fix`), orthogonal
+/// to `--backend` and `--runtime`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FixKind {
+    /// Plain stale-weight training (the paper's baseline).
+    #[default]
+    None,
+    /// PipeDream weight stashing: backward uses forward's weights.
+    Stash,
+    /// Momentum-based weight prediction at forward time.
+    Predict,
+    /// Staleness-damped gradient rescaling at backward time.
+    Correct,
+}
+
+impl FixKind {
+    /// Parse a CLI/JSON value.
+    pub fn parse(s: &str) -> Result<FixKind> {
+        match s {
+            "none" => Ok(FixKind::None),
+            "stash" => Ok(FixKind::Stash),
+            "predict" => Ok(FixKind::Predict),
+            "correct" => Ok(FixKind::Correct),
+            other => bail!("unknown staleness fix '{other}' (use none | stash | predict | correct)"),
+        }
+    }
+
+    /// Canonical CLI/JSON name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FixKind::None => "none",
+            FixKind::Stash => "stash",
+            FixKind::Predict => "predict",
+            FixKind::Correct => "correct",
+        }
+    }
+
+    /// Every fix, in CLI order (matrix drivers).
+    pub fn all() -> [FixKind; 4] {
+        [FixKind::None, FixKind::Stash, FixKind::Predict, FixKind::Correct]
+    }
+}
+
+/// What a backward call must do differently under the active fix.
+#[derive(Debug, Default)]
+pub struct BackwardPlan {
+    /// Weights the backward's forward-recompute must use (`None` =
+    /// the live, stale-by-schedule weights — paper semantics).
+    pub params: Option<Vec<Tensor>>,
+    /// Scale applied to the weight gradients before the optimizer step
+    /// (`1.0` = untouched, and callers must skip the multiply so the
+    /// no-op stays bitwise).
+    pub grad_scale: f32,
+}
+
+impl BackwardPlan {
+    fn unchanged() -> Self {
+        BackwardPlan { params: None, grad_scale: 1.0 }
+    }
+}
+
+/// Observable counters of one stage's fix (memory-accounting tests and
+/// diagnostics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FixStats {
+    /// The active fix.
+    pub kind: FixKind,
+    /// Entries currently in the ring (must be 0 on a drained pipe).
+    pub ring_len: usize,
+    /// High-water mark of ring entries (stash: stashed weight
+    /// versions; predict/correct: in-flight batches tracked).
+    pub ring_high_water: usize,
+    /// High-water mark of stashed weight bytes (f32), counting every
+    /// ring slot; `stash` only, 0 for the other fixes.
+    pub stashed_bytes_high_water: usize,
+}
+
+impl FixStats {
+    fn empty(kind: FixKind) -> Self {
+        FixStats { kind, ring_len: 0, ring_high_water: 0, stashed_bytes_high_water: 0 }
+    }
+}
+
+/// One stage's staleness-mitigation hooks. The stage compute calls
+/// `on_forward` once per training forward (never for the fused last
+/// stage or eval) and `on_backward` once per matching backward, in
+/// FIFO order — exactly the activation-store discipline, so ring
+/// occupancy at forward time *is* the batch's staleness degree.
+pub trait StalenessFix: Send {
+    /// Which fix this is.
+    fn kind(&self) -> FixKind;
+
+    /// Called at training-forward time with the live weights, the
+    /// stage's optimizer (read-only) and its applied-update count.
+    /// Returns replacement weights for this forward (`None` = live).
+    fn on_forward(
+        &mut self,
+        live: &[Tensor],
+        optim: &Sgd,
+        update_count: usize,
+    ) -> Result<Option<Vec<Tensor>>>;
+
+    /// Called at backward time with the stage's current applied-update
+    /// count; pops the oldest in-flight record.
+    fn on_backward(&mut self, update_count: usize) -> Result<BackwardPlan>;
+
+    /// Current counters (drain checks, memory-accounting tests).
+    fn stats(&self) -> FixStats;
+}
+
+/// Build the hook implementation for a fix kind.
+pub fn fix_for(kind: FixKind) -> Box<dyn StalenessFix> {
+    match kind {
+        FixKind::None => Box::new(NoFix),
+        FixKind::Stash => Box::new(WeightStash::default()),
+        FixKind::Predict => Box::new(WeightPredict::default()),
+        FixKind::Correct => Box::new(GradCorrect::default()),
+    }
+}
+
+/// The paper's baseline: no hooks, no state.
+struct NoFix;
+
+impl StalenessFix for NoFix {
+    fn kind(&self) -> FixKind {
+        FixKind::None
+    }
+
+    fn on_forward(&mut self, _: &[Tensor], _: &Sgd, _: usize) -> Result<Option<Vec<Tensor>>> {
+        Ok(None)
+    }
+
+    fn on_backward(&mut self, _: usize) -> Result<BackwardPlan> {
+        Ok(BackwardPlan::unchanged())
+    }
+
+    fn stats(&self) -> FixStats {
+        FixStats::empty(FixKind::None)
+    }
+}
+
+/// PipeDream weight stashing: FIFO ring of weight versions.
+#[derive(Default)]
+struct WeightStash {
+    ring: VecDeque<Vec<Tensor>>,
+    high_water: usize,
+    bytes_high_water: usize,
+}
+
+impl StalenessFix for WeightStash {
+    fn kind(&self) -> FixKind {
+        FixKind::Stash
+    }
+
+    fn on_forward(&mut self, live: &[Tensor], _: &Sgd, _: usize) -> Result<Option<Vec<Tensor>>> {
+        // Clones are refcount bumps on copy-on-write storage: a slot
+        // costs real memory only once the live weights are updated
+        // while it is in flight.
+        self.ring.push_back(live.to_vec());
+        self.high_water = self.high_water.max(self.ring.len());
+        let param_scalars: usize = live.iter().map(Tensor::numel).sum();
+        self.bytes_high_water = self.bytes_high_water.max(self.ring.len() * param_scalars * 4);
+        // Forward itself runs on the freshest weights (PipeDream keeps
+        // its newest stashed version == live between updates).
+        Ok(None)
+    }
+
+    fn on_backward(&mut self, _: usize) -> Result<BackwardPlan> {
+        match self.ring.pop_front() {
+            Some(w) => Ok(BackwardPlan { params: Some(w), grad_scale: 1.0 }),
+            None => bail!("weight stash underflow: backward without a matching forward"),
+        }
+    }
+
+    fn stats(&self) -> FixStats {
+        FixStats {
+            kind: FixKind::Stash,
+            ring_len: self.ring.len(),
+            ring_high_water: self.high_water,
+            stashed_bytes_high_water: self.bytes_high_water,
+        }
+    }
+}
+
+/// Momentum-based weight prediction: forward on `w - s·lr·velocity`.
+#[derive(Default)]
+struct WeightPredict {
+    in_flight: usize,
+    high_water: usize,
+}
+
+impl StalenessFix for WeightPredict {
+    fn kind(&self) -> FixKind {
+        FixKind::Predict
+    }
+
+    fn on_forward(
+        &mut self,
+        live: &[Tensor],
+        optim: &Sgd,
+        update_count: usize,
+    ) -> Result<Option<Vec<Tensor>>> {
+        let s = self.in_flight;
+        self.in_flight += 1;
+        self.high_water = self.high_water.max(self.in_flight);
+        // Staleness 0 (sequential / single-in-flight / drained tail) or
+        // nothing to extrapolate with yet: bitwise no-op.
+        if s == 0 || !optim.has_velocity() {
+            return Ok(None);
+        }
+        let shift = s as f32 * optim.effective_lr(update_count);
+        if shift == 0.0 {
+            return Ok(None);
+        }
+        let mut out = Vec::with_capacity(live.len());
+        for (i, w) in live.iter().enumerate() {
+            match optim.velocity(i) {
+                Some(v) => {
+                    ensure!(
+                        v.len() == w.numel(),
+                        "predict: velocity {i} has {} elements, param has {}",
+                        v.len(),
+                        w.numel()
+                    );
+                    let mut buf = pool::acquire(w.numel());
+                    for ((o, &wv), &vv) in
+                        buf.as_mut_slice().iter_mut().zip(w.data()).zip(v.iter())
+                    {
+                        *o = wv - shift * vv;
+                    }
+                    out.push(Tensor::from_pooled(w.shape.as_slice(), buf)?);
+                }
+                None => out.push(w.clone()),
+            }
+        }
+        Ok(Some(out))
+    }
+
+    fn on_backward(&mut self, _: usize) -> Result<BackwardPlan> {
+        ensure!(self.in_flight > 0, "predict underflow: backward without a matching forward");
+        self.in_flight -= 1;
+        // The backward recomputes at the live weights (paper
+        // semantics); prediction only moved the forward.
+        Ok(BackwardPlan::unchanged())
+    }
+
+    fn stats(&self) -> FixStats {
+        FixStats {
+            kind: FixKind::Predict,
+            ring_len: self.in_flight,
+            ring_high_water: self.high_water,
+            stashed_bytes_high_water: 0,
+        }
+    }
+}
+
+/// Staleness-damped gradient rescaling: `g ← g / (1 + s)`.
+#[derive(Default)]
+struct GradCorrect {
+    fed_at: VecDeque<usize>,
+    high_water: usize,
+}
+
+impl StalenessFix for GradCorrect {
+    fn kind(&self) -> FixKind {
+        FixKind::Correct
+    }
+
+    fn on_forward(&mut self, _: &[Tensor], _: &Sgd, update_count: usize) -> Result<Option<Vec<Tensor>>> {
+        self.fed_at.push_back(update_count);
+        self.high_water = self.high_water.max(self.fed_at.len());
+        Ok(None)
+    }
+
+    fn on_backward(&mut self, update_count: usize) -> Result<BackwardPlan> {
+        let at = match self.fed_at.pop_front() {
+            Some(a) => a,
+            None => bail!("correct underflow: backward without a matching forward"),
+        };
+        // s = updates applied between this batch's forward and its
+        // backward; 0 in sequential/single-in-flight mode, where the
+        // scale of 1.0 is skipped entirely by the caller (bitwise
+        // no-op).
+        let s = update_count.saturating_sub(at);
+        Ok(BackwardPlan { params: None, grad_scale: 1.0 / (1.0 + s as f32) })
+    }
+
+    fn stats(&self) -> FixStats {
+        FixStats {
+            kind: FixKind::Correct,
+            ring_len: self.fed_at.len(),
+            ring_high_water: self.high_water,
+            stashed_bytes_high_water: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::Schedule;
+
+    fn t(v: &[f32]) -> Tensor {
+        Tensor::from_vec(&[v.len()], v.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn fix_kind_parse_name_roundtrip() {
+        for k in FixKind::all() {
+            assert_eq!(FixKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(FixKind::parse("pipedream").is_err());
+        assert_eq!(FixKind::default(), FixKind::None);
+    }
+
+    #[test]
+    fn none_is_inert() {
+        let mut f = fix_for(FixKind::None);
+        let o = Sgd::new(Schedule::Const { base: 0.1 }, 0.9, false, 0.0);
+        assert!(f.on_forward(&[t(&[1.0])], &o, 0).unwrap().is_none());
+        let plan = f.on_backward(0).unwrap();
+        assert!(plan.params.is_none());
+        assert_eq!(plan.grad_scale, 1.0);
+        assert_eq!(f.stats(), FixStats::empty(FixKind::None));
+    }
+
+    #[test]
+    fn stash_pops_the_pushed_version_despite_later_updates() {
+        // The defining PipeDream invariant at the unit level: the
+        // popped entry is bitwise the weights pushed at forward time,
+        // even after the live tensors were mutated in between.
+        let mut f = fix_for(FixKind::Stash);
+        let o = Sgd::new(Schedule::Const { base: 0.1 }, 0.0, false, 0.0);
+        let mut live = vec![t(&[1.0, 2.0])];
+        f.on_forward(&live, &o, 0).unwrap();
+        live[0].data_mut().copy_from_slice(&[9.0, 9.0]); // simulated update
+        f.on_forward(&live, &o, 1).unwrap();
+        assert_eq!(f.stats().ring_high_water, 2);
+        assert_eq!(f.stats().stashed_bytes_high_water, 2 * 2 * 4);
+        let first = f.on_backward(1).unwrap().params.unwrap();
+        assert_eq!(first[0].data(), &[1.0, 2.0], "stash must preserve forward-time weights");
+        let second = f.on_backward(1).unwrap().params.unwrap();
+        assert_eq!(second[0].data(), &[9.0, 9.0]);
+        assert_eq!(f.stats().ring_len, 0);
+        assert!(f.on_backward(1).is_err(), "underflow must be loud");
+    }
+
+    #[test]
+    fn predict_is_noop_at_staleness_zero_and_shifts_otherwise() {
+        let mut o = Sgd::new(Schedule::Const { base: 0.5 }, 0.9, false, 0.0);
+        let mut p = vec![t(&[0.0, 0.0])];
+        o.step(0, &mut p, &[t(&[1.0, -2.0])]).unwrap(); // velocity = [1, -2]
+        let mut f = fix_for(FixKind::Predict);
+        // s = 0: bitwise no-op
+        assert!(f.on_forward(&p, &o, 1).unwrap().is_none());
+        // s = 1: w_hat = w - 1*lr*v
+        let out = f.on_forward(&p, &o, 1).unwrap().unwrap();
+        let w = p[0].data();
+        let want = [w[0] - 0.5 * 1.0, w[1] - 0.5 * (-2.0)];
+        assert_eq!(out[0].data(), &want);
+        assert_eq!(f.stats().ring_high_water, 2);
+        f.on_backward(1).unwrap();
+        f.on_backward(1).unwrap();
+        assert_eq!(f.stats().ring_len, 0);
+        assert!(f.on_backward(1).is_err());
+    }
+
+    #[test]
+    fn predict_without_velocity_is_noop() {
+        // Vanilla SGD (momentum 0) never allocates velocity: nothing to
+        // extrapolate with, so prediction must stand down.
+        let o = Sgd::new(Schedule::Const { base: 0.5 }, 0.0, false, 0.0);
+        let mut f = fix_for(FixKind::Predict);
+        let live = vec![t(&[1.0])];
+        assert!(f.on_forward(&live, &o, 0).unwrap().is_none());
+        assert!(f.on_forward(&live, &o, 0).unwrap().is_none(), "s=1 but no velocity");
+    }
+
+    #[test]
+    fn correct_scales_by_update_count_delta() {
+        let mut f = fix_for(FixKind::Correct);
+        let o = Sgd::new(Schedule::Const { base: 0.1 }, 0.9, false, 0.0);
+        let live = vec![t(&[1.0])];
+        f.on_forward(&live, &o, 5).unwrap(); // fed at update 5
+        f.on_forward(&live, &o, 5).unwrap();
+        // backward after 3 intervening updates: s = 3
+        let plan = f.on_backward(8).unwrap();
+        assert!((plan.grad_scale - 0.25).abs() < 1e-7);
+        // staleness 0: exact 1.0 (callers skip the multiply)
+        let plan = f.on_backward(5).unwrap();
+        assert_eq!(plan.grad_scale, 1.0);
+        assert!(f.on_backward(5).is_err());
+    }
+}

@@ -6,6 +6,8 @@
 //! * `executor`/`engine` — XLA-backed stage compute with coordinator-
 //!   owned weights (and the mock used by property tests);
 //! * `staleness` — paper §3 accounting (degree, % stale weights);
+//! * `mitigation` — the `--staleness-fix` axis: PipeDream weight
+//!   stashing, momentum weight prediction, gradient damping (§9);
 //! * `hybrid` — paper §4 schedule switching;
 //! * `threaded` — executor-generic thread-per-accelerator runtime with
 //!   channel registers (native or XLA workers, real concurrency);
@@ -17,6 +19,7 @@ pub mod engine;
 pub mod executor;
 pub mod faults;
 pub mod hybrid;
+pub mod mitigation;
 pub mod mock;
 pub mod perfsim;
 pub mod scheduler;
@@ -27,6 +30,7 @@ pub use crate::backend::NativeExecutor;
 pub use executor::{LastResult, StageExecutor, WorkerStage, XlaExecutor};
 pub use faults::{Fault, FaultInjector, FaultKind, FaultPlan, FaultyWorkerBackend};
 pub use hybrid::{HybridSchedule, Phase};
+pub use mitigation::{fix_for, BackwardPlan, FixKind, FixStats, StalenessFix};
 pub use scheduler::{EventLedger, Feed, FlowControl, Pipeline, TrainEvent};
 pub use staleness::StalenessReport;
 pub use threaded::{

@@ -57,6 +57,7 @@ use crate::tensor::{IntTensor, Tensor};
 
 use super::engine::PartitionEngine;
 use super::executor::WorkerStage;
+use super::mitigation::FixKind;
 use super::scheduler::{EventLedger, FlowControl, TrainEvent};
 
 /// How often a parked worker re-checks the shutdown flag.
@@ -161,6 +162,11 @@ impl WorkerStage for XlaWorkerStage {
     fn into_params(self) -> PartitionParams {
         self.engine.into_params()
     }
+
+    fn set_staleness_fix(&mut self, kind: FixKind) -> Result<()> {
+        self.engine.set_staleness_fix(kind);
+        Ok(())
+    }
 }
 
 /// In-flight occupancy of the threaded pipe, fixed at launch (each
@@ -201,11 +207,18 @@ pub struct ThreadedOptions {
     /// within this window, the run is declared stalled and shut down
     /// (turns a would-be deadlock into an error).
     pub stall_timeout: Duration,
+    /// Staleness mitigation installed on every worker's stage at spawn
+    /// (DESIGN.md §9); `none` by default.
+    pub staleness_fix: FixKind,
 }
 
 impl Default for ThreadedOptions {
     fn default() -> Self {
-        ThreadedOptions { occupancy: Occupancy::Full, stall_timeout: Duration::from_secs(60) }
+        ThreadedOptions {
+            occupancy: Occupancy::Full,
+            stall_timeout: Duration::from_secs(60),
+            staleness_fix: FixKind::None,
+        }
     }
 }
 
@@ -397,6 +410,7 @@ impl ThreadedPipeline {
             let backend = backend.clone();
             let hb = Arc::clone(&heartbeats[idx]);
             let d_eff = opts.occupancy.warmup(p, idx);
+            let fix = opts.staleness_fix;
             let batch = meta.batch;
             let handle = std::thread::Builder::new()
                 .name(format!("accel-{idx}"))
@@ -410,7 +424,8 @@ impl ThreadedPipeline {
                     // before the channels drop, panic payload surfaced
                     // as the Fatal message.
                     let result = catch_unwind(AssertUnwindSafe(|| {
-                        backend.make_stage(&meta, idx, pp, optim).and_then(|stage| {
+                        backend.make_stage(&meta, idx, pp, optim).and_then(|mut stage| {
+                            stage.set_staleness_fix(fix)?;
                             run_worker(
                                 idx,
                                 p,

@@ -444,7 +444,7 @@ fn run_segment<B: WorkerBackend>(
     stall_timeout: Duration,
 ) -> Result<(Vec<TrainEvent>, f64, ModelParams)> {
     let optims = build_optims(meta, rc.iters, rc.stale_lr_scale);
-    let opts = ThreadedOptions { occupancy, stall_timeout };
+    let opts = ThreadedOptions { occupancy, stall_timeout, staleness_fix: rc.staleness_fix };
     let faulty = FaultyWorkerBackend::new(backend.clone(), Arc::clone(injector));
     let mut pipe = ThreadedPipeline::launch_with(faulty, meta, params.clone(), optims, opts)?;
     let mut batcher = Batcher::new(train_ds.len(), meta.batch, rc.seed ^ 0xba7c4);
@@ -530,10 +530,13 @@ fn initial_params(rc: &RunConfig, meta: &ConfigMeta) -> Result<ModelParams> {
 fn train_loop<E: StageExecutor>(
     rc: &RunConfig,
     meta: &ConfigMeta,
-    exec: E,
+    mut exec: E,
     train_ds: &Dataset,
     test_ds: &Dataset,
 ) -> Result<TrainResult> {
+    // Freshly built executor = drained pipeline, the one safe moment to
+    // install a mitigation (its per-partition state must start empty).
+    exec.set_staleness_fix(rc.staleness_fix)?;
     let mut pipe = Pipeline::new(exec, meta.batch);
     let mut batcher = Batcher::new(train_ds.len(), meta.batch, rc.seed ^ 0xba7c4);
 

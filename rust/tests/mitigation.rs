@@ -1,0 +1,497 @@
+//! Staleness-mitigation equivalence suite (`--staleness-fix`,
+//! DESIGN.md §9), all offline on the native backend.
+//!
+//! The ladder of claims, sharpest first:
+//!
+//! * a **flat-loop serial oracle** — a single-threaded replay of the
+//!   paired-mapping schedule's exact per-partition op order — lands
+//!   bitwise where the cycle-accurate scheduler AND the threaded
+//!   runtime land, under every fix (the schedule, not the runtime,
+//!   determines the arithmetic);
+//! * the production stash ring is bitwise equal to a transparent
+//!   external reimplementation (explicit clone-per-forward FIFOs
+//!   driven through the raw `stage_*_with` primitives);
+//! * every fix is a **bitwise no-op at staleness 0**: sequential runs
+//!   under stash/predict/correct equal the fix-free run exactly, on
+//!   both runtimes (fixes measure staleness at run time, so they stand
+//!   down without special-casing);
+//! * mid-training evaluation leaves the trajectory bitwise unchanged
+//!   under every fix (eval purity);
+//! * checkpoint-restart recovery stays bitwise-invisible under every
+//!   fix (segment boundaries are drained, rings restart empty);
+//! * the stash ring's observed high-water marks match the analytic
+//!   memory model in `memory::stash_ring_costs` exactly.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use pipestale::backend::{native_config, NativeExecutor};
+use pipestale::config::{Backend, Mode, OnFailure, RunConfig, RuntimeKind};
+use pipestale::data::{batch_seed, load_or_synthesize, Batcher, SyntheticSpec};
+use pipestale::memory::stash_ring_costs;
+use pipestale::meta::ConfigMeta;
+use pipestale::model::{checkpoint, ModelParams};
+use pipestale::pipeline::{
+    Feed, FixKind, NativeWorkerBackend, Occupancy, Pipeline, StageExecutor, ThreadedOptions,
+    ThreadedPipeline,
+};
+use pipestale::tensor::{IntTensor, Tensor};
+use pipestale::train::{build_optims, TrainResult};
+
+// ---------------------------------------------------------------------------
+// Shared fixtures.
+// ---------------------------------------------------------------------------
+
+/// A deterministic batch stream for a config: the same (x, labels)
+/// list drives the oracle, the scheduler and the threaded runtime.
+fn make_batches(meta: &ConfigMeta, n: usize, seed: u64) -> Vec<(Tensor, IntTensor)> {
+    let spec = SyntheticSpec { train: 96, test: 16, noise: 0.8, seed: seed ^ 0x5eed_da7a };
+    let (train, _) = load_or_synthesize(&meta.dataset, None, &spec).unwrap();
+    let mut batcher = Batcher::new(train.len(), meta.batch, seed ^ 0xba7c4);
+    (0..n).map(|_| train.gather(&batcher.next_indices().to_vec())).collect()
+}
+
+fn assert_params_eq(a: &ModelParams, b: &ModelParams, what: &str) {
+    assert_eq!(a.partitions.len(), b.partitions.len(), "{what}");
+    for (i, (x, y)) in a.partitions.iter().zip(&b.partitions).enumerate() {
+        assert_eq!(x.version, y.version, "{what}: partition {i} update count");
+        for (j, (t, u)) in x.params.iter().zip(&y.params).enumerate() {
+            assert_eq!(t.data(), u.data(), "{what}: partition {i} param {j} must be bitwise equal");
+        }
+        for (j, (t, u)) in x.state.iter().zip(&y.state).enumerate() {
+            assert_eq!(t.data(), u.data(), "{what}: partition {i} state {j} must be bitwise equal");
+        }
+    }
+}
+
+fn fresh_path(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("mitig_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&p).ok();
+    std::fs::remove_file(&p).ok();
+    p
+}
+
+// ---------------------------------------------------------------------------
+// The three runners. Identical init (same seed -> same weights, same
+// optimizers) and identical batch streams; only the execution engine
+// differs.
+// ---------------------------------------------------------------------------
+
+/// Flat-loop serial oracle: replays the schedule's timing as plain
+/// loops over the raw per-partition primitives. Batch `b` hits
+/// partition `p`'s forward at cycle `b + p`, the fused last stage at
+/// cycle `b + P-1`, and `p`'s backward at cycle `b + 2(P-1) - p`;
+/// within a cycle forwards run (ascending) before backwards
+/// (descending), exactly like `Pipeline::cycle`. Per-partition op
+/// order — the only thing that matters for weight state — is therefore
+/// identical to both production runtimes.
+///
+/// `external_stash = true` keeps the production fix uninstalled and
+/// instead maintains explicit per-partition FIFOs of cloned weights,
+/// driving `stage_forward_with`/`stage_backward_with` directly: a
+/// transparent reimplementation of stashing that the production ring
+/// must match bitwise.
+fn oracle_run(
+    meta: &ConfigMeta,
+    batches: &[(Tensor, IntTensor)],
+    seed: u64,
+    fix: FixKind,
+    external_stash: bool,
+) -> ModelParams {
+    assert!(!external_stash || fix == FixKind::Stash);
+    let params = ModelParams::init(&meta.partitions, seed).unwrap();
+    let optims = build_optims(meta, batches.len() as u64, 1.0);
+    let mut exec = NativeExecutor::new(meta.clone(), params, optims).unwrap();
+    if !external_stash {
+        exec.set_staleness_fix(fix).unwrap();
+    }
+
+    let p_total = exec.parts.len();
+    assert!(p_total >= 2, "oracle needs a pipelined split");
+    let n = batches.len();
+    // [p][b] slots for carries crossing cycles.
+    let mut fwd_out: Vec<Vec<Option<Vec<Tensor>>>> = vec![vec![None; n]; p_total - 1];
+    let mut carry_in: Vec<Vec<Option<Vec<Tensor>>>> = vec![vec![None; n]; p_total - 1];
+    let mut gcarry: Vec<Vec<Option<Vec<Tensor>>>> = vec![vec![None; n]; p_total - 1];
+    let mut stash: Vec<std::collections::VecDeque<Vec<Tensor>>> =
+        (0..p_total - 1).map(|_| Default::default()).collect();
+
+    for c in 0..n + 2 * (p_total - 1) {
+        // forwards, ascending partitions
+        for p in 0..p_total - 1 {
+            if c < p || c - p >= n {
+                continue;
+            }
+            let b = c - p;
+            let carry = if p == 0 {
+                vec![batches[b].0.clone()]
+            } else {
+                fwd_out[p - 1][b].take().unwrap()
+            };
+            let out = if external_stash {
+                stash[p].push_back(exec.parts[p].params.params.clone());
+                exec.parts[p].stage_forward_with(&carry, None).unwrap()
+            } else {
+                exec.parts[p].stage_forward(&carry).unwrap()
+            };
+            fwd_out[p][b] = Some(out);
+            carry_in[p][b] = Some(carry);
+        }
+        // fused last stage
+        if c >= p_total - 1 && c - (p_total - 1) < n {
+            let b = c - (p_total - 1);
+            let carry = fwd_out[p_total - 2][b].take().unwrap();
+            let res = exec.parts[p_total - 1].stage_last(&carry, &batches[b].1).unwrap();
+            gcarry[p_total - 2][b] = Some(res.gcarry_in);
+        }
+        // backwards, descending partitions
+        for p in (0..p_total - 1).rev() {
+            let shift = 2 * (p_total - 1) - p;
+            if c < shift || c - shift >= n {
+                continue;
+            }
+            let b = c - shift;
+            let cin = carry_in[p][b].take().unwrap();
+            let g = gcarry[p][b].take().unwrap();
+            let gin = if external_stash {
+                let over = stash[p].pop_front().expect("external stash underflow");
+                exec.parts[p].stage_backward_with(&cin, &g, Some(&over), 1.0).unwrap()
+            } else {
+                exec.parts[p].stage_backward(&cin, &g).unwrap()
+            };
+            if p > 0 {
+                gcarry[p - 1][b] = Some(gin);
+            }
+        }
+    }
+    for s in &stash {
+        assert!(s.is_empty(), "external stash must drain with the pipeline");
+    }
+    exec.params_snapshot()
+}
+
+/// The cycle-accurate scheduler on the native backend.
+fn scheduler_run(
+    meta: &ConfigMeta,
+    batches: &[(Tensor, IntTensor)],
+    seed: u64,
+    fix: FixKind,
+) -> ModelParams {
+    let params = ModelParams::init(&meta.partitions, seed).unwrap();
+    let optims = build_optims(meta, batches.len() as u64, 1.0);
+    let mut exec = NativeExecutor::new(meta.clone(), params, optims).unwrap();
+    exec.set_staleness_fix(fix).unwrap();
+    let mut pipe = Pipeline::new(exec, meta.batch);
+    for (b, (x, labels)) in batches.iter().enumerate() {
+        let feed = Feed {
+            batch_id: b as u64,
+            seed: batch_seed(seed, b as u64),
+            x: x.clone(),
+            labels: labels.clone(),
+        };
+        pipe.cycle(Some(feed)).unwrap();
+    }
+    pipe.drain().unwrap();
+    for st in pipe.exec.fix_stats() {
+        assert_eq!(st.ring_len, 0, "fix state must be empty after drain");
+    }
+    pipe.exec.params_snapshot()
+}
+
+/// The thread-per-partition runtime on the native backend.
+fn threaded_run(
+    meta: &ConfigMeta,
+    batches: &[(Tensor, IntTensor)],
+    seed: u64,
+    fix: FixKind,
+) -> ModelParams {
+    let params = ModelParams::init(&meta.partitions, seed).unwrap();
+    let optims = build_optims(meta, batches.len() as u64, 1.0);
+    let opts = ThreadedOptions {
+        occupancy: Occupancy::Full,
+        stall_timeout: Duration::from_secs(30),
+        staleness_fix: fix,
+    };
+    let mut pipe =
+        ThreadedPipeline::launch_with(NativeWorkerBackend, meta, params, optims, opts).unwrap();
+    pipe.train(batches.len() as u64, seed, |b| batches[b as usize].clone()).unwrap();
+    pipe.shutdown().unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// Oracle <-> scheduler <-> threaded, per fix.
+// ---------------------------------------------------------------------------
+
+fn assert_three_way(config: &str, n: usize, seed: u64) {
+    let meta = native_config(config).unwrap();
+    let batches = make_batches(&meta, n, seed);
+    for fix in FixKind::all() {
+        let oracle = oracle_run(&meta, &batches, seed, fix, false);
+        let sched = scheduler_run(&meta, &batches, seed, fix);
+        let thr = threaded_run(&meta, &batches, seed, fix);
+        assert_params_eq(&oracle, &sched, &format!("{config}/{}: oracle vs scheduler", fix.name()));
+        assert_params_eq(&sched, &thr, &format!("{config}/{}: scheduler vs threaded", fix.name()));
+    }
+}
+
+#[test]
+fn oracle_scheduler_threaded_agree_per_fix_lenet_p2() {
+    assert_three_way("native_lenet_small", 10, 11);
+}
+
+#[test]
+fn oracle_scheduler_threaded_agree_per_fix_lenet_p4() {
+    assert_three_way("native_lenet_small_4s", 12, 17);
+}
+
+#[test]
+fn oracle_scheduler_threaded_agree_per_fix_resnet_p4() {
+    // Residual blocks + BN state cross the same seam; P=4 keeps the
+    // deep-split degrees (6/4/2) in play.
+    assert_three_way("native_resnet_small_4s", 10, 23);
+}
+
+#[test]
+fn production_stash_ring_matches_external_reimplementation() {
+    // The defining stash claim at full pipeline scale: the pool-backed
+    // production ring is bitwise the obvious clone-per-forward FIFO.
+    for (config, n, seed) in
+        [("native_lenet_small_4s", 12, 29u64), ("native_resnet_small", 10, 31u64)]
+    {
+        let meta = native_config(config).unwrap();
+        let batches = make_batches(&meta, n, seed);
+        let production = oracle_run(&meta, &batches, seed, FixKind::Stash, false);
+        let external = oracle_run(&meta, &batches, seed, FixKind::Stash, true);
+        assert_params_eq(&production, &external, &format!("{config}: production vs external stash"));
+    }
+}
+
+#[test]
+fn stash_differs_from_baseline_once_weights_are_stale() {
+    // Sanity check that the suite has teeth: under full occupancy the
+    // stashed backward really changes the arithmetic.
+    let meta = native_config("native_lenet_small_4s").unwrap();
+    let batches = make_batches(&meta, 12, 37);
+    let none = scheduler_run(&meta, &batches, 37, FixKind::None);
+    let stash = scheduler_run(&meta, &batches, 37, FixKind::Stash);
+    let differ = none
+        .partitions
+        .iter()
+        .zip(&stash.partitions)
+        .any(|(a, b)| a.params.iter().zip(&b.params).any(|(t, u)| t.data() != u.data()));
+    assert!(differ, "stash must alter stale-partition training");
+}
+
+// ---------------------------------------------------------------------------
+// Staleness 0: every fix stands down bitwise.
+// ---------------------------------------------------------------------------
+
+fn rc_for(config: &str, runtime: RuntimeKind, mode: Mode, iters: u64) -> RunConfig {
+    let mut rc = RunConfig::new(config);
+    rc.backend = Backend::Native;
+    rc.runtime = runtime;
+    rc.mode = mode;
+    rc.iters = iters;
+    rc.train_size = 128;
+    rc.test_size = 32;
+    rc.noise = 0.8;
+    rc.restart_backoff_ms = 1;
+    rc
+}
+
+/// Run to completion, reading the final weights back through
+/// `--save-checkpoint` (the bitwise ground truth).
+fn run_saving(rc: &mut RunConfig, tag: &str) -> (TrainResult, ModelParams) {
+    let out = fresh_path(&format!("{tag}_final"));
+    rc.save_to = Some(out.clone());
+    let res = pipestale::train::run(rc).unwrap();
+    let (params, at) = checkpoint::load(&out).unwrap();
+    assert_eq!(at, rc.iters);
+    std::fs::remove_file(&out).ok();
+    (res, params)
+}
+
+#[test]
+fn every_fix_is_bitwise_noop_in_sequential_mode() {
+    for runtime in [RuntimeKind::Scheduler, RuntimeKind::Threaded] {
+        let mut base = rc_for("native_lenet_small_4s", runtime, Mode::Sequential, 8);
+        let (bres, bparams) = run_saving(&mut base, &format!("noop_base_{}", runtime.name()));
+        for fix in [FixKind::Stash, FixKind::Predict, FixKind::Correct] {
+            let mut rc = rc_for("native_lenet_small_4s", runtime, Mode::Sequential, 8);
+            rc.staleness_fix = fix;
+            let (res, params) =
+                run_saving(&mut rc, &format!("noop_{}_{}", fix.name(), runtime.name()));
+            assert_eq!(
+                res.recorder.train,
+                bres.recorder.train,
+                "{}/{}: sequential loss curve must be bitwise identical",
+                runtime.name(),
+                fix.name()
+            );
+            assert_params_eq(
+                &params,
+                &bparams,
+                &format!("{}/{}: sequential weights", runtime.name(), fix.name()),
+            );
+        }
+    }
+}
+
+#[test]
+fn every_fix_is_bitwise_noop_in_hybrid_tail() {
+    // The hybrid switch drains the pipe; the sequential tail then runs
+    // at staleness 0, where predict/correct must not perturb a single
+    // bit relative to... themselves with a different fix? No: relative
+    // to the fix-free hybrid run *after the same pipelined prefix* the
+    // trajectories already diverged. The sharp claim is prefix-free:
+    // pipelined_iters = 0 makes the whole hybrid run a sequential run,
+    // which must equal Mode::Sequential bitwise under every fix.
+    let mut seq = rc_for("native_lenet_small_4s", RuntimeKind::Scheduler, Mode::Sequential, 8);
+    let (_, sparams) = run_saving(&mut seq, "hybrid_seq");
+    for fix in FixKind::all() {
+        let mut rc = rc_for("native_lenet_small_4s", RuntimeKind::Scheduler, Mode::Hybrid, 8);
+        rc.pipelined_iters = 0;
+        rc.staleness_fix = fix;
+        let (_, params) = run_saving(&mut rc, &format!("hybrid_{}", fix.name()));
+        assert_params_eq(&params, &sparams, &format!("hybrid-0/{}", fix.name()));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Eval purity: mid-training evaluation never touches the trajectory.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn midtrain_eval_leaves_trajectory_bitwise_unchanged_under_every_fix() {
+    for fix in FixKind::all() {
+        let mut plain = rc_for("native_lenet_small_4s", RuntimeKind::Scheduler, Mode::Pipelined, 9);
+        plain.staleness_fix = fix;
+        let (pres, pparams) = run_saving(&mut plain, &format!("evalp_plain_{}", fix.name()));
+
+        let mut evald = rc_for("native_lenet_small_4s", RuntimeKind::Scheduler, Mode::Pipelined, 9);
+        evald.staleness_fix = fix;
+        evald.eval_every = 3;
+        let (eres, eparams) = run_saving(&mut evald, &format!("evalp_eval_{}", fix.name()));
+
+        assert_eq!(
+            pres.recorder.train,
+            eres.recorder.train,
+            "{}: eval must not perturb the loss curve",
+            fix.name()
+        );
+        assert_params_eq(&pparams, &eparams, &format!("eval purity under {}", fix.name()));
+        assert!(eres.recorder.evals.len() > pres.recorder.evals.len(), "eval points were taken");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint-restart: recovery stays bitwise-invisible under every fix.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn checkpoint_restart_recovery_is_bitwise_invisible_under_every_fix() {
+    // Same fault geometry as the resilience suite's core test: stage 1
+    // dies at op 16, inside the second 6-feed segment, after the iter-6
+    // checkpoint exists. Segment boundaries are drained, so every fix's
+    // ring restarts empty and recovery must stay bitwise-invisible.
+    for fix in [FixKind::Stash, FixKind::Predict, FixKind::Correct] {
+        let mut faulted = rc_for("native_lenet_small_4s", RuntimeKind::Threaded, Mode::Pipelined, 18);
+        faulted.staleness_fix = fix;
+        faulted.ckpt_every = 6;
+        faulted.ckpt_dir = Some(fresh_path(&format!("ckpt_{}_faulted", fix.name())));
+        faulted.on_failure = OnFailure::Restart;
+        faulted.fault_plan = Some("panic@1:16".to_string());
+        let (fres, fparams) = run_saving(&mut faulted, &format!("ckpt_{}_f", fix.name()));
+
+        let mut clean = rc_for("native_lenet_small_4s", RuntimeKind::Threaded, Mode::Pipelined, 18);
+        clean.staleness_fix = fix;
+        clean.ckpt_every = 6;
+        clean.ckpt_dir = Some(fresh_path(&format!("ckpt_{}_clean", fix.name())));
+        let (cres, cparams) = run_saving(&mut clean, &format!("ckpt_{}_c", fix.name()));
+
+        assert_eq!(fres.restarts, 1, "{}: exactly one recovery", fix.name());
+        assert!(!fres.degraded);
+        assert_eq!(
+            fres.recorder.train,
+            cres.recorder.train,
+            "{}: recovered loss curve must be bitwise identical",
+            fix.name()
+        );
+        assert_params_eq(&fparams, &cparams, &format!("checkpoint-restart under {}", fix.name()));
+        std::fs::remove_dir_all(faulted.ckpt_dir.unwrap()).ok();
+        std::fs::remove_dir_all(clean.ckpt_dir.unwrap()).ok();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Memory accounting: observed ring marks == analytic model, exactly.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn stash_ring_high_water_matches_memory_model_exactly() {
+    // Enough feeds for every partition to reach full occupancy
+    // (deepest window is degree+1 = 7 at P=4).
+    let meta = native_config("native_lenet_small_4s").unwrap();
+    let batches = make_batches(&meta, 16, 41);
+    let params = ModelParams::init(&meta.partitions, 41).unwrap();
+    let optims = build_optims(&meta, batches.len() as u64, 1.0);
+    let mut exec = NativeExecutor::new(meta.clone(), params, optims).unwrap();
+    exec.set_staleness_fix(FixKind::Stash).unwrap();
+    let mut pipe = Pipeline::new(exec, meta.batch);
+    for (b, (x, labels)) in batches.iter().enumerate() {
+        let feed = Feed {
+            batch_id: b as u64,
+            seed: batch_seed(41, b as u64),
+            x: x.clone(),
+            labels: labels.clone(),
+        };
+        pipe.cycle(Some(feed)).unwrap();
+    }
+    pipe.drain().unwrap();
+
+    let stats = pipe.exec.fix_stats();
+    let costs = stash_ring_costs(&meta);
+    assert_eq!(stats.len(), costs.len());
+    for (st, cost) in stats.iter().zip(&costs) {
+        assert_eq!(st.kind, FixKind::Stash);
+        assert_eq!(st.ring_len, 0, "partition {}: drained ring must be empty", cost.partition);
+        assert_eq!(
+            st.ring_high_water, cost.ring_slots,
+            "partition {}: observed ring high-water vs analytic slots",
+            cost.partition
+        );
+        assert_eq!(
+            st.stashed_bytes_high_water as f64, cost.ring_bytes,
+            "partition {}: observed stash bytes vs analytic ring bytes",
+            cost.partition
+        );
+    }
+}
+
+#[test]
+fn predict_and_correct_track_inflight_depth_without_stashing_bytes() {
+    let meta = native_config("native_lenet_small_4s").unwrap();
+    let batches = make_batches(&meta, 16, 43);
+    for fix in [FixKind::Predict, FixKind::Correct] {
+        let params = ModelParams::init(&meta.partitions, 43).unwrap();
+        let optims = build_optims(&meta, batches.len() as u64, 1.0);
+        let mut exec = NativeExecutor::new(meta.clone(), params, optims).unwrap();
+        exec.set_staleness_fix(fix).unwrap();
+        let mut pipe = Pipeline::new(exec, meta.batch);
+        for (b, (x, labels)) in batches.iter().enumerate() {
+            let feed = Feed {
+                batch_id: b as u64,
+                seed: batch_seed(43, b as u64),
+                x: x.clone(),
+                labels: labels.clone(),
+            };
+            pipe.cycle(Some(feed)).unwrap();
+        }
+        pipe.drain().unwrap();
+        for (st, cost) in pipe.exec.fix_stats().iter().zip(stash_ring_costs(&meta)) {
+            assert_eq!(st.ring_len, 0, "{}: drained", fix.name());
+            assert_eq!(st.ring_high_water, cost.ring_slots, "{}: in-flight depth", fix.name());
+            assert_eq!(st.stashed_bytes_high_water, 0, "{}: stashes no weights", fix.name());
+        }
+    }
+}

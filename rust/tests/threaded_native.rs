@@ -86,7 +86,7 @@ fn threaded_run_with<B: WorkerBackend>(
 ) -> Result<(Vec<TrainEvent>, ModelParams)> {
     let params = ModelParams::init(&meta.partitions, seed)?;
     let optims = pipestale::train::build_optims(meta, batches.len() as u64, 1.0);
-    let opts = ThreadedOptions { occupancy, stall_timeout: Duration::from_secs(30) };
+    let opts = ThreadedOptions { occupancy, stall_timeout: Duration::from_secs(30), ..Default::default() };
     let mut pipe = ThreadedPipeline::launch_with(backend, meta, params, optims, opts)?;
     let (events, _wall) = pipe.train(batches.len() as u64, seed, |b| batches[b as usize].clone())?;
     let trained = pipe.shutdown()?;

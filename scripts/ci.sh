@@ -64,6 +64,19 @@ trap 'rm -f "$TEST_LOG"; rm -rf "$SOAK_DIR"' EXIT
     --stall-timeout-ms 2000 --on-failure degrade --max-restarts 2 \
     --restart-backoff-ms 50 --fault-plan 'panic@1:12;stall@2:30:4000;corrupt@0'
 
+# Staleness-mitigation matrix smoke: every --staleness-fix on both
+# runtimes through the released binary (DESIGN.md §9) — keeps the CLI
+# axis wired end to end, distinct from tests/mitigation.rs's
+# in-process equivalence coverage.
+echo "[ci] staleness-mitigation matrix smoke (4 fixes x 2 runtimes, P=4)"
+for fix in none stash predict correct; do
+    for rt in scheduler threaded; do
+        ./target/release/pipestale train --config native_lenet_small_4s \
+            --backend native --runtime "$rt" --mode pipelined \
+            --staleness-fix "$fix" --iters 12 --train-size 96 --test-size 32
+    done
+done
+
 # Docs build warning-free: #![warn(missing_docs)] is enabled in
 # src/lib.rs, so -D warnings turns an undocumented public item (or a
 # broken intra-doc link) into a CI failure.
