@@ -12,6 +12,9 @@
 //!   * conv2d / dense kernels: pre-lowering nested loops
 //!     (`reference_*`) vs the im2col+GEMM core (`backend::gemm`),
 //!     forward and backward — the native backend's compute hot path
+//!   * raw GEMM core: scalar micro-kernel vs the detected SIMD one
+//!     (`gemm_scalar_vs_simd`), and 1 GEMM thread vs the worker-pool
+//!     dispatch (`gemm_1t_vs_nt`) — the tentpole's before/after pairs
 //!   * scheduler cycle (mock executor, P=4): pool disabled (every
 //!     backing store freshly allocated, as in the seed) vs pool enabled
 //!   * meta.json parse, DES throughput, XLA stage execution (unchanged
@@ -24,7 +27,7 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use pipestale::backend::{kernels, ActKind};
+use pipestale::backend::{gemm, kernels, simd, threadpool, ActKind};
 use pipestale::data::batch_seed;
 use pipestale::meta::ConfigMeta;
 use pipestale::model::ModelParams;
@@ -207,6 +210,41 @@ fn main() {
             kernels::dense_forward(&fx, dn, din, &fw, &fb, dout, ActKind::Tanh, &mut fy);
         });
         rep.pair("dense_fwd_gemm", before, after);
+    }
+
+    // ---- raw GEMM core: scalar vs SIMD, 1 thread vs worker pool ---------
+    // ResNet-mid-layer im2col geometry: C[4096x64] = A[4096x576]*B[576x64]
+    // (16 images of 16x16 spatial, 64 output channels, 3x3x64 patches).
+    // Both axes pin the other axis so each pair isolates one effect; the
+    // N-thread leg forces >= 2 threads so the worker pool is exercised
+    // even on a 1-core container.
+    {
+        let mut rng = Pcg32::seeded(11);
+        let (m, n, k) = (4096usize, 64usize, 576usize);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let mut c = vec![0.0f32; m * n];
+        let micro = simd::detected();
+        let nt = threadpool::configured_threads().max(2);
+        println!("[gemm] micro-kernel: {} / threads: {}", micro.name(), nt);
+
+        let before = bench("gemm scalar 1t (4096x64x576)", 3, 0.4, || {
+            gemm::sgemm_with(simd::Micro::Scalar, 1, false, false, m, n, k, &a, &b, false, &mut c);
+        });
+        let after = bench(&format!("gemm {} 1t (4096x64x576)", micro.name()), 3, 0.4, || {
+            gemm::sgemm_with(micro, 1, false, false, m, n, k, &a, &b, false, &mut c);
+        });
+        rep.pair("gemm_scalar_vs_simd", before, after);
+
+        let name = format!("gemm {} 1t serial baseline (4096x64x576)", micro.name());
+        let before = bench(&name, 3, 0.4, || {
+            gemm::sgemm_with(micro, 1, false, false, m, n, k, &a, &b, false, &mut c);
+        });
+        let name = format!("gemm {} {}t worker pool (4096x64x576)", micro.name(), nt);
+        let after = bench(&name, 3, 0.4, || {
+            gemm::sgemm_with(micro, nt, false, false, m, n, k, &a, &b, false, &mut c);
+        });
+        rep.pair("gemm_1t_vs_nt", before, after);
     }
 
     // ---- scheduler overhead with mock executor, pool off vs on ----------

@@ -16,35 +16,59 @@
 //! `KC x NC` panel of B and an `MC x KC` panel of A are *packed* into
 //! contiguous scratch so the micro-kernel streams cache-resident,
 //! unit-stride data. The micro-kernel itself computes an `MR x NR`
-//! register tile with a single accumulator per output element.
+//! register tile with a single accumulator per output element — at
+//! scalar, AVX2 or NEON width, selected at run time by
+//! [`simd::detected`] (see `backend::simd` for the no-FMA bitwise
+//! contract across kernels).
+//!
+//! # Threading
+//!
+//! With more than one configured GEMM thread
+//! (`threadpool::configured_threads`), the `(jc, ic)` macro-tile grid
+//! is partitioned *statically* — round-robin by flattened tile index —
+//! over the slots of `backend::threadpool`, and each tile runs its
+//! `pc` loop sequentially on whichever thread owns it. Different
+//! threads write disjoint `MC x NC` tiles of C, so no synchronization
+//! touches the inner loops, and — because assignment is by index, not
+//! by timing — the work a tile's owner performs is identical at every
+//! thread count.
 //!
 //! # Scratch lifecycle
 //!
-//! The two packing panels are leased from the thread's [`TensorPool`]
-//! (`crate::pool`) at fixed sizes `MC*KC` and `KC*NC`, and im2col
+//! Each participating thread leases its own packing-panel pair from
+//! *its* thread's [`TensorPool`] (`crate::pool`) at fixed sizes
+//! `MC*KC` and `KC*NC` (GEMM pool workers install a thread-lifetime
+//! pool scope; the calling thread uses its own, as before), and im2col
 //! buffers are leased at the (finite, per-model) conv geometry sizes —
 //! so after warmup a training step performs **zero heap allocations**
-//! for GEMM scratch, verified by the pool-stats probe in
-//! `tests/pool_and_kernel.rs`. Recycled buffers return with arbitrary
-//! contents; every packing routine fully overwrites the region it
-//! reads back (zero-filling edge strips), so no stale data can leak
-//! into a product.
+//! for GEMM scratch on every thread, verified by the pool-stats probes
+//! in `tests/pool_and_kernel.rs` (including the cross-worker probe at
+//! threads > 1; `backend::ops` accounts the footprint as
+//! threads x panel-pair via [`pack_scratch_total`]). Recycled buffers
+//! return with arbitrary contents; every packing routine fully
+//! overwrites the region it reads back (zero-filling edge strips), so
+//! no stale data can leak into a product.
 //!
 //! # Determinism
 //!
 //! The loop nest is fixed: for each output element the `k` products
 //! are accumulated in ascending-`k` order within each `KC` block, and
 //! the per-block partial sums are added to C in ascending block order.
-//! The summation order therefore depends only on the problem shape
-//! `(m, n, k)` — never on timing, threads, or data — so a given model
-//! step is bitwise reproducible run-to-run, which is what keeps the
-//! pipeline-schedule equivalence invariants (single-in-flight ==
-//! sequential, threaded == scheduler) exact under the GEMM lowering.
-//! For `k <= KC` the result is additionally bitwise identical to a
-//! naive single-accumulator k-ordered loop.
+//! Threading never splits `k` (the `pc` loop is sequential per tile)
+//! and the SIMD kernels perform the identical per-element operation
+//! sequence as the scalar oracle, so the summation order still depends
+//! only on the problem shape `(m, n, k)` — never on timing, thread
+//! count, ISA, or data. A given model step is therefore bitwise
+//! reproducible run-to-run *and* across GEMM thread counts, which is
+//! what keeps the pipeline-schedule equivalence invariants
+//! (single-in-flight == sequential, threaded == scheduler) exact under
+//! the GEMM lowering. For `k <= KC` the result is additionally bitwise
+//! identical to a naive single-accumulator k-ordered loop.
 //!
 //! [`TensorPool`]: crate::pool::TensorPool
 
+use super::simd::{self, Micro};
+use super::threadpool;
 use crate::pool;
 
 /// Micro-kernel register-tile rows (accumulator tile is `MR x NR`).
@@ -58,12 +82,21 @@ pub const NC: usize = 128;
 /// Inner-dimension depth of one packed panel pair.
 pub const KC: usize = 256;
 
-/// Scalars of pooled packing scratch one `sgemm` call leases
+/// Scalars of pooled packing scratch one GEMM *thread* leases
 /// (`MC*KC` for the A panel + `KC*NC` for the B panel), independent of
-/// the problem size. Exposed so the op-level scratch accounting in
-/// `backend::ops` can report a training step's pool footprint.
+/// the problem size.
 pub const fn pack_scratch_floats() -> usize {
     MC * KC + KC * NC
+}
+
+/// Scalars of pooled packing scratch a dispatched [`sgemm`] call may
+/// lease across all participating threads — one panel pair per
+/// configured GEMM thread (the worker-side pairs live in the workers'
+/// own pools, but they are still part of the step's memory footprint).
+/// Exposed so the op-level scratch accounting in `backend::ops` can
+/// report a training step's pool footprint.
+pub fn pack_scratch_total() -> usize {
+    threadpool::configured_threads() * pack_scratch_floats()
 }
 
 /// Scalars of the im2col (or col2im) buffer for a conv lowering:
@@ -142,18 +175,33 @@ fn pack_b(
     }
 }
 
-/// `MR x NR` register-tile micro-kernel over one packed panel pair:
-/// `acc[r][c] += sum_l a_panel[l*MR+r] * b_panel[l*NR+c]` with a single
-/// accumulator per element (ascending-`l` order), then `C += acc` on
-/// the valid sub-tile.
+/// Macro-kernel over one packed panel pair: for each `MR x NR` register
+/// tile, `acc[r][c] += sum_l a_panel[l*MR+r] * b_panel[l*NR+c]` with a
+/// single accumulator per element (ascending-`l` order, computed by the
+/// requested `simd` micro-kernel), then `C += acc` on the valid
+/// sub-tile in ascending row, ascending column order.
+///
+/// Takes C as a raw pointer so the threaded driver can hand disjoint
+/// macro-tiles of one C buffer to different threads.
+///
+/// # Safety
+///
+/// `c` must point to a live `f32` buffer of `c_len >= m*n` scalars, the
+/// `(ic, jc, mc, nc)` tile must lie inside the logical `m x n` matrix,
+/// and no other thread may concurrently touch this tile's elements
+/// (rows `ic..ic+mc` x cols `jc..jc+nc`). Concurrent writes to
+/// *disjoint* tiles of the same buffer are fine — that disjointness is
+/// exactly what the threaded driver guarantees.
 #[allow(clippy::too_many_arguments)]
-fn macro_kernel(
+unsafe fn macro_kernel_raw(
+    micro: Micro,
     ap: &[f32],
     bp: &[f32],
     mc: usize,
     nc: usize,
     kc: usize,
-    c: &mut [f32],
+    c: *mut f32,
+    c_len: usize,
     ic: usize,
     jc: usize,
     n: usize,
@@ -168,25 +216,53 @@ fn macro_kernel(
             let a_panel = &ap[is * kc * MR..(is * kc * MR) + kc * MR];
             let row0 = ic + is * MR;
             let rows = MR.min(ic + mc - row0);
-            let mut acc = [[0.0f32; NR]; MR];
-            for l in 0..kc {
-                let ar = &a_panel[l * MR..l * MR + MR];
-                let br = &b_panel[l * NR..l * NR + NR];
-                for r in 0..MR {
-                    let av = ar[r];
-                    for (dst, &bv) in acc[r].iter_mut().zip(br) {
-                        *dst += av * bv;
-                    }
-                }
-            }
-            for r in 0..rows {
-                let crow = &mut c[(row0 + r) * n + col0..(row0 + r) * n + col0 + cols];
-                for (dst, &v) in crow.iter_mut().zip(&acc[r][..cols]) {
-                    *dst += v;
+            let acc = simd::compute_tile(micro, a_panel, b_panel, kc);
+            for (r, accr) in acc.iter().enumerate().take(rows) {
+                let base = (row0 + r) * n + col0;
+                debug_assert!(base + cols <= c_len);
+                for (cc, &v) in accr[..cols].iter().enumerate() {
+                    *c.add(base + cc) += v;
                 }
             }
         }
     }
+}
+
+/// The scalar parity oracle: the original safe macro-kernel every
+/// vectorized/threaded path is tested against.
+#[allow(clippy::too_many_arguments)]
+fn macro_kernel(
+    ap: &[f32],
+    bp: &[f32],
+    mc: usize,
+    nc: usize,
+    kc: usize,
+    c: &mut [f32],
+    ic: usize,
+    jc: usize,
+    n: usize,
+) {
+    macro_kernel_with(Micro::Scalar, ap, bp, mc, nc, kc, c, ic, jc, n)
+}
+
+/// Safe single-threaded wrapper over [`macro_kernel_raw`] with a
+/// caller-chosen micro-kernel.
+#[allow(clippy::too_many_arguments)]
+fn macro_kernel_with(
+    micro: Micro,
+    ap: &[f32],
+    bp: &[f32],
+    mc: usize,
+    nc: usize,
+    kc: usize,
+    c: &mut [f32],
+    ic: usize,
+    jc: usize,
+    n: usize,
+) {
+    // SAFETY: the exclusive `&mut` borrow spans all of C, so no other
+    // thread can touch any tile while this call runs.
+    unsafe { macro_kernel_raw(micro, ap, bp, mc, nc, kc, c.as_mut_ptr(), c.len(), ic, jc, n) }
 }
 
 /// Single-precision GEMM: `C (+)= op(A) · op(B)` with row-major
@@ -199,10 +275,15 @@ fn macro_kernel(
 ///   `accumulate == true` adds into the caller's `C` — the path conv
 ///   bias init and gradient accumulation use.
 ///
-/// Packing scratch is leased from the current thread's tensor pool and
-/// returned on exit; steady-state calls allocate nothing. The
+/// Packing scratch is leased from each participating thread's tensor
+/// pool and returned on exit; steady-state calls allocate nothing. The
 /// summation order is fixed by `(m, n, k)` alone (see the module docs),
-/// so results are bitwise reproducible.
+/// so results are bitwise reproducible — at any thread count and on
+/// any detected micro-kernel.
+///
+/// This entry point auto-dispatches to [`simd::detected`] and
+/// `threadpool::configured_threads`; use [`sgemm_with`] to pin both
+/// axes explicitly (the parity suites and benches do).
 ///
 /// ```
 /// use pipestale::backend::gemm::sgemm;
@@ -225,6 +306,31 @@ pub fn sgemm(
     accumulate: bool,
     c: &mut [f32],
 ) {
+    let threads = threadpool::configured_threads();
+    sgemm_with(simd::detected(), threads, ta, tb, m, n, k, a, b, accumulate, c)
+}
+
+/// [`sgemm`] with the micro-kernel and GEMM thread count pinned by the
+/// caller instead of auto-detected. `threads <= 1` runs the serial
+/// loop nest on the calling thread; `threads > 1` partitions the
+/// macro-tile grid over the `backend::threadpool` workers (capped at
+/// the tile count). Every combination returns bitwise-identical
+/// results for a given `(m, n, k)` — that is the point of the design —
+/// so this knob trades time, never bits.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_with(
+    micro: Micro,
+    threads: usize,
+    ta: bool,
+    tb: bool,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    accumulate: bool,
+    c: &mut [f32],
+) {
     assert_eq!(a.len(), m * k, "sgemm: op(A) must hold m*k scalars");
     assert_eq!(b.len(), k * n, "sgemm: op(B) must hold k*n scalars");
     assert_eq!(c.len(), m * n, "sgemm: C must hold m*n scalars");
@@ -234,6 +340,28 @@ pub fn sgemm(
     if m == 0 || n == 0 || k == 0 {
         return;
     }
+    if threads <= 1 {
+        sgemm_serial(micro, ta, tb, m, n, k, a, b, c);
+    } else {
+        sgemm_tiled(micro, threads, ta, tb, m, n, k, a, b, c);
+    }
+}
+
+/// The original single-threaded five-loop nest (jc -> pc -> ic), which
+/// packs each B panel once per `(jc, pc)` and reuses it across the ic
+/// sweep. C must already be zeroed/accumulation-ready.
+#[allow(clippy::too_many_arguments)]
+fn sgemm_serial(
+    micro: Micro,
+    ta: bool,
+    tb: bool,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
     let mut ap = pool::acquire(MC * KC);
     let mut bp = pool::acquire(KC * NC);
     let mut jc = 0;
@@ -247,13 +375,84 @@ pub fn sgemm(
             while ic < m {
                 let mc = MC.min(m - ic);
                 pack_a(a, ta, m, k, ic, pc, mc, kc, &mut ap);
-                macro_kernel(&ap, &bp, mc, nc, kc, c, ic, jc, n);
+                match micro {
+                    Micro::Scalar => macro_kernel(&ap, &bp, mc, nc, kc, c, ic, jc, n),
+                    other => macro_kernel_with(other, &ap, &bp, mc, nc, kc, c, ic, jc, n),
+                }
                 ic += MC;
             }
             pc += KC;
         }
         jc += NC;
     }
+}
+
+/// Raw C pointer that may cross into pool worker threads.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+// SAFETY: every worker writes only the macro-tiles the static
+// round-robin partition assigns to its slot, and those tiles are
+// pairwise disjoint regions of C (see `sgemm_tiled`); the caller
+// blocks until all slots finish before the `&mut` borrow ends.
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Threaded driver: the flattened `(jc, ic)` macro-tile grid is walked
+/// round-robin by slot (`tile = slot, slot + t, ...`), each tile
+/// running its full sequential `pc` loop on its owning thread. Static
+/// assignment by index keeps every C element's summation order
+/// identical to the serial nest — and to any other thread count — so
+/// threading is bitwise invisible. C must already be
+/// zeroed/accumulation-ready.
+#[allow(clippy::too_many_arguments)]
+fn sgemm_tiled(
+    micro: Micro,
+    threads: usize,
+    ta: bool,
+    tb: bool,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
+    let it = (m + MC - 1) / MC;
+    let jt = (n + NC - 1) / NC;
+    let tiles = it * jt;
+    let t = threads.min(tiles).max(1);
+    let cp = SendPtr(c.as_mut_ptr());
+    let c_len = c.len();
+    threadpool::run(t, &|slot| {
+        // Per-thread packing panels: slot 0 leases from the calling
+        // thread's pool, workers from their own thread-lifetime pools,
+        // so warm steady state allocates nothing anywhere.
+        let mut ap = pool::acquire(MC * KC);
+        let mut bp = pool::acquire(KC * NC);
+        let mut tile = slot;
+        while tile < tiles {
+            let ic = (tile % it) * MC;
+            let jc = (tile / it) * NC;
+            let mc = MC.min(m - ic);
+            let nc = NC.min(n - jc);
+            let mut pc = 0;
+            while pc < k {
+                let kc = KC.min(k - pc);
+                pack_b(b, tb, k, n, pc, jc, kc, nc, &mut bp);
+                pack_a(a, ta, m, k, ic, pc, mc, kc, &mut ap);
+                // SAFETY: tile indices are partitioned round-robin, so
+                // exactly one slot ever touches the (ic, jc) tile, and
+                // distinct tiles are disjoint in C; `threadpool::run`
+                // returns only after every slot completes, keeping the
+                // pointer live for all worker-side writes.
+                unsafe {
+                    macro_kernel_raw(micro, &ap, &bp, mc, nc, kc, cp.0, c_len, ic, jc, n);
+                }
+                pc += KC;
+            }
+            tile += t;
+        }
+    });
 }
 
 /// Lower an NHWC activation tensor to the im2col patch matrix:
@@ -469,6 +668,68 @@ mod tests {
     }
 
     #[test]
+    fn tiled_driver_is_bitwise_equal_to_serial_at_one_thread() {
+        // Same bits despite a different packing schedule (per-tile
+        // B packs instead of one per (jc, pc)): packing affects layout
+        // only, never the per-element summation order.
+        let mut rng = Pcg32::seeded(17);
+        for &(m, n, k) in &[(1usize, 1usize, 3usize), (70, 140, 37), (65, 129, 300), (200, 30, 64)]
+        {
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, k * n);
+            let mut c_serial = vec![0.0f32; m * n];
+            sgemm_serial(Micro::Scalar, false, false, m, n, k, &a, &b, &mut c_serial);
+            let mut c_tiled = vec![0.0f32; m * n];
+            sgemm_tiled(Micro::Scalar, 1, false, false, m, n, k, &a, &b, &mut c_tiled);
+            for (i, (x, y)) in c_tiled.iter().zip(&c_serial).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "({m},{n},{k}) elem {i}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn multithreaded_sgemm_is_bitwise_equal_to_serial() {
+        // The headline invariant: N GEMM threads == 1 thread == the
+        // serial nest, to the bit, across edge geometries (multi-tile,
+        // ragged edges, k crossing the KC panel boundary).
+        let mut rng = Pcg32::seeded(18);
+        for &(m, n, k) in
+            &[(70usize, 140usize, 37usize), (200, 300, 64), (65, 129, 2 * KC + 19), (5, 400, 12)]
+        {
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, k * n);
+            let mut want = vec![0.0f32; m * n];
+            sgemm_with(Micro::Scalar, 1, false, false, m, n, k, &a, &b, false, &mut want);
+            for threads in [2usize, 3, 8] {
+                let mut got = vec![0.0f32; m * n];
+                sgemm_with(Micro::Scalar, threads, false, false, m, n, k, &a, &b, false, &mut got);
+                for (i, (x, y)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "({m},{n},{k}) t={threads} elem {i}: {x} vs {y}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multithreaded_accumulate_adds_exactly_once() {
+        let mut rng = Pcg32::seeded(19);
+        let (m, n, k) = (130, 150, 40);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let mut want = vec![0.25f32; m * n];
+        sgemm_with(Micro::Scalar, 1, false, false, m, n, k, &a, &b, true, &mut want);
+        let mut got = vec![0.25f32; m * n];
+        sgemm_with(Micro::Scalar, 4, false, false, m, n, k, &a, &b, true, &mut got);
+        for (i, (x, y)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "elem {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
     fn im2col_col2im_are_adjoint() {
         // <im2col(x), C> == <x, col2im(C)> for any C: the defining
         // property that makes col2im the correct conv input-gradient.
@@ -493,5 +754,10 @@ mod tests {
         assert_eq!(conv_cols_floats(2, 4, 4, 3, 5), 2 * 16 * 9 * 5);
         assert_eq!(MC % MR, 0, "A macro-tile must hold whole row strips");
         assert_eq!(NC % NR, 0, "B macro-tile must hold whole column strips");
+        // The dispatched footprint is one panel pair per GEMM thread.
+        let total = pack_scratch_total();
+        let threads = threadpool::configured_threads();
+        assert_eq!(total, threads * pack_scratch_floats());
+        assert!(total >= pack_scratch_floats());
     }
 }

@@ -20,9 +20,14 @@
 //! run through the same core. The pre-lowering nested loops are kept
 //! verbatim as `reference_*` oracles: every GEMM path is differentially
 //! tested against them (`tests/native_backend.rs`) and the micro bench
-//! times the pairs. Because the GEMM summation order is fixed by the
-//! problem shape alone, a training step remains bitwise reproducible —
-//! which is what keeps the pipeline equivalence invariants exact.
+//! times the pairs. The core itself is SIMD-vectorized and
+//! multithreaded (`backend::simd`, `backend::threadpool`) — every conv
+//! and dense call here inherits both transparently via `gemm::sgemm`'s
+//! runtime dispatch. Because the GEMM summation order is fixed by the
+//! problem shape alone — the SIMD kernels replay the scalar op
+//! sequence and threads split only whole macro-tiles — a training step
+//! remains bitwise reproducible at any thread count on any host, which
+//! is what keeps the pipeline equivalence invariants exact.
 
 use anyhow::{ensure, Result};
 

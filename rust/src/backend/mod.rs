@@ -27,6 +27,8 @@ pub mod gemm;
 pub mod kernels;
 pub mod models;
 pub mod ops;
+pub mod simd;
+pub mod threadpool;
 
 use anyhow::{anyhow, ensure, Result};
 

@@ -333,25 +333,27 @@ impl NativeOp {
     }
 
     /// Pooled GEMM scratch (in f32 scalars) one training step of this
-    /// op leases at batch-inclusive input shape `s`: the fixed packing
-    /// panels plus the im2col / preactivation-gradient buffer. The
-    /// companion of [`NativeOp::flops_per_sample`] for the cost model —
-    /// `flops` drives the perfsim timeline, `scratch_floats` bounds the
-    /// pool footprint of the lowering (all of it recycled, so the
-    /// steady-state step still allocates nothing).
+    /// op leases at batch-inclusive input shape `s`: the packing panels
+    /// of every configured GEMM thread (the worker-side pairs live in
+    /// the workers' own pools — `gemm::pack_scratch_total`) plus the
+    /// im2col / preactivation-gradient buffer. The companion of
+    /// [`NativeOp::flops_per_sample`] for the cost model — `flops`
+    /// drives the perfsim timeline, `scratch_floats` bounds the pool
+    /// footprint of the lowering (all of it recycled, so the
+    /// steady-state step still allocates nothing on any thread).
     pub fn scratch_floats(&self, s: &[usize]) -> Result<usize> {
         Ok(match &self.kind {
             OpKind::Conv { cin, k, stride, .. } => {
                 let out = self.out_shape(s)?;
                 if *k == 1 && *stride == 1 {
                     // 1x1 stride-1 convs skip im2col entirely.
-                    gemm::pack_scratch_floats()
+                    gemm::pack_scratch_total()
                 } else {
                     gemm::conv_cols_floats(s[0], out[1], out[2], *k, *cin)
-                        + gemm::pack_scratch_floats()
+                        + gemm::pack_scratch_total()
                 }
             }
-            OpKind::Dense { dout, .. } => s[0] * dout + gemm::pack_scratch_floats(),
+            OpKind::Dense { dout, .. } => s[0] * dout + gemm::pack_scratch_total(),
             _ => 0,
         })
     }
@@ -1094,19 +1096,19 @@ mod tests {
     #[test]
     fn scratch_accounting_tracks_the_gemm_lowering() {
         use crate::backend::gemm;
-        // 3x3 conv: im2col buffer + the fixed packing panels.
+        // 3x3 conv: im2col buffer + per-thread packing panels.
         let conv = NativeOp::conv("c", 4, 8, 3, 1, true, false);
         let s = [2usize, 8, 8, 4];
         assert_eq!(
             conv.scratch_floats(&s).unwrap(),
-            gemm::conv_cols_floats(2, 8, 8, 3, 4) + gemm::pack_scratch_floats()
+            gemm::conv_cols_floats(2, 8, 8, 3, 4) + gemm::pack_scratch_total()
         );
         // 1x1 stride-1 conv skips im2col: panels only.
         let proj = NativeOp::conv("p", 4, 8, 1, 1, true, false);
-        assert_eq!(proj.scratch_floats(&s).unwrap(), gemm::pack_scratch_floats());
+        assert_eq!(proj.scratch_floats(&s).unwrap(), gemm::pack_scratch_total());
         // dense: preactivation-gradient buffer + panels.
         let fc = NativeOp::dense("f", 16, 10, ActKind::None);
-        assert_eq!(fc.scratch_floats(&[2, 16]).unwrap(), 2 * 10 + gemm::pack_scratch_floats());
+        assert_eq!(fc.scratch_floats(&[2, 16]).unwrap(), 2 * 10 + gemm::pack_scratch_total());
         // shape-only ops lease nothing.
         assert_eq!(NativeOp::flatten("fl").scratch_floats(&s).unwrap(), 0);
         // a block's footprint is the per-op peak, not the sum.
@@ -1120,7 +1122,7 @@ mod tests {
         );
         assert_eq!(
             node.scratch_floats(&s).unwrap(),
-            gemm::conv_cols_floats(2, 8, 8, 3, 4) + gemm::pack_scratch_floats()
+            gemm::conv_cols_floats(2, 8, 8, 3, 4) + gemm::pack_scratch_total()
         );
     }
 

@@ -1,0 +1,247 @@
+//! SIMD micro-kernels for the GEMM core (`backend::gemm`).
+//!
+//! The blocked `sgemm` driver computes C one `MR x NR` register tile at
+//! a time from a packed panel pair. This module supplies the tile
+//! computation at three ISA levels — portable scalar loops (the parity
+//! oracle), AVX2 (x86_64), and NEON (aarch64) — selected at run time by
+//! CPU feature detection, never at compile time, so one binary runs
+//! everywhere and picks the fastest kernel the machine supports.
+//!
+//! # Bitwise contract
+//!
+//! Every implementation performs the *identical* per-element operation
+//! sequence: for ascending `l`, `acc[r][c] += a[l][r] * b[l][c]` as a
+//! separate IEEE-754 multiply then add — deliberately **no FMA
+//! contraction**, which would change the rounding. Element-wise, the
+//! vector kernels are therefore bitwise-identical to the scalar oracle,
+//! which is what keeps a fixed model step reproducible bit-for-bit no
+//! matter which kernel the host machine detects. The cross-kernel
+//! parity suite (`tests/native_backend.rs`) still pins the contract at
+//! 1e-4 relative tolerance — the documented bound a future
+//! FMA-accepting kernel would have to meet.
+
+use super::gemm::{MR, NR};
+
+/// Which micro-kernel implementation computes each `MR x NR` tile.
+///
+/// Requesting a variant the running CPU does not support is safe:
+/// [`compute_tile`] re-checks the feature bit and falls back to
+/// [`Micro::Scalar`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Micro {
+    /// Portable scalar loops — the parity oracle, available everywhere.
+    Scalar,
+    /// 256-bit AVX2 lanes (x86_64, runtime-detected).
+    Avx2,
+    /// 128-bit NEON lanes (aarch64, runtime-detected).
+    Neon,
+}
+
+impl Micro {
+    /// Short lowercase name for bench labels and logs.
+    pub fn name(self) -> &'static str {
+        match self {
+            Micro::Scalar => "scalar",
+            Micro::Avx2 => "avx2",
+            Micro::Neon => "neon",
+        }
+    }
+}
+
+/// The best micro-kernel the running CPU supports: AVX2 on x86_64,
+/// NEON on aarch64, scalar everywhere else (or when the feature bit is
+/// absent). Detection is cached by the standard library, so calling
+/// this per `sgemm` is free.
+pub fn detected() -> Micro {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Micro::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Micro::Neon;
+        }
+    }
+    Micro::Scalar
+}
+
+/// Compute one `MR x NR` accumulator tile over a packed panel pair:
+/// `acc[r][c] = sum_l a_panel[l*MR+r] * b_panel[l*NR+c]` in ascending-`l`
+/// order with one accumulator per element (the summation-order
+/// contract of `backend::gemm`). Falls back to the scalar oracle when
+/// the requested ISA is unavailable on this CPU, so any `Micro` value
+/// is safe to pass.
+#[inline]
+pub fn compute_tile(micro: Micro, a_panel: &[f32], b_panel: &[f32], kc: usize) -> [[f32; NR]; MR] {
+    debug_assert!(a_panel.len() >= kc * MR, "A panel too short for kc");
+    debug_assert!(b_panel.len() >= kc * NR, "B panel too short for kc");
+    match micro {
+        Micro::Scalar => tile_scalar(a_panel, b_panel, kc),
+        Micro::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                if std::arch::is_x86_feature_detected!("avx2") {
+                    // SAFETY: the avx2 feature bit was just checked.
+                    return unsafe { tile_avx2(a_panel, b_panel, kc) };
+                }
+            }
+            tile_scalar(a_panel, b_panel, kc)
+        }
+        Micro::Neon => {
+            #[cfg(target_arch = "aarch64")]
+            {
+                if std::arch::is_aarch64_feature_detected!("neon") {
+                    // SAFETY: the neon feature bit was just checked.
+                    return unsafe { tile_neon(a_panel, b_panel, kc) };
+                }
+            }
+            tile_scalar(a_panel, b_panel, kc)
+        }
+    }
+}
+
+/// The scalar oracle tile: exactly the pre-SIMD `macro_kernel`
+/// accumulator loop, kept as the reference every vector kernel must
+/// match.
+fn tile_scalar(a_panel: &[f32], b_panel: &[f32], kc: usize) -> [[f32; NR]; MR] {
+    let mut acc = [[0.0f32; NR]; MR];
+    for l in 0..kc {
+        let ar = &a_panel[l * MR..l * MR + MR];
+        let br = &b_panel[l * NR..l * NR + NR];
+        for r in 0..MR {
+            let av = ar[r];
+            for (dst, &bv) in acc[r].iter_mut().zip(br) {
+                *dst += av * bv;
+            }
+        }
+    }
+    acc
+}
+
+/// AVX2 tile: one 8-lane register per output row (`NR == 8`), broadcast
+/// A element, separate `mul` + `add` (no `fmadd` — see the module
+/// docs' bitwise contract).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn tile_avx2(a_panel: &[f32], b_panel: &[f32], kc: usize) -> [[f32; NR]; MR] {
+    use std::arch::x86_64::*;
+    let mut acc = [_mm256_setzero_ps(); MR];
+    for l in 0..kc {
+        let bv = _mm256_loadu_ps(b_panel.as_ptr().add(l * NR));
+        let ar = a_panel.as_ptr().add(l * MR);
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let av = _mm256_set1_ps(*ar.add(r));
+            *accr = _mm256_add_ps(*accr, _mm256_mul_ps(av, bv));
+        }
+    }
+    let mut out = [[0.0f32; NR]; MR];
+    for (r, accr) in acc.iter().enumerate() {
+        _mm256_storeu_ps(out[r].as_mut_ptr(), *accr);
+    }
+    out
+}
+
+/// NEON tile: two 4-lane registers per output row (`NR == 8`),
+/// broadcast A element, separate `mul` + `add` (no fused multiply-add —
+/// see the module docs' bitwise contract).
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn tile_neon(a_panel: &[f32], b_panel: &[f32], kc: usize) -> [[f32; NR]; MR] {
+    use std::arch::aarch64::*;
+    let mut lo = [vdupq_n_f32(0.0); MR];
+    let mut hi = [vdupq_n_f32(0.0); MR];
+    for l in 0..kc {
+        let b0 = vld1q_f32(b_panel.as_ptr().add(l * NR));
+        let b1 = vld1q_f32(b_panel.as_ptr().add(l * NR + 4));
+        let ar = a_panel.as_ptr().add(l * MR);
+        for r in 0..MR {
+            let av = vdupq_n_f32(*ar.add(r));
+            lo[r] = vaddq_f32(lo[r], vmulq_f32(av, b0));
+            hi[r] = vaddq_f32(hi[r], vmulq_f32(av, b1));
+        }
+    }
+    let mut out = [[0.0f32; NR]; MR];
+    for r in 0..MR {
+        vst1q_f32(out[r].as_mut_ptr(), lo[r]);
+        vst1q_f32(out[r].as_mut_ptr().add(4), hi[r]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn panels(seed: u64, kc: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg32::seeded(seed);
+        let a = (0..kc * MR).map(|_| rng.normal()).collect();
+        let b = (0..kc * NR).map(|_| rng.normal()).collect();
+        (a, b)
+    }
+
+    #[test]
+    fn scalar_tile_matches_naive_dot() {
+        let kc = 37;
+        let (a, b) = panels(0x51, kc);
+        let acc = tile_scalar(&a, &b, kc);
+        for r in 0..MR {
+            for c in 0..NR {
+                let mut want = 0.0f32;
+                for l in 0..kc {
+                    want += a[l * MR + r] * b[l * NR + c];
+                }
+                assert_eq!(acc[r][c].to_bits(), want.to_bits(), "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn detected_tile_matches_scalar_bitwise() {
+        // The no-FMA contract: whatever kernel this CPU detects, its
+        // tiles are bit-identical to the scalar oracle's.
+        for kc in [1usize, 7, 64, 300] {
+            let (a, b) = panels(0x52 ^ kc as u64, kc);
+            let want = tile_scalar(&a, &b, kc);
+            let got = compute_tile(detected(), &a, &b, kc);
+            for r in 0..MR {
+                for c in 0..NR {
+                    assert_eq!(
+                        got[r][c].to_bits(),
+                        want[r][c].to_bits(),
+                        "kc={kc} ({r},{c}): {} vs {}",
+                        got[r][c],
+                        want[r][c]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_kernel_variant_is_safe_to_request() {
+        // Unsupported ISAs fall back to scalar instead of faulting, so
+        // explicit `sgemm_with` callers can't crash on the wrong host.
+        let kc = 19;
+        let (a, b) = panels(0x53, kc);
+        let want = tile_scalar(&a, &b, kc);
+        for micro in [Micro::Scalar, Micro::Avx2, Micro::Neon] {
+            let got = compute_tile(micro, &a, &b, kc);
+            for r in 0..MR {
+                for c in 0..NR {
+                    let tol = 1e-4 * (1.0 + want[r][c].abs());
+                    assert!(
+                        (got[r][c] - want[r][c]).abs() <= tol,
+                        "{:?} ({r},{c}): {} vs {}",
+                        micro,
+                        got[r][c],
+                        want[r][c]
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,307 @@
+//! Lightweight persistent worker pool for intra-GEMM parallelism.
+//!
+//! `backend::gemm` partitions the `(jc, ic)` macro-tile grid statically
+//! over `t` slots; slot 0 always runs on the calling thread and slots
+//! `1..t` run on detached worker threads owned by this module. Workers
+//! are spawned lazily, live for the process, and each installs a
+//! thread-lifetime [`PoolScope`](crate::pool::PoolScope) so the packing
+//! panels a worker leases recycle through its *own* pool — warm
+//! steady-state GEMM allocates nothing on any thread, and the pools are
+//! inspectable via [`worker_pool_stats`] for the cross-worker
+//! zero-alloc probes.
+//!
+//! No work stealing, no futures, no dependencies: a job is a borrowed
+//! `&dyn Fn(usize)` whose lifetime is erased before crossing the
+//! channel. That erasure is sound because [`run`] blocks on a
+//! completion latch before returning, so the borrow outlives every
+//! worker-side call. A panicking job is caught on the worker (the
+//! worker survives for future jobs), recorded in the latch, and
+//! re-raised on the calling thread.
+//!
+//! # Thread-count policy
+//!
+//! [`configured_threads`] resolves, in order:
+//! 1. `PIPESTALE_GEMM_THREADS` (explicit, absolute — `0`, unset or
+//!    unparsable means "auto");
+//! 2. auto: `min(available cores, per-thread cap)`. The threaded
+//!    runtime sets the cap to `max(1, cores / P)` on each of its P
+//!    stage workers ([`set_local_cap`]) so GEMM threads x stage
+//!    workers never oversubscribes the machine.
+
+use std::cell::Cell;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+use crate::pool::{PoolScope, PoolStats, TensorPool};
+
+/// Completion latch for one [`run`] call: counts outstanding worker
+/// jobs down to zero and carries the first worker panic, if any.
+struct Latch {
+    state: Mutex<LatchState>,
+    done: Condvar,
+}
+
+struct LatchState {
+    remaining: usize,
+    panic: Option<String>,
+}
+
+impl Latch {
+    fn new(remaining: usize) -> Latch {
+        Latch {
+            state: Mutex::new(LatchState { remaining, panic: None }),
+            done: Condvar::new(),
+        }
+    }
+
+    fn arrive(&self, panic: Option<String>) {
+        let mut st = self.state.lock().expect("gemm latch poisoned");
+        if let Some(p) = panic {
+            st.panic.get_or_insert(p);
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) -> Option<String> {
+        let mut st = self.state.lock().expect("gemm latch poisoned");
+        while st.remaining > 0 {
+            st = self.done.wait(st).expect("gemm latch poisoned");
+        }
+        st.panic.take()
+    }
+}
+
+/// One unit of work shipped to a worker. The `'static` lifetimes are a
+/// lie told by [`run`]'s transmutes; see the module docs for why that
+/// is sound (the caller blocks on `latch` before its borrows end).
+struct Job {
+    body: &'static (dyn Fn(usize) + Sync),
+    latch: &'static Latch,
+    slot: usize,
+}
+
+struct Worker {
+    jobs: Sender<Job>,
+    pool: TensorPool,
+}
+
+static WORKERS: OnceLock<Mutex<Vec<Worker>>> = OnceLock::new();
+
+fn workers() -> &'static Mutex<Vec<Worker>> {
+    WORKERS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+fn spawn_worker(idx: usize) -> Worker {
+    let (jobs_tx, jobs_rx) = channel::<Job>();
+    let (pool_tx, pool_rx) = channel::<TensorPool>();
+    std::thread::Builder::new()
+        .name(format!("gemm-{idx}"))
+        .spawn(move || worker_main(jobs_rx, pool_tx))
+        .expect("spawning gemm worker thread");
+    let pool = pool_rx.recv().expect("gemm worker failed to start");
+    Worker { jobs: jobs_tx, pool }
+}
+
+fn worker_main(jobs: Receiver<Job>, pool_tx: Sender<TensorPool>) {
+    // Thread-lifetime scope: every panel this worker leases recycles
+    // through its own pool, keeping warm GEMM allocation-free without
+    // contending on the caller's pool.
+    let scope = PoolScope::new();
+    let _ = pool_tx.send(scope.pool().clone());
+    // A pool worker never fans out further, whatever the process-wide
+    // auto thread count says.
+    set_local_cap(1);
+    for job in jobs {
+        let result =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (job.body)(job.slot)));
+        job.latch.arrive(result.err().map(|p| panic_message(&*p)));
+    }
+}
+
+/// Run `body(slot)` for every slot in `0..threads`, blocking until all
+/// slots complete. Slot 0 executes on the calling thread; the rest are
+/// dispatched to the persistent workers (spawned on first use). A
+/// worker panic is re-raised here after every slot has finished, so C
+/// is never left half-written while tiles are still in flight.
+///
+/// `threads <= 1` degenerates to a plain `body(0)` call with no
+/// locking, channels or worker involvement at all — which is what
+/// makes the 1-thread path trivially identical to the serial one.
+///
+/// The pool is not reentrant: a job must never call `run` with
+/// `threads > 1` itself (it could enqueue behind — and then wait on —
+/// its own worker). In-crate callers never do: worker threads cap
+/// their auto thread count to 1 at startup, and tile bodies only pack
+/// and multiply.
+pub fn run(threads: usize, body: &(dyn Fn(usize) + Sync)) {
+    let extra = threads.saturating_sub(1);
+    if extra == 0 {
+        body(0);
+        return;
+    }
+    let latch = Latch::new(extra);
+    // SAFETY: the erased lifetimes outlive every worker-side use
+    // because this function blocks on `latch.wait()` — which returns
+    // only after each dispatched job has called `arrive` — before
+    // `body` and `latch` go out of scope.
+    let body_static: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(body) };
+    let latch_static: &'static Latch = unsafe { std::mem::transmute(&latch) };
+    {
+        let mut ws = workers().lock().expect("gemm worker registry poisoned");
+        while ws.len() < extra {
+            let idx = ws.len();
+            ws.push(spawn_worker(idx));
+        }
+        for (i, w) in ws[..extra].iter().enumerate() {
+            let job = Job { body: body_static, latch: latch_static, slot: i + 1 };
+            w.jobs.send(job).expect("gemm worker hung up");
+        }
+    }
+    // Catch a caller-slot panic too: unwinding past `latch.wait()`
+    // would free the latch (and end `body`'s borrow) while workers
+    // still hold pointers to both.
+    let caller = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(0)));
+    let worker_panic = latch.wait();
+    if let Err(p) = caller {
+        std::panic::resume_unwind(p);
+    }
+    if let Some(panic) = worker_panic {
+        panic!("gemm worker panicked: {panic}");
+    }
+}
+
+thread_local! {
+    static LOCAL_CAP: Cell<usize> = Cell::new(0);
+}
+
+/// Cap this thread's *auto* GEMM thread count (0 lifts the cap). Used
+/// by `pipeline/threaded.rs` to divide the machine between its P stage
+/// workers; an explicit `PIPESTALE_GEMM_THREADS` still overrides.
+pub fn set_local_cap(cap: usize) {
+    LOCAL_CAP.with(|c| c.set(cap));
+}
+
+/// Number of hardware threads, falling back to 1 when unknowable.
+pub fn available_cores() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Pure resolution rule behind [`configured_threads`], split out so the
+/// env/cap/core interplay is unit-testable without touching process
+/// state.
+fn resolve(env: Option<&str>, cores: usize, cap: usize) -> usize {
+    let explicit = env.and_then(|v| v.trim().parse::<usize>().ok()).filter(|&t| t > 0);
+    let t = match explicit {
+        Some(t) => t,
+        None => {
+            if cap == 0 {
+                cores
+            } else {
+                cores.min(cap)
+            }
+        }
+    };
+    t.max(1)
+}
+
+/// The GEMM thread count a dispatched `sgemm` call uses on this thread
+/// right now (see the module docs for the policy). Always >= 1.
+pub fn configured_threads() -> usize {
+    let env = std::env::var("PIPESTALE_GEMM_THREADS").ok();
+    resolve(env.as_deref(), available_cores(), LOCAL_CAP.with(|c| c.get()))
+}
+
+/// Snapshot of every live GEMM worker's pool counters, in spawn order.
+/// The cross-worker zero-alloc probes diff two of these to show warm
+/// threaded GEMM allocates nothing off the calling thread either.
+pub fn worker_pool_stats() -> Vec<PoolStats> {
+    workers()
+        .lock()
+        .expect("gemm worker registry poisoned")
+        .iter()
+        .map(|w| w.pool.stats())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn run_executes_every_slot_exactly_once() {
+        let hits: Vec<AtomicUsize> = (0..5).map(|_| AtomicUsize::new(0)).collect();
+        run(5, &|slot| {
+            hits[slot].fetch_add(1, Ordering::SeqCst);
+        });
+        for (slot, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "slot {slot}");
+        }
+    }
+
+    #[test]
+    fn single_thread_runs_on_the_caller() {
+        let caller = std::thread::current().id();
+        let same = AtomicUsize::new(0);
+        run(1, &|slot| {
+            assert_eq!(slot, 0);
+            if std::thread::current().id() == caller {
+                same.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert_eq!(same.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_caller() {
+        let err = std::panic::catch_unwind(|| {
+            run(3, &|slot| {
+                if slot == 2 {
+                    panic!("tile {slot} exploded");
+                }
+            });
+        })
+        .expect_err("worker panic must re-raise on the caller");
+        let msg = panic_message(&*err);
+        assert!(msg.contains("tile 2 exploded"), "got: {msg}");
+        // The pool survives a panicking job and keeps serving.
+        let total = AtomicUsize::new(0);
+        run(3, &|_| {
+            total.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn thread_resolution_rules() {
+        // Explicit env var is absolute (ignores cores and cap).
+        assert_eq!(resolve(Some("6"), 4, 2), 6);
+        // "0", unset, junk -> auto = min(cores, cap), cap 0 = uncapped.
+        assert_eq!(resolve(Some("0"), 8, 0), 8);
+        assert_eq!(resolve(None, 8, 3), 3);
+        assert_eq!(resolve(Some("lots"), 8, 0), 8);
+        // Never returns 0.
+        assert_eq!(resolve(None, 1, 1), 1);
+        assert!(configured_threads() >= 1);
+    }
+
+    #[test]
+    fn worker_pools_are_reachable_for_probes() {
+        run(3, &|_| {});
+        let stats = worker_pool_stats();
+        assert!(stats.len() >= 2, "expected >=2 workers, saw {}", stats.len());
+    }
+}

@@ -187,7 +187,7 @@ mod tests {
 
     #[test]
     fn resnet20_full_width_magnitudes() {
-        if !crate::artifacts_present() { eprintln!("skipping: artifacts not built"); return; }
+        if !crate::artifacts_present() { crate::util::skip_marker("artifacts not built"); return; }
         let r = report("resnet20_mem");
         // ~0.27M params -> ~1.08 MB weights (paper: 1.03 MB)
         assert!(r.weight_bytes > 0.9e6 && r.weight_bytes < 1.3e6, "{}", r.weight_bytes);
@@ -204,7 +204,7 @@ mod tests {
 
     #[test]
     fn increase_pct_is_modest_and_stable_for_deeper_resnets() {
-        if !crate::artifacts_present() { eprintln!("skipping: artifacts not built"); return; }
+        if !crate::artifacts_present() { crate::util::skip_marker("artifacts not built"); return; }
         // Paper Table 6: ~57-67%, roughly constant with depth.
         let pcts: Vec<f64> = [20usize, 56, 110, 224, 362]
             .iter()
@@ -223,14 +223,14 @@ mod tests {
 
     #[test]
     fn our_recompute_scheme_beats_paper_style_storage() {
-        if !crate::artifacts_present() { eprintln!("skipping: artifacts not built"); return; }
+        if !crate::artifacts_present() { crate::util::skip_marker("artifacts not built"); return; }
         let r = report("resnet110_mem");
         assert!(r.increase_per_sample < r.increase_paper_style_per_sample / 2.0);
     }
 
     #[test]
     fn pipedream_stash_is_extra_weight_copies() {
-        if !crate::artifacts_present() { eprintln!("skipping: artifacts not built"); return; }
+        if !crate::artifacts_present() { crate::util::skip_marker("artifacts not built"); return; }
         let meta = ConfigMeta::load_named(&root(), "resnet20_fine8").unwrap();
         let stash = pipedream_stash_bytes(&meta);
         assert!(stash > 0.0);
@@ -268,7 +268,7 @@ mod tests {
 
     #[test]
     fn total_bytes_scales_with_batch() {
-        if !crate::artifacts_present() { eprintln!("skipping: artifacts not built"); return; }
+        if !crate::artifacts_present() { crate::util::skip_marker("artifacts not built"); return; }
         let r = report("resnet20_mem");
         assert!(r.total_bytes(128) > r.total_bytes(1));
     }

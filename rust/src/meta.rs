@@ -284,7 +284,7 @@ mod tests {
 
     #[test]
     fn loads_quickstart_meta() {
-        if !crate::artifacts_present() { eprintln!("skipping: artifacts not built"); return; }
+        if !crate::artifacts_present() { crate::util::skip_marker("artifacts not built"); return; }
         let m = ConfigMeta::load_named(&artifacts_root(), "quickstart_lenet").unwrap();
         assert_eq!(m.model, "lenet5");
         assert_eq!(m.num_layers, 5);
@@ -296,7 +296,7 @@ mod tests {
 
     #[test]
     fn staleness_accounting_matches_paper_definitions() {
-        if !crate::artifacts_present() { eprintln!("skipping: artifacts not built"); return; }
+        if !crate::artifacts_present() { crate::util::skip_marker("artifacts not built"); return; }
         let m = ConfigMeta::load_named(&artifacts_root(), "resnet20_fine8").unwrap();
         // K=3 registers -> 8 paper stages; degrees 2K..2 for partitions 1..K
         assert_eq!(m.paper_stages(), 8);
@@ -309,7 +309,7 @@ mod tests {
 
     #[test]
     fn carry_chain_validated() {
-        if !crate::artifacts_present() { eprintln!("skipping: artifacts not built"); return; }
+        if !crate::artifacts_present() { crate::util::skip_marker("artifacts not built"); return; }
         let m = ConfigMeta::load_named(&artifacts_root(), "resnet20_4s").unwrap();
         for (a, b) in m.partitions.iter().zip(m.partitions.iter().skip(1)) {
             assert_eq!(a.carry_out, b.carry_in);
@@ -319,7 +319,7 @@ mod tests {
 
     #[test]
     fn slide_fraction_monotone() {
-        if !crate::artifacts_present() { eprintln!("skipping: artifacts not built"); return; }
+        if !crate::artifacts_present() { crate::util::skip_marker("artifacts not built"); return; }
         // Fig 6 premise: %stale grows with the slide position.
         let mut prev = 0.0;
         for p in [3usize, 9, 15, 19] {
@@ -332,7 +332,7 @@ mod tests {
 
     #[test]
     fn meta_only_configs_load() {
-        if !crate::artifacts_present() { eprintln!("skipping: artifacts not built"); return; }
+        if !crate::artifacts_present() { crate::util::skip_marker("artifacts not built"); return; }
         let m = ConfigMeta::load_named(&artifacts_root(), "resnet362_mem").unwrap();
         assert!(m.meta_only);
         assert_eq!(m.num_layers, 362);

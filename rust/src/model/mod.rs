@@ -97,7 +97,7 @@ mod tests {
 
     #[test]
     fn init_respects_specs() {
-        if !crate::artifacts_present() { eprintln!("skipping: artifacts not built"); return; }
+        if !crate::artifacts_present() { crate::util::skip_marker("artifacts not built"); return; }
         let m = ConfigMeta::load_named(&artifacts_root(), "quickstart_lenet").unwrap();
         let mp = ModelParams::init(&m.partitions, 42).unwrap();
         assert_eq!(mp.total_scalars(), m.total_params());
@@ -116,7 +116,7 @@ mod tests {
 
     #[test]
     fn init_is_seed_deterministic() {
-        if !crate::artifacts_present() { eprintln!("skipping: artifacts not built"); return; }
+        if !crate::artifacts_present() { crate::util::skip_marker("artifacts not built"); return; }
         let m = ConfigMeta::load_named(&artifacts_root(), "quickstart_lenet").unwrap();
         let a = ModelParams::init(&m.partitions, 7).unwrap();
         let b = ModelParams::init(&m.partitions, 7).unwrap();
@@ -127,7 +127,7 @@ mod tests {
 
     #[test]
     fn bn_state_init_mean_zero_var_one() {
-        if !crate::artifacts_present() { eprintln!("skipping: artifacts not built"); return; }
+        if !crate::artifacts_present() { crate::util::skip_marker("artifacts not built"); return; }
         let m = ConfigMeta::load_named(&artifacts_root(), "resnet20_4s").unwrap();
         let mp = ModelParams::init(&m.partitions, 1).unwrap();
         for (p, pm) in mp.partitions.iter().zip(m.partitions.iter()) {

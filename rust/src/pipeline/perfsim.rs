@@ -266,8 +266,40 @@ pub fn simulate_hybrid(
 }
 
 /// Paper §4 closed-form hybrid speedup upper bound with 2K+1 accelerators.
+///
+/// Degenerate inputs are guarded the same way PR 2 fixed
+/// `HybridSchedule::ideal_speedup(0)`: a schedule with no iterations at
+/// all (`n_np <= 0`) has nothing to speed up and returns 1.0 — finite,
+/// not the raw formula's 0/0 NaN — and the pipelined count is clamped
+/// into `[0, n_np]`, where the unclamped formula would return a
+/// negative or above-`2K+1` "speedup". Within that domain the result
+/// always lies in `[1, 2K+1]`.
 pub fn hybrid_speedup_bound(n_np: f64, n_p: f64, k: usize) -> f64 {
+    if !(n_np > 0.0) {
+        return 1.0;
+    }
+    let n_p = n_p.clamp(0.0, n_np);
     n_np / (n_p / (2.0 * k as f64 + 1.0) + (n_np - n_p))
+}
+
+/// Bytes crossing each internal pipeline register per iteration (one
+/// entry per partition *boundary*, so `partitions.len() - 1` entries):
+/// 4 bytes per scalar over a partition's carry_out tensors. Shared by
+/// [`analytic_costs`] and [`roofline_costs`] — this was copy-pasted in
+/// both, and both underflowed `len() - 1` on a zero-partition meta
+/// (legal for meta-only tooling); `saturating_sub` makes the
+/// degenerate case simply have no edges.
+fn edge_bytes_of(meta: &crate::meta::ConfigMeta) -> Vec<f64> {
+    meta.partitions
+        .iter()
+        .take(meta.partitions.len().saturating_sub(1))
+        .map(|p| {
+            p.carry_out
+                .iter()
+                .map(|s| s.iter().product::<usize>() as f64 * 4.0)
+                .sum()
+        })
+        .collect()
 }
 
 /// Analytic per-partition costs from the meta.json FLOPs model (bwd is
@@ -286,18 +318,7 @@ pub fn analytic_costs(meta: &crate::meta::ConfigMeta, flops_per_s: f64) -> Stage
         fwd.push(fl * batch / flops_per_s);
         bwd.push(2.0 * fl * batch / flops_per_s);
     }
-    let edge_bytes = meta
-        .partitions
-        .iter()
-        .take(meta.partitions.len() - 1)
-        .map(|p| {
-            p.carry_out
-                .iter()
-                .map(|s| s.iter().product::<usize>() as f64 * 4.0)
-                .sum()
-        })
-        .collect();
-    StageCosts { fwd, bwd, edge_bytes }
+    StageCosts { fwd, bwd, edge_bytes: edge_bytes_of(meta) }
 }
 
 /// Roofline cost model calibrated to the paper's observed profile.
@@ -328,18 +349,7 @@ pub fn roofline_costs(
         fwd.push(t * batch);
         bwd.push(2.0 * t * batch);
     }
-    let edge_bytes = meta
-        .partitions
-        .iter()
-        .take(meta.partitions.len() - 1)
-        .map(|p| {
-            p.carry_out
-                .iter()
-                .map(|s| s.iter().product::<usize>() as f64 * 4.0)
-                .sum()
-        })
-        .collect();
-    StageCosts { fwd, bwd, edge_bytes }
+    StageCosts { fwd, bwd, edge_bytes: edge_bytes_of(meta) }
 }
 
 /// GTX1060-flavoured default roofline (the paper's testbed).
@@ -484,6 +494,60 @@ mod tests {
         // closed form from §4 with K=... full mapping example:
         let b = hybrid_speedup_bound(100.0, 100.0, 2);
         assert!((b - 5.0).abs() < 1e-9); // all iterations pipelined, 2K+1=5
+    }
+
+    #[test]
+    fn hybrid_bound_degenerate_inputs_are_guarded() {
+        // Regression: n_np == n_p == 0 was 0/0 = NaN. Empty schedules
+        // speed nothing up — 1.0, mirroring ideal_speedup(0).
+        let b = hybrid_speedup_bound(0.0, 0.0, 2);
+        assert!(b.is_finite() && b == 1.0, "{b}");
+        // Regression: n_p > n_np produced a nonsense bound (the raw
+        // formula exceeds 2K+1 and can even go negative). Clamped to
+        // all-pipelined instead.
+        let b = hybrid_speedup_bound(100.0, 250.0, 2);
+        assert!((b - 5.0).abs() < 1e-9, "{b}");
+        // Negative pipelined count clamps to the plain baseline.
+        let b = hybrid_speedup_bound(100.0, -5.0, 1);
+        assert!((b - 1.0).abs() < 1e-9, "{b}");
+        // The guarded domain keeps the paper's invariant: 1 <= bound
+        // <= 2K+1 for every input.
+        for &(n_np, n_p) in &[(10.0, 0.0), (10.0, 5.0), (10.0, 10.0), (10.0, 99.0), (0.0, 7.0)] {
+            for k in [0usize, 1, 2, 4] {
+                let b = hybrid_speedup_bound(n_np, n_p, k);
+                assert!(b >= 1.0 - 1e-12, "({n_np},{n_p},{k}) -> {b}");
+                assert!(b <= 2.0 * k as f64 + 1.0 + 1e-12, "({n_np},{n_p},{k}) -> {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn cost_models_accept_a_zero_partition_meta() {
+        // Regression: both cost models crashed on `.take(len - 1)`
+        // with an empty partition list (a legal degenerate meta for
+        // meta-only tooling) before edge_bytes_of's saturating_sub.
+        let meta = crate::meta::ConfigMeta {
+            dir: std::path::PathBuf::new(),
+            config: "degenerate_empty".into(),
+            model: "lenet5".into(),
+            width_mult: 1.0,
+            batch: 1,
+            dataset: "mnist".into(),
+            input_shape: vec![28, 28, 1],
+            num_classes: 10,
+            num_layers: 0,
+            ppv: vec![],
+            meta_only: true,
+            layers: vec![],
+            partitions: vec![],
+        };
+        let a = analytic_costs(&meta, 1e12);
+        assert!(a.fwd.is_empty() && a.bwd.is_empty() && a.edge_bytes.is_empty());
+        let r = roofline_costs(&meta, 4.4e12, 192e9, 8.0);
+        assert!(r.fwd.is_empty() && r.bwd.is_empty() && r.edge_bytes.is_empty());
+        // And a normal meta still has one fewer edge than partitions.
+        let c = balanced(3, 0.01);
+        assert_eq!(c.edge_bytes.len(), c.fwd.len() - 1);
     }
 
     #[test]

@@ -84,7 +84,7 @@ mod tests {
 
     #[test]
     fn degrees_descend_to_zero() {
-        if !crate::artifacts_present() { eprintln!("skipping: artifacts not built"); return; }
+        if !crate::artifacts_present() { crate::util::skip_marker("artifacts not built"); return; }
         let m = ConfigMeta::load_named(&root(), "resnet20_fine8").unwrap();
         let r = StalenessReport::from_meta(&m);
         assert_eq!(r.paper_stages, 8);
@@ -94,7 +94,7 @@ mod tests {
 
     #[test]
     fn sliding_stage_has_constant_degree() {
-        if !crate::artifacts_present() { eprintln!("skipping: artifacts not built"); return; }
+        if !crate::artifacts_present() { crate::util::skip_marker("artifacts not built"); return; }
         // Fig 6 "sliding stage": one register pair => every stale
         // partition has degree 2 regardless of position.
         for p in [3usize, 11, 19] {
@@ -107,7 +107,7 @@ mod tests {
 
     #[test]
     fn increasing_stages_raises_mean_degree_and_fraction() {
-        if !crate::artifacts_present() { eprintln!("skipping: artifacts not built"); return; }
+        if !crate::artifacts_present() { crate::util::skip_marker("artifacts not built"); return; }
         let mut prev_frac = 0.0;
         let mut prev_deg = 0.0;
         for ns in [8usize, 12, 16, 20] {

@@ -419,6 +419,15 @@ impl ThreadedPipeline {
                     // never contend on the global pool's lock, and a
                     // buffer dropped by a neighbour returns here.
                     let _pool = crate::pool::PoolScope::new();
+                    // Nested-parallelism cap (DESIGN.md §7): P stage
+                    // workers share the machine, so each stage's
+                    // intra-GEMM fan-out defaults to cores/P instead
+                    // of cores. An explicit PIPESTALE_GEMM_THREADS
+                    // still overrides; results are bitwise identical
+                    // at every thread count either way.
+                    crate::backend::threadpool::set_local_cap(
+                        (crate::backend::threadpool::available_cores() / p).max(1),
+                    );
                     // catch_unwind so a *panicking* stage takes the
                     // same orderly exit as an erroring one: flag set
                     // before the channels drop, panic payload surfaced

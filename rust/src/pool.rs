@@ -72,7 +72,7 @@ impl Shelves {
 }
 
 /// Counter snapshot for perf assertions and diagnostics.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PoolStats {
     /// Buffers created with a fresh heap allocation.
     pub fresh_allocs: u64,
@@ -108,6 +108,21 @@ impl PoolStats {
             recycled: self.recycled - since.recycled,
             discarded: self.discarded - since.discarded,
             retained_scalars: self.retained_scalars,
+        }
+    }
+
+    /// Field-wise sum of two snapshots, for aggregating the per-worker
+    /// pools the GEMM thread pool installs into one probe-able view
+    /// (fold over `backend::threadpool::worker_pool_stats()` starting
+    /// from `PoolStats::default()`); the cross-worker zero-alloc probe
+    /// in `tests/pool_and_kernel.rs` asserts on the merged delta.
+    pub fn merge(&self, other: &PoolStats) -> PoolStats {
+        PoolStats {
+            fresh_allocs: self.fresh_allocs + other.fresh_allocs,
+            reuses: self.reuses + other.reuses,
+            recycled: self.recycled + other.recycled,
+            discarded: self.discarded + other.discarded,
+            retained_scalars: self.retained_scalars + other.retained_scalars,
         }
     }
 }

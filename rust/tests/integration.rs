@@ -14,6 +14,7 @@ use pipestale::model::ModelParams;
 use pipestale::pipeline::{Feed, Pipeline, XlaExecutor};
 use pipestale::runtime::Runtime;
 use pipestale::tensor::Tensor;
+use pipestale::util::skip_marker;
 
 fn quick_rc(mode: Mode, iters: u64) -> RunConfig {
     let mut rc = RunConfig::new("quickstart_lenet");
@@ -27,7 +28,7 @@ fn quick_rc(mode: Mode, iters: u64) -> RunConfig {
 
 #[test]
 fn pipelined_training_learns() {
-    if !pipestale::xla_ready() { eprintln!("skipping: needs artifacts + real XLA backend"); return; }
+    if !pipestale::xla_ready() { skip_marker("needs artifacts + real XLA backend"); return; }
     let res = pipestale::train::run(&quick_rc(Mode::Pipelined, 120)).unwrap();
     assert!(res.final_accuracy > 0.5, "acc {}", res.final_accuracy);
     // loss decreased vs the first few batches
@@ -46,14 +47,14 @@ fn pipelined_training_learns() {
 
 #[test]
 fn sequential_training_learns() {
-    if !pipestale::xla_ready() { eprintln!("skipping: needs artifacts + real XLA backend"); return; }
+    if !pipestale::xla_ready() { skip_marker("needs artifacts + real XLA backend"); return; }
     let res = pipestale::train::run(&quick_rc(Mode::Sequential, 80)).unwrap();
     assert!(res.final_accuracy > 0.5, "acc {}", res.final_accuracy);
 }
 
 #[test]
 fn hybrid_switches_and_learns() {
-    if !pipestale::xla_ready() { eprintln!("skipping: needs artifacts + real XLA backend"); return; }
+    if !pipestale::xla_ready() { skip_marker("needs artifacts + real XLA backend"); return; }
     let mut rc = quick_rc(Mode::Hybrid, 100);
     rc.pipelined_iters = 60;
     let res = pipestale::train::run(&rc).unwrap();
@@ -63,7 +64,7 @@ fn hybrid_switches_and_learns() {
 
 #[test]
 fn single_inflight_pipelined_equals_sequential_on_xla() {
-    if !pipestale::xla_ready() { eprintln!("skipping: needs artifacts + real XLA backend"); return; }
+    if !pipestale::xla_ready() { skip_marker("needs artifacts + real XLA backend"); return; }
     // With one batch in flight staleness is zero: cycle+drain must leave
     // the weights bit-identical to sequential_step.
     let root = pipestale::artifacts_root();
@@ -108,7 +109,7 @@ fn single_inflight_pipelined_equals_sequential_on_xla() {
 
 #[test]
 fn eval_is_deterministic_and_training_changes_weights() {
-    if !pipestale::xla_ready() { eprintln!("skipping: needs artifacts + real XLA backend"); return; }
+    if !pipestale::xla_ready() { skip_marker("needs artifacts + real XLA backend"); return; }
     let root = pipestale::artifacts_root();
     let meta = ConfigMeta::load_named(&root, "quickstart_lenet").unwrap();
     let runtime = Runtime::cpu().unwrap();
@@ -143,7 +144,7 @@ fn eval_is_deterministic_and_training_changes_weights() {
 
 #[test]
 fn stale_pipelined_diverges_from_sequential_weights() {
-    if !pipestale::xla_ready() { eprintln!("skipping: needs artifacts + real XLA backend"); return; }
+    if !pipestale::xla_ready() { skip_marker("needs artifacts + real XLA backend"); return; }
     // With many batches in flight the pipelined run must NOT be
     // bit-identical to sequential (stale gradients are actually used).
     let mut rc_a = quick_rc(Mode::Pipelined, 30);
@@ -160,7 +161,7 @@ fn stale_pipelined_diverges_from_sequential_weights() {
 
 #[test]
 fn threaded_pipeline_trains_and_collects_weights() {
-    if !pipestale::xla_ready() { eprintln!("skipping: needs artifacts + real XLA backend"); return; }
+    if !pipestale::xla_ready() { skip_marker("needs artifacts + real XLA backend"); return; }
     let root = pipestale::artifacts_root();
     let meta = ConfigMeta::load_named(&root, "quickstart_lenet").unwrap();
     let spec = SyntheticSpec { train: 128, test: 64, noise: 1.0, seed: 11 };
@@ -192,7 +193,7 @@ fn threaded_pipeline_trains_and_collects_weights() {
 
 #[test]
 fn multi_tensor_carry_config_runs() {
-    if !pipestale::xla_ready() { eprintln!("skipping: needs artifacts + real XLA backend"); return; }
+    if !pipestale::xla_ready() { skip_marker("needs artifacts + real XLA backend"); return; }
     // resnet20_4s PPV (7) cuts at a block boundary; run a few pipelined
     // iterations to exercise BN state + residual carries end to end.
     let mut rc = RunConfig::new("resnet20_4s");
@@ -212,7 +213,7 @@ fn _assert_tensor_finite(t: &Tensor) {
 
 #[test]
 fn cross_process_hybrid_via_checkpoint() {
-    if !pipestale::xla_ready() { eprintln!("skipping: needs artifacts + real XLA backend"); return; }
+    if !pipestale::xla_ready() { skip_marker("needs artifacts + real XLA backend"); return; }
     // Paper §4 hybrid split across "processes": pipelined prefix saved to
     // a checkpoint, non-pipelined tail resumed from it. The tail must
     // train (loss keeps falling) and end above-chance.
@@ -576,7 +577,7 @@ fn explicit_xla_backend_fails_loudly_on_stub() {
     // --backend xla with the stub linked must error, not silently fall
     // back to native (the user asked for a specific substrate).
     if pipestale::xla_ready() {
-        eprintln!("skipping: real XLA backend present");
+        skip_marker("real XLA backend present");
         return;
     }
     let mut rc = native_rc(Mode::Sequential, 2);
@@ -586,7 +587,7 @@ fn explicit_xla_backend_fails_loudly_on_stub() {
 
 #[test]
 fn checkpoint_rejects_wrong_config() {
-    if !pipestale::xla_ready() { eprintln!("skipping: needs artifacts + real XLA backend"); return; }
+    if !pipestale::xla_ready() { skip_marker("needs artifacts + real XLA backend"); return; }
     let ckpt = std::env::temp_dir().join(format!("wrongcfg_{}.ckpt", std::process::id()));
     let mut rc = quick_rc(Mode::Sequential, 2);
     rc.save_to = Some(ckpt.clone());

@@ -462,6 +462,91 @@ fn gemm_kernels_are_bitwise_deterministic_run_to_run() {
 }
 
 #[test]
+fn simd_and_threaded_gemm_match_the_scalar_oracle_across_zoo_geometries() {
+    // The tentpole parity suite: for every GEMM shape the model zoo's
+    // conv/dense lowerings produce, the detected SIMD micro-kernel and
+    // the threaded driver must match the scalar 1-thread oracle within
+    // the documented 1e-4 relative tolerance (in fact they match
+    // bitwise — the no-FMA / static-tiling design — but this suite
+    // pins only the documented contract so a future FMA kernel fails
+    // loudly here rather than silently drifting).
+    use pipestale::backend::gemm::sgemm_with;
+    use pipestale::backend::simd::{detected, Micro};
+
+    // (m, n, k) per zoo conv case: m = n_batch*oh*ow, n = cout,
+    // k = kh*kw*cin (the im2col lowering), plus the dense head shapes.
+    let conv_cases: &[(&str, usize, usize, usize, usize, usize, usize, usize, bool)] = &[
+        // (tag, n, h, w, cin, cout, k, stride, same)
+        ("lenet-c1", 2, 8, 8, 1, 6, 5, 1, true),
+        ("lenet-c2", 2, 9, 9, 3, 4, 5, 1, false),
+        ("resnet-stem", 2, 8, 8, 3, 4, 3, 1, true),
+        ("resnet-trans", 1, 8, 8, 4, 6, 3, 2, true),
+        ("valid-s2", 1, 7, 7, 2, 3, 3, 2, false),
+        ("proj-1x1-s2", 2, 6, 6, 3, 5, 1, 2, true),
+    ];
+    let mut shapes: Vec<(String, usize, usize, usize)> = Vec::new();
+    for &(tag, n, h, w, cin, cout, kk, stride, same) in conv_cases {
+        let (oh, ow, _, _) = kernels::conv_out_dims(h, w, kk, stride, same).unwrap();
+        shapes.push((tag.to_string(), n * oh * ow, cout, kk * kk * cin));
+    }
+    // dense heads: lenet fc1/fc2/logits-ish and a batch GEMM.
+    for &(m, n, k) in &[(2usize, 120usize, 400usize), (2, 84, 120), (16, 10, 84)] {
+        shapes.push((format!("dense-{m}x{n}x{k}"), m, n, k));
+    }
+
+    for (tag, m, n, k) in shapes {
+        let mut rng = Pcg32::seeded(0x51D ^ (m * 31 + n * 7 + k) as u64);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() * 0.5).collect();
+        let mut oracle = vec![0.0f32; m * n];
+        sgemm_with(Micro::Scalar, 1, false, false, m, n, k, &a, &b, false, &mut oracle);
+        for (label, micro, threads) in [
+            ("simd-1t", detected(), 1usize),
+            ("scalar-3t", Micro::Scalar, 3),
+            ("simd-3t", detected(), 3),
+        ] {
+            let mut got = vec![0.0f32; m * n];
+            sgemm_with(micro, threads, false, false, m, n, k, &a, &b, false, &mut got);
+            rel_close(&format!("{tag}/{label}"), &got, &oracle, 1e-4);
+        }
+    }
+}
+
+#[test]
+fn threaded_gemm_is_bitwise_deterministic_at_fixed_thread_count() {
+    // Run-to-run determinism with real worker threads in play: the
+    // static tile partition makes the summation order a function of
+    // (m, n, k) alone, so repeated threaded calls — racing against
+    // whatever else the test harness runs — reproduce every bit.
+    use pipestale::backend::gemm::sgemm_with;
+    use pipestale::backend::simd::detected;
+
+    let mut rng = Pcg32::seeded(0xB175);
+    let (m, n, k) = (150, 260, 300);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+    let threads = 3;
+    let run = || {
+        let mut c = vec![0.0f32; m * n];
+        sgemm_with(detected(), threads, false, false, m, n, k, &a, &b, false, &mut c);
+        c
+    };
+    let c1 = run();
+    for round in 0..3 {
+        let c2 = run();
+        for (i, (x, y)) in c2.iter().zip(&c1).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "round {round} elem {i}: {x} vs {y}");
+        }
+    }
+    // And the 1-thread threaded path equals the N-thread one exactly.
+    let mut c1t = vec![0.0f32; m * n];
+    sgemm_with(detected(), 1, false, false, m, n, k, &a, &b, false, &mut c1t);
+    for (i, (x, y)) in c1t.iter().zip(&c1).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "1t vs {threads}t elem {i}");
+    }
+}
+
+#[test]
 fn conv_gradients_are_translation_consistent() {
     // A conv is linear in x: doubling x must double dw exactly.
     let mut rng = Pcg32::seeded(801);

@@ -11,6 +11,7 @@ use pipestale::pipeline::perfsim::{
     analytic_costs, simulate_nonpipelined, simulate_pipelined, CommModel, Mapping,
 };
 use pipestale::pipeline::StalenessReport;
+use pipestale::util::skip_marker;
 
 fn root() -> std::path::PathBuf {
     pipestale::artifacts_root()
@@ -22,7 +23,7 @@ fn load(name: &str) -> ConfigMeta {
 
 #[test]
 fn table1_ppvs_present_with_correct_stage_counts() {
-    if !pipestale::artifacts_present() { eprintln!("skipping: artifacts not built"); return; }
+    if !pipestale::artifacts_present() { skip_marker("artifacts not built"); return; }
     // (config, expected paper stages, expected PPV)
     let grid: &[(&str, usize, &[usize])] = &[
         ("lenet5_4s", 4, &[1]),
@@ -49,7 +50,7 @@ fn table1_ppvs_present_with_correct_stage_counts() {
 
 #[test]
 fn table3_fine_grained_set_is_complete() {
-    if !pipestale::artifacts_present() { eprintln!("skipping: artifacts not built"); return; }
+    if !pipestale::artifacts_present() { skip_marker("artifacts not built"); return; }
     for ns in [8usize, 10, 12, 14, 16, 18, 20] {
         let m = load(&format!("resnet20_fine{ns}"));
         assert_eq!(m.paper_stages(), ns);
@@ -58,7 +59,7 @@ fn table3_fine_grained_set_is_complete() {
 
 #[test]
 fn fig6_slide_positions_cover_the_network() {
-    if !pipestale::artifacts_present() { eprintln!("skipping: artifacts not built"); return; }
+    if !pipestale::artifacts_present() { skip_marker("artifacts not built"); return; }
     let mut prev = 0.0;
     for p in [3usize, 5, 7, 9, 11, 13, 15, 17, 19] {
         let m = load(&format!("resnet20_slide{p}"));
@@ -74,7 +75,7 @@ fn fig6_slide_positions_cover_the_network() {
 
 #[test]
 fn table5_resnet_family_loads_and_speedup_grows_with_depth() {
-    if !pipestale::artifacts_present() { eprintln!("skipping: artifacts not built"); return; }
+    if !pipestale::artifacts_present() { skip_marker("artifacts not built"); return; }
     // DES with the GTX1060 roofline cost model (paper's testbed): deeper
     // ResNets have a higher compute-to-communication ratio, so the
     // projected speedup grows toward 2.0 under the paired 2-worker
@@ -102,7 +103,7 @@ fn table5_resnet_family_loads_and_speedup_grows_with_depth() {
 
 #[test]
 fn table6_memory_reports_for_all_depths() {
-    if !pipestale::artifacts_present() { eprintln!("skipping: artifacts not built"); return; }
+    if !pipestale::artifacts_present() { skip_marker("artifacts not built"); return; }
     for d in [20usize, 56, 110, 224, 362] {
         let m = load(&format!("resnet{d}_mem"));
         let r = MemoryReport::from_meta(&m);
@@ -113,7 +114,7 @@ fn table6_memory_reports_for_all_depths() {
 
 #[test]
 fn staleness_reports_consistent_across_all_configs() {
-    if !pipestale::artifacts_present() { eprintln!("skipping: artifacts not built"); return; }
+    if !pipestale::artifacts_present() { skip_marker("artifacts not built"); return; }
     for entry in std::fs::read_dir(root()).unwrap() {
         let dir = entry.unwrap().path();
         if !dir.join("meta.json").exists() {
@@ -188,7 +189,7 @@ fn native_memory_and_perfsim_models_accept_native_meta() {
 
 #[test]
 fn hybrid_config_matches_paper_ppv() {
-    if !pipestale::artifacts_present() { eprintln!("skipping: artifacts not built"); return; }
+    if !pipestale::artifacts_present() { skip_marker("artifacts not built"); return; }
     let m = load("resnet20_hybrid");
     assert_eq!(m.ppv, vec![5, 12, 17]);
     assert_eq!(m.paper_stages(), 8);

@@ -9,10 +9,16 @@ use pipestale::backend::kernels::{self, ActKind};
 use pipestale::optim::{kernel, Schedule, Sgd};
 use pipestale::pipeline::mock::MockExecutor;
 use pipestale::pipeline::{Feed, Pipeline};
-use pipestale::pool::PoolScope;
+use pipestale::pool::{PoolScope, PoolStats};
 use pipestale::tensor::{IntTensor, Tensor};
 use pipestale::util::prop;
 use pipestale::util::rng::Pcg32;
+
+/// Tests that can dispatch into the shared GEMM worker pool serialize
+/// on this lock: unlike the `PoolScope`-isolated caller pools, the
+/// workers' pool counters are process-global, so concurrent GEMM work
+/// from a parallel test thread would perturb the cross-worker probe.
+static GEMM_POOL_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
 // ---------------------------------------------------------------------
 // Pool safety: recycled buffers never leak stale data through the
@@ -198,6 +204,7 @@ fn gemm_kernel_scratch_reaches_zero_alloc_steady_state() {
     // sizes per model, so a warm training step must perform zero fresh
     // backing-store allocations — the same acceptance criterion the
     // scheduler cycle meets, now extended to the compute kernels.
+    let _guard = GEMM_POOL_LOCK.lock().unwrap();
     let scope = PoolScope::new();
     let pool = scope.pool().clone();
     let mut rng = Pcg32::seeded(0x6E77);
@@ -265,6 +272,59 @@ fn gemm_kernel_scratch_reaches_zero_alloc_steady_state() {
         "warm GEMM kernels must lease all scratch from the pool: {delta:?}"
     );
     assert!(delta.reuses > 0, "steady-state kernels must hit the pool: {delta:?}");
+}
+
+#[test]
+fn threaded_gemm_scratch_stays_allocation_free_across_workers() {
+    // Cross-worker extension of the probe above: with GEMM threads > 1
+    // each worker leases its own packing panels from its thread-local
+    // pool, so a warm multithreaded sgemm must stay allocation-free on
+    // the caller pool AND on every worker pool.
+    use pipestale::backend::gemm::sgemm_with;
+    use pipestale::backend::{simd, threadpool};
+
+    let _guard = GEMM_POOL_LOCK.lock().unwrap();
+    let scope = PoolScope::new();
+    let pool = scope.pool().clone();
+    let mut rng = Pcg32::seeded(0x7A11);
+    // 200x300 C = a 4x3 macro-tile grid, enough tiles for 3 workers.
+    let (m, n, k) = (200usize, 300usize, 64usize);
+    let threads = 3usize;
+    let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+    let mut c = vec![0.0f32; m * n];
+
+    // Warmup spawns the workers and primes every pool's size classes.
+    sgemm_with(simd::detected(), threads, false, false, m, n, k, &a, &b, false, &mut c);
+    let caller_warm = pool.stats();
+    let workers_warm = threadpool::worker_pool_stats();
+
+    for _ in 0..10 {
+        sgemm_with(simd::detected(), threads, false, false, m, n, k, &a, &b, false, &mut c);
+    }
+
+    let caller_delta = pool.stats().delta(&caller_warm);
+    assert_eq!(
+        caller_delta.fresh_allocs, 0,
+        "warm threaded GEMM must lease caller scratch from the pool: {caller_delta:?}"
+    );
+    let workers_now = threadpool::worker_pool_stats();
+    // The same thread count reuses the warmup's workers, so the pool
+    // roster is stable across the steady-state loop.
+    assert_eq!(workers_now.len(), workers_warm.len(), "no new workers mid-probe");
+    let worker_delta = workers_now
+        .iter()
+        .zip(&workers_warm)
+        .map(|(now, warm)| now.delta(warm))
+        .fold(PoolStats::default(), |acc, d| acc.merge(&d));
+    assert_eq!(
+        worker_delta.fresh_allocs, 0,
+        "warm worker pools must stay allocation-free: {worker_delta:?}"
+    );
+    assert!(
+        caller_delta.reuses + worker_delta.reuses > 0,
+        "steady-state threaded GEMM must hit the pools: {caller_delta:?} {worker_delta:?}"
+    );
 }
 
 #[test]

@@ -36,6 +36,7 @@ floor=$(cat "$SCRIPT_DIR/test_floor.txt")
 echo "[ci] tests: $passed passed, $skipped skipped -> $executed executed (floor $floor)"
 if [ "$executed" -lt "$floor" ]; then
     echo "[ci] FAIL: executed test count $executed fell below the recorded floor $floor." >&2
+    echo "[ci] (recomputed floor input: $passed passed - $skipped skipped = $executed executed)" >&2
     echo "[ci] If tests were intentionally removed, lower scripts/test_floor.txt;" >&2
     echo "[ci] otherwise something is skipping coverage that used to execute." >&2
     exit 1
@@ -45,9 +46,17 @@ fi
 # under the default parallel test harness (the run above) and fully
 # serialized — concurrency bugs often hide at one thread count. This
 # rerun is deliberately outside TEST_LOG so the executed-test floor
-# counts each test once.
+# counts each test once. The same suite then reruns across the GEMM
+# thread-count axis: pinned to 1 GEMM thread (pure serial compute) and
+# pinned to 4 (worker-pool dispatch even on small hosts), since the
+# pipeline's bitwise invariants must hold at every GEMM thread count
+# (DESIGN.md §7).
 echo "[ci] rerunning threaded-native suite under RUST_TEST_THREADS=1"
 RUST_TEST_THREADS=1 cargo test -q --test threaded_native
+echo "[ci] rerunning threaded-native suite under PIPESTALE_GEMM_THREADS=1"
+PIPESTALE_GEMM_THREADS=1 cargo test -q --test threaded_native
+echo "[ci] rerunning threaded-native suite under PIPESTALE_GEMM_THREADS=4"
+PIPESTALE_GEMM_THREADS=4 cargo test -q --test threaded_native
 
 # Fault-injection soak: a P=4 native ResNet pipelined run that takes a
 # mid-train worker panic, a hung stage (watchdog kill), and a corrupted
@@ -87,4 +96,22 @@ cargo fmt --all --check
 
 if [[ "${1:-}" == "--bench" ]]; then
     cargo bench --bench bench_micro_hotpath
+    # The bench must have produced a parseable machine-readable report:
+    # downstream tooling reads results/BENCH_micro.json, so an empty or
+    # truncated write is a CI failure, not a warning.
+    # results_root() honors PIPESTALE_RESULTS and defaults to
+    # rust/results/ (we are already cd'd into rust/).
+    BENCH_JSON="${PIPESTALE_RESULTS:-results}/BENCH_micro.json"
+    if [ ! -s "$BENCH_JSON" ]; then
+        echo "[ci] FAIL: $BENCH_JSON missing or empty after --bench run." >&2
+        exit 1
+    fi
+    if command -v python3 > /dev/null 2>&1; then
+        python3 -m json.tool "$BENCH_JSON" > /dev/null \
+            || { echo "[ci] FAIL: $BENCH_JSON is not valid JSON." >&2; exit 1; }
+    else
+        grep -q '"schema": "pipestale/bench_micro/v2"' "$BENCH_JSON" \
+            || { echo "[ci] FAIL: $BENCH_JSON lacks the bench_micro/v2 schema tag." >&2; exit 1; }
+    fi
+    echo "[ci] BENCH_micro.json validated"
 fi
