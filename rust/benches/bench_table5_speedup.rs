@@ -15,6 +15,10 @@
 //!      the im2col+GEMM hot path, not the old nested loops — compare
 //!      against results/BENCH_micro.json's conv/dense pairs when
 //!      tracking the kernel trajectory;
+//!  (0b) auto-vs-manual partition (DESIGN.md §10): measured per-block
+//!      cost profile + bottleneck-minimizing solver, predicted per-stage
+//!      cost validated against the threaded runtime's emergent busy
+//!      counters — emits results/BENCH_partition.json;
 //!  (a) GTX1060-roofline DES: analytic per-stage costs on the paper's
 //!      hardware model + host-staged blocking communication;
 //!  (b) measured-XLA DES: per-stage costs measured on the real compiled
@@ -32,8 +36,10 @@ use pipestale::meta::ConfigMeta;
 use pipestale::model::ModelParams;
 use pipestale::pipeline::perfsim::*;
 use pipestale::pipeline::{Feed, Pipeline, StageExecutor, ThreadedPipeline, XlaExecutor};
+use pipestale::profile::CostProfile;
 use pipestale::tensor::{IntTensor, Tensor};
 use pipestale::util::bench::Table;
+use pipestale::util::json;
 
 /// Measured wall-clock of the threaded-native runtime vs the
 /// scheduler runtime on the same feeds: the first *measured* (not
@@ -77,6 +83,106 @@ fn native_threaded_wall(name: &str, iters: usize) -> (usize, f64, f64) {
     assert_eq!(events.len(), iters);
     tpipe.shutdown().unwrap();
     (meta.partitions.len(), sched_wall, thr_wall)
+}
+
+/// One real threaded-native training run on `meta`; returns the
+/// per-stage busy seconds (time inside compute kernels) — the
+/// *emergent* per-stage cost the profiler's prediction is validated
+/// against (DESIGN.md §10).
+fn emergent_busy_seconds(meta: &ConfigMeta, iters: u64) -> Vec<f64> {
+    let spec = SyntheticSpec { train: 128, test: 32, noise: 1.0, seed: 3 };
+    let (ds, _) = load_or_synthesize(&meta.dataset, None, &spec).unwrap();
+    let mut batcher = Batcher::new(ds.len(), meta.batch, 5);
+    let params = ModelParams::init(&meta.partitions, 1).unwrap();
+    let optims = pipestale::train::build_optims(meta, iters, 1.0);
+    let mut pipe = ThreadedPipeline::launch_native(meta, params, optims).unwrap();
+    let (events, _) = pipe
+        .train(iters, 42, |_| {
+            let idxs = batcher.next_indices().to_vec();
+            ds.gather(&idxs)
+        })
+        .unwrap();
+    assert_eq!(events.len(), iters as usize);
+    let busy = pipe.stage_busy_seconds();
+    pipe.shutdown().unwrap();
+    busy
+}
+
+/// Auto-vs-manual partition comparison (DESIGN.md §10): measure the
+/// per-block cost profile on the real native kernels, solve for the
+/// bottleneck-minimizing PPV at the manual stage count, then run both
+/// partitions on the threaded runtime and record predicted vs emergent
+/// per-stage cost. Emits `results/BENCH_partition.json` (recorded, not
+/// asserted — 1-core wall timings are noisy; the *structural* claims
+/// are asserted in tests/partition.rs).
+fn partition_bench(csv: &mut String) {
+    println!("\n=== Table 5 (0b): profile-guided auto-partition vs hand-tabulated PPV ===");
+    let reps = if common::fast() { 3 } else { 5 };
+    let iters: u64 = if common::fast() { 8 } else { 24 };
+    let mut rows = Vec::new();
+    for name in ["native_lenet_small_4s", "native_resnet20_4s"] {
+        let prof = CostProfile::measure(name, 1, reps).unwrap();
+        let prof_path = prof.save().unwrap();
+        let manual = pipestale::backend::native_config(name).unwrap();
+        let p = manual.partitions.len();
+        let sol = prof.solve(p).unwrap();
+        let man_totals = stage_totals(&prof.stage_costs(&manual.ppv).unwrap());
+        let man_bottleneck = man_totals.iter().cloned().fold(0.0, f64::max);
+        let auto_meta = if sol.ppv == manual.ppv {
+            manual.clone()
+        } else {
+            pipestale::backend::native_config_with_ppv(name, Some(&sol.ppv)).unwrap()
+        };
+        let man_busy = emergent_busy_seconds(&manual, iters);
+        let auto_busy = emergent_busy_seconds(&auto_meta, iters);
+        println!(
+            "{name} (P={p}): manual PPV {:?} bottleneck {:.2}ms (imbalance {:.3}) | \
+             auto PPV {:?} bottleneck {:.2}ms (imbalance {:.3}, predicted speedup {:.2}x)",
+            manual.ppv,
+            man_bottleneck * 1e3,
+            imbalance_ratio(&man_totals),
+            sol.ppv,
+            sol.bottleneck * 1e3,
+            sol.imbalance,
+            sol.predicted_speedup,
+        );
+        csv.push_str(&format!("{name},auto_partition_predicted,{},0\n", sol.predicted_speedup));
+        rows.push(json::obj(vec![
+            ("config", json::s(name)),
+            ("stages", json::num(p as f64)),
+            ("profile", json::s(&prof_path.display().to_string())),
+            (
+                "manual",
+                json::obj(vec![
+                    ("ppv", json::arr(manual.ppv.iter().map(|&c| json::num(c as f64)))),
+                    ("predicted_stage_seconds", json::arr(man_totals.iter().map(|&t| json::num(t)))),
+                    ("predicted_bottleneck_s", json::num(man_bottleneck)),
+                    ("imbalance", json::num(imbalance_ratio(&man_totals))),
+                    ("emergent_busy_seconds", json::arr(man_busy.iter().map(|&t| json::num(t)))),
+                ]),
+            ),
+            (
+                "auto",
+                json::obj(vec![
+                    ("ppv", json::arr(sol.ppv.iter().map(|&c| json::num(c as f64)))),
+                    (
+                        "predicted_stage_seconds",
+                        json::arr(sol.stage_costs.iter().map(|&t| json::num(t))),
+                    ),
+                    ("predicted_bottleneck_s", json::num(sol.bottleneck)),
+                    ("imbalance", json::num(sol.imbalance)),
+                    ("predicted_speedup", json::num(sol.predicted_speedup)),
+                    ("emergent_busy_seconds", json::arr(auto_busy.iter().map(|&t| json::num(t)))),
+                ]),
+            ),
+        ]));
+    }
+    let doc = json::obj(vec![
+        ("schema", json::s("pipestale/bench_partition/v1")),
+        ("iters", json::num(iters as f64)),
+        ("rows", json::arr(rows)),
+    ]);
+    common::write_results("BENCH_partition.json", &doc.to_string_pretty());
 }
 
 fn measured_costs(meta: &ConfigMeta, exec: &mut XlaExecutor, reps: usize) -> StageCosts {
@@ -134,6 +240,9 @@ fn main() {
         );
         csv.push_str(&format!("{name},threaded_native_wall,{},0\n", sched / thr));
     }
+
+    // ---- (0b) auto-vs-manual partition (runs everywhere) ----------------
+    partition_bench(&mut csv);
 
     if !pipestale::xla_ready() {
         eprintln!("skipping XLA sections of {}: needs artifacts + real XLA backend", file!());

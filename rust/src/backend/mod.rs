@@ -41,9 +41,10 @@ use crate::tensor::{IntTensor, Tensor};
 
 pub use kernels::ActKind;
 pub use models::{
-    build_model, native_config, native_config_names, partition_nodes, supported_models,
+    build_model, native_config, native_config_names, native_config_with_ppv, partition_nodes,
+    supported_models,
 };
-pub use ops::{NativeNode, NativeOp, OpCache, ResBlock, Shortcut};
+pub use ops::{NativeNode, NativeOp, OpCache, ResBlock, Shortcut, BWD_FLOPS_FACTOR};
 
 /// One partition's native compute: node stack (plain ops and whole
 /// residual blocks) + weights + optimizer. Because blocks are atomic

@@ -311,11 +311,26 @@ pub fn native_config_names() -> Vec<&'static str> {
 /// assert_eq!(meta.total_params(), 61_706); // full-width LeNet-5
 /// ```
 pub fn native_config(name: &str) -> Result<ConfigMeta> {
+    native_config_with_ppv(name, None)
+}
+
+/// Like [`native_config`], but with the manifest's hand-tabulated PPV
+/// optionally replaced by `ppv_override` — the entry point of the
+/// profile-guided auto-partitioner (`--partition auto`). The override
+/// runs through exactly the same synthesis machinery as the manifest
+/// PPV (bounds validation, per-layer metadata, carry/param/state specs
+/// from the model IR), so [`partition_nodes`] cross-validation, memory
+/// accounting, and checkpointing consume the result unchanged.
+pub fn native_config_with_ppv(name: &str, ppv_override: Option<&[usize]>) -> Result<ConfigMeta> {
     let Some((model_name, width_mult, ppv, batch)) = manifest(name) else {
         bail!(
             "unknown native config {name:?}; built-ins: {} (or build artifacts for the full set)",
             native_config_names().join(", ")
         );
+    };
+    let ppv: Vec<usize> = match ppv_override {
+        Some(over) => over.to_vec(),
+        None => ppv,
     };
     let model = build_model(model_name, width_mult, 10)?;
     let num_layers = model.num_layers();

@@ -28,6 +28,15 @@ use crate::tensor::Tensor;
 use super::gemm;
 use super::kernels::{self, ActKind};
 
+/// Canonical backward/forward FLOPs ratio of one training step: the
+/// backward pass computes both the activation gradients and the weight
+/// gradients, each roughly one forward's worth of work. The single
+/// source for the `bwd ~= 2x fwd` convention shared by the analytic and
+/// roofline cost models in [`crate::pipeline::perfsim`] and the
+/// analytic profiler in [`crate::profile`] (previously hardcoded as
+/// `2.0` in each).
+pub const BWD_FLOPS_FACTOR: f64 = 2.0;
+
 /// One atomic native operation.
 #[derive(Debug, Clone)]
 pub struct NativeOp {

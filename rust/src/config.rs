@@ -131,6 +131,37 @@ impl OnFailure {
     }
 }
 
+/// How the pipeline partition vector (PPV) is chosen — orthogonal to
+/// `backend`, `runtime`, and `staleness_fix`. See DESIGN.md §10.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionMode {
+    /// The config's recorded PPV: the hand-tabulated native manifest
+    /// entry or the artifact contract (default; matches pre-axis runs).
+    Manual,
+    /// Profile-guided: solve the bottleneck-minimizing PPV from the
+    /// analytic per-block cost model at the same stage count, then
+    /// synthesize the full contract (native built-ins only; see
+    /// `profile::auto_native_meta`).
+    Auto,
+}
+
+impl PartitionMode {
+    pub fn parse(s: &str) -> Result<PartitionMode> {
+        match s {
+            "manual" => Ok(PartitionMode::Manual),
+            "auto" => Ok(PartitionMode::Auto),
+            _ => Err(anyhow!("unknown partition mode {s:?} (manual|auto)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PartitionMode::Manual => "manual",
+            PartitionMode::Auto => "auto",
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct RunConfig {
     /// Artifact config name under artifacts/ (e.g. "resnet20_4s") or a
@@ -189,6 +220,9 @@ pub struct RunConfig {
     /// (none | stash | predict | correct; DESIGN.md §9). Orthogonal to
     /// `backend` and `runtime`.
     pub staleness_fix: FixKind,
+    /// How the PPV is chosen (manual = recorded, auto = profile-guided
+    /// bottleneck-minimizing solve). Orthogonal to every other axis.
+    pub partition: PartitionMode,
 }
 
 impl RunConfig {
@@ -218,6 +252,7 @@ impl RunConfig {
             stall_timeout_ms: 60_000,
             fault_plan: None,
             staleness_fix: FixKind::None,
+            partition: PartitionMode::Manual,
         }
     }
 
@@ -260,6 +295,7 @@ impl RunConfig {
                 self.fault_plan.as_ref().map(|p| json::s(p)).unwrap_or(Json::Null),
             ),
             ("staleness_fix", json::s(self.staleness_fix.name())),
+            ("partition", json::s(self.partition.name())),
         ])
     }
 
@@ -306,6 +342,9 @@ impl RunConfig {
         }
         if let Some(f) = j.get("staleness_fix").and_then(Json::as_str) {
             rc.staleness_fix = FixKind::parse(f)?;
+        }
+        if let Some(p) = j.get("partition").and_then(Json::as_str) {
+            rc.partition = PartitionMode::parse(p)?;
         }
         Ok(rc)
     }
@@ -432,6 +471,27 @@ mod tests {
         assert_eq!(RunConfig::from_json(&legacy).unwrap().staleness_fix, FixKind::None);
         // bogus values are an error, not a silent fallback
         let bogus = Json::parse("{\"config\": \"x\", \"staleness_fix\": \"wormhole\"}").unwrap();
+        assert!(RunConfig::from_json(&bogus).is_err());
+    }
+
+    #[test]
+    fn partition_mode_roundtrip_and_legacy_default() {
+        assert_eq!(PartitionMode::parse("manual").unwrap(), PartitionMode::Manual);
+        assert_eq!(PartitionMode::parse("auto").unwrap(), PartitionMode::Auto);
+        assert!(PartitionMode::parse("magic").is_err());
+        let mut rc = RunConfig::new("native_resnet20_4s");
+        assert_eq!(rc.partition, PartitionMode::Manual); // default
+        for mode in [PartitionMode::Manual, PartitionMode::Auto] {
+            rc.partition = mode;
+            let back = RunConfig::from_json(&rc.to_json()).unwrap();
+            assert_eq!(back.partition, mode);
+            assert_eq!(PartitionMode::parse(mode.name()).unwrap(), mode);
+        }
+        // configs without the key (older files) keep the default
+        let legacy = Json::parse("{\"config\": \"x\"}").unwrap();
+        assert_eq!(RunConfig::from_json(&legacy).unwrap().partition, PartitionMode::Manual);
+        // bogus values are an error, not a silent fallback
+        let bogus = Json::parse("{\"config\": \"x\", \"partition\": \"psychic\"}").unwrap();
         assert!(RunConfig::from_json(&bogus).is_err());
     }
 

@@ -30,6 +30,7 @@ pub mod model;
 pub mod optim;
 pub mod pipeline;
 pub mod pool;
+pub mod profile;
 #[allow(missing_docs)]
 pub mod runtime;
 #[allow(missing_docs)]

@@ -4,22 +4,27 @@
 //!   train        train one config: --mode pipelined|sequential|hybrid,
 //!                orthogonally --backend auto|native|xla (compute),
 //!                --runtime scheduler|threaded (how the schedule executes),
-//!                and --staleness-fix none|stash|predict|correct (mitigation)
+//!                --staleness-fix none|stash|predict|correct (mitigation),
+//!                and --partition manual|auto (profile-guided PPV)
 //!   inspect      staleness report for a config (paper §3 accounting)
 //!   memory       Table-6-style memory model for a config
 //!   perfsim      discrete-event speedup estimate (Table 5 machinery):
-//!                --iters, --gflops, --mapping paired|full
+//!                --iters, --gflops, --mapping paired|full,
+//!                --partition manual|auto, --profile analytic|measured
 //!   list-configs enumerate artifact configs + native built-ins
 
 use anyhow::{anyhow, Result};
 
-use pipestale::config::{Backend, Mode, OnFailure, RunConfig, RuntimeKind};
-use pipestale::memory::{pipedream_stash_bytes, stash_extra_bytes_total, MemoryReport};
+use pipestale::config::{Backend, Mode, OnFailure, PartitionMode, RunConfig, RuntimeKind};
+use pipestale::memory::{
+    partition_memory_rows, pipedream_stash_bytes, stash_extra_bytes_total, MemoryReport,
+};
 use pipestale::meta::ConfigMeta;
 use pipestale::pipeline::perfsim::{
-    analytic_costs, simulate_nonpipelined, simulate_pipelined, CommModel, Mapping,
+    imbalance_ratio, simulate_nonpipelined, simulate_pipelined, stage_totals, CommModel, Mapping,
 };
 use pipestale::pipeline::{FixKind, StalenessReport};
+use pipestale::profile::CostProfile;
 use pipestale::util::bench::Table;
 use pipestale::util::cli::Command;
 use pipestale::util::logging;
@@ -52,9 +57,11 @@ fn dispatch(args: &[String]) -> Result<()> {
                  SUBCOMMANDS:\n  \
                  train --config <name> [--mode pipelined|sequential|hybrid]\n        \
                  [--backend auto|native|xla] [--runtime scheduler|threaded]\n        \
-                 [--staleness-fix none|stash|predict|correct] ...\n  \
-                 inspect --config <name>\n  memory --config <name> [--batch N]\n  \
-                 perfsim --config <name> [--iters N] [--gflops G] [--mapping paired|full]\n  \
+                 [--staleness-fix none|stash|predict|correct] [--partition manual|auto] ...\n  \
+                 inspect --config <name>\n  \
+                 memory --config <name> [--batch N] [--partition manual|auto]\n  \
+                 perfsim --config <name> [--iters N] [--gflops G] [--mapping paired|full]\n        \
+                 [--partition manual|auto] [--profile analytic|measured] [--save-profile]\n  \
                  list-configs\n\n\
                  Run a subcommand with --help for its options."
             );
@@ -99,6 +106,11 @@ fn cmd_train(args: &[String]) -> Result<()> {
                 "staleness-fix",
                 "none",
                 "none | stash | predict | correct (stale-weight mitigation, DESIGN.md §9)",
+            )
+            .opt(
+                "partition",
+                "manual",
+                "manual | auto (profile-guided bottleneck-minimizing PPV, DESIGN.md §10)",
             ),
         args,
     )?;
@@ -136,6 +148,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
         rc.fault_plan = Some(m.get("fault-plan").to_string());
     }
     rc.staleness_fix = FixKind::parse(m.get("staleness-fix"))?;
+    rc.partition = PartitionMode::parse(m.get("partition"))?;
 
     let res = pipestale::train::run(&rc)?;
     let recovery = if res.degraded {
@@ -199,14 +212,33 @@ fn cmd_memory(args: &[String]) -> Result<()> {
     let m = parse(
         Command::new("pipestale memory", "Table-6-style memory model")
             .req("config", "artifact config name")
-            .opt("batch", "128", "batch size for absolute numbers"),
+            .opt("batch", "128", "batch size for absolute numbers")
+            .opt("partition", "manual", "manual | auto (profile-guided PPV)"),
         args,
     )?;
-    let meta = pipestale::train::load_native_meta(m.get("config"))?;
+    let pmode = PartitionMode::parse(m.get("partition"))?;
+    let meta = pipestale::train::resolve_meta(m.get("config"), pmode, false)?;
     let batch = m.get_usize("batch").map_err(|e| anyhow!(e))?;
     let r = MemoryReport::from_meta(&meta);
     let mb = 1024.0 * 1024.0;
-    println!("{} (PPV {:?}, batch {batch}):", r.config, r.ppv);
+    println!("{} (PPV {:?} [{}], batch {batch}):", r.config, r.ppv, pmode.name());
+    // Per-stage footprint + analytic compute share: the load-imbalance
+    // view that motivates --partition auto.
+    let prof = CostProfile::analytic(&meta, pipestale::profile::REFERENCE_FLOPS_PER_S)?;
+    let totals = stage_totals(&prof.stage_costs(&meta.ppv)?);
+    let sum: f64 = totals.iter().sum();
+    let mut t = Table::new(&["stage", "layers", "weights MB", "carry-in MB", "compute share"]);
+    for (row, cost) in partition_memory_rows(&meta).iter().zip(&totals) {
+        t.row(&[
+            row.partition.to_string(),
+            format!("{}..{}", row.layer_range.0, row.layer_range.1),
+            format!("{:.2}", row.weight_bytes / mb),
+            format!("{:.2}", row.carry_in_bytes / mb),
+            format!("{:.1}%", 100.0 * cost / sum.max(f64::MIN_POSITIVE)),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("  stage imbalance (bottleneck/mean, analytic): {:.3}", imbalance_ratio(&totals));
     println!("  activations: {:7.2} MB x batch", r.activations_per_sample / mb);
     println!("  weights:     {:7.2} MB", r.weight_bytes / mb);
     println!(
@@ -230,21 +262,52 @@ fn cmd_memory(args: &[String]) -> Result<()> {
 
 fn cmd_perfsim(args: &[String]) -> Result<()> {
     let m = parse(
-        Command::new("pipestale perfsim", "DES speedup estimate from the analytic cost model")
+        Command::new("pipestale perfsim", "DES speedup estimate from a per-block cost model")
             .req("config", "artifact config name")
             .opt("iters", "200", "simulated training iterations")
-            .opt("gflops", "50.0", "assumed accelerator GFLOP/s")
-            .opt("mapping", "paired", "paired | full"),
+            .opt("gflops", "50.0", "assumed accelerator GFLOP/s (analytic profile)")
+            .opt("mapping", "paired", "paired | full")
+            .opt("partition", "manual", "manual | auto (profile-guided PPV)")
+            .opt("profile", "analytic", "analytic | measured (wall-clock on native kernels)")
+            .opt("warmup", "1", "measured profile: untimed warmup reps per block")
+            .opt("reps", "5", "measured profile: timed reps per block (median taken)")
+            .flag("save-profile", "write the profile to results/profile_<config>.json"),
         args,
     )?;
-    let meta = pipestale::train::load_native_meta(m.get("config"))?;
+    let pmode = PartitionMode::parse(m.get("partition"))?;
+    let meta = pipestale::train::resolve_meta(m.get("config"), pmode, false)?;
     let iters = m.get_u64("iters").map_err(|e| anyhow!(e))?;
     let gflops = m.get_f64("gflops").map_err(|e| anyhow!(e))?;
     let mapping = match m.get("mapping") {
         "full" => Mapping::Full,
         _ => Mapping::Paired,
     };
-    let costs = analytic_costs(&meta, gflops * 1e9);
+    let prof = match m.get("profile") {
+        "analytic" => CostProfile::analytic(&meta, gflops * 1e9)?,
+        "measured" => CostProfile::measure(
+            m.get("config"),
+            m.get_usize("warmup").map_err(|e| anyhow!(e))?,
+            m.get_usize("reps").map_err(|e| anyhow!(e))?,
+        )?,
+        other => return Err(anyhow!("unknown profile {other:?} (analytic|measured)")),
+    };
+    let costs = prof.stage_costs(&meta.ppv)?;
+    let totals = stage_totals(&costs);
+    println!("{} (PPV {:?} [{}], {} profile):", meta.config, meta.ppv, pmode.name(), prof.source);
+    for (i, ((f, b), part)) in
+        costs.fwd.iter().zip(&costs.bwd).zip(&meta.partitions).enumerate()
+    {
+        println!(
+            "  stage {} (layers {}..{}): fwd {:.3} ms + bwd {:.3} ms = {:.3} ms",
+            i + 1,
+            part.layer_lo,
+            part.layer_hi,
+            1e3 * f,
+            1e3 * b,
+            1e3 * totals[i]
+        );
+    }
+    println!("  stage imbalance (bottleneck/mean): {:.3}", imbalance_ratio(&totals));
     let comm = CommModel::default();
     let tp = simulate_pipelined(&costs, &comm, mapping, iters);
     let tn = simulate_nonpipelined(&costs, iters);
@@ -257,6 +320,10 @@ fn cmd_perfsim(args: &[String]) -> Result<()> {
         tp,
         tn / tp
     );
+    if m.has("save-profile") {
+        let path = prof.save()?;
+        println!("wrote {}", path.display());
+    }
     Ok(())
 }
 

@@ -107,6 +107,39 @@ impl MemoryReport {
     }
 }
 
+/// One partition's footprint in the `pipestale memory` per-stage table.
+/// Works on any `ConfigMeta` — artifact-loaded or synthesized without an
+/// artifacts dir (the `--partition auto` path).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartitionMemoryRow {
+    /// Partition index as recorded by the config metadata (1-based).
+    pub partition: usize,
+    /// Inclusive 1-based paper-layer range the partition covers.
+    pub layer_range: (usize, usize),
+    /// Bytes of the partition's live weights (f32).
+    pub weight_bytes: f64,
+    /// Bytes of one mini-batch's carry-in (the register contents).
+    pub carry_in_bytes: f64,
+}
+
+/// Per-partition memory rows for the CLI's per-stage table (printed
+/// next to the analytic compute share and the imbalance ratio).
+pub fn partition_memory_rows(meta: &ConfigMeta) -> Vec<PartitionMemoryRow> {
+    meta.partitions
+        .iter()
+        .map(|p| {
+            let carry_elems: usize =
+                p.carry_in.iter().map(|s| s.iter().product::<usize>()).sum();
+            PartitionMemoryRow {
+                partition: p.index,
+                layer_range: (p.layer_lo, p.layer_hi),
+                weight_bytes: p.param_count as f64 * 4.0,
+                carry_in_bytes: carry_elems as f64 * 4.0,
+            }
+        })
+        .collect()
+}
+
 /// Weight-stash ring cost of `--staleness-fix stash` for one partition
 /// (DESIGN.md §9).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -264,6 +297,29 @@ mod tests {
         // the stash ring costs at least as much as the §6.7 estimate.
         let meta = crate::backend::native_config("native_lenet_small_4s").unwrap();
         assert!(stash_extra_bytes_total(&meta) >= pipedream_stash_bytes(&meta));
+    }
+
+    #[test]
+    fn partition_rows_cover_all_layers_and_weights() {
+        // Works on a synthesized meta — no artifacts dir involved (the
+        // same shape the --partition auto path produces).
+        let meta = crate::backend::native_config("native_lenet_small_4s").unwrap();
+        let rows = partition_memory_rows(&meta);
+        assert_eq!(rows.len(), meta.partitions.len());
+        // Layer ranges chain contiguously over 1..=num_layers.
+        assert_eq!(rows[0].layer_range.0, 1);
+        assert_eq!(rows.last().unwrap().layer_range.1, meta.num_layers);
+        for w in rows.windows(2) {
+            assert_eq!(w[0].layer_range.1 + 1, w[1].layer_range.0);
+        }
+        // Weight bytes sum to the whole model's.
+        let total: f64 = rows.iter().map(|r| r.weight_bytes).sum();
+        assert_eq!(total, meta.total_params() as f64 * 4.0);
+        // Carry-in includes the batch dimension (full mini-batch bytes).
+        let p0 = &meta.partitions[0];
+        let elems: usize = p0.carry_in.iter().map(|s| s.iter().product::<usize>()).sum();
+        assert_eq!(rows[0].carry_in_bytes, elems as f64 * 4.0);
+        assert!(rows[0].carry_in_bytes > 0.0);
     }
 
     #[test]

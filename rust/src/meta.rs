@@ -155,6 +155,28 @@ impl ConfigMeta {
         if self.layers.len() != self.num_layers {
             bail!("{}: layer metadata arity mismatch", self.config);
         }
+        // PPV well-formedness: strictly increasing cuts, each inside
+        // 1..num_layers. models.rs re-checks this for native built-ins,
+        // but artifact meta.json files must be rejected uniformly at
+        // load too — a malformed PPV otherwise surfaces much later as a
+        // bogus staleness degree or a panicking layer slice.
+        if let Some(w) = self.ppv.windows(2).find(|w| w[0] >= w[1]) {
+            bail!(
+                "{}: PPV {:?} is not strictly increasing (cut {} then {})",
+                self.config,
+                self.ppv,
+                w[0],
+                w[1]
+            );
+        }
+        if let Some(&bad) = self.ppv.iter().find(|&&c| c < 1 || c >= self.num_layers) {
+            bail!(
+                "{}: PPV cut {bad} out of bounds for {} layers (cuts must lie in 1..{})",
+                self.config,
+                self.num_layers,
+                self.num_layers
+            );
+        }
         for (a, b) in self.partitions.iter().zip(self.partitions.iter().skip(1)) {
             if a.carry_out != b.carry_in {
                 bail!("carry chain mismatch between partitions {} and {}", a.index, b.index);
@@ -328,6 +350,54 @@ mod tests {
             assert!(f > prev, "p={p} f={f} prev={prev}");
             prev = f;
         }
+    }
+
+    /// Minimal hand-written meta.json (3 layers, 3 single-layer
+    /// partitions) with a substitutable PPV — no artifacts needed.
+    fn mini_meta(ppv: &str) -> String {
+        format!(
+            r#"{{
+  "config": "mini", "model": "toy", "batch": 2, "dataset": "synthetic",
+  "input_shape": [4], "num_classes": 2, "num_layers": 3, "ppv": {ppv},
+  "meta_only": true,
+  "layers": [
+    {{"name": "l1", "param_count": 0, "carry_elems_per_sample": 3, "flops_per_sample": 10}},
+    {{"name": "l2", "param_count": 0, "carry_elems_per_sample": 2, "flops_per_sample": 10}},
+    {{"name": "l3", "param_count": 0, "carry_elems_per_sample": 2, "flops_per_sample": 10}}
+  ],
+  "partitions": [
+    {{"index": 1, "layer_lo": 1, "layer_hi": 1, "param_count": 0, "params": [], "state": [],
+      "carry_in": [[2, 4]], "carry_out": [[2, 3]],
+      "programs": {{"fwd": "f", "bwd": "b", "fwd_eval": "e"}}}},
+    {{"index": 2, "layer_lo": 2, "layer_hi": 2, "param_count": 0, "params": [], "state": [],
+      "carry_in": [[2, 3]], "carry_out": [[2, 2]],
+      "programs": {{"fwd": "f", "bwd": "b", "fwd_eval": "e"}}}},
+    {{"index": 3, "layer_lo": 3, "layer_hi": 3, "param_count": 0, "params": [], "state": [],
+      "carry_in": [[2, 2]], "carry_out": [[2, 2]],
+      "programs": {{"last": "l", "last_eval": "le"}}}}
+  ]
+}}"#
+        )
+    }
+
+    #[test]
+    fn ppv_monotonicity_and_bounds_rejected_at_load() {
+        let dir = std::env::temp_dir().join(format!("pipestale_meta_ppv_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let write = |ppv: &str| std::fs::write(dir.join("meta.json"), mini_meta(ppv)).unwrap();
+        // A well-formed PPV loads.
+        write("[1, 2]");
+        let m = ConfigMeta::load(&dir).unwrap();
+        assert_eq!(m.ppv, vec![1, 2]);
+        // Regression: all of these passed the arity-only validation —
+        // non-strict, decreasing, and out-of-bounds cuts (cuts must lie
+        // in 1..num_layers) now fail uniformly at load.
+        for bad in ["[2, 2]", "[2, 1]", "[0, 2]", "[1, 3]"] {
+            write(bad);
+            let err = ConfigMeta::load(&dir).unwrap_err().to_string();
+            assert!(err.contains("PPV"), "{bad}: {err}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -19,6 +19,10 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
+use anyhow::{ensure, Result};
+
+use crate::backend::BWD_FLOPS_FACTOR;
+
 /// Per-partition compute costs in seconds.
 #[derive(Debug, Clone)]
 pub struct StageCosts {
@@ -316,7 +320,7 @@ pub fn analytic_costs(meta: &crate::meta::ConfigMeta, flops_per_s: f64) -> Stage
             .map(|l| l.flops_per_sample as f64)
             .sum();
         fwd.push(fl * batch / flops_per_s);
-        bwd.push(2.0 * fl * batch / flops_per_s);
+        bwd.push(BWD_FLOPS_FACTOR * fl * batch / flops_per_s);
     }
     StageCosts { fwd, bwd, edge_bytes: edge_bytes_of(meta) }
 }
@@ -347,7 +351,7 @@ pub fn roofline_costs(
             t += tc.max(tm);
         }
         fwd.push(t * batch);
-        bwd.push(2.0 * t * batch);
+        bwd.push(BWD_FLOPS_FACTOR * t * batch);
     }
     StageCosts { fwd, bwd, edge_bytes: edge_bytes_of(meta) }
 }
@@ -363,6 +367,136 @@ pub fn gpipe_speedup_estimate(p: usize, microbatches: usize) -> f64 {
     let m = microbatches as f64;
     let bubble = (p as f64 - 1.0) / (m + p as f64 - 1.0);
     p as f64 * (1.0 - bubble)
+}
+
+/// A bottleneck-minimizing partition chosen by [`solve_partition`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartitionSolution {
+    /// Chosen PPV: 1-based block indices after which a register sits
+    /// (same numbering as `ConfigMeta::ppv`; empty for P=1).
+    pub ppv: Vec<usize>,
+    /// Per-stage total (fwd+bwd) cost under the chosen cuts, in the
+    /// units of the input block costs.
+    pub stage_costs: Vec<f64>,
+    /// The slowest stage's cost — the pipeline cycle time at full
+    /// occupancy in the paired mapping, and the quantity the solver
+    /// minimizes.
+    pub bottleneck: f64,
+    /// Load-imbalance ratio bottleneck / mean stage cost; 1.0 means
+    /// perfectly balanced stages.
+    pub imbalance: f64,
+    /// Predicted steady-state speedup over one accelerator running the
+    /// whole model: total cost / bottleneck (communication-free).
+    pub predicted_speedup: f64,
+}
+
+/// Sum per-block costs into per-stage totals under a PPV: cut values
+/// are 1-based block indices, stage `i` covers blocks
+/// `bounds[i]+1..=bounds[i+1]` with `bounds = [0] ++ ppv ++ [n]` — the
+/// exact bounds convention `native_config` uses for layer ranges.
+///
+/// Callers must pass a PPV that is strictly increasing with every cut
+/// in `1..n`; [`solve_partition`] and the profile helpers only produce
+/// such PPVs.
+pub fn stage_costs_of(block_costs: &[f64], ppv: &[usize]) -> Vec<f64> {
+    let mut bounds = Vec::with_capacity(ppv.len() + 2);
+    bounds.push(0usize);
+    bounds.extend_from_slice(ppv);
+    bounds.push(block_costs.len());
+    bounds.windows(2).map(|w| block_costs[w[0]..w[1]].iter().sum()).collect()
+}
+
+/// Per-stage fwd+bwd seconds of a cost model — the per-stage totals the
+/// CLI and benches report next to [`imbalance_ratio`].
+pub fn stage_totals(costs: &StageCosts) -> Vec<f64> {
+    costs.fwd.iter().zip(&costs.bwd).map(|(f, b)| f + b).collect()
+}
+
+/// Load-imbalance ratio of per-stage totals: max / mean. 1.0 is
+/// perfectly balanced; an empty or all-zero input reports 1.0 (nothing
+/// is imbalanced about no work).
+pub fn imbalance_ratio(stage_totals: &[f64]) -> f64 {
+    if stage_totals.is_empty() {
+        return 1.0;
+    }
+    let max = stage_totals.iter().cloned().fold(0.0f64, f64::max);
+    let mean = stage_totals.iter().sum::<f64>() / stage_totals.len() as f64;
+    if mean > 0.0 {
+        max / mean
+    } else {
+        1.0
+    }
+}
+
+fn solution_for(block_costs: &[f64], ppv: Vec<usize>) -> PartitionSolution {
+    let stage_costs = stage_costs_of(block_costs, &ppv);
+    let bottleneck = stage_costs.iter().cloned().fold(0.0f64, f64::max);
+    let total: f64 = stage_costs.iter().sum();
+    PartitionSolution {
+        imbalance: imbalance_ratio(&stage_costs),
+        predicted_speedup: if bottleneck > 0.0 { total / bottleneck } else { 1.0 },
+        ppv,
+        stage_costs,
+        bottleneck,
+    }
+}
+
+/// PipeDream-style bottleneck-minimizing partition search: choose the
+/// `p-1` cut points that split `block_costs` into `p` contiguous stages
+/// minimizing the maximum stage cost. Exact dynamic program over all
+/// contiguous partitions (O(n²·p)); ties break deterministically toward
+/// the lowest cut indices (cut candidates are scanned ascending and
+/// only a strictly better bottleneck replaces the incumbent), so the
+/// result is identical across runs, platforms, and thread counts.
+///
+/// Costs must be finite and non-negative; errors cleanly on `p == 0`,
+/// an empty cost array, or `p > block_costs.len()` (a stage cannot be
+/// empty — every stage owns at least one block).
+pub fn solve_partition(block_costs: &[f64], p: usize) -> Result<PartitionSolution> {
+    let n = block_costs.len();
+    ensure!(p >= 1, "cannot partition into zero stages");
+    ensure!(n >= 1, "cannot partition an empty block-cost array");
+    ensure!(p <= n, "cannot cut {n} blocks into {p} non-empty stages (need p <= num_blocks)");
+    ensure!(
+        block_costs.iter().all(|c| c.is_finite() && *c >= 0.0),
+        "block costs must be finite and non-negative: {block_costs:?}"
+    );
+
+    let mut prefix = vec![0.0f64; n + 1];
+    for (i, c) in block_costs.iter().enumerate() {
+        prefix[i + 1] = prefix[i] + c;
+    }
+    let seg = |lo: usize, hi: usize| prefix[hi] - prefix[lo];
+
+    // dp[k][j]: minimal bottleneck splitting the first j blocks into k
+    // stages; cut[k][j]: the boundary i achieving it (stage k covers
+    // blocks i..j, the first k-1 stages cover ..i).
+    let mut dp = vec![vec![f64::INFINITY; n + 1]; p + 1];
+    let mut cut = vec![vec![0usize; n + 1]; p + 1];
+    for j in 1..=n {
+        dp[1][j] = seg(0, j);
+    }
+    for k in 2..=p {
+        for j in k..=n {
+            for i in (k - 1)..j {
+                let cand = dp[k - 1][i].max(seg(i, j));
+                if cand < dp[k][j] {
+                    dp[k][j] = cand;
+                    cut[k][j] = i;
+                }
+            }
+        }
+    }
+
+    let mut ppv = Vec::with_capacity(p - 1);
+    let mut j = n;
+    for k in (2..=p).rev() {
+        let i = cut[k][j];
+        ppv.push(i);
+        j = i;
+    }
+    ppv.reverse();
+    Ok(solution_for(block_costs, ppv))
 }
 
 #[cfg(test)]
@@ -555,5 +689,60 @@ mod tests {
         let s4 = gpipe_speedup_estimate(4, 4);
         let s32 = gpipe_speedup_estimate(4, 32);
         assert!(s4 < s32 && s32 < 4.0);
+    }
+
+    #[test]
+    fn solver_balances_known_arrays() {
+        // Uniform costs split evenly.
+        let sol = solve_partition(&[1.0, 1.0, 1.0, 1.0], 2).unwrap();
+        assert_eq!(sol.ppv, vec![2]);
+        assert_eq!(sol.stage_costs, vec![2.0, 2.0]);
+        assert!((sol.bottleneck - 2.0).abs() < 1e-12);
+        assert!((sol.imbalance - 1.0).abs() < 1e-12);
+        assert!((sol.predicted_speedup - 2.0).abs() < 1e-12);
+        // A heavy head block gets its own stage.
+        let sol = solve_partition(&[3.0, 1.0, 1.0, 1.0], 2).unwrap();
+        assert_eq!(sol.ppv, vec![1]);
+        assert!((sol.bottleneck - 3.0).abs() < 1e-12);
+        // A heavy tail block likewise.
+        let sol = solve_partition(&[1.0, 1.0, 1.0, 5.0], 2).unwrap();
+        assert_eq!(sol.ppv, vec![3]);
+        assert!((sol.bottleneck - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solver_degenerate_cases() {
+        // P=1: no cuts, bottleneck is the whole model.
+        let sol = solve_partition(&[2.0, 3.0, 4.0], 1).unwrap();
+        assert!(sol.ppv.is_empty());
+        assert!((sol.bottleneck - 9.0).abs() < 1e-12);
+        assert!((sol.predicted_speedup - 1.0).abs() < 1e-12);
+        // P=n: every block its own stage, bottleneck = max block.
+        let sol = solve_partition(&[2.0, 3.0, 4.0], 3).unwrap();
+        assert_eq!(sol.ppv, vec![1, 2]);
+        assert!((sol.bottleneck - 4.0).abs() < 1e-12);
+        // P=0, P>n, empty costs, and non-finite costs error cleanly.
+        assert!(solve_partition(&[1.0, 2.0], 0).is_err());
+        assert!(solve_partition(&[1.0, 2.0], 3).is_err());
+        assert!(solve_partition(&[], 1).is_err());
+        assert!(solve_partition(&[1.0, f64::NAN], 1).is_err());
+        assert!(solve_partition(&[1.0, -2.0], 1).is_err());
+    }
+
+    #[test]
+    fn stage_cost_and_imbalance_helpers_are_consistent() {
+        let costs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(stage_costs_of(&costs, &[2, 4]), vec![3.0, 7.0, 5.0]);
+        assert_eq!(stage_costs_of(&costs, &[]), vec![15.0]);
+        assert!((imbalance_ratio(&[3.0, 7.0, 5.0]) - 7.0 / 5.0).abs() < 1e-12);
+        assert_eq!(imbalance_ratio(&[]), 1.0);
+        assert_eq!(imbalance_ratio(&[0.0, 0.0]), 1.0);
+        // stage_totals pairs fwd+bwd elementwise.
+        let sc = StageCosts { fwd: vec![1.0, 2.0], bwd: vec![2.0, 4.0], edge_bytes: vec![0.0] };
+        assert_eq!(stage_totals(&sc), vec![3.0, 6.0]);
+        // The solver's reported fields agree with the helpers.
+        let sol = solve_partition(&costs, 3).unwrap();
+        assert_eq!(sol.stage_costs, stage_costs_of(&costs, &sol.ppv));
+        assert!((sol.imbalance - imbalance_ratio(&sol.stage_costs)).abs() < 1e-12);
     }
 }

@@ -341,6 +341,7 @@ struct Worker {
 pub struct ThreadedPipeline {
     workers: Vec<Worker>,
     heartbeats: Vec<Arc<Heartbeat>>,
+    busy_ns: Vec<Arc<AtomicU64>>,
     events: Receiver<FromWorker>,
     shutdown: Arc<AtomicBool>,
     p: usize,
@@ -399,6 +400,7 @@ impl ThreadedPipeline {
         let mut workers = Vec::with_capacity(p);
         let heartbeats: Vec<Arc<Heartbeat>> =
             (0..p).map(|_| Arc::new(Heartbeat::default())).collect();
+        let busy_ns: Vec<Arc<AtomicU64>> = (0..p).map(|_| Arc::new(AtomicU64::new(0))).collect();
         for (idx, (pp, optim)) in params.partitions.into_iter().zip(optims).enumerate() {
             let fwd_rx = fwd_rxs[idx].take().expect("fwd receiver taken once");
             let bwd_rx = if idx + 1 < p { bwd_rxs[idx].take() } else { None };
@@ -409,6 +411,7 @@ impl ThreadedPipeline {
             let flag = Arc::clone(&shutdown);
             let backend = backend.clone();
             let hb = Arc::clone(&heartbeats[idx]);
+            let busy = Arc::clone(&busy_ns[idx]);
             let d_eff = opts.occupancy.warmup(p, idx);
             let fix = opts.staleness_fix;
             let batch = meta.batch;
@@ -446,6 +449,7 @@ impl ThreadedPipeline {
                                 &events,
                                 &flag,
                                 &hb,
+                                &busy,
                                 d_eff,
                                 batch,
                             )
@@ -471,6 +475,7 @@ impl ThreadedPipeline {
         Ok(ThreadedPipeline {
             workers,
             heartbeats,
+            busy_ns,
             events: ev_rx,
             shutdown,
             p,
@@ -598,6 +603,17 @@ impl ThreadedPipeline {
     /// inputs; exposed for supervision and tests).
     pub fn heartbeats(&self) -> &[Arc<Heartbeat>] {
         &self.heartbeats
+    }
+
+    /// Cumulative wall-clock seconds each stage spent *inside* its
+    /// compute kernels (forward + backward + fused last), indexed by
+    /// stage. This is the emergent side of the auto-partitioner's
+    /// predicted-vs-emergent contract (DESIGN.md §10): the profiler
+    /// predicts per-stage cost, these counters report what the real
+    /// concurrent run actually spent. Read *before* [`Self::shutdown`]
+    /// — shutdown consumes the pipeline.
+    pub fn stage_busy_seconds(&self) -> Vec<f64> {
+        self.busy_ns.iter().map(|b| b.load(Ordering::Relaxed) as f64 * 1e-9).collect()
     }
 
     /// Stop workers and collect the trained weights.
@@ -734,6 +750,7 @@ fn run_worker<S: WorkerStage>(
     events: &Sender<FromWorker>,
     shutdown: &AtomicBool,
     hb: &Heartbeat,
+    busy: &AtomicU64,
     d_eff: u64,
     batch_size: usize,
 ) -> Result<()> {
@@ -768,7 +785,9 @@ fn run_worker<S: WorkerStage>(
                 Step::Got(FwdMsg::Batch { batch_id, seed, carry, labels }) => {
                     ensure!(fwd_open, "worker {idx}: batch {batch_id} after drain marker");
                     if is_last {
+                        let t0 = Instant::now();
                         let res = stage.last(seed, &carry, &labels)?;
+                        busy.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                         hb.tick_progress();
                         let ev = TrainEvent {
                             batch_id,
@@ -797,7 +816,9 @@ fn run_worker<S: WorkerStage>(
                             break 'run;
                         }
                     } else {
+                        let t0 = Instant::now();
                         let out = stage.forward(seed, &carry)?;
+                        busy.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                         hb.tick_progress();
                         fifo.push_back((batch_id, seed, carry));
                         let tx = next_fwd.expect("non-last worker has a next stage");
@@ -821,7 +842,9 @@ fn run_worker<S: WorkerStage>(
                         saved_id == batch_id,
                         "worker {idx}: FIFO order violated ({saved_id} vs {batch_id})"
                     );
+                    let t0 = Instant::now();
                     let gin = stage.backward(seed, &saved, &gcarry)?;
+                    busy.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                     hb.tick_progress();
                     let done = match prev_bwd {
                         Some(tx) => {

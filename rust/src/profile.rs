@@ -1,0 +1,440 @@
+//! Profile-guided per-block cost model (the PipeDream recipe, §PAPERS).
+//!
+//! The paper picks pipeline partition vectors by hand and observes that
+//! throughput is governed by the slowest stage. PipeDream (arXiv
+//! 1806.03377) made the obvious next step the headline: *profile* each
+//! layer's compute, then *solve* for the cuts that minimize the
+//! bottleneck stage. This module is the profiling half of that recipe
+//! for the native backend:
+//!
+//! * [`CostProfile::analytic`] prices each paper-numbered block from
+//!   the recorded per-layer FLOPs accounting (`meta.json` /
+//!   `native_config`), with the canonical
+//!   [`BWD_FLOPS_FACTOR`](crate::backend::BWD_FLOPS_FACTOR) backward
+//!   ratio. It is pure arithmetic — bitwise deterministic — and is the
+//!   *only* cost model `--partition auto` uses at train time, so an
+//!   auto-partitioned run stays reproducible run-to-run.
+//! * [`CostProfile::measure`] times each block's forward+backward on
+//!   the real native kernels (warmup + median-of-K, deterministic
+//!   iteration order and inputs), by synthesizing a full-register
+//!   variant of the config — one partition per block — through
+//!   [`native_config_with_ppv`]. Wall-clock numbers feed the perfsim
+//!   CLI and the partition bench, never the training path.
+//!
+//! Either profile serializes to `results/profile_<config>.json`
+//! ([`CostProfile::save`]) and converts into solver inputs
+//! ([`CostProfile::block_totals`]) or per-stage cost vectors for a
+//! given PPV ([`CostProfile::stage_costs`]). [`auto_native_meta`] is
+//! the one-call entry point `--partition auto` uses: analytic profile →
+//! [`solve_partition`] at the manifest's stage count → full
+//! [`ConfigMeta`] synthesis through the same bounds machinery as the
+//! hand-tabulated PPVs.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::backend::{native_config, native_config_with_ppv, NativePartition, BWD_FLOPS_FACTOR};
+use crate::meta::ConfigMeta;
+use crate::model::ModelParams;
+use crate::pipeline::perfsim::{solve_partition, PartitionSolution, StageCosts};
+use crate::tensor::{IntTensor, Tensor};
+use crate::util::json::{self, Json};
+
+/// Reference accelerator throughput for the analytic profile, FLOP/s.
+///
+/// The bottleneck-minimizing cut is *scale-invariant*: multiplying
+/// every block cost by a constant does not move the argmin, so the
+/// specific value only affects the human-readable seconds in reports,
+/// never the chosen PPV. 50 GFLOP/s matches the perfsim CLI default.
+pub const REFERENCE_FLOPS_PER_S: f64 = 50e9;
+
+/// Measured or modeled cost of one paper-numbered model block (layer).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockCost {
+    /// 1-based paper layer index — the PPV cut numbering.
+    pub layer: usize,
+    /// Layer name from the model IR (`l1`, `l2`, ...).
+    pub name: String,
+    /// Forward seconds per mini-batch.
+    pub fwd_seconds: f64,
+    /// Backward seconds per mini-batch (carry-in recompute + gradient
+    /// walk + update, the native backend's delayed-backward shape).
+    pub bwd_seconds: f64,
+    /// Analytic forward FLOPs per sample, from the op accounting.
+    pub flops_per_sample: u64,
+    /// Bytes of the block's output carry for one mini-batch — the
+    /// register traffic a cut after this block would cost.
+    pub carry_bytes: f64,
+}
+
+impl BlockCost {
+    /// fwd+bwd seconds: the block's contribution to a paired-mapping
+    /// stage, and the solver's per-block cost.
+    pub fn total_seconds(&self) -> f64 {
+        self.fwd_seconds + self.bwd_seconds
+    }
+}
+
+/// A per-block cost profile of one config: the partition solver's input
+/// and the payload of `results/profile_<config>.json`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostProfile {
+    /// Config name the profile describes.
+    pub config: String,
+    /// Model name (for report readers; not used by the solver).
+    pub model: String,
+    /// Mini-batch size the costs are priced at.
+    pub batch: usize,
+    /// `"analytic"` (FLOPs model) or `"measured"` (wall-clock on the
+    /// native kernels).
+    pub source: String,
+    /// One entry per paper layer, in layer order.
+    pub blocks: Vec<BlockCost>,
+}
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    xs[xs.len() / 2]
+}
+
+impl CostProfile {
+    /// Price every block from the recorded FLOPs accounting: fwd =
+    /// `flops × batch / flops_per_s`, bwd = [`BWD_FLOPS_FACTOR`] × fwd.
+    /// Works for any `ConfigMeta` with per-layer metadata (native or
+    /// artifact-loaded) — no kernels run, so the result is bitwise
+    /// deterministic and safe for the training path.
+    pub fn analytic(meta: &ConfigMeta, flops_per_s: f64) -> Result<CostProfile> {
+        ensure!(flops_per_s > 0.0, "flops_per_s must be positive, got {flops_per_s}");
+        ensure!(
+            meta.layers.len() == meta.num_layers,
+            "{}: per-layer metadata incomplete ({} of {} layers)",
+            meta.config,
+            meta.layers.len(),
+            meta.num_layers
+        );
+        let batch = meta.batch as f64;
+        let blocks = meta
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                let fwd = l.flops_per_sample as f64 * batch / flops_per_s;
+                BlockCost {
+                    layer: i + 1,
+                    name: l.name.clone(),
+                    fwd_seconds: fwd,
+                    bwd_seconds: BWD_FLOPS_FACTOR * fwd,
+                    flops_per_sample: l.flops_per_sample,
+                    carry_bytes: l.carry_elems_per_sample as f64 * batch * 4.0,
+                }
+            })
+            .collect();
+        Ok(CostProfile {
+            config: meta.config.clone(),
+            model: meta.model.clone(),
+            batch: meta.batch,
+            source: "analytic".into(),
+            blocks,
+        })
+    }
+
+    /// Time every block's fwd+bwd on the real native kernels: `warmup`
+    /// untimed iterations then the median of `reps` timed ones, per
+    /// block, in deterministic layer order with deterministic inputs
+    /// (all-ones carries, all-zero labels, seeded weights).
+    ///
+    /// Implemented by synthesizing the config's *full-register* variant
+    /// — PPV `(1, 2, …, L-1)`, one partition per block — through
+    /// [`native_config_with_ppv`], so each block is a complete
+    /// [`NativePartition`] timed in isolation, cuts land on block edges
+    /// by construction, and the fused last block is split by the
+    /// bench's 1/3 fwd + 2/3 bwd convention. Native built-ins only;
+    /// wall-clock numbers are for perfsim/bench reporting, not the
+    /// (determinism-bound) training path.
+    pub fn measure(config: &str, warmup: usize, reps: usize) -> Result<CostProfile> {
+        ensure!(reps >= 1, "need at least one timing rep");
+        let manifest_meta = native_config(config)?;
+        let num_layers = manifest_meta.num_layers;
+        let full_ppv: Vec<usize> = (1..num_layers).collect();
+        let meta = native_config_with_ppv(config, Some(&full_ppv))?;
+        let params = ModelParams::init(&meta.partitions, 0xb10c)?;
+        let optims = crate::train::build_optims(&meta, 1, 1.0);
+        let labels = IntTensor::from_vec(&[meta.batch], vec![0i32; meta.batch])?;
+
+        let mut blocks = Vec::with_capacity(num_layers);
+        for ((idx, part), optim) in params.partitions.into_iter().enumerate().zip(optims) {
+            let pm = &meta.partitions[idx];
+            let mut stage = NativePartition::for_partition(&meta, idx, part, optim)?;
+            let carry: Vec<Tensor> =
+                pm.carry_in.iter().map(|s| Tensor::ones(s)).collect();
+            let is_last = idx == num_layers - 1;
+            let (fwd_seconds, bwd_seconds) = if is_last {
+                let mut time_last = || -> Result<f64> {
+                    let t0 = Instant::now();
+                    stage.stage_last(&carry, &labels)?;
+                    Ok(t0.elapsed().as_secs_f64())
+                };
+                for _ in 0..warmup {
+                    time_last()?;
+                }
+                let dt = median((0..reps).map(|_| time_last()).collect::<Result<_>>()?);
+                (dt / 3.0, 2.0 * dt / 3.0)
+            } else {
+                let gcarry: Vec<Tensor> =
+                    pm.carry_out.iter().map(|s| Tensor::ones(s)).collect();
+                let mut time_fwd = || -> Result<f64> {
+                    let t0 = Instant::now();
+                    stage.stage_forward(&carry)?;
+                    Ok(t0.elapsed().as_secs_f64())
+                };
+                for _ in 0..warmup {
+                    time_fwd()?;
+                }
+                let tf = median((0..reps).map(|_| time_fwd()).collect::<Result<_>>()?);
+                let mut time_bwd = || -> Result<f64> {
+                    let t0 = Instant::now();
+                    stage.stage_backward(&carry, &gcarry)?;
+                    Ok(t0.elapsed().as_secs_f64())
+                };
+                for _ in 0..warmup {
+                    time_bwd()?;
+                }
+                let tb = median((0..reps).map(|_| time_bwd()).collect::<Result<_>>()?);
+                (tf, tb)
+            };
+            let l = &meta.layers[idx];
+            blocks.push(BlockCost {
+                layer: idx + 1,
+                name: l.name.clone(),
+                fwd_seconds,
+                bwd_seconds,
+                flops_per_sample: l.flops_per_sample,
+                carry_bytes: l.carry_elems_per_sample as f64 * meta.batch as f64 * 4.0,
+            });
+        }
+        Ok(CostProfile {
+            config: config.to_string(),
+            model: meta.model,
+            batch: meta.batch,
+            source: "measured".into(),
+            blocks,
+        })
+    }
+
+    /// Per-block fwd+bwd seconds in layer order — the
+    /// [`solve_partition`] input array.
+    pub fn block_totals(&self) -> Vec<f64> {
+        self.blocks.iter().map(BlockCost::total_seconds).collect()
+    }
+
+    /// Solve the bottleneck-minimizing `p`-stage cut over this profile.
+    pub fn solve(&self, p: usize) -> Result<PartitionSolution> {
+        solve_partition(&self.block_totals(), p)
+    }
+
+    /// Aggregate the per-block costs into perfsim [`StageCosts`] under
+    /// a PPV (manual or solved): per-stage fwd/bwd sums plus the
+    /// register edge bytes of each cut.
+    pub fn stage_costs(&self, ppv: &[usize]) -> Result<StageCosts> {
+        let n = self.blocks.len();
+        ensure!(n >= 1, "profile for {} has no blocks", self.config);
+        ensure!(
+            ppv.windows(2).all(|w| w[0] < w[1]) && ppv.iter().all(|&c| c >= 1 && c < n),
+            "PPV {ppv:?} invalid for {n} blocks"
+        );
+        let mut bounds = vec![0usize];
+        bounds.extend_from_slice(ppv);
+        bounds.push(n);
+        let mut fwd = Vec::with_capacity(ppv.len() + 1);
+        let mut bwd = Vec::with_capacity(ppv.len() + 1);
+        for w in bounds.windows(2) {
+            fwd.push(self.blocks[w[0]..w[1]].iter().map(|b| b.fwd_seconds).sum());
+            bwd.push(self.blocks[w[0]..w[1]].iter().map(|b| b.bwd_seconds).sum());
+        }
+        let edge_bytes = ppv.iter().map(|&c| self.blocks[c - 1].carry_bytes).collect();
+        Ok(StageCosts { fwd, bwd, edge_bytes })
+    }
+
+    /// Serialize to the `pipestale/profile/v1` JSON document.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("schema", json::s("pipestale/profile/v1")),
+            ("config", json::s(&self.config)),
+            ("model", json::s(&self.model)),
+            ("batch", json::num(self.batch as f64)),
+            ("source", json::s(&self.source)),
+            (
+                "blocks",
+                json::arr(self.blocks.iter().map(|b| {
+                    json::obj(vec![
+                        ("layer", json::num(b.layer as f64)),
+                        ("name", json::s(&b.name)),
+                        ("fwd_seconds", json::num(b.fwd_seconds)),
+                        ("bwd_seconds", json::num(b.bwd_seconds)),
+                        ("flops_per_sample", json::num(b.flops_per_sample as f64)),
+                        ("carry_bytes", json::num(b.carry_bytes)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// Parse a `pipestale/profile/v1` document written by [`Self::to_json`].
+    pub fn from_json(j: &Json) -> Result<CostProfile> {
+        let field = |k: &str| j.get(k).ok_or_else(|| anyhow!("profile JSON missing {k:?}"));
+        let schema = field("schema")?.as_str().unwrap_or_default();
+        ensure!(schema == "pipestale/profile/v1", "unsupported profile schema {schema:?}");
+        let mut blocks = Vec::new();
+        for (i, bj) in field("blocks")?.as_arr().unwrap_or_default().iter().enumerate() {
+            let bfield = |k: &str| {
+                bj.get(k).ok_or_else(|| anyhow!("profile block {i} missing {k:?}"))
+            };
+            blocks.push(BlockCost {
+                layer: bfield("layer")?.as_usize().unwrap_or_default(),
+                name: bfield("name")?.as_str().unwrap_or_default().to_string(),
+                fwd_seconds: bfield("fwd_seconds")?.as_f64().unwrap_or_default(),
+                bwd_seconds: bfield("bwd_seconds")?.as_f64().unwrap_or_default(),
+                flops_per_sample: bfield("flops_per_sample")?.as_f64().unwrap_or_default()
+                    as u64,
+                carry_bytes: bfield("carry_bytes")?.as_f64().unwrap_or_default(),
+            });
+        }
+        Ok(CostProfile {
+            config: field("config")?.as_str().unwrap_or_default().to_string(),
+            model: field("model")?.as_str().unwrap_or_default().to_string(),
+            batch: field("batch")?.as_usize().unwrap_or_default(),
+            source: field("source")?.as_str().unwrap_or_default().to_string(),
+            blocks,
+        })
+    }
+
+    /// Write the profile to `results/profile_<config>.json` (under
+    /// [`crate::results_root`]); returns the path written.
+    pub fn save(&self) -> Result<PathBuf> {
+        let path = crate::results_root().join(format!("profile_{}.json", self.config));
+        std::fs::write(&path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(path)
+    }
+}
+
+/// `--partition auto` for a native built-in config: analytic per-block
+/// profile → bottleneck-minimizing solve at the *manifest's* stage
+/// count (same P, rebalanced cuts — which keeps every auto-vs-manual
+/// comparison apples-to-apples and the worker topology unchanged) →
+/// full [`ConfigMeta`] synthesis through [`native_config_with_ppv`], so
+/// `partition_nodes` cross-validation, memory accounting and
+/// checkpointing consume the result exactly like a manual config.
+///
+/// Deliberately analytic-only: wall-clock profiling at train time would
+/// make the chosen PPV — and with it the entire run — machine- and
+/// noise-dependent, breaking the bitwise run-to-run determinism the
+/// pipeline guarantees. Errors cleanly (via [`native_config`]) when the
+/// config is not a native built-in.
+pub fn auto_native_meta(config: &str) -> Result<(ConfigMeta, PartitionSolution)> {
+    let manual = native_config(config)?;
+    let profile = CostProfile::analytic(&manual, REFERENCE_FLOPS_PER_S)?;
+    let p = manual.partitions.len();
+    if p == 0 {
+        bail!("{config}: cannot auto-partition a config with no partitions");
+    }
+    let sol = profile.solve(p)?;
+    let meta = if sol.ppv == manual.ppv {
+        manual
+    } else {
+        native_config_with_ppv(config, Some(&sol.ppv))?
+    };
+    Ok((meta, sol))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::partition_nodes;
+    use crate::pipeline::perfsim::stage_costs_of;
+
+    #[test]
+    fn analytic_profile_matches_flops_accounting() {
+        let meta = native_config("native_lenet_small_4s").unwrap();
+        let prof = CostProfile::analytic(&meta, REFERENCE_FLOPS_PER_S).unwrap();
+        assert_eq!(prof.blocks.len(), meta.num_layers);
+        assert_eq!(prof.source, "analytic");
+        for (i, b) in prof.blocks.iter().enumerate() {
+            assert_eq!(b.layer, i + 1);
+            assert_eq!(b.flops_per_sample, meta.layers[i].flops_per_sample);
+            let expect = b.flops_per_sample as f64 * meta.batch as f64 / REFERENCE_FLOPS_PER_S;
+            assert!((b.fwd_seconds - expect).abs() < 1e-15, "block {i}");
+            assert!((b.bwd_seconds - BWD_FLOPS_FACTOR * b.fwd_seconds).abs() < 1e-15);
+        }
+        // Stage costs under the manifest PPV agree with analytic_costs.
+        let sc = prof.stage_costs(&meta.ppv).unwrap();
+        let reference = crate::pipeline::perfsim::analytic_costs(&meta, REFERENCE_FLOPS_PER_S);
+        for (a, b) in sc.fwd.iter().zip(&reference.fwd) {
+            assert!((a - b).abs() < 1e-15);
+        }
+        for (a, b) in sc.edge_bytes.iter().zip(&reference.edge_bytes) {
+            assert!((a - b).abs() < 1e-9);
+        }
+        // Bad PPVs are rejected.
+        assert!(prof.stage_costs(&[0]).is_err());
+        assert!(prof.stage_costs(&[meta.num_layers]).is_err());
+        assert!(prof.stage_costs(&[2, 2]).is_err());
+    }
+
+    #[test]
+    fn profile_json_roundtrip() {
+        let meta = native_config("quickstart_lenet").unwrap();
+        let prof = CostProfile::analytic(&meta, 1e9).unwrap();
+        let back = CostProfile::from_json(&Json::parse(&prof.to_json().to_string_pretty())
+            .unwrap())
+        .unwrap();
+        assert_eq!(prof, back);
+        // Wrong schema tag fails.
+        assert!(CostProfile::from_json(&Json::parse("{\"schema\": \"nope\"}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn measured_profile_runs_real_kernels_per_block() {
+        let prof = CostProfile::measure("native_lenet_small", 1, 3).unwrap();
+        let meta = native_config("native_lenet_small").unwrap();
+        assert_eq!(prof.source, "measured");
+        assert_eq!(prof.blocks.len(), meta.num_layers);
+        for b in &prof.blocks {
+            assert!(b.fwd_seconds > 0.0 && b.fwd_seconds.is_finite(), "{b:?}");
+            assert!(b.bwd_seconds > 0.0 && b.bwd_seconds.is_finite(), "{b:?}");
+        }
+        // Unknown configs error cleanly.
+        assert!(CostProfile::measure("no_such_config", 0, 1).is_err());
+    }
+
+    #[test]
+    fn auto_native_meta_is_deterministic_and_no_worse_than_manual() {
+        for config in ["native_resnet20_4s", "native_lenet_small_4s", "lenet5_8s"] {
+            let manual = native_config(config).unwrap();
+            let (meta, sol) = auto_native_meta(config).unwrap();
+            // Deterministic: solving again picks the identical PPV.
+            let (meta2, sol2) = auto_native_meta(config).unwrap();
+            assert_eq!(sol.ppv, sol2.ppv, "{config}");
+            assert_eq!(meta.ppv, meta2.ppv, "{config}");
+            // Same stage count as the manifest, full contract intact.
+            assert_eq!(meta.partitions.len(), manual.partitions.len(), "{config}");
+            for part in &meta.partitions {
+                partition_nodes(&meta, part).unwrap();
+            }
+            // The solved bottleneck never exceeds the hand-tabulated
+            // PPV's under the same cost model (the acceptance bar).
+            let prof = CostProfile::analytic(&manual, REFERENCE_FLOPS_PER_S).unwrap();
+            let totals = prof.block_totals();
+            let manual_bn = stage_costs_of(&totals, &manual.ppv)
+                .into_iter()
+                .fold(0.0f64, f64::max);
+            assert!(
+                sol.bottleneck <= manual_bn + 1e-15,
+                "{config}: auto {} > manual {manual_bn}",
+                sol.bottleneck
+            );
+        }
+    }
+}

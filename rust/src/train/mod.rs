@@ -18,7 +18,7 @@ use std::time::Duration;
 use anyhow::{anyhow, Context, Result};
 
 use crate::backend::NativeExecutor;
-use crate::config::{Backend, Mode, OnFailure, RunConfig, RuntimeKind};
+use crate::config::{Backend, Mode, OnFailure, PartitionMode, RunConfig, RuntimeKind};
 use crate::data::{batch_seed, load_or_synthesize, Batcher, Dataset, SyntheticSpec};
 use crate::meta::ConfigMeta;
 use crate::model::checkpoint::CheckpointStore;
@@ -136,14 +136,61 @@ pub fn load_native_meta(name: &str) -> Result<ConfigMeta> {
     crate::backend::native_config(name)
 }
 
+/// Resolve the meta for a run under the partition axis: `manual` loads
+/// the recorded contract (artifact meta.json or native manifest),
+/// `auto` synthesizes the profile-guided PPV through
+/// [`crate::profile::auto_native_meta`] — same stage count as the
+/// manifest, cuts rebalanced by the analytic cost model, so the run is
+/// still bitwise deterministic. Auto is native-only: XLA stage programs
+/// are AOT-compiled against the recorded PPV and cannot serve a
+/// re-partitioned contract.
+pub fn resolve_meta(config: &str, partition: PartitionMode, use_xla: bool) -> Result<ConfigMeta> {
+    match partition {
+        PartitionMode::Manual => {
+            if use_xla {
+                ConfigMeta::load_named(&crate::artifacts_root(), config)
+                    .with_context(|| format!("loading config {config}"))
+            } else {
+                load_native_meta(config)
+                    .with_context(|| format!("resolving native config {config}"))
+            }
+        }
+        PartitionMode::Auto => {
+            anyhow::ensure!(
+                !use_xla,
+                "--partition auto re-synthesizes the partition contract and needs the native \
+                 backend (XLA stage programs are compiled against the recorded PPV); rerun \
+                 with --backend native"
+            );
+            let (meta, sol) = crate::profile::auto_native_meta(config)?;
+            log::info!(
+                "auto partition for {config}: PPV {:?} (predicted bottleneck {:.3e}s, \
+                 imbalance {:.3}, speedup {:.2}x)",
+                meta.ppv,
+                sol.bottleneck,
+                sol.imbalance,
+                sol.predicted_speedup
+            );
+            Ok(meta)
+        }
+    }
+}
+
 /// Resolve `Backend::Auto`: XLA only when the runtime is ready AND
 /// this config's artifacts exist; native-only built-ins (e.g.
 /// `native_lenet_small`) therefore run everywhere under the default.
+/// `--partition auto` pins the resolution to native — auto-partitioning
+/// re-synthesizes the contract, which only the native backend can serve
+/// (an explicit `--backend xla` + auto is an error in `resolve_meta`).
 fn resolve_xla(rc: &RunConfig) -> bool {
     match rc.backend {
         Backend::Xla => true,
         Backend::Native => false,
-        Backend::Auto => crate::xla_ready() && artifact_meta_exists(&rc.config),
+        Backend::Auto => {
+            rc.partition == PartitionMode::Manual
+                && crate::xla_ready()
+                && artifact_meta_exists(&rc.config)
+        }
     }
 }
 
@@ -182,8 +229,7 @@ fn checkpoint_store(rc: &RunConfig) -> Result<Option<CheckpointStore>> {
 /// Scheduler-runtime dispatch over the backend axis.
 fn run_scheduler(rc: &RunConfig) -> Result<TrainResult> {
     if resolve_xla(rc) {
-        let meta = ConfigMeta::load_named(&crate::artifacts_root(), &rc.config)
-            .with_context(|| format!("loading config {}", rc.config))?;
+        let meta = resolve_meta(&rc.config, rc.partition, true)?;
         let runtime = Runtime::cpu()?;
         run_with_runtime(rc, &meta, &runtime)
     } else {
@@ -214,13 +260,7 @@ pub fn run_threaded(rc: &RunConfig) -> Result<TrainResult> {
         "threaded runtime evaluates at the end only; rerun with --eval-every 0"
     );
     let use_xla = resolve_xla(rc);
-    let meta = if use_xla {
-        ConfigMeta::load_named(&crate::artifacts_root(), &rc.config)
-            .with_context(|| format!("loading config {}", rc.config))?
-    } else {
-        load_native_meta(&rc.config)
-            .with_context(|| format!("resolving native config {}", rc.config))?
-    };
+    let meta = resolve_meta(&rc.config, rc.partition, use_xla)?;
     let (train_ds, test_ds) = build_datasets(rc, &meta)?;
     let plan = match &rc.fault_plan {
         Some(text) => FaultPlan::parse(text).context("parsing --fault-plan")?,
@@ -473,8 +513,7 @@ pub fn run_with_runtime(
 
 /// Native-backend variant: pure-Rust kernels, no artifacts required.
 pub fn run_native(rc: &RunConfig) -> Result<TrainResult> {
-    let meta = load_native_meta(&rc.config)
-        .with_context(|| format!("resolving native config {}", rc.config))?;
+    let meta = resolve_meta(&rc.config, rc.partition, false)?;
     let (train_ds, test_ds) = build_datasets(rc, &meta)?;
     let params = initial_params(rc, &meta)?;
     let optims = build_optims(&meta, rc.iters, rc.stale_lr_scale);

@@ -1,0 +1,305 @@
+//! Profile-guided auto-partitioner test suite (DESIGN.md §10):
+//!
+//! * the bottleneck-minimizing DP in `perfsim::solve_partition` is
+//!   *exact* — it matches exhaustive search over every contiguous
+//!   partition on small arrays — and deterministic across runs and
+//!   across threads, including on tied inputs;
+//! * degenerate shapes (P=1, P=num_blocks, P>num_blocks, empty or
+//!   non-finite costs) behave or error cleanly;
+//! * `profile::auto_native_meta` synthesizes a *valid* native
+//!   partition contract: cuts snap to block edges, every partition's
+//!   op list builds, and the predicted bottleneck is never worse than
+//!   the hand-tabulated manifest PPV's;
+//! * `--partition auto` training is bitwise deterministic run-to-run
+//!   on both runtimes, the two runtimes agree with each other, and an
+//!   auto-partitioned pipeline is event-for-event bitwise identical to
+//!   a manual pipeline built from the same PPV (auto changes *where
+//!   the cuts go*, never the arithmetic);
+//! * the threaded runtime's per-stage busy counters — the emergent
+//!   side of the predicted-vs-emergent contract — cover every stage.
+
+use pipestale::backend::{native_config, native_config_with_ppv, partition_nodes};
+use pipestale::config::{Backend, Mode, PartitionMode, RunConfig, RuntimeKind};
+use pipestale::data::{load_or_synthesize, Batcher, SyntheticSpec};
+use pipestale::meta::ConfigMeta;
+use pipestale::model::ModelParams;
+use pipestale::pipeline::perfsim::{solve_partition, stage_costs_of};
+use pipestale::pipeline::{ThreadedPipeline, TrainEvent};
+use pipestale::profile::{auto_native_meta, CostProfile, REFERENCE_FLOPS_PER_S};
+use pipestale::tensor::{IntTensor, Tensor};
+
+// ---------------------------------------------------------------------------
+// Solver: exactness, determinism, degenerate shapes.
+// ---------------------------------------------------------------------------
+
+/// Deterministic small-integer costs (exact as f64, so brute-force and
+/// DP segment sums are bit-identical and comparable with `==`).
+fn lcg_costs(n: usize, seed: u64) -> Vec<f64> {
+    let mut state = seed;
+    (0..n)
+        .map(|_| {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((state >> 33) % 17) as f64
+        })
+        .collect()
+}
+
+/// Minimal bottleneck over *every* contiguous p-way partition, by
+/// exhaustive enumeration of cut sets (n <= 8 keeps this tiny).
+fn brute_force_bottleneck(costs: &[f64], p: usize) -> f64 {
+    let n = costs.len();
+    let mut prefix = vec![0.0f64; n + 1];
+    for (i, c) in costs.iter().enumerate() {
+        prefix[i + 1] = prefix[i] + c;
+    }
+    let mut best = f64::INFINITY;
+    // Each bit b of `mask` = a cut after block b+1.
+    for mask in 0u32..(1 << (n - 1)) {
+        if mask.count_ones() as usize != p - 1 {
+            continue;
+        }
+        let mut bounds = vec![0usize];
+        for b in 0..n - 1 {
+            if mask & (1 << b) != 0 {
+                bounds.push(b + 1);
+            }
+        }
+        bounds.push(n);
+        let bottleneck = bounds
+            .windows(2)
+            .map(|w| prefix[w[1]] - prefix[w[0]])
+            .fold(0.0f64, f64::max);
+        if bottleneck < best {
+            best = bottleneck;
+        }
+    }
+    best
+}
+
+#[test]
+fn solver_matches_exhaustive_search_on_small_arrays() {
+    for n in 1..=8usize {
+        for variant in 0..4u64 {
+            let costs = lcg_costs(n, 0x9e37_79b9 ^ ((n as u64) << 8) ^ variant);
+            for p in 1..=n {
+                let sol = solve_partition(&costs, p).unwrap();
+                let best = brute_force_bottleneck(&costs, p);
+                assert_eq!(
+                    sol.bottleneck, best,
+                    "n={n} p={p} costs={costs:?}: DP bottleneck must equal exhaustive search"
+                );
+                // The returned PPV must itself realize that bottleneck.
+                assert_eq!(sol.ppv.len(), p - 1);
+                assert!(sol.ppv.windows(2).all(|w| w[0] < w[1]), "ppv {:?}", sol.ppv);
+                assert!(sol.ppv.iter().all(|&c| c >= 1 && c < n), "ppv {:?}", sol.ppv);
+                let stages = stage_costs_of(&costs, &sol.ppv);
+                assert_eq!(stages, sol.stage_costs);
+                assert_eq!(stages.iter().cloned().fold(0.0f64, f64::max), best);
+            }
+        }
+    }
+}
+
+#[test]
+fn solver_is_deterministic_across_runs_and_threads() {
+    // Tied inputs are where a sloppy tie-break would wander: every cut
+    // placement of an all-equal array at p=3 has several optima.
+    let tied: Vec<f64> = vec![2.0; 9];
+    let mixed = vec![1.0, 2.0, 1.0, 2.0, 1.0, 2.0];
+    for costs in [tied, mixed] {
+        let reference = solve_partition(&costs, 3).unwrap();
+        for _ in 0..10 {
+            assert_eq!(solve_partition(&costs, 3).unwrap(), reference, "run-to-run drift");
+        }
+        let handles: Vec<_> = (0..6)
+            .map(|_| {
+                let c = costs.clone();
+                std::thread::spawn(move || solve_partition(&c, 3).unwrap())
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), reference, "cross-thread drift");
+        }
+    }
+}
+
+#[test]
+fn solver_degenerate_shapes_behave_and_error_cleanly() {
+    let costs = [3.0, 1.0, 2.0, 2.0];
+    // P=1: no cuts, bottleneck is the whole model, speedup 1.
+    let whole = solve_partition(&costs, 1).unwrap();
+    assert!(whole.ppv.is_empty());
+    assert_eq!(whole.bottleneck, 8.0);
+    assert_eq!(whole.predicted_speedup, 1.0);
+    // P=num_blocks: every block its own stage.
+    let each = solve_partition(&costs, 4).unwrap();
+    assert_eq!(each.ppv, vec![1, 2, 3]);
+    assert_eq!(each.bottleneck, 3.0);
+    // P>num_blocks, P=0, empty and non-finite inputs all error.
+    assert!(solve_partition(&costs, 5).is_err());
+    assert!(solve_partition(&costs, 0).is_err());
+    assert!(solve_partition(&[], 1).is_err());
+    assert!(solve_partition(&[1.0, f64::NAN], 1).is_err());
+    assert!(solve_partition(&[1.0, -1.0], 1).is_err());
+    // And through the profile API: more stages than model blocks.
+    let meta = native_config("native_lenet_small").unwrap();
+    let prof = CostProfile::analytic(&meta, REFERENCE_FLOPS_PER_S).unwrap();
+    assert!(prof.solve(meta.num_layers + 1).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Auto-partitioned metas: valid contracts, no worse than the manifest.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn auto_meta_snaps_to_block_edges_and_builds_every_partition() {
+    for config in ["native_resnet20_4s", "native_resnet_small_4s", "native_lenet_small_4s"] {
+        let manual = native_config(config).unwrap();
+        let (meta, sol) = auto_native_meta(config).unwrap();
+        assert_eq!(meta.partitions.len(), manual.partitions.len(), "{config}: stage count");
+        assert_eq!(meta.ppv, sol.ppv, "{config}: meta must carry the solver's PPV");
+        assert!(meta.ppv.windows(2).all(|w| w[0] < w[1]), "{config}: {:?}", meta.ppv);
+        assert!(
+            meta.ppv.iter().all(|&c| c >= 1 && c < meta.num_layers),
+            "{config}: cuts {:?} must be block edges in 1..{}",
+            meta.ppv,
+            meta.num_layers
+        );
+        // Partitions tile 1..=num_layers contiguously and every op
+        // list builds against the model graph.
+        let mut next_lo = 1;
+        for pm in &meta.partitions {
+            assert_eq!(pm.layer_lo, next_lo, "{config}: partition {} range", pm.index);
+            assert!(pm.layer_hi >= pm.layer_lo);
+            next_lo = pm.layer_hi + 1;
+            // partition_nodes itself cross-checks the op stack against
+            // the recorded param/state contract — success IS the test.
+            let nodes = partition_nodes(&meta, pm).unwrap();
+            assert!(!nodes.is_empty(), "{config}: partition {} has no ops", pm.index);
+        }
+        assert_eq!(next_lo, meta.num_layers + 1, "{config}: partitions must cover the model");
+    }
+}
+
+#[test]
+fn auto_predicted_bottleneck_no_worse_than_manifest_ppv() {
+    for config in ["native_resnet20_4s", "native_lenet_small_4s", "lenet5_8s"] {
+        let manual = native_config(config).unwrap();
+        let prof = CostProfile::analytic(&manual, REFERENCE_FLOPS_PER_S).unwrap();
+        let (_, sol) = auto_native_meta(config).unwrap();
+        let manual_bottleneck = stage_costs_of(&prof.block_totals(), &manual.ppv)
+            .iter()
+            .cloned()
+            .fold(0.0f64, f64::max);
+        assert!(
+            sol.bottleneck <= manual_bottleneck + 1e-12,
+            "{config}: auto bottleneck {} must be <= manual {}",
+            sol.bottleneck,
+            manual_bottleneck
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// --partition auto end to end: determinism on both runtimes.
+// ---------------------------------------------------------------------------
+
+fn auto_rc(runtime: RuntimeKind, iters: u64) -> RunConfig {
+    let mut rc = RunConfig::new("native_lenet_small_4s");
+    rc.backend = Backend::Native;
+    rc.runtime = runtime;
+    rc.mode = Mode::Pipelined;
+    rc.partition = PartitionMode::Auto;
+    rc.iters = iters;
+    rc.train_size = 256;
+    rc.test_size = 48;
+    rc.noise = 0.8;
+    rc
+}
+
+#[test]
+fn auto_partition_training_is_bitwise_deterministic_on_both_runtimes() {
+    let mut per_runtime = Vec::new();
+    for runtime in [RuntimeKind::Scheduler, RuntimeKind::Threaded] {
+        let a = pipestale::train::run(&auto_rc(runtime, 16)).unwrap();
+        let b = pipestale::train::run(&auto_rc(runtime, 16)).unwrap();
+        assert_eq!(
+            a.recorder.train,
+            b.recorder.train,
+            "{}: --partition auto must be bitwise repeatable",
+            runtime.name()
+        );
+        assert_eq!(
+            a.final_accuracy.to_bits(),
+            b.final_accuracy.to_bits(),
+            "{}: final accuracy must be bitwise repeatable",
+            runtime.name()
+        );
+        per_runtime.push(a);
+    }
+    // The auto partition is resolved before either runtime starts, so
+    // the cross-runtime bitwise-equivalence guarantee carries over.
+    assert_eq!(
+        per_runtime[0].recorder.train, per_runtime[1].recorder.train,
+        "scheduler and threaded runtimes must agree under --partition auto"
+    );
+    assert_eq!(per_runtime[0].final_accuracy.to_bits(), per_runtime[1].final_accuracy.to_bits());
+}
+
+// ---------------------------------------------------------------------------
+// Auto meta == manual meta at the same PPV, event for event.
+// ---------------------------------------------------------------------------
+
+fn threaded_events(meta: &ConfigMeta, batches: &[(Tensor, IntTensor)]) -> Vec<TrainEvent> {
+    let params = ModelParams::init(&meta.partitions, 11).unwrap();
+    let optims = pipestale::train::build_optims(meta, batches.len() as u64, 1.0);
+    let mut pipe = ThreadedPipeline::launch_native(meta, params, optims).unwrap();
+    let (events, _) =
+        pipe.train(batches.len() as u64, 11, |b| batches[b as usize].clone()).unwrap();
+    pipe.shutdown().unwrap();
+    events
+}
+
+#[test]
+fn auto_meta_matches_manual_twin_event_for_event() {
+    let config = "native_resnet20_4s";
+    let (auto_meta, sol) = auto_native_meta(config).unwrap();
+    let twin = native_config_with_ppv(config, Some(&sol.ppv)).unwrap();
+    let spec = SyntheticSpec { train: 96, test: 16, noise: 0.8, seed: 5 };
+    let (train_ds, _) = load_or_synthesize(&auto_meta.dataset, None, &spec).unwrap();
+    let mut batcher = Batcher::new(train_ds.len(), auto_meta.batch, 5);
+    let batches: Vec<(Tensor, IntTensor)> =
+        (0..10).map(|_| train_ds.gather(&batcher.next_indices().to_vec())).collect();
+    let a = threaded_events(&auto_meta, &batches);
+    let b = threaded_events(&twin, &batches);
+    assert_eq!(a.len(), batches.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.batch_id, y.batch_id);
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "batch {}: loss", x.batch_id);
+        assert_eq!(x.correct.to_bits(), y.correct.to_bits(), "batch {}: correct", x.batch_id);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Emergent busy counters.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn stage_busy_seconds_cover_every_stage() {
+    let meta = native_config("native_lenet_small_4s").unwrap();
+    let spec = SyntheticSpec { train: 96, test: 16, noise: 0.8, seed: 9 };
+    let (train_ds, _) = load_or_synthesize(&meta.dataset, None, &spec).unwrap();
+    let mut batcher = Batcher::new(train_ds.len(), meta.batch, 9);
+    let params = ModelParams::init(&meta.partitions, 9).unwrap();
+    let optims = pipestale::train::build_optims(&meta, 8, 1.0);
+    let mut pipe = ThreadedPipeline::launch_native(&meta, params, optims).unwrap();
+    let (events, _) =
+        pipe.train(8, 9, |_| train_ds.gather(&batcher.next_indices().to_vec())).unwrap();
+    assert_eq!(events.len(), 8);
+    let busy = pipe.stage_busy_seconds();
+    pipe.shutdown().unwrap();
+    assert_eq!(busy.len(), meta.partitions.len());
+    for (i, b) in busy.iter().enumerate() {
+        assert!(b.is_finite() && *b > 0.0, "stage {i}: busy {b} must be positive");
+    }
+}

@@ -86,6 +86,22 @@ for fix in none stash predict correct; do
     done
 done
 
+# Profile-guided auto-partition smoke (DESIGN.md §10): --partition auto
+# must resolve on both runtimes through the released binary, and the
+# analysis commands must accept auto-partitioned (synthesized,
+# artifact-free) configs — distinct from tests/partition.rs's
+# in-process solver/determinism coverage.
+echo "[ci] auto-partition smoke (2 configs x 2 runtimes, --partition auto)"
+for cfg in native_lenet_small_4s native_resnet_small_4s; do
+    for rt in scheduler threaded; do
+        ./target/release/pipestale train --config "$cfg" \
+            --backend native --runtime "$rt" --mode pipelined \
+            --partition auto --iters 12 --train-size 96 --test-size 32
+    done
+    ./target/release/pipestale perfsim --config "$cfg" --partition auto
+    ./target/release/pipestale memory --config "$cfg" --partition auto
+done
+
 # Docs build warning-free: #![warn(missing_docs)] is enabled in
 # src/lib.rs, so -D warnings turns an undocumented public item (or a
 # broken intra-doc link) into a CI failure.
@@ -114,4 +130,22 @@ if [[ "${1:-}" == "--bench" ]]; then
             || { echo "[ci] FAIL: $BENCH_JSON lacks the bench_micro/v2 schema tag." >&2; exit 1; }
     fi
     echo "[ci] BENCH_micro.json validated"
+
+    # The auto-vs-manual partition bench (table5 §0b) must likewise
+    # leave a parseable report behind: downstream tooling reads
+    # results/BENCH_partition.json (predicted vs emergent stage costs).
+    PIPESTALE_FAST=1 cargo bench --bench bench_table5_speedup
+    PART_JSON="${PIPESTALE_RESULTS:-results}/BENCH_partition.json"
+    if [ ! -s "$PART_JSON" ]; then
+        echo "[ci] FAIL: $PART_JSON missing or empty after --bench run." >&2
+        exit 1
+    fi
+    if command -v python3 > /dev/null 2>&1; then
+        python3 -m json.tool "$PART_JSON" > /dev/null \
+            || { echo "[ci] FAIL: $PART_JSON is not valid JSON." >&2; exit 1; }
+    else
+        grep -q '"schema": "pipestale/bench_partition/v1"' "$PART_JSON" \
+            || { echo "[ci] FAIL: $PART_JSON lacks the bench_partition/v1 schema tag." >&2; exit 1; }
+    fi
+    echo "[ci] BENCH_partition.json validated"
 fi
