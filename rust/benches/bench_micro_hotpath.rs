@@ -17,6 +17,8 @@
 //!     dispatch (`gemm_1t_vs_nt`) — the tentpole's before/after pairs
 //!   * scheduler cycle (mock executor, P=4): pool disabled (every
 //!     backing store freshly allocated, as in the seed) vs pool enabled
+//!   * streaming ingest: synchronous decode+augment on the consumer
+//!     thread vs the prefetcher's worker-thread overlap (§11)
 //!   * meta.json parse, DES throughput, XLA stage execution (unchanged
 //!     paths, artifact/backend gated)
 //!
@@ -347,10 +349,42 @@ fn main() {
             let mut pipe =
                 pipestale::pipeline::ThreadedPipeline::launch_native(&meta, params, optims)
                     .unwrap();
-            pipe.train(n as u64, 1, |b| batches[b as usize].clone()).unwrap();
+            pipe.train(n as u64, 1, |b| Ok(batches[b as usize].clone())).unwrap();
             pipe.shutdown().unwrap();
         });
         rep.pair("threaded_vs_scheduler_native", before, after);
+    }
+
+    // ---- streaming ingest: synchronous decode vs prefetch overlap -------
+    // Real CIFAR-format bytes through the record decode + augment path
+    // (DESIGN.md §11). The sync leg decodes on the consumer thread; the
+    // prefetch leg overlaps decode with the consumer, so on multi-core
+    // hardware the consumer mostly dequeues finished batches. Output is
+    // bitwise identical either way (tests/data_stream.rs).
+    {
+        let dir = std::env::temp_dir().join(format!("bench_ingest_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        pipestale::data::fixtures::write_cifar_fixture(&dir, 256, 8, 3).unwrap();
+        let (train, _) = pipestale::data::load_cifar10_dir_stream(&dir).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        let ds = std::sync::Arc::new(train);
+        let mk = |threads: usize| {
+            let mut o = pipestale::data::StreamOptions::plain(32, 5, 9);
+            o.augment = pipestale::data::Augment::standard("cifar10");
+            o.threads = threads;
+            pipestale::data::BatchStream::new(std::sync::Arc::clone(&ds), o).unwrap()
+        };
+        let mut sync = mk(0);
+        let before = bench("ingest decode+augment sync (cifar b32)", 3, 0.4, || {
+            std::hint::black_box(sync.next_batch().unwrap());
+        });
+        let nt = threadpool::configured_threads().clamp(2, 4);
+        let mut pre = mk(nt);
+        let after =
+            bench(&format!("ingest decode+augment prefetch {nt}t (cifar b32)"), 3, 0.4, || {
+                std::hint::black_box(pre.next_batch().unwrap());
+            });
+        rep.pair("ingest_sync_vs_prefetch", before, after);
     }
 
     // ---- checkpoint store (fault-tolerance storage path) ----------------

@@ -79,7 +79,7 @@ fn native_threaded_wall(name: &str, iters: usize) -> (usize, f64, f64) {
     let optims = pipestale::train::build_optims(&meta, iters as u64, 1.0);
     let mut tpipe = ThreadedPipeline::launch_native(&meta, params, optims).unwrap();
     let (events, thr_wall) =
-        tpipe.train(iters as u64, 42, |b| batches[b as usize].clone()).unwrap();
+        tpipe.train(iters as u64, 42, |b| Ok(batches[b as usize].clone())).unwrap();
     assert_eq!(events.len(), iters);
     tpipe.shutdown().unwrap();
     (meta.partitions.len(), sched_wall, thr_wall)
@@ -99,7 +99,7 @@ fn emergent_busy_seconds(meta: &ConfigMeta, iters: u64) -> Vec<f64> {
     let (events, _) = pipe
         .train(iters, 42, |_| {
             let idxs = batcher.next_indices().to_vec();
-            ds.gather(&idxs)
+            Ok(ds.gather(&idxs))
         })
         .unwrap();
     assert_eq!(events.len(), iters as usize);
@@ -325,7 +325,7 @@ fn main() {
     let (events, wall) = pipe
         .train(n, 42, |_| {
             let idxs = batcher.next_indices().to_vec();
-            train_ds.gather(&idxs)
+            Ok(train_ds.gather(&idxs))
         })
         .unwrap();
     pipe.shutdown().unwrap();

@@ -185,6 +185,12 @@ pub struct RunConfig {
     pub noise: f64,
     /// Optional directory with real MNIST/CIFAR files.
     pub data_dir: Option<PathBuf>,
+    /// Train-time augmentation (random pad+crop, flip for CIFAR,
+    /// per-channel normalize) — deterministic per (seed, epoch, sample).
+    pub augment: bool,
+    /// Decode/augment prefetch worker threads (0 = synchronous on the
+    /// feed thread; output is bitwise identical either way).
+    pub prefetch: usize,
     /// LR multiplier for the stale (non-final) partitions — Table 7's
     /// per-BKS learning rate.
     pub stale_lr_scale: f64,
@@ -240,6 +246,8 @@ impl RunConfig {
             test_size: 512,
             noise: 0.6,
             data_dir: None,
+            augment: false,
+            prefetch: 0,
             stale_lr_scale: 1.0,
             resume_from: None,
             save_to: None,
@@ -276,6 +284,8 @@ impl RunConfig {
                     .map(|p| json::s(&p.display().to_string()))
                     .unwrap_or(Json::Null),
             ),
+            ("augment", Json::Bool(self.augment)),
+            ("prefetch", json::num(self.prefetch as f64)),
             ("stale_lr_scale", json::num(self.stale_lr_scale)),
             ("on_failure", json::s(self.on_failure.name())),
             ("max_restarts", json::num(self.max_restarts as f64)),
@@ -326,6 +336,10 @@ impl RunConfig {
         if let Some(d) = j.get("data_dir").and_then(Json::as_str) {
             rc.data_dir = Some(PathBuf::from(d));
         }
+        if let Some(a) = j.get("augment").and_then(Json::as_bool) {
+            rc.augment = a;
+        }
+        rc.prefetch = getn("prefetch", 0.0) as usize;
         if let Some(p) = j.get("on_failure").and_then(Json::as_str) {
             rc.on_failure = OnFailure::parse(p)?;
         }
@@ -493,6 +507,25 @@ mod tests {
         // bogus values are an error, not a silent fallback
         let bogus = Json::parse("{\"config\": \"x\", \"partition\": \"psychic\"}").unwrap();
         assert!(RunConfig::from_json(&bogus).is_err());
+    }
+
+    #[test]
+    fn data_plane_fields_roundtrip_and_legacy_default() {
+        let mut rc = RunConfig::new("native_lenet_small_4s");
+        assert!(!rc.augment); // defaults
+        assert_eq!(rc.prefetch, 0);
+        rc.augment = true;
+        rc.prefetch = 4;
+        rc.data_dir = Some(PathBuf::from("/tmp/mnist"));
+        let back = RunConfig::from_json(&rc.to_json()).unwrap();
+        assert!(back.augment);
+        assert_eq!(back.prefetch, 4);
+        assert_eq!(back.data_dir, rc.data_dir);
+        // configs without the keys (older files) keep the defaults
+        let legacy = Json::parse("{\"config\": \"x\"}").unwrap();
+        let d = RunConfig::from_json(&legacy).unwrap();
+        assert!(!d.augment);
+        assert_eq!(d.prefetch, 0);
     }
 
     #[test]

@@ -1,77 +1,102 @@
 //! CIFAR-10 binary format parser (data_batch_*.bin / test_batch.bin).
 //!
-//! Record layout: 1 label byte + 3072 pixel bytes in CHW planes (R,G,B);
-//! converted here to NHWC normalized f32.
+//! Record layout: 1 label byte + 3072 pixel bytes in CHW planes
+//! (R,G,B). The streaming loaders ([`load_cifar10_records`],
+//! [`load_cifar10_dir_stream`]) validate every record — including the
+//! label range, with the record index in the error — and keep the raw
+//! records in one shared buffer; the CHW -> NHWC transpose happens at
+//! batch-decode time inside
+//! [`StreamDataset`](super::StreamDataset). The eager wrappers
+//! ([`load_cifar10_bin`], [`load_cifar10_dir`]) keep the original
+//! decoded-f32 API.
 
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
+use super::stream::{read_file_chunked, Shard, StreamDataset, CIFAR_REC};
 use super::Dataset;
 
-const REC: usize = 1 + 3 * 32 * 32;
+const REC: usize = CIFAR_REC;
 
-pub fn load_cifar10_bin(path: &Path) -> Result<(Vec<f32>, Vec<i32>)> {
-    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+/// Parse one CIFAR-10 binary file into `(labels, raw records)`. Every
+/// record's label byte is validated against `num_classes` — a corrupt
+/// byte would otherwise index past the logits — with the record index
+/// named in the error.
+pub fn load_cifar10_records(path: &Path, num_classes: usize) -> Result<(Vec<i32>, Vec<u8>)> {
+    let bytes = read_file_chunked(path)?;
     if bytes.is_empty() || bytes.len() % REC != 0 {
-        bail!("{}: size {} is not a multiple of {REC}", path.display(), bytes.len());
+        bail!(
+            "{}: size {} is not a multiple of the {REC}-byte record",
+            path.display(),
+            bytes.len()
+        );
     }
     let n = bytes.len() / REC;
-    let mut images = Vec::with_capacity(n * 3072);
     let mut labels = Vec::with_capacity(n);
     for r in 0..n {
-        let rec = &bytes[r * REC..(r + 1) * REC];
-        let label = rec[0] as i32;
-        if label > 9 {
-            bail!("{}: record {} has label {}", path.display(), r, label);
+        let label = bytes[r * REC];
+        if label as usize >= num_classes {
+            bail!(
+                "{}: record {r}: label {label} out of range (0..{num_classes})",
+                path.display()
+            );
         }
-        labels.push(label);
-        let px = &rec[1..];
-        // CHW planes -> HWC
-        for y in 0..32 {
-            for x in 0..32 {
-                for c in 0..3 {
-                    let v = px[c * 1024 + y * 32 + x] as f32 / 255.0 - 0.5;
-                    images.push(v);
-                }
-            }
-        }
+        labels.push(label as i32);
     }
-    Ok((images, labels))
+    Ok((labels, bytes))
 }
 
-/// Load the standard 5 train batches + test batch from a directory.
-pub fn load_cifar10_dir(dir: &Path) -> Result<(Dataset, Dataset)> {
-    let mut images = Vec::new();
+/// Load the train batches + test batch from a directory as streaming
+/// datasets, one shard per source file.
+pub fn load_cifar10_dir_stream(dir: &Path) -> Result<(StreamDataset, StreamDataset)> {
+    let mut records = Vec::new();
     let mut labels = Vec::new();
+    let mut shards = Vec::new();
     for i in 1..=5 {
-        let p = dir.join(format!("data_batch_{i}.bin"));
+        let name = format!("data_batch_{i}.bin");
+        let p = dir.join(&name);
         if !p.exists() {
             break;
         }
-        let (im, la) = load_cifar10_bin(&p)?;
-        images.extend(im);
+        let (la, rec) = load_cifar10_records(&p, 10)?;
+        shards.push(Shard { name, start: labels.len(), len: la.len() });
         labels.extend(la);
+        records.extend(rec);
     }
     if labels.is_empty() {
         bail!("no CIFAR-10 train batches under {}", dir.display());
     }
-    let train = Dataset {
-        name: "cifar10-train".into(),
-        input_shape: vec![32, 32, 3],
-        images,
-        labels,
-        num_classes: 10,
-    };
-    let (ti, tl) = load_cifar10_bin(&dir.join("test_batch.bin"))?;
-    let test = Dataset {
-        name: "cifar10-test".into(),
-        input_shape: vec![32, 32, 3],
-        images: ti,
-        labels: tl,
-        num_classes: 10,
-    };
+    let train = StreamDataset::from_cifar_records("cifar10-train".into(), labels, records, shards);
+    let tp = dir.join("test_batch.bin");
+    let (tl, trec) = load_cifar10_records(&tp, 10)?;
+    let tn = tl.len();
+    let test = StreamDataset::from_cifar_records(
+        "cifar10-test".into(),
+        tl,
+        trec,
+        vec![Shard { name: "test_batch.bin".into(), start: 0, len: tn }],
+    );
     Ok((train, test))
+}
+
+/// Parse one CIFAR-10 binary file eagerly (normalized NHWC f32).
+pub fn load_cifar10_bin(path: &Path) -> Result<(Vec<f32>, Vec<i32>)> {
+    let (labels, records) = load_cifar10_records(path, 10)?;
+    let n = labels.len();
+    let ds = StreamDataset::from_cifar_records(
+        "cifar10".into(),
+        labels.clone(),
+        records,
+        vec![Shard { name: path.display().to_string(), start: 0, len: n }],
+    );
+    Ok((ds.to_eager().images, labels))
+}
+
+/// Load the standard 5 train batches + test batch eagerly.
+pub fn load_cifar10_dir(dir: &Path) -> Result<(Dataset, Dataset)> {
+    let (train, test) = load_cifar10_dir_stream(dir)?;
+    Ok((train.to_eager(), test.to_eager()))
 }
 
 #[cfg(test)]
@@ -93,16 +118,22 @@ mod tests {
     fn parses_and_transposes() {
         let dir = std::env::temp_dir().join(format!("cifar_test_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
-        fixture(&dir, "data_batch_1.bin", 20);
+        fixture(&dir, "data_batch_1.bin", 12);
+        fixture(&dir, "data_batch_2.bin", 8);
         fixture(&dir, "test_batch.bin", 10);
         let (train, test) = load_cifar10_dir(&dir).unwrap();
         assert_eq!(train.len(), 20);
         assert_eq!(test.len(), 10);
         assert_eq!(train.images.len(), 20 * 3072);
-        // record 0, pixel (0,0): R plane byte 0 = 0 -> -0.5; G plane byte
-        // 1024 -> (1024%256=0)/255-0.5 = -0.5
+        // record 0, pixel (0,0): R plane byte 0 = 0 -> -0.5
         assert!((train.images[0] + 0.5).abs() < 1e-6);
         assert_eq!(train.labels[3], 3);
+        // shard accounting: two train files, index ranges abut
+        let (ts, _) = load_cifar10_dir_stream(&dir).unwrap();
+        assert_eq!(ts.shards().len(), 2);
+        assert_eq!(ts.shard_of(11).name, "data_batch_1.bin");
+        assert_eq!(ts.shard_of(12).name, "data_batch_2.bin");
+        assert_eq!(ts.to_eager().images, train.images);
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -112,11 +143,15 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("x.bin");
         std::fs::write(&p, vec![0u8; REC - 1]).unwrap();
-        assert!(load_cifar10_bin(&p).is_err());
-        let mut rec = vec![0u8; REC];
-        rec[0] = 11; // label out of range
-        std::fs::write(&p, rec).unwrap();
-        assert!(load_cifar10_bin(&p).is_err());
+        let e = load_cifar10_bin(&p).unwrap_err().to_string();
+        assert!(e.contains("record"), "{e}");
+        // label out of range in the second record: error names it
+        let mut recs = vec![0u8; 2 * REC];
+        recs[REC] = 11;
+        std::fs::write(&p, recs).unwrap();
+        let e = load_cifar10_bin(&p).unwrap_err().to_string();
+        assert!(e.contains("label 11"), "{e}");
+        assert!(e.contains("record 1"), "{e}");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,0 +1,289 @@
+//! Golden-fixture generators: byte-exact MNIST IDX and CIFAR-10
+//! binary files written from generated, *learnable* u8 datasets.
+//!
+//! Nothing binary is checked into git — tests and the `gen-data` CLI
+//! subcommand call these writers to materialize a real-format dataset
+//! into a scratch directory, and the returned [`FixtureSet`] is the
+//! ground truth the parsers are checked against (round-trip: parsed
+//! pixel k must equal `bytes[k]/255 - 0.5` bitwise). The images are
+//! quantized class prototypes (same recipe as the synthetic
+//! substitution, DESIGN.md §4), so a small CNN actually learns on
+//! them — the e2e smoke in `tests/data_stream.rs` trains on a fixture
+//! set and asserts the loss falls.
+//!
+//! The malformed variants (truncated header, wrong magic, bad dims,
+//! short body, out-of-range label, bad record size) exist to pin the
+//! loaders' validation errors to the offending field.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::synthetic::{self, SyntheticSpec};
+
+/// A generated u8 dataset: the byte-level ground truth for fixture
+/// files (pixels HWC sample-major, exactly what a parser must yield).
+pub struct FixtureSet {
+    /// Image height.
+    pub h: usize,
+    /// Image width.
+    pub w: usize,
+    /// Channels (1 for MNIST-shaped, 3 for CIFAR-shaped).
+    pub c: usize,
+    /// Raw pixels, HWC within each sample, sample-major.
+    pub images: Vec<u8>,
+    /// One label byte per sample, each `< 10`.
+    pub labels: Vec<u8>,
+}
+
+impl FixtureSet {
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// True when the set holds no samples.
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Scalars per sample.
+    pub fn sample_elems(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    /// The normalized f32 value a parser must produce for pixel `k`.
+    pub fn expected_f32(&self, k: usize) -> f32 {
+        self.images[k] as f32 / 255.0 - 0.5
+    }
+}
+
+/// Quantize a synthetic f32 image stream to u8 (clamped affine map;
+/// the class structure survives, so the fixture datasets stay
+/// learnable).
+fn quantize(images: &[f32]) -> Vec<u8> {
+    images.iter().map(|&v| (v * 32.0 + 128.0).round().clamp(0.0, 255.0) as u8).collect()
+}
+
+/// Generate a (train, test) pair of u8 fixture sets sharing class
+/// prototypes — train accuracy transfers to test, like the real thing.
+pub fn generate_pair(
+    dataset: &str,
+    train: usize,
+    test: usize,
+    seed: u64,
+) -> (FixtureSet, FixtureSet) {
+    let spec = SyntheticSpec { train, test, noise: 0.5, seed };
+    let (tr, te) = synthetic::generate(dataset, &spec);
+    let to_set = |ds: &super::Dataset| FixtureSet {
+        h: ds.input_shape[0],
+        w: ds.input_shape[1],
+        c: ds.input_shape[2],
+        images: quantize(&ds.images),
+        labels: ds.labels.iter().map(|&l| l as u8).collect(),
+    };
+    (to_set(&tr), to_set(&te))
+}
+
+/// Serialize an IDX3 image file (big-endian header + raw pixels).
+pub fn idx_images_bytes(set: &FixtureSet) -> Vec<u8> {
+    assert_eq!(set.c, 1, "IDX3 fixtures are single-channel");
+    let mut bytes = Vec::with_capacity(16 + set.images.len());
+    bytes.extend_from_slice(&0x0000_0803u32.to_be_bytes());
+    bytes.extend_from_slice(&(set.len() as u32).to_be_bytes());
+    bytes.extend_from_slice(&(set.h as u32).to_be_bytes());
+    bytes.extend_from_slice(&(set.w as u32).to_be_bytes());
+    bytes.extend_from_slice(&set.images);
+    bytes
+}
+
+/// Serialize an IDX1 label file.
+pub fn idx_labels_bytes(labels: &[u8]) -> Vec<u8> {
+    let mut bytes = Vec::with_capacity(8 + labels.len());
+    bytes.extend_from_slice(&0x0000_0801u32.to_be_bytes());
+    bytes.extend_from_slice(&(labels.len() as u32).to_be_bytes());
+    bytes.extend_from_slice(labels);
+    bytes
+}
+
+/// Serialize a CIFAR-10 binary file for samples `range` of the set:
+/// per record one label byte + 3072 pixel bytes in CHW planes (the
+/// ground-truth pixels are HWC, so this transposes on the way out —
+/// the parser must transpose back).
+pub fn cifar_bytes(set: &FixtureSet, range: std::ops::Range<usize>) -> Vec<u8> {
+    assert_eq!((set.h, set.w, set.c), (32, 32, 3), "CIFAR fixtures are 32x32x3");
+    let n = set.sample_elems();
+    let mut bytes = Vec::with_capacity(range.len() * (1 + n));
+    for i in range {
+        bytes.push(set.labels[i]);
+        let px = &set.images[i * n..(i + 1) * n];
+        for c in 0..3 {
+            for y in 0..32 {
+                for x in 0..32 {
+                    bytes.push(px[(y * 32 + x) * 3 + c]);
+                }
+            }
+        }
+    }
+    bytes
+}
+
+/// Write a complete MNIST-format fixture dataset (the four standard
+/// file names `load_or_synthesize` auto-detects) into `dir`; returns
+/// the (train, test) ground truth.
+pub fn write_mnist_fixture(
+    dir: &Path,
+    train: usize,
+    test: usize,
+    seed: u64,
+) -> Result<(FixtureSet, FixtureSet)> {
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+    let (tr, te) = generate_pair("mnist", train, test, seed);
+    std::fs::write(dir.join("train-images-idx3-ubyte"), idx_images_bytes(&tr))?;
+    std::fs::write(dir.join("train-labels-idx1-ubyte"), idx_labels_bytes(&tr.labels))?;
+    std::fs::write(dir.join("t10k-images-idx3-ubyte"), idx_images_bytes(&te))?;
+    std::fs::write(dir.join("t10k-labels-idx1-ubyte"), idx_labels_bytes(&te.labels))?;
+    Ok((tr, te))
+}
+
+/// Write a complete CIFAR-10-format fixture dataset into `dir`: the
+/// train samples split across `data_batch_1.bin` / `data_batch_2.bin`
+/// (two shards, exercising multi-file index accounting) plus
+/// `test_batch.bin`; returns the (train, test) ground truth.
+pub fn write_cifar_fixture(
+    dir: &Path,
+    train: usize,
+    test: usize,
+    seed: u64,
+) -> Result<(FixtureSet, FixtureSet)> {
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+    let (tr, te) = generate_pair("cifar10", train, test, seed);
+    let half = tr.len() / 2;
+    std::fs::write(dir.join("data_batch_1.bin"), cifar_bytes(&tr, 0..half))?;
+    std::fs::write(dir.join("data_batch_2.bin"), cifar_bytes(&tr, half..tr.len()))?;
+    std::fs::write(dir.join("test_batch.bin"), cifar_bytes(&te, 0..te.len()))?;
+    Ok((tr, te))
+}
+
+/// Write any real-format fixture dataset by name ("mnist"/"cifar10").
+pub fn write_fixture(
+    dataset: &str,
+    dir: &Path,
+    train: usize,
+    test: usize,
+    seed: u64,
+) -> Result<(FixtureSet, FixtureSet)> {
+    match dataset {
+        "mnist" => write_mnist_fixture(dir, train, test, seed),
+        "cifar10" => write_cifar_fixture(dir, train, test, seed),
+        other => anyhow::bail!("unknown fixture dataset {other:?} (mnist|cifar10)"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Malformed variants: each writes one specific corruption.
+// ---------------------------------------------------------------------------
+
+/// IDX file cut off inside the header (shorter than 16 bytes).
+pub fn write_idx_truncated_header(path: &Path) -> Result<()> {
+    std::fs::write(path, 0x0000_0803u32.to_be_bytes())?;
+    Ok(())
+}
+
+/// IDX3 file with a wrong magic number (0x805).
+pub fn write_idx_wrong_magic(path: &Path) -> Result<()> {
+    let set = generate_pair("mnist", 2, 0, 3).0;
+    let mut bytes = idx_images_bytes(&set);
+    bytes[3] = 0x05;
+    std::fs::write(path, bytes)?;
+    Ok(())
+}
+
+/// IDX3 file whose header dims are zero (rows = 0).
+pub fn write_idx_bad_dims(path: &Path) -> Result<()> {
+    let set = generate_pair("mnist", 2, 0, 3).0;
+    let mut bytes = idx_images_bytes(&set);
+    bytes[8..12].copy_from_slice(&0u32.to_be_bytes());
+    std::fs::write(path, bytes)?;
+    Ok(())
+}
+
+/// IDX3 file whose pixel body is shorter than the header claims.
+pub fn write_idx_short_body(path: &Path) -> Result<()> {
+    let set = generate_pair("mnist", 4, 0, 3).0;
+    let bytes = idx_images_bytes(&set);
+    std::fs::write(path, &bytes[..bytes.len() - 100])?;
+    Ok(())
+}
+
+/// IDX1 label file with label 37 at record 2.
+pub fn write_idx_bad_label(path: &Path) -> Result<()> {
+    let labels = [1u8, 9, 37, 0];
+    std::fs::write(path, idx_labels_bytes(&labels))?;
+    Ok(())
+}
+
+/// CIFAR file whose size is not a whole number of records.
+pub fn write_cifar_bad_size(path: &Path) -> Result<()> {
+    let set = generate_pair("cifar10", 2, 0, 3).0;
+    let bytes = cifar_bytes(&set, 0..2);
+    std::fs::write(path, &bytes[..bytes.len() - 7])?;
+    Ok(())
+}
+
+/// CIFAR file with label 11 in record 1.
+pub fn write_cifar_bad_label(path: &Path) -> Result<()> {
+    let set = generate_pair("cifar10", 2, 0, 3).0;
+    let mut bytes = cifar_bytes(&set, 0..2);
+    bytes[1 + 3 * 32 * 32 + 1 - 1] = 11; // record 1's label byte
+    std::fs::write(path, bytes)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generated_sets_are_balanced_and_in_range() {
+        let (tr, te) = generate_pair("mnist", 40, 20, 9);
+        assert_eq!(tr.len(), 40);
+        assert_eq!(te.len(), 20);
+        assert_eq!(tr.images.len(), 40 * 28 * 28);
+        assert!(tr.labels.iter().all(|&l| l < 10));
+        let counts = tr.labels.iter().fold([0usize; 10], |mut acc, &l| {
+            acc[l as usize] += 1;
+            acc
+        });
+        assert!(counts.iter().all(|&c| c == 4), "{counts:?}");
+    }
+
+    #[test]
+    fn serializers_are_byte_exact() {
+        let set = generate_pair("mnist", 3, 0, 5).0;
+        let img = idx_images_bytes(&set);
+        assert_eq!(img.len(), 16 + 3 * 28 * 28);
+        assert_eq!(&img[0..4], &0x0000_0803u32.to_be_bytes());
+        assert_eq!(&img[16..], &set.images[..]);
+        let lab = idx_labels_bytes(&set.labels);
+        assert_eq!(&lab[8..], &set.labels[..]);
+
+        let cs = generate_pair("cifar10", 2, 0, 5).0;
+        let rec = cifar_bytes(&cs, 0..2);
+        assert_eq!(rec.len(), 2 * (1 + 3072));
+        assert_eq!(rec[0], cs.labels[0]);
+        // CHW plane 0 (R), pixel (0,0) is HWC element 0
+        assert_eq!(rec[1], cs.images[0]);
+        // CHW plane 1 (G), pixel (0,0) is HWC element 1
+        assert_eq!(rec[1 + 1024], cs.images[1]);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let (a, _) = generate_pair("cifar10", 10, 0, 7);
+        let (b, _) = generate_pair("cifar10", 10, 0, 7);
+        assert_eq!(a.images, b.images);
+        let (c, _) = generate_pair("cifar10", 10, 0, 8);
+        assert_ne!(a.images, c.images);
+    }
+}

@@ -1,69 +1,141 @@
 //! MNIST IDX format parser (big-endian, magic 0x801/0x803).
 //!
-//! Used automatically when real MNIST files are present; unit tests
-//! exercise the parser on generated fixture files.
+//! Two entry points: the streaming loaders (`*_raw`,
+//! [`load_mnist_stream`]) validate the headers, range-check every
+//! label, and hand the raw pixel bytes to a
+//! [`StreamDataset`](super::StreamDataset) — one chunked read, no f32
+//! expansion; and the eager wrappers ([`load_mnist`],
+//! [`load_idx_images`], [`load_idx_labels`]) keep the original
+//! decoded-to-f32 API for tests and small sets. Every malformed-file
+//! error names the offending field (magic, count, dims, body, label)
+//! and the file; label errors carry the record index.
 
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
+use super::stream::{read_file_chunked, Shard, StreamDataset};
 use super::Dataset;
 
 fn read_u32(b: &[u8], off: usize) -> u32 {
     u32::from_be_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
 }
 
-/// Parse an IDX3 image file into normalized f32 pixels (x/255 - 0.5).
-pub fn load_idx_images(path: &Path) -> Result<(usize, usize, usize, Vec<f32>)> {
-    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+/// Parse an IDX3 image file, keeping the pixels as raw u8 bytes
+/// (`(count, rows, cols, body)`); the body is row-major sample-major,
+/// exactly as stored on disk.
+pub fn load_idx_images_raw(path: &Path) -> Result<(usize, usize, usize, Vec<u8>)> {
+    let bytes = read_file_chunked(path)?;
     if bytes.len() < 16 {
-        bail!("{}: truncated IDX header", path.display());
+        bail!(
+            "{}: truncated IDX3 header: 16 bytes needed, file has {}",
+            path.display(),
+            bytes.len()
+        );
     }
     let magic = read_u32(&bytes, 0);
     if magic != 0x0000_0803 {
-        bail!("{}: bad IDX3 magic {magic:#x}", path.display());
+        bail!("{}: bad IDX3 magic {magic:#010x} (want 0x00000803)", path.display());
     }
     let n = read_u32(&bytes, 4) as usize;
     let h = read_u32(&bytes, 8) as usize;
     let w = read_u32(&bytes, 12) as usize;
-    let want = 16 + n * h * w;
-    if bytes.len() < want {
-        bail!("{}: expected {} bytes, got {}", path.display(), want, bytes.len());
+    if h == 0 || w == 0 || h > 4096 || w > 4096 {
+        bail!("{}: bad image dims {h}x{w} (rows/cols must be 1..=4096)", path.display());
     }
-    let data = bytes[16..want].iter().map(|&b| b as f32 / 255.0 - 0.5).collect();
-    Ok((n, h, w, data))
+    let want = 16 + n * h * w;
+    if bytes.len() != want {
+        bail!(
+            "{}: pixel body mismatch: header claims {n} images of {h}x{w} \
+             ({want} bytes total), file has {}",
+            path.display(),
+            bytes.len()
+        );
+    }
+    let mut body = bytes;
+    body.drain(..16);
+    Ok((n, h, w, body))
 }
 
-/// Parse an IDX1 label file.
-pub fn load_idx_labels(path: &Path) -> Result<Vec<i32>> {
-    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+/// Parse an IDX1 label file into raw label bytes, rejecting any label
+/// `>= num_classes` with the offending record index — a corrupt label
+/// would otherwise train silently against a garbage class.
+pub fn load_idx_labels_raw(path: &Path, num_classes: usize) -> Result<Vec<u8>> {
+    let bytes = read_file_chunked(path)?;
     if bytes.len() < 8 {
-        bail!("{}: truncated IDX header", path.display());
+        bail!(
+            "{}: truncated IDX1 header: 8 bytes needed, file has {}",
+            path.display(),
+            bytes.len()
+        );
     }
     let magic = read_u32(&bytes, 0);
     if magic != 0x0000_0801 {
-        bail!("{}: bad IDX1 magic {magic:#x}", path.display());
+        bail!("{}: bad IDX1 magic {magic:#010x} (want 0x00000801)", path.display());
     }
     let n = read_u32(&bytes, 4) as usize;
-    if bytes.len() < 8 + n {
-        bail!("{}: truncated IDX1 body", path.display());
+    if bytes.len() != 8 + n {
+        bail!(
+            "{}: label body mismatch: header claims {n} labels, file has {} body bytes",
+            path.display(),
+            bytes.len().saturating_sub(8)
+        );
     }
-    Ok(bytes[8..8 + n].iter().map(|&b| b as i32).collect())
+    let mut body = bytes;
+    body.drain(..8);
+    for (i, &l) in body.iter().enumerate() {
+        if l as usize >= num_classes {
+            bail!(
+                "{}: record {i}: label {l} out of range (0..{num_classes})",
+                path.display()
+            );
+        }
+    }
+    Ok(body)
 }
 
-pub fn load_mnist(images: &Path, labels: &Path, name: &str) -> Result<Dataset> {
-    let (n, h, w, data) = load_idx_images(images)?;
-    let lab = load_idx_labels(labels)?;
+/// Load an MNIST image/label file pair as a streaming dataset: one
+/// chunked read per file, raw bytes retained, per-batch decode.
+pub fn load_mnist_stream(images: &Path, labels: &Path, name: &str) -> Result<StreamDataset> {
+    let (n, h, w, body) = load_idx_images_raw(images)?;
+    let lab = load_idx_labels_raw(labels, 10)?;
     if lab.len() != n {
-        bail!("mnist: {} images but {} labels", n, lab.len());
+        bail!(
+            "mnist: {} claims {n} images but {} claims {} labels",
+            images.display(),
+            labels.display(),
+            lab.len()
+        );
     }
-    Ok(Dataset {
-        name: name.to_string(),
-        input_shape: vec![h, w, 1],
-        images: data,
-        labels: lab,
-        num_classes: 10,
-    })
+    let shard_name = images
+        .file_name()
+        .map(|f| f.to_string_lossy().into_owned())
+        .unwrap_or_else(|| images.display().to_string());
+    Ok(StreamDataset::from_u8_hwc(
+        name.to_string(),
+        vec![h, w, 1],
+        10,
+        lab.into_iter().map(|l| l as i32).collect(),
+        body,
+        vec![Shard { name: shard_name, start: 0, len: n }],
+    ))
+}
+
+/// Parse an IDX3 image file into normalized f32 pixels (x/255 - 0.5).
+pub fn load_idx_images(path: &Path) -> Result<(usize, usize, usize, Vec<f32>)> {
+    let (n, h, w, body) = load_idx_images_raw(path)?;
+    let data = body.iter().map(|&b| b as f32 / 255.0 - 0.5).collect();
+    Ok((n, h, w, data))
+}
+
+/// Parse an IDX1 label file (labels validated against 10 classes).
+pub fn load_idx_labels(path: &Path) -> Result<Vec<i32>> {
+    Ok(load_idx_labels_raw(path, 10)?.into_iter().map(|l| l as i32).collect())
+}
+
+/// Load an MNIST image/label pair eagerly (decoded f32 in memory).
+pub fn load_mnist(images: &Path, labels: &Path, name: &str) -> Result<Dataset> {
+    Ok(load_mnist_stream(images, labels, name)?.to_eager())
 }
 
 #[cfg(test)]
@@ -108,6 +180,11 @@ mod tests {
         assert_eq!(ds.labels, vec![0, 1, 2, 3]);
         // pixel 0 is 0 -> normalized -0.5
         assert!((ds.images[0] + 0.5).abs() < 1e-6);
+        // streaming and eager agree bitwise
+        let stream = load_mnist_stream(&ip, &lp, "fixture").unwrap();
+        assert_eq!(stream.shards().len(), 1);
+        assert_eq!(stream.shards()[0].len, 4);
+        assert_eq!(stream.to_eager().images, ds.images);
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -117,7 +194,8 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("bad");
         std::fs::write(&p, [0u8; 4]).unwrap();
-        assert!(load_idx_images(&p).is_err());
+        let e = load_idx_images(&p).unwrap_err().to_string();
+        assert!(e.contains("header"), "{e}");
         std::fs::write(&p, 0x0000_0802u32.to_be_bytes()).unwrap();
         assert!(load_idx_labels(&p).is_err());
         // valid header, short body
@@ -127,7 +205,27 @@ mod tests {
         bytes.extend_from_slice(&28u32.to_be_bytes());
         bytes.extend_from_slice(&28u32.to_be_bytes());
         std::fs::write(&p, bytes).unwrap();
-        assert!(load_idx_images(&p).is_err());
+        let e = load_idx_images(&p).unwrap_err().to_string();
+        assert!(e.contains("body"), "{e}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_out_of_range_label_with_record_index() {
+        // Regression: load_idx_labels used to accept any byte, so a
+        // corrupt label (e.g. 37) trained silently against a garbage
+        // class. It must now fail naming the field and the record.
+        let dir = std::env::temp_dir().join(format!("idx_lab_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("labels");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&0x0000_0801u32.to_be_bytes());
+        bytes.extend_from_slice(&4u32.to_be_bytes());
+        bytes.extend_from_slice(&[1, 9, 37, 0]);
+        std::fs::write(&p, bytes).unwrap();
+        let e = load_idx_labels(&p).unwrap_err().to_string();
+        assert!(e.contains("label 37"), "{e}");
+        assert!(e.contains("record 2"), "{e}");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

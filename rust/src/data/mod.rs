@@ -7,11 +7,17 @@
 //! they are unit-tested on generated fixture files.
 
 mod cifar;
+pub mod fixtures;
 mod idx;
+mod stream;
 mod synthetic;
 
-pub use cifar::load_cifar10_dir;
-pub use idx::{load_idx_images, load_idx_labels};
+pub use cifar::{load_cifar10_bin, load_cifar10_dir, load_cifar10_dir_stream};
+pub use idx::{load_idx_images, load_idx_labels, load_mnist, load_mnist_stream};
+pub use stream::{
+    materialize_into, sample_seed, Augment, BatchStream, Prefetcher, Shard, StreamDataset,
+    StreamOptions, SyncStream,
+};
 pub use synthetic::SyntheticSpec;
 
 use anyhow::Result;
@@ -147,6 +153,45 @@ pub fn load_or_synthesize(
     Ok(synthetic::generate(dataset, spec))
 }
 
+/// Build a streaming train dataset + eager test dataset for a config:
+/// real files when present under `data_dir` (raw bytes retained,
+/// per-batch decode), synthetic otherwise (wrapped without copies).
+///
+/// The test split stays eager: evaluation touches it rarely and whole,
+/// so the decoded-f32 `Dataset` API (`evaluate`, accuracy sweeps) keeps
+/// working unchanged.
+pub fn load_streaming(
+    dataset: &str,
+    data_dir: Option<&std::path::Path>,
+    spec: &SyntheticSpec,
+) -> Result<(StreamDataset, Dataset)> {
+    if let Some(dir) = data_dir {
+        match dataset {
+            "mnist" => {
+                let ti = dir.join("train-images-idx3-ubyte");
+                let tl = dir.join("train-labels-idx1-ubyte");
+                let vi = dir.join("t10k-images-idx3-ubyte");
+                let vl = dir.join("t10k-labels-idx1-ubyte");
+                if ti.exists() && tl.exists() && vi.exists() && vl.exists() {
+                    let train = idx::load_mnist_stream(&ti, &tl, "mnist-train")?;
+                    let test = idx::load_mnist(&vi, &vl, "mnist-test")?;
+                    return Ok((train, test));
+                }
+            }
+            "cifar10" => {
+                if dir.join("data_batch_1.bin").exists() {
+                    let (train, test) = cifar::load_cifar10_dir_stream(dir)?;
+                    return Ok((train, test.to_eager()));
+                }
+            }
+            _ => {}
+        }
+        log::warn!("no {dataset} files under {}; using synthetic data", dir.display());
+    }
+    let (train, test) = synthetic::generate(dataset, spec);
+    Ok((StreamDataset::from_dataset(train), test))
+}
+
 /// Deterministic per-batch dropout seed (must match between the fwd and
 /// bwd executions of the same mini-batch — the coordinator passes the
 /// value it stored with the activations).
@@ -231,5 +276,31 @@ mod tests {
         assert_eq!(tr.input_shape, vec![32, 32, 3]);
         assert_eq!(tr.len(), 32);
         assert_eq!(te.len(), 16);
+    }
+
+    #[test]
+    fn load_streaming_matches_eager_on_synthetic_fallback() {
+        let spec = SyntheticSpec { train: 32, test: 16, noise: 0.5, seed: 0 };
+        let (st, ste) = load_streaming("mnist", None, &spec).unwrap();
+        let (et, ete) = load_or_synthesize("mnist", None, &spec).unwrap();
+        assert_eq!(st.to_eager().images, et.images);
+        assert_eq!(ste.images, ete.images);
+        assert_eq!(st.input_shape, vec![28, 28, 1]);
+    }
+
+    #[test]
+    fn load_streaming_reads_fixture_files() {
+        let dir = std::env::temp_dir().join(format!("stream_fix_{}", std::process::id()));
+        let (gt, _) = fixtures::write_mnist_fixture(&dir, 20, 10, 5).unwrap();
+        let spec = SyntheticSpec { train: 4, test: 2, noise: 0.5, seed: 0 };
+        let (tr, te) = load_streaming("mnist", Some(&dir), &spec).unwrap();
+        // real files win over the synthetic spec sizes
+        assert_eq!(tr.len(), 20);
+        assert_eq!(te.len(), 10);
+        let eager = tr.to_eager();
+        for k in 0..gt.sample_elems() {
+            assert_eq!(eager.images[k], gt.expected_f32(k), "pixel {k}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,0 +1,820 @@
+//! Streaming ingestion (DESIGN.md §11): raw-byte datasets decoded
+//! on demand into pooled batch tensors, optional augmentation, and a
+//! shard-aware prefetcher that overlaps decode with the training
+//! pipeline.
+//!
+//! The eager [`Dataset`](super::Dataset) path expands every sample to
+//! f32 at load time (4x the on-disk footprint for u8 sources) and
+//! copies per batch. A [`StreamDataset`] instead retains the file
+//! bytes exactly once (`Arc<Vec<u8>>`, read in bounded chunks) and
+//! decodes each sample directly into a pooled batch buffer at feed
+//! time, so the steady-state ingest path allocates nothing once the
+//! pool is warm — the same zero-alloc discipline as the compute cycle
+//! (§Perf), probed in `tests/data_stream.rs`.
+//!
+//! Determinism contract: batch content is a pure function of
+//! (shuffle seed, augment seed, batch index). The shuffle order comes
+//! from the existing [`Batcher`] (so `Batcher::skip` replay and
+//! checkpoint-restart stay bitwise-invisible), and every augmentation
+//! draw is derived from `(aug_seed, epoch, sample index)` — never from
+//! worker identity, arrival order, or thread count. Prefetching with
+//! any number of worker threads is therefore bitwise identical to
+//! synchronous iteration; `tests/data_stream.rs` holds the line.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use super::{Batcher, Dataset};
+use crate::pool::{self, PoolStats, PoolVec, TensorPool};
+use crate::tensor::{IntTensor, Tensor};
+use crate::util::rng::Pcg32;
+
+/// CIFAR-10 binary record length: 1 label byte + 3x32x32 pixel bytes.
+pub(super) const CIFAR_REC: usize = 1 + 3 * 32 * 32;
+
+/// Pcg32 stream id for per-sample augmentation draws (distinct from
+/// weight init and shuffle streams so the draw sequences never alias).
+const AUG_STREAM: u64 = 0xda7a_a46e;
+
+/// Chunk size for [`read_file_chunked`] (1 MiB: large enough that the
+/// syscall count is negligible, small enough to keep the resident
+/// working set of a partial read bounded).
+const READ_CHUNK: usize = 1 << 20;
+
+/// Read a whole file into an exact-length buffer in bounded chunks —
+/// the loaders' one copy of the raw bytes, shared via `Arc` by every
+/// decode afterwards. A file shorter than its reported metadata length
+/// (torn mid-download) is an error, not a silent truncation.
+pub(super) fn read_file_chunked(path: &std::path::Path) -> Result<Vec<u8>> {
+    use std::io::Read;
+    let mut f = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let len = f
+        .metadata()
+        .with_context(|| format!("stat {}", path.display()))?
+        .len() as usize;
+    let mut buf = vec![0u8; len];
+    let mut off = 0;
+    while off < len {
+        let end = (off + READ_CHUNK).min(len);
+        let n = f
+            .read(&mut buf[off..end])
+            .with_context(|| format!("reading {}", path.display()))?;
+        if n == 0 {
+            bail!("{}: file truncated at byte {off} (expected {len})", path.display());
+        }
+        off += n;
+    }
+    Ok(buf)
+}
+
+/// One source file's contiguous index range inside a [`StreamDataset`]
+/// (e.g. `data_batch_3.bin` covers samples 20000..30000).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Shard {
+    /// Source file name (or "synthetic" / "memory" for generated data).
+    pub name: String,
+    /// First sample index this shard holds.
+    pub start: usize,
+    /// Number of samples in the shard.
+    pub len: usize,
+}
+
+/// How the raw pixels are stored; decoding normalizes to f32
+/// `byte/255 - 0.5` exactly like the eager loaders, so a noop-augment
+/// stream is bitwise the eager path.
+enum PixelStore {
+    /// Already-decoded f32 samples in HWC order (synthetic data, or a
+    /// wrapped eager [`Dataset`]).
+    F32(Arc<Vec<f32>>),
+    /// Raw u8 pixels in HWC sample-major order (MNIST IDX body bytes;
+    /// C is 1 so HW == HWC).
+    U8Hwc(Arc<Vec<u8>>),
+    /// Raw CIFAR-10 records (label byte + CHW planes, `CIFAR_REC`
+    /// bytes each); decode transposes CHW -> HWC.
+    CifarRecords(Arc<Vec<u8>>),
+}
+
+/// A labelled image dataset whose pixels live as raw shared bytes and
+/// are decoded per batch into pooled tensors.
+pub struct StreamDataset {
+    /// Human-readable dataset name (shows up in logs).
+    pub name: String,
+    /// Per-sample (H, W, C).
+    pub input_shape: Vec<usize>,
+    /// Number of label classes.
+    pub num_classes: usize,
+    labels: Vec<i32>,
+    pixels: PixelStore,
+    shards: Vec<Shard>,
+}
+
+impl StreamDataset {
+    /// Wrap an eager dataset (synthetic or already decoded) as a
+    /// single-shard stream; decoding is then a plain copy.
+    pub fn from_dataset(ds: Dataset) -> StreamDataset {
+        let n = ds.len();
+        StreamDataset {
+            name: ds.name,
+            input_shape: ds.input_shape,
+            num_classes: ds.num_classes,
+            labels: ds.labels,
+            pixels: PixelStore::F32(Arc::new(ds.images)),
+            shards: vec![Shard { name: "memory".into(), start: 0, len: n }],
+        }
+    }
+
+    /// Build from raw u8 HWC pixel bytes (the IDX loader's path).
+    pub(super) fn from_u8_hwc(
+        name: String,
+        input_shape: Vec<usize>,
+        num_classes: usize,
+        labels: Vec<i32>,
+        bytes: Vec<u8>,
+        shards: Vec<Shard>,
+    ) -> StreamDataset {
+        debug_assert_eq!(bytes.len(), labels.len() * input_shape.iter().product::<usize>());
+        StreamDataset {
+            name,
+            input_shape,
+            num_classes,
+            labels,
+            pixels: PixelStore::U8Hwc(Arc::new(bytes)),
+            shards,
+        }
+    }
+
+    /// Build from raw CIFAR-10 records (the CIFAR loader's path).
+    pub(super) fn from_cifar_records(
+        name: String,
+        labels: Vec<i32>,
+        records: Vec<u8>,
+        shards: Vec<Shard>,
+    ) -> StreamDataset {
+        debug_assert_eq!(records.len(), labels.len() * CIFAR_REC);
+        StreamDataset {
+            name,
+            input_shape: vec![32, 32, 3],
+            num_classes: 10,
+            labels,
+            pixels: PixelStore::CifarRecords(Arc::new(records)),
+            shards,
+        }
+    }
+
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// True when the dataset holds no samples.
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Scalars per sample (H*W*C).
+    pub fn sample_elems(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Sample `i`'s label.
+    pub fn label(&self, i: usize) -> i32 {
+        self.labels[i]
+    }
+
+    /// The source shards, in index order.
+    pub fn shards(&self) -> &[Shard] {
+        &self.shards
+    }
+
+    /// The shard holding sample `i`.
+    pub fn shard_of(&self, i: usize) -> &Shard {
+        assert!(i < self.len(), "sample {i} out of range ({} samples)", self.len());
+        self.shards
+            .iter()
+            .find(|s| i >= s.start && i < s.start + s.len)
+            .expect("shards cover the index space")
+    }
+
+    /// Decode sample `i` (normalized f32, HWC) into `out`. This is the
+    /// zero-copy seam: bytes go straight from the shared file buffer
+    /// into the pooled batch tensor, with no intermediate sample vec.
+    pub fn decode_into(&self, i: usize, out: &mut [f32]) {
+        let n = self.sample_elems();
+        debug_assert_eq!(out.len(), n);
+        match &self.pixels {
+            PixelStore::F32(data) => out.copy_from_slice(&data[i * n..(i + 1) * n]),
+            PixelStore::U8Hwc(bytes) => {
+                for (o, &b) in out.iter_mut().zip(&bytes[i * n..(i + 1) * n]) {
+                    *o = b as f32 / 255.0 - 0.5;
+                }
+            }
+            PixelStore::CifarRecords(recs) => {
+                let px = &recs[i * CIFAR_REC + 1..(i + 1) * CIFAR_REC];
+                for y in 0..32 {
+                    for x in 0..32 {
+                        for c in 0..3 {
+                            out[(y * 32 + x) * 3 + c] =
+                                px[c * 1024 + y * 32 + x] as f32 / 255.0 - 0.5;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Expand to an eager [`Dataset`] (test sets, comparisons).
+    pub fn to_eager(&self) -> Dataset {
+        let n = self.sample_elems();
+        let mut images = vec![0.0f32; self.len() * n];
+        for i in 0..self.len() {
+            self.decode_into(i, &mut images[i * n..(i + 1) * n]);
+        }
+        Dataset {
+            name: self.name.clone(),
+            input_shape: self.input_shape.clone(),
+            images,
+            labels: self.labels.clone(),
+            num_classes: self.num_classes,
+        }
+    }
+}
+
+/// Training-time augmentation knobs (`--augment`): random crop with
+/// zero padding, horizontal flip, per-channel normalization. All draws
+/// are pure functions of `(aug_seed, epoch, sample index)` — see
+/// [`sample_seed`] — so the same sample augments identically whether
+/// it is decoded synchronously, by any prefetch worker, or replayed
+/// after a checkpoint restart.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Augment {
+    /// Zero-padding border before the random crop (0 disables crop).
+    pub pad: usize,
+    /// Randomly mirror left-right with probability 1/2.
+    pub hflip: bool,
+    /// Per-channel mean in [0,1] pixel units (empty disables).
+    pub mean: Vec<f32>,
+    /// Per-channel std in [0,1] pixel units (paired with `mean`).
+    pub std: Vec<f32>,
+}
+
+impl Augment {
+    /// No augmentation: decode output is bitwise the eager path.
+    pub fn none() -> Augment {
+        Augment { pad: 0, hflip: false, mean: Vec::new(), std: Vec::new() }
+    }
+
+    /// The standard recipe for a dataset: MNIST pads 2 with no flip
+    /// (digits are chiral); CIFAR-10 pads 4, flips, and normalizes
+    /// per channel with the conventional statistics.
+    pub fn standard(dataset: &str) -> Augment {
+        match dataset {
+            "mnist" => Augment {
+                pad: 2,
+                hflip: false,
+                mean: vec![0.1307],
+                std: vec![0.3081],
+            },
+            _ => Augment {
+                pad: 4,
+                hflip: true,
+                mean: vec![0.4914, 0.4822, 0.4465],
+                std: vec![0.2470, 0.2435, 0.2616],
+            },
+        }
+    }
+
+    /// True when applying this augmentation is the identity.
+    pub fn is_noop(&self) -> bool {
+        self.pad == 0 && !self.hflip && self.mean.is_empty()
+    }
+}
+
+/// Per-sample augmentation seed: a splitmix-style hash of
+/// `(aug_seed, epoch, sample index)`. Epoch is folded in so the same
+/// sample draws a *different* crop each epoch, yet any replay of the
+/// same epoch reproduces it exactly.
+pub fn sample_seed(aug_seed: u64, epoch: usize, index: usize) -> u64 {
+    let mut x = aug_seed
+        ^ (epoch as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        ^ (index as u64).wrapping_mul(0xd1b5_4a32_d192_ed03);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^= x >> 31;
+    x
+}
+
+/// Decode + augment sample `i` into `out`. `scratch` must hold
+/// `sample_elems` scalars; it is only touched when augmentation is
+/// active (the noop path decodes straight into `out`).
+///
+/// Augmentation math (DESIGN.md §11): with decoded value
+/// `d = byte/255 - 0.5`, the output at (y, x, c) is
+/// `norm(padded(y + dy, flip(x) + dx, c))` where `dy, dx` are drawn
+/// uniformly from `0..=2*pad`, `padded` reads `d` in bounds and the
+/// zero-pixel value `-0.5` outside, `flip` mirrors x with probability
+/// 1/2 when enabled, and `norm(v) = (v + 0.5 - mean[c]) / std[c]`
+/// (identity when no statistics are set). Draw order is fixed:
+/// dy, dx, then flip.
+pub fn materialize_into(
+    ds: &StreamDataset,
+    i: usize,
+    aug: &Augment,
+    aug_seed: u64,
+    epoch: usize,
+    out: &mut [f32],
+    scratch: &mut [f32],
+) {
+    if aug.is_noop() {
+        ds.decode_into(i, out);
+        return;
+    }
+    ds.decode_into(i, scratch);
+    let (h, w, c) = (ds.input_shape[0], ds.input_shape[1], ds.input_shape[2]);
+    let mut rng = Pcg32::new(sample_seed(aug_seed, epoch, i), AUG_STREAM);
+    let (dy, dx) = if aug.pad > 0 {
+        (rng.below(2 * aug.pad as u32 + 1) as isize, rng.below(2 * aug.pad as u32 + 1) as isize)
+    } else {
+        (aug.pad as isize, aug.pad as isize)
+    };
+    let flip = aug.hflip && rng.below(2) == 1;
+    let normalize = aug.mean.len() == c;
+    let pad = aug.pad as isize;
+    for y in 0..h {
+        let sy = y as isize + dy - pad;
+        let row_in = 0 <= sy && sy < h as isize;
+        for x in 0..w {
+            let xx = if flip { w - 1 - x } else { x };
+            let sx = xx as isize + dx - pad;
+            for ch in 0..c {
+                let mut v = if row_in && 0 <= sx && sx < w as isize {
+                    scratch[(sy as usize * w + sx as usize) * c + ch]
+                } else {
+                    -0.5 // zero pixel in byte units
+                };
+                if normalize {
+                    v = (v + 0.5 - aug.mean[ch]) / aug.std[ch];
+                }
+                out[(y * w + x) * c + ch] = v;
+            }
+        }
+    }
+}
+
+/// Decode + augment a whole mini-batch into a pooled tensor pair.
+/// Epoch is the batch's epoch (for the per-sample augmentation seeds).
+fn materialize_batch(
+    ds: &StreamDataset,
+    idxs: &[usize],
+    epoch: usize,
+    aug: &Augment,
+    aug_seed: u64,
+) -> (Tensor, IntTensor) {
+    let n = ds.sample_elems();
+    let mut images: PoolVec = pool::acquire(idxs.len() * n);
+    let mut scratch: PoolVec = pool::acquire(if aug.is_noop() { 0 } else { n });
+    let buf = images.as_mut_slice();
+    let mut labels = Vec::with_capacity(idxs.len());
+    for (k, &i) in idxs.iter().enumerate() {
+        materialize_into(
+            ds,
+            i,
+            aug,
+            aug_seed,
+            epoch,
+            &mut buf[k * n..(k + 1) * n],
+            scratch.as_mut_slice(),
+        );
+        labels.push(ds.label(i));
+    }
+    let mut shape = vec![idxs.len()];
+    shape.extend_from_slice(&ds.input_shape);
+    (
+        Tensor::from_pooled(&shape, images).expect("batch tensor"),
+        IntTensor::from_vec(&[idxs.len()], labels).expect("batch labels"),
+    )
+}
+
+/// Launch-time knobs for a [`BatchStream`].
+#[derive(Debug, Clone)]
+pub struct StreamOptions {
+    /// Mini-batch size.
+    pub batch: usize,
+    /// Seed for the epoch shuffle (the training driver passes
+    /// `rc.seed ^ 0xba7c4`, the same salt the eager path always used).
+    pub shuffle_seed: u64,
+    /// Seed for augmentation draws (the run's global seed).
+    pub aug_seed: u64,
+    /// Batches already consumed by an earlier generation: the stream
+    /// burns them with `Batcher::skip` so checkpoint-restart replay is
+    /// bitwise-invisible.
+    pub start: u64,
+    /// Augmentation recipe ([`Augment::none`] to disable).
+    pub augment: Augment,
+    /// Prefetch worker threads (0 = synchronous decode on the caller).
+    pub threads: usize,
+    /// In-flight batch cap for prefetch (0 = `2 * threads`).
+    pub depth: usize,
+}
+
+impl StreamOptions {
+    /// Synchronous, unaugmented defaults for a given batch/seed — the
+    /// configuration that reproduces the legacy eager feed bitwise.
+    pub fn plain(batch: usize, shuffle_seed: u64, aug_seed: u64) -> StreamOptions {
+        StreamOptions {
+            batch,
+            shuffle_seed,
+            aug_seed,
+            start: 0,
+            augment: Augment::none(),
+            threads: 0,
+            depth: 0,
+        }
+    }
+}
+
+/// A deterministic mini-batch source over a [`StreamDataset`]:
+/// synchronous or prefetched, identical output either way.
+pub enum BatchStream {
+    /// Caller-thread decode.
+    Sync(SyncStream),
+    /// Worker-thread decode, emitted strictly in batch order.
+    Prefetch(Prefetcher),
+}
+
+impl BatchStream {
+    /// Build a stream per the options (validates sizes up front).
+    pub fn new(ds: Arc<StreamDataset>, opts: StreamOptions) -> Result<BatchStream> {
+        ensure!(!ds.is_empty(), "streaming {}: empty dataset", ds.name);
+        ensure!(
+            opts.batch > 0 && opts.batch <= ds.len(),
+            "streaming {}: batch {} vs {} samples",
+            ds.name,
+            opts.batch,
+            ds.len()
+        );
+        if opts.threads == 0 {
+            Ok(BatchStream::Sync(SyncStream::new(ds, opts)))
+        } else {
+            Ok(BatchStream::Prefetch(Prefetcher::launch(ds, opts)?))
+        }
+    }
+
+    /// The next mini-batch (pooled image tensor + labels).
+    pub fn next_batch(&mut self) -> Result<(Tensor, IntTensor)> {
+        match self {
+            BatchStream::Sync(s) => Ok(s.next_batch()),
+            BatchStream::Prefetch(p) => p.next_batch(),
+        }
+    }
+
+    /// Full batches per epoch (the tail partial batch is dropped,
+    /// exactly like [`Batcher`]).
+    pub fn batches_per_epoch(&self) -> usize {
+        match self {
+            BatchStream::Sync(s) => s.batcher.batches_per_epoch(),
+            BatchStream::Prefetch(p) => p.batches_per_epoch,
+        }
+    }
+
+    /// Per-worker pool counters (empty for a synchronous stream) —
+    /// inputs to the merged zero-alloc probe in `tests/data_stream.rs`.
+    pub fn worker_pool_stats(&self) -> Vec<PoolStats> {
+        match self {
+            BatchStream::Sync(_) => Vec::new(),
+            BatchStream::Prefetch(p) => p.pools.iter().map(|p| p.stats()).collect(),
+        }
+    }
+}
+
+/// Synchronous stream: shuffle, decode, augment on the caller thread.
+pub struct SyncStream {
+    ds: Arc<StreamDataset>,
+    batcher: Batcher,
+    augment: Augment,
+    aug_seed: u64,
+}
+
+impl SyncStream {
+    fn new(ds: Arc<StreamDataset>, opts: StreamOptions) -> SyncStream {
+        let mut batcher = Batcher::new(ds.len(), opts.batch, opts.shuffle_seed);
+        batcher.skip(opts.start as usize);
+        SyncStream { ds, batcher, augment: opts.augment, aug_seed: opts.aug_seed }
+    }
+
+    fn next_batch(&mut self) -> (Tensor, IntTensor) {
+        let idxs = self.batcher.next_indices().to_vec();
+        let epoch = self.batcher.epoch;
+        materialize_batch(&self.ds, &idxs, epoch, &self.augment, self.aug_seed)
+    }
+}
+
+/// A unit of prefetch work: decode batch `seq` (drawn in epoch
+/// `epoch`) from the given sample indices.
+struct Task {
+    seq: u64,
+    epoch: usize,
+    idxs: Vec<usize>,
+}
+
+/// A decoded batch travelling back to the coordinator.
+struct Done {
+    seq: u64,
+    x: Tensor,
+    labels: IntTensor,
+}
+
+/// Prefetching stream: N workers decode batches concurrently; the
+/// coordinator dispatches tasks round-robin (`seq % threads`) from its
+/// own [`Batcher`] and reorders completions so emission is strictly
+/// sequential. Each worker installs a private
+/// [`PoolScope`](crate::pool::PoolScope), so batch buffers recycle
+/// through the pool that leased them no matter which thread drops
+/// them — the same idiom as `pipeline/threaded.rs` workers.
+pub struct Prefetcher {
+    batcher: Batcher,
+    batches_per_epoch: usize,
+    task_txs: Vec<Sender<Task>>,
+    done_rx: Receiver<Done>,
+    ready: HashMap<u64, (Tensor, IntTensor)>,
+    next_dispatch: u64,
+    next_emit: u64,
+    depth: u64,
+    workers: Vec<JoinHandle<()>>,
+    pools: Vec<TensorPool>,
+}
+
+impl Prefetcher {
+    fn launch(ds: Arc<StreamDataset>, opts: StreamOptions) -> Result<Prefetcher> {
+        let threads = opts.threads;
+        let depth = if opts.depth == 0 { 2 * threads as u64 } else { opts.depth as u64 };
+        let (done_tx, done_rx) = channel::<Done>();
+        let (pool_tx, pool_rx) = channel::<TensorPool>();
+        let mut task_txs = Vec::with_capacity(threads);
+        let mut workers = Vec::with_capacity(threads);
+        for widx in 0..threads {
+            let (tx, rx) = channel::<Task>();
+            task_txs.push(tx);
+            let ds = Arc::clone(&ds);
+            let aug = opts.augment.clone();
+            let aug_seed = opts.aug_seed;
+            let done = done_tx.clone();
+            let pools = pool_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("prefetch-{widx}"))
+                .spawn(move || prefetch_worker(ds, aug, aug_seed, rx, done, pools))
+                .map_err(|e| anyhow!("spawning prefetch worker {widx}: {e}"))?;
+            workers.push(handle);
+        }
+        drop(pool_tx);
+        let pools: Vec<TensorPool> = pool_rx.iter().take(threads).collect();
+        ensure!(pools.len() == threads, "a prefetch worker died before publishing its pool");
+        let mut batcher = Batcher::new(ds.len(), opts.batch, opts.shuffle_seed);
+        batcher.skip(opts.start as usize);
+        let batches_per_epoch = batcher.batches_per_epoch();
+        let mut p = Prefetcher {
+            batcher,
+            batches_per_epoch,
+            task_txs,
+            done_rx,
+            ready: HashMap::new(),
+            next_dispatch: 0,
+            next_emit: 0,
+            depth: depth.max(1),
+            workers,
+            pools,
+        };
+        p.fill();
+        Ok(p)
+    }
+
+    /// Dispatch tasks until `depth` batches are in flight. Runs on the
+    /// caller thread, so the (seq, epoch, idxs) assignment — and hence
+    /// every augmentation draw — is identical at any thread count.
+    fn fill(&mut self) {
+        while self.next_dispatch < self.next_emit + self.depth {
+            let idxs = self.batcher.next_indices().to_vec();
+            let epoch = self.batcher.epoch;
+            let seq = self.next_dispatch;
+            let w = (seq % self.task_txs.len() as u64) as usize;
+            // A send failure means the worker died; surfaced as a
+            // disconnect in next_batch, where it can carry an error.
+            let _ = self.task_txs[w].send(Task { seq, epoch, idxs });
+            self.next_dispatch += 1;
+        }
+    }
+
+    fn next_batch(&mut self) -> Result<(Tensor, IntTensor)> {
+        loop {
+            if let Some(batch) = self.ready.remove(&self.next_emit) {
+                self.next_emit += 1;
+                self.fill();
+                return Ok(batch);
+            }
+            match self.done_rx.recv() {
+                Ok(d) => {
+                    self.ready.insert(d.seq, (d.x, d.labels));
+                }
+                Err(_) => bail!("prefetch worker exited mid-stream (decode thread died)"),
+            }
+        }
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        // Disconnect the task channels; workers exit their recv loop.
+        self.task_txs.clear();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Prefetch worker body: publish the private pool (for the merged
+/// zero-alloc probe), then decode tasks until the channel disconnects.
+fn prefetch_worker(
+    ds: Arc<StreamDataset>,
+    aug: Augment,
+    aug_seed: u64,
+    tasks: Receiver<Task>,
+    done: Sender<Done>,
+    pools: Sender<TensorPool>,
+) {
+    let scope = pool::PoolScope::new();
+    let _ = pools.send(scope.pool().clone());
+    for t in tasks {
+        let (x, labels) = materialize_batch(&ds, &t.idxs, t.epoch, &aug, aug_seed);
+        if done.send(Done { seq: t.seq, x, labels }).is_err() {
+            break; // coordinator dropped; shut down quietly
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::SyntheticSpec;
+    use super::*;
+
+    fn tiny(n: usize) -> Arc<StreamDataset> {
+        let spec = SyntheticSpec { train: n, test: 8, noise: 0.5, seed: 11 };
+        Arc::new(StreamDataset::from_dataset(super::super::synthetic::generate("mnist", &spec).0))
+    }
+
+    #[test]
+    fn noop_stream_matches_eager_gather() {
+        let ds = tiny(32);
+        let eager = ds.to_eager();
+        let mut s = BatchStream::new(Arc::clone(&ds), StreamOptions::plain(8, 7, 42)).unwrap();
+        let mut b = Batcher::new(32, 8, 7);
+        for _ in 0..6 {
+            let idxs = b.next_indices().to_vec();
+            let (want_x, want_y) = eager.gather(&idxs);
+            let (x, y) = s.next_batch().unwrap();
+            assert_eq!(x.data(), want_x.data());
+            assert_eq!(y.data, want_y.data);
+        }
+    }
+
+    #[test]
+    fn sample_seed_is_pure_and_spread() {
+        assert_eq!(sample_seed(1, 2, 3), sample_seed(1, 2, 3));
+        assert_ne!(sample_seed(1, 2, 3), sample_seed(1, 3, 3));
+        assert_ne!(sample_seed(1, 2, 3), sample_seed(1, 2, 4));
+        assert_ne!(sample_seed(1, 2, 3), sample_seed(2, 2, 3));
+    }
+
+    #[test]
+    fn augment_is_pure_per_epoch_and_varies_across_epochs() {
+        let ds = tiny(16);
+        let aug = Augment::standard("mnist");
+        let n = ds.sample_elems();
+        let mut a = vec![0.0; n];
+        let mut b = vec![0.0; n];
+        let mut scratch = vec![0.0; n];
+        materialize_into(&ds, 3, &aug, 99, 0, &mut a, &mut scratch);
+        materialize_into(&ds, 3, &aug, 99, 0, &mut b, &mut scratch);
+        assert_eq!(a, b, "same (seed, epoch, index) must reproduce exactly");
+        // Across epochs at least one of several samples must draw a
+        // different crop (25 crop offsets; 8 identical draws in a row
+        // would be astronomically unlikely under a working hash).
+        let mut any_differ = false;
+        for i in 0..8 {
+            materialize_into(&ds, i, &aug, 99, 0, &mut a, &mut scratch);
+            materialize_into(&ds, i, &aug, 99, 1, &mut b, &mut scratch);
+            any_differ |= a != b;
+        }
+        assert!(any_differ, "epoch must perturb the augmentation draws");
+    }
+
+    #[test]
+    fn crop_pads_with_zero_pixels() {
+        // Fully out-of-range crop cannot happen (pad bounds the
+        // shift), but border rows do read the pad: with dy=0 the top
+        // `pad` rows come from the zero-padding. Force it by scanning
+        // seeds for a (dy=0, dx=pad) draw, then check the top row.
+        let ds = tiny(4);
+        let aug = Augment { pad: 2, hflip: false, mean: Vec::new(), std: Vec::new() };
+        let n = ds.sample_elems();
+        let (mut out, mut scratch) = (vec![0.0; n], vec![0.0; n]);
+        for seed in 0..400u64 {
+            let mut rng = Pcg32::new(sample_seed(seed, 0, 0), AUG_STREAM);
+            let dy = rng.below(5);
+            let dx = rng.below(5);
+            if dy == 0 && dx == 2 {
+                materialize_into(&ds, 0, &aug, seed, 0, &mut out, &mut scratch);
+                // output row 0 reads padded row -2: all pad values
+                assert!(out[..28].iter().all(|&v| v == -0.5), "top rows must be pad");
+                return;
+            }
+        }
+        panic!("no (dy=0, dx=2) draw in 400 seeds — hash is broken");
+    }
+
+    #[test]
+    fn prefetch_matches_sync_bitwise() {
+        let ds = tiny(40);
+        let mut opts = StreamOptions::plain(8, 13, 77);
+        opts.augment = Augment::standard("mnist");
+        for threads in [1usize, 3] {
+            let mut o = opts.clone();
+            o.threads = threads;
+            let mut pre = BatchStream::new(Arc::clone(&ds), o).unwrap();
+            let mut sync = BatchStream::new(Arc::clone(&ds), opts.clone()).unwrap();
+            for _ in 0..12 {
+                let (ax, ay) = sync.next_batch().unwrap();
+                let (bx, by) = pre.next_batch().unwrap();
+                assert_eq!(ax.data(), bx.data(), "prefetch({threads}) diverged from sync");
+                assert_eq!(ay.data, by.data);
+            }
+        }
+    }
+
+    #[test]
+    fn start_replays_the_interrupted_stream() {
+        let ds = tiny(40);
+        let mut opts = StreamOptions::plain(8, 5, 21);
+        opts.augment = Augment::standard("mnist");
+        let mut full = BatchStream::new(Arc::clone(&ds), opts.clone()).unwrap();
+        // 40/8 = 5 batches/epoch: skipping 7 crosses an epoch boundary.
+        for _ in 0..7 {
+            full.next_batch().unwrap();
+        }
+        let mut resumed = opts.clone();
+        resumed.start = 7;
+        resumed.threads = 2;
+        let mut resumed = BatchStream::new(Arc::clone(&ds), resumed).unwrap();
+        for _ in 0..4 {
+            let (ax, ay) = full.next_batch().unwrap();
+            let (bx, by) = resumed.next_batch().unwrap();
+            assert_eq!(ax.data(), bx.data(), "replay diverged");
+            assert_eq!(ay.data, by.data);
+        }
+    }
+
+    #[test]
+    fn shards_cover_and_resolve() {
+        let labels = vec![0i32; 6];
+        let bytes = vec![0u8; 6 * 4];
+        let ds = StreamDataset::from_u8_hwc(
+            "t".into(),
+            vec![2, 2, 1],
+            10,
+            labels,
+            bytes,
+            vec![
+                Shard { name: "a".into(), start: 0, len: 4 },
+                Shard { name: "b".into(), start: 4, len: 2 },
+            ],
+        );
+        assert_eq!(ds.shard_of(0).name, "a");
+        assert_eq!(ds.shard_of(3).name, "a");
+        assert_eq!(ds.shard_of(4).name, "b");
+        assert_eq!(ds.shard_of(5).name, "b");
+        assert_eq!(ds.shards().len(), 2);
+    }
+
+    #[test]
+    fn u8_decode_normalizes_like_the_eager_path() {
+        let bytes: Vec<u8> = (0..8u8).map(|b| b * 30).collect();
+        let ds = StreamDataset::from_u8_hwc(
+            "t".into(),
+            vec![2, 2, 1],
+            10,
+            vec![1, 2],
+            bytes.clone(),
+            vec![Shard { name: "m".into(), start: 0, len: 2 }],
+        );
+        let mut out = vec![0.0; 4];
+        ds.decode_into(1, &mut out);
+        for (k, &b) in bytes[4..].iter().enumerate() {
+            assert_eq!(out[k], b as f32 / 255.0 - 0.5);
+        }
+        assert_eq!(ds.label(1), 2);
+    }
+}

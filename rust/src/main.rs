@@ -5,7 +5,11 @@
 //!                orthogonally --backend auto|native|xla (compute),
 //!                --runtime scheduler|threaded (how the schedule executes),
 //!                --staleness-fix none|stash|predict|correct (mitigation),
-//!                and --partition manual|auto (profile-guided PPV)
+//!                and --partition manual|auto (profile-guided PPV);
+//!                --data-dir/--augment/--prefetch drive the streaming
+//!                ingest path (DESIGN.md §11)
+//!   gen-data     write a real-format (IDX / CIFAR-10 binary) fixture
+//!                dataset for --data-dir runs without network access
 //!   inspect      staleness report for a config (paper §3 accounting)
 //!   memory       Table-6-style memory model for a config
 //!   perfsim      discrete-event speedup estimate (Table 5 machinery):
@@ -47,6 +51,7 @@ fn dispatch(args: &[String]) -> Result<()> {
     let rest = if args.is_empty() { &[][..] } else { &args[1..] };
     match sub {
         "train" => cmd_train(rest),
+        "gen-data" => cmd_gen_data(rest),
         "inspect" => cmd_inspect(rest),
         "memory" => cmd_memory(rest),
         "perfsim" => cmd_perfsim(rest),
@@ -57,7 +62,9 @@ fn dispatch(args: &[String]) -> Result<()> {
                  SUBCOMMANDS:\n  \
                  train --config <name> [--mode pipelined|sequential|hybrid]\n        \
                  [--backend auto|native|xla] [--runtime scheduler|threaded]\n        \
-                 [--staleness-fix none|stash|predict|correct] [--partition manual|auto] ...\n  \
+                 [--staleness-fix none|stash|predict|correct] [--partition manual|auto]\n        \
+                 [--data-dir <dir>] [--augment] [--prefetch N] ...\n  \
+                 gen-data --dir <dir> [--dataset mnist|cifar10] [--train N] [--test M] [--seed S]\n  \
                  inspect --config <name>\n  \
                  memory --config <name> [--batch N] [--partition manual|auto]\n  \
                  perfsim --config <name> [--iters N] [--gflops G] [--mapping paired|full]\n        \
@@ -91,6 +98,8 @@ fn cmd_train(args: &[String]) -> Result<()> {
             .opt("noise", "0.6", "synthetic noise level")
             .opt("stale-lr-scale", "1.0", "LR multiplier for stale partitions (Table 7)")
             .opt("data-dir", "", "directory with real MNIST/CIFAR files")
+            .flag("augment", "train-time augmentation (pad+crop, flip, normalize)")
+            .opt("prefetch", "0", "decode/augment prefetch threads (0 = synchronous)")
             .opt("out", "", "write loss/eval CSVs with this prefix")
             .opt("resume", "", "initialize weights from this checkpoint file or dir")
             .opt("save-checkpoint", "", "write final weights to this path")
@@ -129,6 +138,8 @@ fn cmd_train(args: &[String]) -> Result<()> {
     if !m.get("data-dir").is_empty() {
         rc.data_dir = Some(m.get("data-dir").into());
     }
+    rc.augment = m.has("augment");
+    rc.prefetch = m.get_usize("prefetch").map_err(|e| anyhow!(e))?;
     if !m.get("resume").is_empty() {
         rc.resume_from = Some(m.get("resume").into());
     }
@@ -175,6 +186,41 @@ fn cmd_train(args: &[String]) -> Result<()> {
         std::fs::write(format!("{prefix}_eval.csv"), res.recorder.eval_csv())?;
         println!("wrote {prefix}_train.csv / {prefix}_eval.csv");
     }
+    Ok(())
+}
+
+/// Materialize a real-format (IDX / CIFAR-10 binary) fixture dataset
+/// on disk — the files `train --data-dir` then parses like downloaded
+/// originals. Used by CI's data-plane smoke and handy for local runs
+/// without network access.
+fn cmd_gen_data(args: &[String]) -> Result<()> {
+    let m = parse(
+        Command::new("pipestale gen-data", "write a real-format fixture dataset")
+            .req("dir", "output directory (created if missing)")
+            .opt("dataset", "mnist", "mnist | cifar10 (file format to write)")
+            .opt("train", "512", "train samples")
+            .opt("test", "128", "test samples")
+            .opt("seed", "42", "generator seed"),
+        args,
+    )?;
+    let dir = std::path::PathBuf::from(m.get("dir"));
+    let dataset = m.get("dataset");
+    let (tr, te) = pipestale::data::fixtures::write_fixture(
+        dataset,
+        &dir,
+        m.get_usize("train").map_err(|e| anyhow!(e))?,
+        m.get_usize("test").map_err(|e| anyhow!(e))?,
+        m.get_u64("seed").map_err(|e| anyhow!(e))?,
+    )?;
+    println!(
+        "wrote {dataset} fixture to {}: {} train + {} test samples ({}x{}x{})",
+        dir.display(),
+        tr.len(),
+        te.len(),
+        tr.h,
+        tr.w,
+        tr.c
+    );
     Ok(())
 }
 

@@ -498,7 +498,7 @@ impl ThreadedPipeline {
         next_batch: F,
     ) -> Result<(Vec<TrainEvent>, f64)>
     where
-        F: FnMut(u64) -> (Tensor, IntTensor),
+        F: FnMut(u64) -> Result<(Tensor, IntTensor)>,
     {
         self.train_range(0, feeds, global_seed, next_batch)
     }
@@ -516,7 +516,7 @@ impl ThreadedPipeline {
         mut next_batch: F,
     ) -> Result<(Vec<TrainEvent>, f64)>
     where
-        F: FnMut(u64) -> (Tensor, IntTensor),
+        F: FnMut(u64) -> Result<(Tensor, IntTensor)>,
     {
         ensure!(!self.trained, "ThreadedPipeline::train may only run once per launch");
         ensure!(start <= end, "train_range: start {start} past end {end}");
@@ -535,7 +535,7 @@ impl ThreadedPipeline {
         loop {
             while feeding && flow.fed() < feeds && flow.can_feed() {
                 let b = start + flow.fed();
-                let (x, labels) = next_batch(b);
+                let (x, labels) = next_batch(b)?;
                 let msg = FwdMsg::Batch {
                     batch_id: b,
                     seed: batch_seed(global_seed, b),

@@ -19,7 +19,10 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::backend::NativeExecutor;
 use crate::config::{Backend, Mode, OnFailure, PartitionMode, RunConfig, RuntimeKind};
-use crate::data::{batch_seed, load_or_synthesize, Batcher, Dataset, SyntheticSpec};
+use crate::data::{
+    batch_seed, load_streaming, Augment, BatchStream, Dataset, StreamDataset, StreamOptions,
+    SyntheticSpec,
+};
 use crate::meta::ConfigMeta;
 use crate::model::checkpoint::CheckpointStore;
 use crate::model::ModelParams;
@@ -388,7 +391,7 @@ fn supervise_threaded<B: WorkerBackend>(
     backend: B,
     rc: &RunConfig,
     meta: &ConfigMeta,
-    train_ds: &Dataset,
+    train_ds: &Arc<StreamDataset>,
     injector: &Arc<FaultInjector>,
     store: Option<&CheckpointStore>,
     occupancy: Occupancy,
@@ -475,7 +478,7 @@ fn run_segment<B: WorkerBackend>(
     backend: &B,
     rc: &RunConfig,
     meta: &ConfigMeta,
-    train_ds: &Dataset,
+    train_ds: &Arc<StreamDataset>,
     injector: &Arc<FaultInjector>,
     params: &ModelParams,
     at: u64,
@@ -487,12 +490,12 @@ fn run_segment<B: WorkerBackend>(
     let opts = ThreadedOptions { occupancy, stall_timeout, staleness_fix: rc.staleness_fix };
     let faulty = FaultyWorkerBackend::new(backend.clone(), Arc::clone(injector));
     let mut pipe = ThreadedPipeline::launch_with(faulty, meta, params.clone(), optims, opts)?;
-    let mut batcher = Batcher::new(train_ds.len(), meta.batch, rc.seed ^ 0xba7c4);
-    batcher.skip(at as usize);
-    let (ev, w) = pipe.train_range(at, end, rc.seed, |_| {
-        let idxs = batcher.next_indices().to_vec();
-        train_ds.gather(&idxs)
-    })?;
+    // `start: at` replays the deterministic shuffle (and per-sample
+    // augmentation draws) up to the restore point — the stream a
+    // restarted generation sees is bitwise the one the failed
+    // generation would have fed.
+    let mut stream = BatchStream::new(Arc::clone(train_ds), stream_options(rc, meta, at))?;
+    let (ev, w) = pipe.train_range(at, end, rc.seed, |_| stream.next_batch())?;
     let trained = pipe.shutdown()?;
     Ok((ev, w, trained))
 }
@@ -521,21 +524,38 @@ pub fn run_native(rc: &RunConfig) -> Result<TrainResult> {
     train_loop(rc, &meta, exec, &train_ds, &test_ds)
 }
 
-fn build_datasets(rc: &RunConfig, meta: &ConfigMeta) -> Result<(Dataset, Dataset)> {
+fn build_datasets(rc: &RunConfig, meta: &ConfigMeta) -> Result<(Arc<StreamDataset>, Dataset)> {
     let spec = SyntheticSpec {
         train: rc.train_size,
         test: rc.test_size,
         noise: rc.noise as f32,
         seed: rc.seed ^ 0x5eed_da7a,
     };
-    let (train_ds, test_ds) = load_or_synthesize(&meta.dataset, rc.data_dir.as_deref(), &spec)?;
+    let (train_ds, test_ds) = load_streaming(&meta.dataset, rc.data_dir.as_deref(), &spec)?;
     anyhow::ensure!(
         train_ds.input_shape == meta.input_shape,
         "dataset shape {:?} vs model input {:?}",
         train_ds.input_shape,
         meta.input_shape
     );
-    Ok((train_ds, test_ds))
+    Ok((Arc::new(train_ds), test_ds))
+}
+
+/// Stream configuration for a training run (or a segment of one,
+/// replayed from batch `start`). The shuffle seed matches the
+/// pre-streaming `Batcher` salt, so legacy runs replay bitwise; the
+/// augmentation seed is the run seed itself, keyed per (epoch, sample)
+/// inside the stream.
+fn stream_options(rc: &RunConfig, meta: &ConfigMeta, start: u64) -> StreamOptions {
+    StreamOptions {
+        batch: meta.batch,
+        shuffle_seed: rc.seed ^ 0xba7c4,
+        aug_seed: rc.seed,
+        start,
+        augment: if rc.augment { Augment::standard(&meta.dataset) } else { Augment::none() },
+        threads: rc.prefetch,
+        depth: 0,
+    }
 }
 
 /// The run's starting weights: `--resume-from` a checkpoint file, or a
@@ -570,14 +590,14 @@ fn train_loop<E: StageExecutor>(
     rc: &RunConfig,
     meta: &ConfigMeta,
     mut exec: E,
-    train_ds: &Dataset,
+    train_ds: &Arc<StreamDataset>,
     test_ds: &Dataset,
 ) -> Result<TrainResult> {
     // Freshly built executor = drained pipeline, the one safe moment to
     // install a mitigation (its per-partition state must start empty).
     exec.set_staleness_fix(rc.staleness_fix)?;
     let mut pipe = Pipeline::new(exec, meta.batch);
-    let mut batcher = Batcher::new(train_ds.len(), meta.batch, rc.seed ^ 0xba7c4);
+    let mut stream = BatchStream::new(Arc::clone(train_ds), stream_options(rc, meta, 0))?;
 
     let schedule = match rc.mode {
         Mode::Pipelined => HybridSchedule::all_pipelined(rc.iters),
@@ -618,8 +638,7 @@ fn train_loop<E: StageExecutor>(
             }
             log::info!("hybrid switch at iter {fed}: pipeline drained");
         }
-        let idxs = batcher.next_indices().to_vec();
-        let (x, labels) = train_ds.gather(&idxs);
+        let (x, labels) = stream.next_batch()?;
         let feed = Feed { batch_id: fed, seed: batch_seed(rc.seed, fed), x, labels };
         match phase {
             Phase::Pipelined => {

@@ -1,0 +1,306 @@
+//! Determinism battery for the streaming ingestion subsystem
+//! (DESIGN.md §11), run against real-format fixture files on disk:
+//!
+//! * prefetching with 1/2/4 worker threads is **bitwise identical** to
+//!   synchronous iteration, on both the LeNet (MNIST IDX) and ResNet
+//!   (CIFAR-10 binary) fixtures, with augmentation on;
+//! * a stream resumed mid-epoch with `start = n` replays the
+//!   interrupted stream bitwise, including augmentation draws across
+//!   an epoch boundary — the contract checkpoint-restart leans on;
+//! * a worker panic mid-run under `--on-failure restart` with real
+//!   files, augmentation, and prefetch recovers to a loss curve and
+//!   final weights bitwise equal to the unfaulted run;
+//! * the steady-state ingest path is zero-alloc: once warm, neither
+//!   the caller's pool nor any prefetch worker's pool sees a fresh
+//!   heap allocation (merged `PoolStats` delta);
+//! * e2e smoke: training on a generated fixture dataset learns (loss
+//!   falls) and the scheduler and threaded runtimes produce bitwise
+//!   identical final weights.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use pipestale::config::{Backend, Mode, OnFailure, RunConfig, RuntimeKind};
+use pipestale::data::fixtures;
+use pipestale::data::{
+    load_cifar10_dir_stream, load_mnist_stream, Augment, BatchStream, StreamDataset, StreamOptions,
+};
+use pipestale::model::checkpoint;
+use pipestale::model::ModelParams;
+use pipestale::pool::{PoolScope, PoolStats};
+use pipestale::train::TrainResult;
+
+/// Fresh per-test scratch path (removed first: earlier aborted runs of
+/// the same pid must not leak files into this one).
+fn fresh_path(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("dstream_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&p).ok();
+    std::fs::remove_file(&p).ok();
+    p
+}
+
+/// Write a fixture dataset and load its train split back through the
+/// real on-disk format (IDX or CIFAR binary), so every test below
+/// exercises the raw-byte decode paths, not the synthetic wrapper.
+fn fixture_stream(dataset: &str, name: &str, train: usize, test: usize) -> Arc<StreamDataset> {
+    let dir = fresh_path(name);
+    fixtures::write_fixture(dataset, &dir, train, test, 11).unwrap();
+    let ds = match dataset {
+        "mnist" => load_mnist_stream(
+            &dir.join("train-images-idx3-ubyte"),
+            &dir.join("train-labels-idx1-ubyte"),
+            "mnist-train",
+        )
+        .unwrap(),
+        _ => load_cifar10_dir_stream(&dir).unwrap().0,
+    };
+    std::fs::remove_dir_all(&dir).ok();
+    Arc::new(ds)
+}
+
+/// Run to completion and read back the final weights via `--save-to`
+/// (the checkpoint file is the bitwise ground truth for comparisons).
+fn run_saving(rc: &mut RunConfig, tag: &str) -> (TrainResult, ModelParams) {
+    let out = fresh_path(&format!("{tag}_final"));
+    rc.save_to = Some(out.clone());
+    let res = pipestale::train::run(rc).unwrap();
+    let (params, at) = checkpoint::load(&out).unwrap();
+    assert_eq!(at, rc.iters);
+    std::fs::remove_file(&out).ok();
+    (res, params)
+}
+
+fn assert_params_eq(a: &ModelParams, b: &ModelParams) {
+    assert_eq!(a.partitions.len(), b.partitions.len());
+    for (i, (x, y)) in a.partitions.iter().zip(&b.partitions).enumerate() {
+        assert_eq!(x.version, y.version, "partition {i}: update count must match");
+        for (j, (t, u)) in x.params.iter().zip(&y.params).enumerate() {
+            assert_eq!(t.data(), u.data(), "partition {i} param {j} must be bitwise equal");
+        }
+        for (j, (t, u)) in x.state.iter().zip(&y.state).enumerate() {
+            assert_eq!(t.data(), u.data(), "partition {i} state {j} must be bitwise equal");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Prefetch thread count is a pure perf axis: bitwise-identical output.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prefetch_1_2_4_threads_bitwise_equal_sync_on_both_fixtures() {
+    for dataset in ["mnist", "cifar10"] {
+        let ds = fixture_stream(dataset, &format!("sweep_{dataset}"), 48, 16);
+        let mut opts = StreamOptions::plain(8, 13, 77);
+        opts.augment = Augment::standard(dataset);
+        for threads in [1usize, 2, 4] {
+            let mut o = opts.clone();
+            o.threads = threads;
+            let mut pre = BatchStream::new(Arc::clone(&ds), o).unwrap();
+            let mut sync = BatchStream::new(Arc::clone(&ds), opts.clone()).unwrap();
+            // 48/8 = 6 batches/epoch; 15 batches cross two reshuffles.
+            for b in 0..15 {
+                let (sx, sy) = sync.next_batch().unwrap();
+                let (px, py) = pre.next_batch().unwrap();
+                assert_eq!(
+                    sx.data(),
+                    px.data(),
+                    "{dataset}: prefetch({threads}) batch {b} diverged from sync"
+                );
+                assert_eq!(sy.data, py.data, "{dataset}: labels diverged at batch {b}");
+            }
+            assert_eq!(pre.worker_pool_stats().len(), threads);
+            assert_eq!(sync.batches_per_epoch(), pre.batches_per_epoch());
+        }
+    }
+}
+
+#[test]
+fn midepoch_resume_replays_the_stream_bitwise_on_both_fixtures() {
+    for dataset in ["mnist", "cifar10"] {
+        let ds = fixture_stream(dataset, &format!("resume_{dataset}"), 40, 8);
+        let mut opts = StreamOptions::plain(8, 5, 21);
+        opts.augment = Augment::standard(dataset);
+        let mut full = BatchStream::new(Arc::clone(&ds), opts.clone()).unwrap();
+        // 40/8 = 5 batches/epoch: skipping 7 crosses the reshuffle and
+        // the per-epoch augmentation reseed.
+        for _ in 0..7 {
+            full.next_batch().unwrap();
+        }
+        for threads in [2usize, 4] {
+            let mut o = opts.clone();
+            o.start = 7;
+            o.threads = threads;
+            let mut resumed = BatchStream::new(Arc::clone(&ds), o).unwrap();
+            let mut replay = opts.clone();
+            replay.start = 7;
+            let mut replay = BatchStream::new(Arc::clone(&ds), replay).unwrap();
+            for b in 0..5 {
+                let (ax, ay) = replay.next_batch().unwrap();
+                let (bx, by) = resumed.next_batch().unwrap();
+                assert_eq!(ax.data(), bx.data(), "{dataset}: resume({threads}) batch {b}");
+                assert_eq!(ay.data, by.data);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Steady-state ingest is zero-alloc once the pools are warm.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sync_streaming_is_zero_alloc_once_warm() {
+    let ds = fixture_stream("cifar10", "zalloc_sync", 48, 8);
+    let scope = PoolScope::new();
+    let mut opts = StreamOptions::plain(8, 3, 9);
+    opts.augment = Augment::standard("cifar10");
+    let mut stream = BatchStream::new(ds, opts).unwrap();
+    for _ in 0..6 {
+        stream.next_batch().unwrap();
+    }
+    let before = scope.pool().stats();
+    for _ in 0..12 {
+        stream.next_batch().unwrap();
+    }
+    let d = scope.pool().stats().delta(&before);
+    assert_eq!(d.fresh_allocs, 0, "steady-state sync decode must not allocate: {d:?}");
+    assert!(d.reuses > 0, "the probe must actually exercise the pool: {d:?}");
+}
+
+#[test]
+fn prefetch_streaming_is_zero_alloc_once_warm_across_workers() {
+    let ds = fixture_stream("cifar10", "zalloc_pre", 48, 8);
+    let scope = PoolScope::new();
+    let mut opts = StreamOptions::plain(8, 3, 9);
+    opts.augment = Augment::standard("cifar10");
+    opts.threads = 2;
+    let mut stream = BatchStream::new(ds, opts).unwrap();
+    // Warm every worker's shelves: depth (= 2*threads) batches may be
+    // in flight, so each worker needs a few cycles to stop allocating.
+    for _ in 0..16 {
+        stream.next_batch().unwrap();
+    }
+    let merged = |stream: &BatchStream, scope: &PoolScope| {
+        stream
+            .worker_pool_stats()
+            .iter()
+            .fold(scope.pool().stats(), |acc, s| acc.merge(s))
+    };
+    let before = merged(&stream, &scope);
+    for _ in 0..16 {
+        stream.next_batch().unwrap();
+    }
+    let d = merged(&stream, &scope).delta(&before);
+    assert_eq!(
+        d.fresh_allocs, 0,
+        "steady-state prefetch decode must not allocate on any worker: {d:?}"
+    );
+    assert!(d.reuses > 0, "the probe must actually exercise the pools: {d:?}");
+}
+
+// ---------------------------------------------------------------------------
+// Train-level: real files + augment + prefetch through both runtimes.
+// ---------------------------------------------------------------------------
+
+/// A P=4 run config over a fixture dataset directory, with the full
+/// streaming data plane on (augmentation + 2 prefetch workers).
+fn rc_stream(config: &str, iters: u64, data_dir: &std::path::Path) -> RunConfig {
+    let mut rc = RunConfig::new(config);
+    rc.backend = Backend::Native;
+    rc.runtime = RuntimeKind::Threaded;
+    rc.mode = Mode::Pipelined;
+    rc.iters = iters;
+    rc.data_dir = Some(data_dir.to_path_buf());
+    rc.augment = true;
+    rc.prefetch = 2;
+    rc.stall_timeout_ms = 30_000;
+    rc.restart_backoff_ms = 1;
+    rc
+}
+
+#[test]
+fn e2e_smoke_fixture_training_learns_and_runtimes_agree_bitwise() {
+    let dir = fresh_path("e2e_mnist");
+    fixtures::write_mnist_fixture(&dir, 256, 64, 3).unwrap();
+
+    let mut threaded = rc_stream("native_lenet_small_4s", 200, &dir);
+    let (tres, tparams) = run_saving(&mut threaded, "e2e_threaded");
+
+    let mut scheduler = rc_stream("native_lenet_small_4s", 200, &dir);
+    scheduler.runtime = RuntimeKind::Scheduler;
+    scheduler.prefetch = 0; // the scheduler feeds synchronously
+    let (sres, sparams) = run_saving(&mut scheduler, "e2e_scheduler");
+
+    // Same data plane, same seeds: the runtimes must agree bitwise.
+    assert_params_eq(&tparams, &sparams);
+    assert_eq!(tres.final_accuracy, sres.final_accuracy);
+
+    // And the run must actually learn on the fixture set: mean loss
+    // over the first 20 iterations vs the last 20.
+    let losses: Vec<f32> = tres.recorder.train.iter().map(|&(_, l, _)| l).collect();
+    assert!(losses.len() >= 40, "expected a full loss curve, got {}", losses.len());
+    let head: f32 = losses[..20].iter().sum::<f32>() / 20.0;
+    let tail: f32 = losses[losses.len() - 20..].iter().sum::<f32>() / 20.0;
+    assert!(
+        tail < head,
+        "loss must fall on the fixture dataset (first-20 mean {head}, last-20 mean {tail})"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resnet_cifar_fixture_runtimes_agree_bitwise() {
+    // The ResNet leg of the acceptance box: CIFAR fixture files through
+    // the record-decode path, augmentation + prefetch on, both runtimes.
+    let dir = fresh_path("e2e_cifar");
+    fixtures::write_cifar_fixture(&dir, 64, 16, 7).unwrap();
+
+    let mut threaded = rc_stream("native_resnet_small_4s", 12, &dir);
+    let (tres, tparams) = run_saving(&mut threaded, "resnet_threaded");
+
+    let mut scheduler = rc_stream("native_resnet_small_4s", 12, &dir);
+    scheduler.runtime = RuntimeKind::Scheduler;
+    scheduler.prefetch = 0;
+    let (sres, sparams) = run_saving(&mut scheduler, "resnet_scheduler");
+
+    assert_params_eq(&tparams, &sparams);
+    assert_eq!(tres.final_accuracy, sres.final_accuracy);
+    assert!(
+        tres.recorder.train.iter().all(|&(_, l, _)| l.is_finite()),
+        "loss must stay finite on the CIFAR fixture"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn restart_replay_with_streaming_augment_prefetch_is_bitwise_invisible() {
+    // Checkpoint-restart over the full data plane: real MNIST files,
+    // augmentation, 2 prefetch workers. Stage 1 runs 12 ops per 6-feed
+    // segment, so op 16 panics in the second segment — the supervisor
+    // restores the iter-6 checkpoint and replays the stream (fresh
+    // BatchStream with start=6), which must be bitwise-invisible.
+    let dir = fresh_path("restart_mnist");
+    fixtures::write_mnist_fixture(&dir, 256, 48, 3).unwrap();
+
+    let mut faulted = rc_stream("native_lenet_small_4s", 18, &dir);
+    faulted.ckpt_every = 6;
+    faulted.ckpt_dir = Some(fresh_path("restart_ckpts"));
+    faulted.on_failure = OnFailure::Restart;
+    faulted.fault_plan = Some("panic@1:16".to_string());
+    let (fres, fparams) = run_saving(&mut faulted, "stream_faulted");
+
+    let mut clean = rc_stream("native_lenet_small_4s", 18, &dir);
+    clean.ckpt_every = 6;
+    clean.ckpt_dir = Some(fresh_path("restart_ckpts_clean"));
+    let (cres, cparams) = run_saving(&mut clean, "stream_clean");
+
+    assert_eq!(fres.restarts, 1, "exactly one recovery");
+    assert!(!fres.degraded);
+    assert_eq!(fres.recorder.train, cres.recorder.train, "loss curve must be bitwise identical");
+    assert_eq!(fres.final_accuracy, cres.final_accuracy);
+    assert_params_eq(&fparams, &cparams);
+    std::fs::remove_dir_all(faulted.ckpt_dir.unwrap()).ok();
+    std::fs::remove_dir_all(clean.ckpt_dir.unwrap()).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}

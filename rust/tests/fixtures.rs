@@ -1,0 +1,191 @@
+//! Golden-fixture corpus tests: the generators in `data::fixtures`
+//! write byte-exact MNIST IDX / CIFAR-10 binary files into a scratch
+//! directory, and the loaders must round-trip them back to the
+//! generated ground truth bitwise. The malformed variants must each
+//! fail with an error naming the offending field. Nothing binary is
+//! checked into git — every file here is generated into a tempdir and
+//! removed, and a guard test scans the source tree to keep it that way.
+
+use std::path::PathBuf;
+
+use pipestale::data::fixtures::{
+    self, write_cifar_bad_label, write_cifar_bad_size, write_idx_bad_dims, write_idx_bad_label,
+    write_idx_short_body, write_idx_truncated_header, write_idx_wrong_magic,
+};
+use pipestale::data::{
+    load_cifar10_bin, load_cifar10_dir_stream, load_idx_images, load_idx_labels, load_mnist,
+    load_mnist_stream,
+};
+
+fn scratch(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("fixt_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&p).ok();
+    std::fs::create_dir_all(&p).unwrap();
+    p
+}
+
+// ---------------------------------------------------------------------------
+// Round-trip: serialized files parse back to the ground truth bitwise.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mnist_fixture_round_trips_byte_exact() {
+    let dir = scratch("mnist_rt");
+    let (tr, te) = fixtures::write_mnist_fixture(&dir, 30, 10, 11).unwrap();
+
+    let stream = load_mnist_stream(
+        &dir.join("train-images-idx3-ubyte"),
+        &dir.join("train-labels-idx1-ubyte"),
+        "fixture-train",
+    )
+    .unwrap();
+    assert_eq!(stream.len(), 30);
+    assert_eq!(stream.input_shape, vec![28, 28, 1]);
+    assert_eq!(stream.shards().len(), 1);
+    assert_eq!(stream.shards()[0].name, "train-images-idx3-ubyte");
+
+    // Every parsed pixel must equal bytes[k]/255 - 0.5 bitwise, and
+    // every label must match the generated ground truth.
+    let eager = stream.to_eager();
+    assert_eq!(eager.images.len(), tr.images.len());
+    for k in 0..tr.images.len() {
+        assert_eq!(eager.images[k], tr.expected_f32(k), "train pixel {k}");
+    }
+    for (i, &l) in tr.labels.iter().enumerate() {
+        assert_eq!(eager.labels[i], l as i32, "train label {i}");
+    }
+
+    // The eager wrapper agrees with the streaming path on the test split.
+    let test = load_mnist(
+        &dir.join("t10k-images-idx3-ubyte"),
+        &dir.join("t10k-labels-idx1-ubyte"),
+        "fixture-test",
+    )
+    .unwrap();
+    assert_eq!(test.len(), 10);
+    for k in 0..te.images.len() {
+        assert_eq!(test.images[k], te.expected_f32(k), "test pixel {k}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cifar_fixture_round_trips_byte_exact() {
+    let dir = scratch("cifar_rt");
+    let (tr, te) = fixtures::write_cifar_fixture(&dir, 20, 10, 11).unwrap();
+
+    let (train, test) = load_cifar10_dir_stream(&dir).unwrap();
+    assert_eq!(train.len(), 20);
+    assert_eq!(test.len(), 10);
+    assert_eq!(train.input_shape, vec![32, 32, 3]);
+
+    // Two shards (the writer splits train across data_batch_1/2) with
+    // abutting index ranges.
+    assert_eq!(train.shards().len(), 2);
+    assert_eq!(train.shard_of(9).name, "data_batch_1.bin");
+    assert_eq!(train.shard_of(10).name, "data_batch_2.bin");
+
+    // The parser must undo the writer's HWC -> CHW transpose exactly:
+    // parsed HWC pixel k == ground-truth HWC byte k, normalized.
+    let eager = train.to_eager();
+    for k in 0..tr.images.len() {
+        assert_eq!(eager.images[k], tr.expected_f32(k), "train pixel {k}");
+    }
+    for (i, &l) in tr.labels.iter().enumerate() {
+        assert_eq!(eager.labels[i], l as i32, "train label {i}");
+    }
+    let eager_test = test.to_eager();
+    for k in 0..te.images.len() {
+        assert_eq!(eager_test.images[k], te.expected_f32(k), "test pixel {k}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Malformed variants: every corruption fails naming the offending field.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn malformed_idx_variants_name_the_offending_field() {
+    let dir = scratch("idx_bad");
+    let p = dir.join("f");
+
+    write_idx_truncated_header(&p).unwrap();
+    let e = load_idx_images(&p).unwrap_err().to_string();
+    assert!(e.contains("header"), "truncated header: {e}");
+
+    write_idx_wrong_magic(&p).unwrap();
+    let e = load_idx_images(&p).unwrap_err().to_string();
+    assert!(e.contains("magic"), "wrong magic: {e}");
+
+    write_idx_bad_dims(&p).unwrap();
+    let e = load_idx_images(&p).unwrap_err().to_string();
+    assert!(e.contains("dims"), "bad dims: {e}");
+
+    write_idx_short_body(&p).unwrap();
+    let e = load_idx_images(&p).unwrap_err().to_string();
+    assert!(e.contains("body"), "short body: {e}");
+
+    write_idx_bad_label(&p).unwrap();
+    let e = load_idx_labels(&p).unwrap_err().to_string();
+    assert!(e.contains("label 37"), "bad label: {e}");
+    assert!(e.contains("record 2"), "bad label record index: {e}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn malformed_cifar_variants_name_the_offending_field() {
+    let dir = scratch("cifar_bad");
+    let p = dir.join("f.bin");
+
+    write_cifar_bad_size(&p).unwrap();
+    let e = load_cifar10_bin(&p).unwrap_err().to_string();
+    assert!(e.contains("record"), "bad size: {e}");
+
+    write_cifar_bad_label(&p).unwrap();
+    let e = load_cifar10_bin(&p).unwrap_err().to_string();
+    assert!(e.contains("label 11"), "bad label: {e}");
+    assert!(e.contains("record 1"), "bad label record index: {e}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn unknown_fixture_dataset_is_an_error() {
+    let dir = scratch("fixt_unknown");
+    let e = fixtures::write_fixture("svhn", &dir, 4, 2, 1).unwrap_err().to_string();
+    assert!(e.contains("svhn"), "{e}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Repo hygiene: the fixture corpus is generated, never committed.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn no_fixture_blobs_in_the_source_tree() {
+    // The crate root (rust/) must not contain any materialized dataset
+    // files — tests and CI generate them into scratch directories.
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let mut stack = vec![root];
+    while let Some(dir) = stack.pop() {
+        let Ok(entries) = std::fs::read_dir(&dir) else { continue };
+        for entry in entries.flatten() {
+            let path = entry.path();
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if path.is_dir() {
+                if name != "target" && name != ".git" {
+                    stack.push(path);
+                }
+                continue;
+            }
+            assert!(
+                !name.ends_with("-ubyte") && !name.starts_with("data_batch_")
+                    && name != "test_batch.bin",
+                "dataset blob checked into the source tree: {}",
+                path.display()
+            );
+        }
+    }
+}

@@ -175,7 +175,7 @@ fn threaded_pipeline_trains_and_collects_weights() {
     let (events, _wall) = pipe
         .train(40, 42, |_| {
             let idxs = batcher.next_indices().to_vec();
-            train_ds.gather(&idxs)
+            Ok(train_ds.gather(&idxs))
         })
         .unwrap();
     assert_eq!(events.len(), 40);

@@ -214,7 +214,7 @@ fn threaded_run(
     };
     let mut pipe =
         ThreadedPipeline::launch_with(NativeWorkerBackend, meta, params, optims, opts).unwrap();
-    pipe.train(batches.len() as u64, seed, |b| batches[b as usize].clone()).unwrap();
+    pipe.train(batches.len() as u64, seed, |b| Ok(batches[b as usize].clone())).unwrap();
     pipe.shutdown().unwrap()
 }
 

@@ -255,7 +255,7 @@ fn threaded_events(meta: &ConfigMeta, batches: &[(Tensor, IntTensor)]) -> Vec<Tr
     let optims = pipestale::train::build_optims(meta, batches.len() as u64, 1.0);
     let mut pipe = ThreadedPipeline::launch_native(meta, params, optims).unwrap();
     let (events, _) =
-        pipe.train(batches.len() as u64, 11, |b| batches[b as usize].clone()).unwrap();
+        pipe.train(batches.len() as u64, 11, |b| Ok(batches[b as usize].clone())).unwrap();
     pipe.shutdown().unwrap();
     events
 }
@@ -294,7 +294,7 @@ fn stage_busy_seconds_cover_every_stage() {
     let optims = pipestale::train::build_optims(&meta, 8, 1.0);
     let mut pipe = ThreadedPipeline::launch_native(&meta, params, optims).unwrap();
     let (events, _) =
-        pipe.train(8, 9, |_| train_ds.gather(&batcher.next_indices().to_vec())).unwrap();
+        pipe.train(8, 9, |_| Ok(train_ds.gather(&batcher.next_indices().to_vec()))).unwrap();
     assert_eq!(events.len(), 8);
     let busy = pipe.stage_busy_seconds();
     pipe.shutdown().unwrap();

@@ -385,7 +385,7 @@ fn train_range_feeds_absolute_batch_ids() {
     let (events, _) = pipe
         .train_range(3, 6, 11, |b| {
             fed_ids.push(b);
-            batch.clone()
+            Ok(batch.clone())
         })
         .unwrap();
     pipe.shutdown().unwrap();

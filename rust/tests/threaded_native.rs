@@ -88,7 +88,8 @@ fn threaded_run_with<B: WorkerBackend>(
     let optims = pipestale::train::build_optims(meta, batches.len() as u64, 1.0);
     let opts = ThreadedOptions { occupancy, stall_timeout: Duration::from_secs(30), ..Default::default() };
     let mut pipe = ThreadedPipeline::launch_with(backend, meta, params, optims, opts)?;
-    let (events, _wall) = pipe.train(batches.len() as u64, seed, |b| batches[b as usize].clone())?;
+    let (events, _wall) =
+        pipe.train(batches.len() as u64, seed, |b| Ok(batches[b as usize].clone()))?;
     let trained = pipe.shutdown()?;
     Ok((events, trained))
 }
@@ -248,8 +249,8 @@ fn threaded_runtime_rejects_unsupported_shapes() {
     let params = ModelParams::init(&meta.partitions, 1).unwrap();
     let optims = pipestale::train::build_optims(&meta, 2, 1.0);
     let mut pipe = ThreadedPipeline::launch_native(&meta, params, optims).unwrap();
-    pipe.train(2, 1, |b| batches[b as usize].clone()).unwrap();
-    let err = pipe.train(1, 1, |b| batches[b as usize].clone()).unwrap_err();
+    pipe.train(2, 1, |b| Ok(batches[b as usize].clone())).unwrap();
+    let err = pipe.train(1, 1, |b| Ok(batches[b as usize].clone())).unwrap_err();
     assert!(err.to_string().contains("once per launch"), "{err}");
     let trained = pipe.shutdown().unwrap();
     assert!(trained.all_finite());

@@ -102,6 +102,30 @@ for cfg in native_lenet_small_4s native_resnet_small_4s; do
     ./target/release/pipestale memory --config "$cfg" --partition auto
 done
 
+# Data-plane smoke (DESIGN.md §11): generate real-format fixture
+# datasets with the released binary, then train on them with the full
+# streaming path (--data-dir + --augment + --prefetch) on both
+# runtimes and both formats — the CLI leg of the determinism battery
+# in tests/data_stream.rs, which then reruns fully serialized (the
+# prefetcher must be race-free at every test-harness thread count).
+echo "[ci] data-plane smoke (gen-data + streaming train, 2 datasets x 2 runtimes)"
+DATA_DIR="$(mktemp -d)"
+trap 'rm -f "$TEST_LOG"; rm -rf "$SOAK_DIR" "$DATA_DIR"' EXIT
+./target/release/pipestale gen-data --dir "$DATA_DIR/mnist" \
+    --dataset mnist --train 256 --test 64
+./target/release/pipestale gen-data --dir "$DATA_DIR/cifar10" \
+    --dataset cifar10 --train 128 --test 32
+for rt in scheduler threaded; do
+    ./target/release/pipestale train --config native_lenet_small_4s \
+        --backend native --runtime "$rt" --mode pipelined --iters 24 \
+        --data-dir "$DATA_DIR/mnist" --augment --prefetch 2
+    ./target/release/pipestale train --config native_resnet_small_4s \
+        --backend native --runtime "$rt" --mode pipelined --iters 12 \
+        --data-dir "$DATA_DIR/cifar10" --augment --prefetch 2
+done
+echo "[ci] rerunning data_stream suite under RUST_TEST_THREADS=1"
+RUST_TEST_THREADS=1 cargo test -q --test data_stream
+
 # Docs build warning-free: #![warn(missing_docs)] is enabled in
 # src/lib.rs, so -D warnings turns an undocumented public item (or a
 # broken intra-doc link) into a CI failure.
